@@ -1,0 +1,65 @@
+//! Bench: tensor accumulation strategies (paper Fig. 5, local half).
+//!
+//! Measures the in-memory cost of Algorithm 1 (gather/concat), the
+//! sparse_as_dense fix (densify+reduce), and Algorithm 2 across
+//! contributor counts, on small-preset-shaped tensors.  The wire half
+//! of Fig. 5 lives in `benches/collectives.rs`.
+
+use densefold::tensor::{accumulate, AccumStrategy, DenseTensor, Grad, IndexedSlices};
+use densefold::util::bench::Bench;
+use densefold::util::rng::Rng;
+
+fn make_contributions(p: usize, t_slices: usize, v: usize, d: usize) -> Vec<Grad> {
+    let mut rng = Rng::new(42);
+    let mut grads = Vec::with_capacity(2 * p);
+    for _ in 0..p {
+        let indices: Vec<i32> = (0..t_slices)
+            .map(|_| rng.zipf(v, 1.2) as i32)
+            .collect();
+        let values: Vec<f32> = (0..t_slices * d)
+            .map(|_| rng.normal() as f32 * 0.01)
+            .collect();
+        grads.push(Grad::Sparse(IndexedSlices::new(v, d, indices, values)));
+        let dense: Vec<f32> = (0..v * d).map(|_| rng.normal() as f32 * 0.01).collect();
+        grads.push(Grad::Dense(DenseTensor::from_vec(vec![v, d], dense)));
+    }
+    grads
+}
+
+fn main() {
+    // small-preset embedding: V=8192, D=256; T = one 384-token batch
+    let (v, d, t) = (8192, 256, 384);
+    let mut bench = Bench::new("accumulate").with_budget(200, 900, 10);
+    for p in [2usize, 4, 8, 16] {
+        let grads = make_contributions(p, t, v, d);
+        for strategy in [
+            AccumStrategy::TfDefault,
+            AccumStrategy::SparseAsDense,
+            AccumStrategy::AnyDense,
+        ] {
+            let g = grads.clone();
+            bench.bench(&format!("{}/p{p}", strategy.name()), move || {
+                accumulate(g.clone(), strategy)
+            });
+        }
+    }
+    // report the space side alongside (not timed):
+    println!("\npeak accumulation bytes (same inputs):");
+    for p in [2usize, 4, 8, 16] {
+        let row: Vec<String> = [
+            AccumStrategy::TfDefault,
+            AccumStrategy::SparseAsDense,
+        ]
+        .iter()
+        .map(|&s| {
+            let (_, bytes) = accumulate(make_contributions(p, t, v, d), s);
+            format!("{}={}", s.name(), densefold::util::human_bytes(bytes))
+        })
+        .collect();
+        println!("  p={p}: {}", row.join("  "));
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_accumulate.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,85 @@
+//! Bench: collective algorithms over the in-process transport — the
+//! allreduce-vs-allgather asymmetry that drives every scaling figure,
+//! plus the algorithm menu (ring / recursive doubling / tree / naive)
+//! across message sizes.
+
+use std::sync::Arc;
+
+use densefold::collectives::{self, AllreduceAlgo};
+use densefold::tensor::IndexedSlices;
+use densefold::transport::LocalTransport;
+use densefold::util::bench::Bench;
+
+fn run_ranks<R: Send + 'static>(
+    p: usize,
+    f: impl Fn(usize, Arc<LocalTransport>) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let t = Arc::new(LocalTransport::new(p));
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let t = t.clone();
+            let f = f.clone();
+            std::thread::spawn(move || f(rank, t))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+fn main() {
+    let mut bench = Bench::new("collectives").with_budget(150, 600, 8);
+    let p = 4;
+
+    for len in [4_096usize, 262_144, 2_097_152] {
+        let mb = len * 4 / 1024;
+        for algo in [
+            AllreduceAlgo::Ring,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::ReduceBcast,
+            AllreduceAlgo::Naive,
+        ] {
+            bench.bench(&format!("allreduce/{algo:?}/{mb}KB/p{p}"), move || {
+                run_ranks(p, move |rank, t| {
+                    let mut data = vec![rank as f32; len];
+                    collectives::allreduce(t.as_ref(), rank, &mut data, algo, 0);
+                    data[0]
+                })
+            });
+        }
+    }
+
+    // allgather of IndexedSlices vs allreduce of equivalent dense size:
+    // the Fig. 5 wire comparison at small scale
+    let v = 8192;
+    let d = 64;
+    for p in [2usize, 4, 8] {
+        bench.bench(&format!("allgather-slices/p{p}"), move || {
+            run_ranks(p, move |rank, t| {
+                // each rank: 384 slice rows + the sparsified dense (v rows)
+                let mut idx: Vec<i32> = (0..384).map(|i| (i * 7 % v) as i32).collect();
+                idx.extend(0..v as i32);
+                let vals = vec![0.01f32; idx.len() * d];
+                let mine = IndexedSlices::new(v, d, idx, vals);
+                collectives::allgather_indexed_slices(t.as_ref(), rank, &mine, 0)
+                    .nslices()
+            })
+        });
+        bench.bench(&format!("allreduce-dense-equiv/p{p}"), move || {
+            run_ranks(p, move |rank, t| {
+                let mut data = vec![0.01f32; v * d];
+                collectives::allreduce(
+                    t.as_ref(),
+                    rank,
+                    &mut data,
+                    AllreduceAlgo::Ring,
+                    0,
+                );
+                data.len()
+            })
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_collectives.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,92 @@
+//! Bench: tensor-fusion ablation (the paper's HOROVOD_FUSION_THRESHOLD
+//! runtime setting, Listing 2).  Exchanges a transformer-shaped bag of
+//! small tensors at several fusion thresholds: unfused exchange is
+//! latency-bound (one collective per LayerNorm bias), fused exchange
+//! amortizes it — the reason Horovod fuses and the paper sets 128 MB.
+
+use std::sync::Arc;
+
+use densefold::coordinator::{ExchangeConfig, GradExchange, NamedGrad};
+use densefold::tensor::{DenseTensor, Grad};
+use densefold::transport::LocalTransport;
+use densefold::util::bench::Bench;
+
+/// tiny-preset-shaped gradient bag: 1 embedding + 4 big mats + many
+/// small LN/bias tensors per layer
+fn gradient_bag() -> Vec<NamedGrad> {
+    let mut grads = Vec::new();
+    grads.push(NamedGrad {
+        name: "embedding".into(),
+        grad: Grad::Dense(DenseTensor::zeros(vec![512, 64])),
+    });
+    for layer in 0..4 {
+        for w in ["wq", "wk", "wv", "wo"] {
+            grads.push(NamedGrad {
+                name: format!("l{layer}/{w}"),
+                grad: Grad::Dense(DenseTensor::zeros(vec![64, 64])),
+            });
+        }
+        for small in ["ln1/s", "ln1/b", "ln2/s", "ln2/b", "ff/b1", "ff/b2"] {
+            grads.push(NamedGrad {
+                name: format!("l{layer}/{small}"),
+                grad: Grad::Dense(DenseTensor::zeros(vec![64])),
+            });
+        }
+        grads.push(NamedGrad {
+            name: format!("l{layer}/ff/w1"),
+            grad: Grad::Dense(DenseTensor::zeros(vec![64, 256])),
+        });
+        grads.push(NamedGrad {
+            name: format!("l{layer}/ff/w2"),
+            grad: Grad::Dense(DenseTensor::zeros(vec![256, 64])),
+        });
+    }
+    grads
+}
+
+fn main() {
+    let p = 4;
+    let bag = gradient_bag();
+    let n_tensors = bag.len();
+    println!("gradient bag: {n_tensors} tensors");
+    let mut bench = Bench::new("fusion").with_budget(200, 800, 8);
+    for (label, threshold) in [
+        ("unfused(1B)", 1u64),
+        ("fused(64KB)", 64 * 1024),
+        ("fused(1MB)", 1024 * 1024),
+        ("fused(128MB)", 128 * 1024 * 1024),
+    ] {
+        let bag = bag.clone();
+        bench.bench(&format!("exchange/{label}/p{p}"), move || {
+            let bag = bag.clone();
+            let t = Arc::new(LocalTransport::new(p));
+            let handles: Vec<_> = (0..p)
+                .map(|rank| {
+                    let t = t.clone();
+                    let grads = bag.clone();
+                    std::thread::spawn(move || {
+                        let mut ex = GradExchange::new(
+                            t,
+                            rank,
+                            ExchangeConfig {
+                                fusion_threshold: threshold,
+                                ..Default::default()
+                            },
+                        );
+                        let (_, report) = ex.exchange(grads);
+                        report.n_allreduce_groups
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .max()
+                .unwrap()
+        });
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_fusion.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,65 @@
+//! Bench: the end-to-end training step (compute + exchange + apply)
+//! on the tiny preset, per strategy — the live anchor for every
+//! simulated step-time in the scaling figures.  Requires
+//! `make artifacts`.
+
+use std::path::PathBuf;
+
+use densefold::coordinator::ExchangeConfig;
+use densefold::data::CorpusConfig;
+use densefold::runtime::{Engine, Manifest};
+use densefold::tensor::AccumStrategy;
+use densefold::train::{run_session_with_engine, SessionConfig};
+use densefold::util::bench::Bench;
+
+fn main() {
+    let dir = PathBuf::from("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping train_step bench: run `make artifacts` first");
+        return;
+    }
+    let manifest = Manifest::load(&dir).expect("manifest");
+    // one engine for the whole bench: XLA-compile each artifact once
+    let engine = Engine::start().expect("engine");
+    let mut bench = Bench::new("train_step").with_budget(300, 1500, 5);
+
+    for strategy in [
+        AccumStrategy::TfDefault,
+        AccumStrategy::SparseAsDense,
+        AccumStrategy::AnyDense,
+    ] {
+        for nranks in [1usize, 2, 4] {
+            let m = manifest.clone();
+            let h = engine.handle();
+            bench.bench(
+                &format!("tiny/{}/r{nranks}x3steps", strategy.name()),
+                move || {
+                    let cfg = SessionConfig {
+                        preset: "tiny".into(),
+                        strategy,
+                        nranks,
+                        steps: 3,
+                        exchange: ExchangeConfig::default(),
+                        corpus: CorpusConfig {
+                            vocab: 512,
+                            n_pairs: 128,
+                            ..Default::default()
+                        },
+                        eval_pairs: 0,
+                        timeline: false,
+                        seed: 11,
+                        warmup_steps: 10,
+                        lr_scale: 1.0,
+                    };
+                    run_session_with_engine(&cfg, &m, h.clone())
+                        .unwrap()
+                        .wall_secs
+                },
+            );
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_train_step.csv"))
+        .expect("csv");
+}

@@ -1,0 +1,55 @@
+//! Quickstart: the smallest complete use of the public API.
+//!
+//! Loads the AOT artifacts, runs a 2-rank live training session under
+//! both accumulation strategies, and prints the paper's effect in
+//! miniature: identical losses, very different exchange footprints.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::path::PathBuf;
+
+use densefold::coordinator::ExchangeConfig;
+use densefold::data::CorpusConfig;
+use densefold::runtime::Manifest;
+use densefold::tensor::AccumStrategy;
+use densefold::train::{run_session, SessionConfig};
+use densefold::util::{human_bytes, human_time};
+
+fn main() -> anyhow::Result<()> {
+    let manifest = Manifest::load(&PathBuf::from("artifacts"))?;
+
+    for strategy in [AccumStrategy::TfDefault, AccumStrategy::SparseAsDense] {
+        let cfg = SessionConfig {
+            preset: "tiny".into(),
+            strategy,
+            nranks: 2,
+            steps: 12,
+            // small threshold so the tied-embedding tensor stands alone
+            exchange: ExchangeConfig { fusion_threshold: 1 << 16, ..Default::default() },
+            corpus: CorpusConfig { vocab: 512, n_pairs: 512, ..Default::default() },
+            eval_pairs: 0,
+            timeline: false,
+            seed: 7,
+            warmup_steps: 20,
+            lr_scale: 1.0,
+        };
+        let result = run_session(&cfg, &manifest)?;
+        let losses = result.loss_curve();
+        println!(
+            "{:>16}: loss {:.4} -> {:.4} | peak accumulation {:>9} | mean exchange {}",
+            strategy.name(),
+            losses.first().unwrap(),
+            losses.last().unwrap(),
+            human_bytes(result.peak_accum_bytes()),
+            human_time(result.mean_exchange_us() / 1e6),
+        );
+    }
+    println!(
+        "\nSame losses, different footprints — the paper's point: the gradient \
+         is the same tensor,\nbut the assumed-sparse representation gathers \
+         (grows with ranks) instead of reducing (constant)."
+    );
+    Ok(())
+}

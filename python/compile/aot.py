@@ -1,0 +1,222 @@
+"""AOT compile path: lower the L2/L1 graphs to HLO text artifacts.
+
+Run once via ``make artifacts``; Python never appears on the Rust
+request path.  Emits, per preset:
+
+- ``{preset}_step_sparse.hlo.txt`` — TF-default gradient form
+- ``{preset}_step_dense.hlo.txt``  — ``sparse_as_dense`` form (Pallas
+  densify fused into the graph)
+- ``{preset}_forward.hlo.txt``     — logits for greedy decode
+- ``{preset}_params.bin``          — deterministic initial params (f32 LE,
+  canonical order)
+
+plus a standalone ``densify.hlo.txt`` (the Pallas kernel as its own
+executable, used by the Rust accumulation benches) and
+``manifest.json`` describing shapes/orders for the Rust side.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5
+emits HloModuleProto with 64-bit instruction ids which xla_extension
+0.5.1 rejects; the text parser reassigns ids (see
+/opt/xla-example/README.md).
+"""
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import math
+import os
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels.densify import densify
+
+PRESETS = {
+    "tiny": dict(
+        cfg=M.ModelConfig(
+            vocab=512, d_model=64, n_heads=4, d_ff=256, n_enc=2, n_dec=2, max_len=32
+        ),
+        batch=dict(b=4, ss=12, st=12),
+    ),
+    "small": dict(
+        cfg=M.ModelConfig(
+            vocab=8192, d_model=256, n_heads=8, d_ff=1024, n_enc=4, n_dec=4, max_len=64
+        ),
+        batch=dict(b=8, ss=24, st=24),
+    ),
+    "base": dict(
+        cfg=M.ModelConfig(
+            vocab=16384, d_model=768, n_heads=12, d_ff=3072, n_enc=6, n_dec=6,
+            max_len=64,
+        ),
+        batch=dict(b=4, ss=16, st=16),
+    ),
+}
+
+# standalone densify op shapes (match the `small` preset's embedding)
+DENSIFY_SPEC = dict(t=512, d=256, v=8192)
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _step_fn(cfg: M.ModelConfig, kind: str):
+    """Training step taking params as a flat list in canonical order.
+
+    jax.jit over a dict would flatten in sorted-key order; the Rust side
+    needs the manifest order, so the jitted signature is positional.
+    """
+    names = [n for n, _ in M.param_specs(cfg)]
+
+    def f(*args):
+        params = dict(zip(names, args[: len(names)]))
+        src, tgt_in, tgt_out = args[len(names):]
+        step = M.step_sparse if kind == "sparse" else M.step_dense
+        return step(params, cfg, src, tgt_in, tgt_out)
+
+    return f
+
+
+def _forward_fn(cfg: M.ModelConfig):
+    names = [n for n, _ in M.param_specs(cfg)]
+
+    def f(*args):
+        params = dict(zip(names, args[: len(names)]))
+        src, tgt_in = args[len(names):]
+        return (M.forward_logits(params, cfg, src, tgt_in),)
+
+    return f
+
+
+def _param_arg_specs(cfg: M.ModelConfig):
+    return [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, shape in M.param_specs(cfg)
+    ]
+
+
+def _int_spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def lower_preset(name: str, out_dir: str) -> dict:
+    preset = PRESETS[name]
+    cfg: M.ModelConfig = preset["cfg"]
+    b, ss, st = preset["batch"]["b"], preset["batch"]["ss"], preset["batch"]["st"]
+    specs = _param_arg_specs(cfg)
+    entry = {
+        "config": dataclasses.asdict(cfg),
+        "batch": preset["batch"],
+        "n_params": M.count_params(cfg),
+        "artifacts": {},
+        "params": [],
+    }
+
+    offset = 0
+    for pname, shape in M.param_specs(cfg):
+        numel = math.prod(shape)
+        entry["params"].append(
+            {"name": pname, "shape": list(shape), "numel": numel, "offset": offset}
+        )
+        offset += numel
+
+    rest = M.rest_names(cfg)
+    entry["outputs_sparse"] = [
+        "loss", "g_emb_src_rows", "g_emb_tgt_rows", "g_proj", *rest
+    ]
+    entry["outputs_dense"] = ["loss", "g_emb", *rest]
+    entry["output_shapes_sparse"] = [
+        [], [b * ss, cfg.d_model], [b * st, cfg.d_model],
+        [cfg.vocab, cfg.d_model],
+        *[list(s) for n, s in M.param_specs(cfg) if n != "embedding"],
+    ]
+    entry["output_shapes_dense"] = [
+        [], [cfg.vocab, cfg.d_model],
+        *[list(s) for n, s in M.param_specs(cfg) if n != "embedding"],
+    ]
+
+    for kind in ("sparse", "dense"):
+        fn = _step_fn(cfg, kind)
+        lowered = jax.jit(fn).lower(
+            *specs, _int_spec(b, ss), _int_spec(b, st), _int_spec(b, st)
+        )
+        text = to_hlo_text(lowered)
+        fname = f"{name}_step_{kind}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        entry["artifacts"][f"step_{kind}"] = fname
+        print(f"  {fname}: {len(text)/1e6:.1f} MB of HLO text")
+
+    lowered = jax.jit(_forward_fn(cfg)).lower(*specs, _int_spec(b, ss), _int_spec(b, st))
+    fname = f"{name}_forward.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(to_hlo_text(lowered))
+    entry["artifacts"]["forward"] = fname
+
+    # deterministic initial parameters, canonical order, f32 little-endian
+    params = M.init_params(cfg, seed=0)
+    buf = np.concatenate(
+        [np.asarray(params[n], np.float32).reshape(-1) for n, _ in M.param_specs(cfg)]
+    )
+    bin_name = f"{name}_params.bin"
+    buf.astype("<f4").tofile(os.path.join(out_dir, bin_name))
+    entry["artifacts"]["params_bin"] = bin_name
+    digest = hashlib.sha256(buf.tobytes()).hexdigest()[:16]
+    entry["params_sha256_16"] = digest
+    print(f"  {bin_name}: {buf.nbytes/1e6:.1f} MB ({entry['n_params']} params)")
+    return entry
+
+
+def lower_densify(out_dir: str) -> dict:
+    t, d, v = DENSIFY_SPEC["t"], DENSIFY_SPEC["d"], DENSIFY_SPEC["v"]
+
+    def f(idx, vals, init):
+        return (densify(idx, vals, init),)
+
+    lowered = jax.jit(f).lower(
+        jax.ShapeDtypeStruct((t,), jnp.int32),
+        jax.ShapeDtypeStruct((t, d), jnp.float32),
+        jax.ShapeDtypeStruct((v, d), jnp.float32),
+    )
+    fname = "densify.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f_:
+        f_.write(to_hlo_text(lowered))
+    return {**DENSIFY_SPEC, "artifact": fname}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument(
+        "--presets",
+        default=os.environ.get("DENSEFOLD_PRESETS", "tiny,small,base"),
+        help="comma-separated preset names",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "presets": {}, "densify": lower_densify(args.out)}
+    for name in args.presets.split(","):
+        name = name.strip()
+        if not name:
+            continue
+        print(f"preset {name}:")
+        manifest["presets"][name] = lower_preset(name, args.out)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {args.out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

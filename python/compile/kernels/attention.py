@@ -1,0 +1,198 @@
+"""Flash-style tiled attention Pallas kernel (forward + backward).
+
+The transformer's compute hot-spot.  One grid step per attention head;
+within a step the key/value sequence is consumed in ``block_k``-sized
+tiles with an online-softmax accumulator, so the full ``[Sq, Sk]``
+score matrix never materializes — the VMEM working set is
+``O(Sq·Dh + block_k·Dh + Sq·block_k)``.
+
+The backward pass is the standard FlashAttention recomputation scheme:
+the forward saves only the output and the per-row logsumexp; the
+backward kernel re-forms each probability tile from (q, k, lse) and
+accumulates dq/dk/dv tile by tile.
+
+Autodiff: ``pallas_call`` has no VJP rule, so ``flash_attention`` is a
+``jax.custom_vjp`` whose fwd and bwd both run Pallas kernels.  Both are
+validated against ``ref.attention_ref`` / ``ref.attention_bwd_ref``.
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): tiles are shaped for
+the MXU systolic array (block_k defaults to 64, head dims are multiples
+of 8 in our presets; softmax statistics kept in f32 while matmul inputs
+may be bf16).  ``interpret=True`` on this CPU image.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention", "DEFAULT_BLOCK_K"]
+
+DEFAULT_BLOCK_K = 64
+_NEG_INF = -1e30
+
+
+def _fwd_kernel(q_ref, k_ref, v_ref, b_ref, o_ref, lse_ref, *, block_k, sk):
+    q = q_ref[...].astype(jnp.float32)
+    sq, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    q = q * scale
+
+    def body(j, carry):
+        m, l, acc = carry
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        b = b_ref[:, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        s = q @ k.T + b  # [sq, block_k]
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l = l * alpha + p.sum(axis=-1)
+        acc = acc * alpha[:, None] + p @ v
+        return m_new, l, acc
+
+    m0 = jnp.full((sq,), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((sq,), jnp.float32)
+    acc0 = jnp.zeros((sq, dh), jnp.float32)
+    m, l, acc = jax.lax.fori_loop(0, sk // block_k, body, (m0, l0, acc0))
+    o_ref[...] = (acc / l[:, None]).astype(o_ref.dtype)
+    lse_ref[...] = m + jnp.log(l)
+
+
+def _bwd_kernel(
+    q_ref, k_ref, v_ref, b_ref, o_ref, lse_ref, do_ref,
+    dq_ref, dk_ref, dv_ref, *, block_k, sk,
+):
+    q = q_ref[...].astype(jnp.float32)
+    sq, dh = q.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    o = o_ref[...].astype(jnp.float32)
+    do = do_ref[...].astype(jnp.float32)
+    lse = lse_ref[...]
+    # delta[i] = sum_j dO[i,j] * O[i,j]  (the softmax-Jacobian diagonal term)
+    delta = (do * o).sum(axis=-1)
+
+    def body(j, dq):
+        k = k_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        v = v_ref[pl.ds(j * block_k, block_k), :].astype(jnp.float32)
+        b = b_ref[:, pl.ds(j * block_k, block_k)].astype(jnp.float32)
+        s = (q * scale) @ k.T + b
+        p = jnp.exp(s - lse[:, None])  # [sq, block_k]
+        dv = p.T @ do  # [block_k, dh]
+        dp = do @ v.T  # [sq, block_k]
+        ds = p * (dp - delta[:, None])  # [sq, block_k]
+        dq = dq + (ds @ k) * scale
+        dk = (ds.T @ q) * scale
+        pl.store(dk_ref, (pl.ds(j * block_k, block_k), slice(None)),
+                 dk.astype(dk_ref.dtype))
+        pl.store(dv_ref, (pl.ds(j * block_k, block_k), slice(None)),
+                 dv.astype(dv_ref.dtype))
+        return dq
+
+    dq = jax.lax.fori_loop(0, sk // block_k, body,
+                           jnp.zeros((sq, dh), jnp.float32))
+    dq_ref[...] = dq.astype(dq_ref.dtype)
+
+
+def _pad_kv(k, v, bias, block_k):
+    """Pad the key dimension to a multiple of block_k; mask padded keys."""
+    sk = k.shape[1]
+    pad = (-sk) % block_k
+    if pad == 0:
+        return k, v, bias, sk
+    h, _, dh = k.shape
+    k = jnp.concatenate([k, jnp.zeros((h, pad, dh), k.dtype)], axis=1)
+    v = jnp.concatenate([v, jnp.zeros((h, pad, dh), v.dtype)], axis=1)
+    bias = jnp.concatenate(
+        [bias, jnp.full((h, bias.shape[1], pad), _NEG_INF, bias.dtype)],
+        axis=2,
+    )
+    return k, v, bias, sk + pad
+
+
+def _fwd_call(q, k, v, bias, block_k):
+    h, sq, dh = q.shape
+    k, v, bias, sk = _pad_kv(k, v, bias, block_k)
+    bk = min(block_k, sk)
+    kernel = functools.partial(_fwd_kernel, block_k=bk, sk=sk)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, sq, dh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, sq, sk), lambda g: (g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, sq, dh), lambda g: (g, 0, 0)),
+            pl.BlockSpec((None, sq), lambda g: (g, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq, dh), q.dtype),
+            jax.ShapeDtypeStruct((h, sq), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v, bias)
+    return out, lse
+
+
+def _bwd_call(q, k, v, bias, out, lse, g, block_k):
+    h, sq, dh = q.shape
+    sk_orig = k.shape[1]
+    k, v, bias, sk = _pad_kv(k, v, bias, block_k)
+    bk = min(block_k, sk)
+    kernel = functools.partial(_bwd_kernel, block_k=bk, sk=sk)
+    dq, dk, dv = pl.pallas_call(
+        kernel,
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((None, sq, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sq, sk), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sq, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sq), lambda g_: (g_, 0)),
+            pl.BlockSpec((None, sq, dh), lambda g_: (g_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((None, sq, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g_: (g_, 0, 0)),
+            pl.BlockSpec((None, sk, dh), lambda g_: (g_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, sq, dh), q.dtype),
+            jax.ShapeDtypeStruct((h, sk, dh), k.dtype),
+            jax.ShapeDtypeStruct((h, sk, dh), v.dtype),
+        ],
+        interpret=True,
+    )(q, k, v, bias, out, lse, g)
+    return dq, dk[:, :sk_orig, :], dv[:, :sk_orig, :]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def flash_attention(q, k, v, bias, block_k=DEFAULT_BLOCK_K):
+    """softmax(q·kᵀ/√dh + bias)·v with flash tiling.
+
+    q: ``[H, Sq, Dh]``; k, v: ``[H, Sk, Dh]``; bias: ``[H, Sq, Sk]``
+    additive mask (use large negative values to mask).  Returns
+    ``[H, Sq, Dh]``.  Differentiable w.r.t. q, k, v (bias gradient is
+    defined as zero — masks are constants in the model).
+    """
+    out, _ = _fwd_call(q, k, v, bias, block_k)
+    return out
+
+
+def _fa_fwd(q, k, v, bias, block_k):
+    out, lse = _fwd_call(q, k, v, bias, block_k)
+    return out, (q, k, v, bias, out, lse)
+
+
+def _fa_bwd(block_k, res, g):
+    q, k, v, bias, out, lse = res
+    dq, dk, dv = _bwd_call(q, k, v, bias, out, lse, g, block_k)
+    return dq, dk, dv, jnp.zeros_like(bias)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)

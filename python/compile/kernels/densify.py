@@ -1,0 +1,89 @@
+"""Pallas densification kernel: IndexedSlices -> dense (scatter-add).
+
+This is the operator the paper's fix boils down to.  Horovod's
+``sparse_as_dense=True`` calls ``tf.convert_to_tensor`` on each
+``IndexedSlices`` gradient, which lowers to a scatter-add of the slice
+rows into a zero (or pre-accumulated) dense buffer.  Converting the
+embedding row-gradient ``(indices [T], values [T, D])`` into a dense
+``[V, D]`` tensor is what lets multi-node accumulation switch from
+``MPI_Allgather`` over O(p·(T+V)·D) bytes to ``MPI_Allreduce`` over a
+fixed O(V·D) buffer (paper §4, Fig. 5).
+
+TPU adaptation (DESIGN.md §Hardware-Adaptation): the value rows stream
+HBM→VMEM in row-blocks of ``block_rows`` via ``BlockSpec``; the dense
+accumulator is input/output-aliased so the scatter-add is in-place.  On
+this CPU image the kernel runs with ``interpret=True`` (Mosaic
+custom-calls cannot execute on the CPU PJRT plugin); numerics are
+validated against ``ref.densify_ref``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["densify", "DEFAULT_BLOCK_ROWS"]
+
+DEFAULT_BLOCK_ROWS = 8
+
+
+def _densify_kernel(idx_ref, val_ref, _init_ref, out_ref, *, block_rows):
+    """One grid step: scatter-add ``block_rows`` value rows into out.
+
+    ``out_ref`` is aliased with the dense init tensor, so accumulation
+    across grid steps is in-place.  The grid is executed sequentially
+    (both in interpret mode and per-core on real TPU), so read-modify-
+    write per row is race-free.
+    """
+    for r in range(block_rows):  # static unroll within the row block
+        i = idx_ref[r]
+        row = val_ref[r, :]
+        cur = pl.load(out_ref, (pl.ds(i, 1), slice(None)))
+        pl.store(out_ref, (pl.ds(i, 1), slice(None)), cur + row[None, :])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows",))
+def densify(indices, values, init, *, block_rows=DEFAULT_BLOCK_ROWS):
+    """Dense ``[V, D]`` = ``init`` + scatter-add of ``values`` at ``indices``.
+
+    Args:
+      indices: int32 ``[T]`` row ids into the vocabulary dimension.
+      values:  ``[T, D]`` slice rows (duplicate indices accumulate).
+      init:    ``[V, D]`` dense tensor to accumulate into (e.g. the tied
+               projection-matrix gradient, or zeros).
+      block_rows: rows of ``values`` streamed into VMEM per grid step.
+
+    Returns a new ``[V, D]`` tensor; ``init`` is donated via
+    input/output aliasing inside the kernel.
+    """
+    t, d = values.shape
+    v, d2 = init.shape
+    assert d == d2, f"row width mismatch: values {d} vs init {d2}"
+    assert indices.shape == (t,), f"indices shape {indices.shape} != ({t},)"
+
+    # Pad T up to a multiple of block_rows. Padded rows scatter zeros
+    # into row 0, which is a no-op for the accumulation.
+    pad = (-t) % block_rows
+    if pad:
+        indices = jnp.concatenate([indices, jnp.zeros((pad,), indices.dtype)])
+        values = jnp.concatenate(
+            [values, jnp.zeros((pad, d), values.dtype)], axis=0
+        )
+    t_padded = t + pad
+    grid = (t_padded // block_rows,)
+
+    kernel = functools.partial(_densify_kernel, block_rows=block_rows)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows,), lambda g: (g,)),
+            pl.BlockSpec((block_rows, d), lambda g: (g, 0)),
+            pl.BlockSpec((v, d), lambda g: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((v, d), lambda g: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((v, d), init.dtype),
+        input_output_aliases={2: 0},
+        interpret=True,
+    )(indices.astype(jnp.int32), values, init)

@@ -1,0 +1,345 @@
+"""Layer-2: transformer encoder–decoder for NMT in JAX.
+
+This is the paper's workload — the TensorFlow "official Transformer"
+(Vaswani et al.) with the design detail that triggers the whole problem:
+the embedding matrix is **tied** between the input lookup and the
+pre-softmax projection (paper §3).  In TF the lookup produces a sparse
+``IndexedSlices`` gradient while the projection produces a dense
+``[V, D]`` gradient; TF's accumulation strategy (their Algorithm 1) then
+sparsifies *everything*, which is what the Rust coordinator reproduces.
+
+To let Layer 3 exercise both accumulation strategies faithfully, the
+training step exports the tied-embedding gradient in two forms:
+
+- ``step_sparse``: the raw pieces, exactly what TF sees —
+  ``(g_emb_src_rows [B·Ss, D], g_emb_tgt_rows [B·St, D], g_proj [V, D])``
+  with the slice indices being the input token ids themselves (known to
+  the coordinator from the batch).
+- ``step_dense``: the ``sparse_as_dense=True`` path — the rows are
+  scatter-added into the projection gradient **inside the graph** via
+  the Pallas ``densify`` kernel, yielding one dense ``[V, D]`` tensor.
+
+The split is achieved by staging: embeddings are gathered *outside* the
+differentiated function and passed in as arguments, so ``jax.grad``
+yields the row-gradient directly (the values of the IndexedSlices)
+instead of a scattered dense tensor — mirroring TF's
+``tf.gather``/``IndexedSlices`` behaviour.
+
+All attention runs through the Pallas ``flash_attention`` kernel, so the
+kernels lower into the same HLO the Rust runtime executes.
+
+No dropout: the AOT artifacts must be deterministic and the paper's
+effect is independent of regularization (documented in DESIGN.md).
+"""
+
+import dataclasses
+import math
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.attention import flash_attention
+from .kernels.densify import densify
+
+PAD_ID = 0
+BOS_ID = 1
+EOS_ID = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters (Vaswani-style, pre-LN variant)."""
+
+    vocab: int = 512
+    d_model: int = 64
+    n_heads: int = 4
+    d_ff: int = 256
+    n_enc: int = 2
+    n_dec: int = 2
+    max_len: int = 64
+    label_smoothing: float = 0.1
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list — the canonical flattening order shared
+    with the Rust side through manifest.json."""
+    specs: List[Tuple[str, Tuple[int, ...]]] = [("embedding", (cfg.vocab, cfg.d_model))]
+    d, f = cfg.d_model, cfg.d_ff
+
+    def attn(prefix):
+        return [
+            (f"{prefix}/wq", (d, d)),
+            (f"{prefix}/wk", (d, d)),
+            (f"{prefix}/wv", (d, d)),
+            (f"{prefix}/wo", (d, d)),
+        ]
+
+    def ln(prefix):
+        return [(f"{prefix}/scale", (d,)), (f"{prefix}/bias", (d,))]
+
+    def ff(prefix):
+        return [
+            (f"{prefix}/w1", (d, f)),
+            (f"{prefix}/b1", (f,)),
+            (f"{prefix}/w2", (f, d)),
+            (f"{prefix}/b2", (d,)),
+        ]
+
+    for i in range(cfg.n_enc):
+        p = f"enc{i}"
+        specs += ln(f"{p}/ln1") + attn(f"{p}/attn") + ln(f"{p}/ln2") + ff(f"{p}/ff")
+    for i in range(cfg.n_dec):
+        p = f"dec{i}"
+        specs += (
+            ln(f"{p}/ln1")
+            + attn(f"{p}/self_attn")
+            + ln(f"{p}/ln2")
+            + attn(f"{p}/cross_attn")
+            + ln(f"{p}/ln3")
+            + ff(f"{p}/ff")
+        )
+    specs += ln("final_ln")
+    return specs
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> Dict[str, jnp.ndarray]:
+    """Deterministic init: Xavier for matrices, ones/zeros for LN."""
+    params: Dict[str, jnp.ndarray] = {}
+    key = jax.random.PRNGKey(seed)
+    for name, shape in param_specs(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("/scale"):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif name.endswith(("/bias", "/b1", "/b2")):
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif name == "embedding":
+            params[name] = (
+                jax.random.normal(sub, shape, jnp.float32) * cfg.d_model**-0.5
+            )
+        else:
+            fan_in, fan_out = shape[0], shape[-1]
+            lim = math.sqrt(6.0 / (fan_in + fan_out))
+            params[name] = jax.random.uniform(sub, shape, jnp.float32, -lim, lim)
+    return params
+
+
+def count_params(cfg: ModelConfig) -> int:
+    return sum(math.prod(s) for _, s in param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _positional_encoding(max_len: int, d: int) -> jnp.ndarray:
+    pos = jnp.arange(max_len)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    angle = pos / jnp.power(10000.0, 2.0 * i / d)
+    pe = jnp.zeros((max_len, d), jnp.float32)
+    pe = pe.at[:, 0::2].set(jnp.sin(angle))
+    pe = pe.at[:, 1::2].set(jnp.cos(angle))
+    return pe
+
+
+def _layer_norm(x, scale, bias, eps=1e-6):
+    mu = x.mean(axis=-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * scale + bias
+
+
+def _mha(params, prefix, x_q, x_kv, bias, cfg: ModelConfig):
+    """Multi-head attention through the Pallas flash kernel.
+
+    x_q: [B, Sq, D], x_kv: [B, Sk, D], bias: [B, Sq, Sk] additive.
+    """
+    b, sq, d = x_q.shape
+    sk = x_kv.shape[1]
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def split(x, w, s):
+        y = x @ params[f"{prefix}/{w}"]  # [B, S, D]
+        return y.reshape(b, s, h, dh).transpose(0, 2, 1, 3).reshape(b * h, s, dh)
+
+    q = split(x_q, "wq", sq)
+    k = split(x_kv, "wk", sk)
+    v = split(x_kv, "wv", sk)
+    # broadcast bias over heads: [B, Sq, Sk] -> [B*H, Sq, Sk]
+    bias_h = jnp.repeat(bias, h, axis=0)
+    o = flash_attention(q, k, v, bias_h)  # [B*H, Sq, Dh]
+    o = o.reshape(b, h, sq, dh).transpose(0, 2, 1, 3).reshape(b, sq, d)
+    return o @ params[f"{prefix}/wo"]
+
+
+def _ffn(params, prefix, x):
+    y = jax.nn.relu(x @ params[f"{prefix}/w1"] + params[f"{prefix}/b1"])
+    return y @ params[f"{prefix}/w2"] + params[f"{prefix}/b2"]
+
+
+def _encoder(params, cfg, x, src_bias):
+    for i in range(cfg.n_enc):
+        p = f"enc{i}"
+        h = _layer_norm(x, params[f"{p}/ln1/scale"], params[f"{p}/ln1/bias"])
+        x = x + _mha(params, f"{p}/attn", h, h, src_bias, cfg)
+        h = _layer_norm(x, params[f"{p}/ln2/scale"], params[f"{p}/ln2/bias"])
+        x = x + _ffn(params, f"{p}/ff", h)
+    return x
+
+
+def _decoder(params, cfg, y, enc_out, causal_bias, cross_bias):
+    for i in range(cfg.n_dec):
+        p = f"dec{i}"
+        h = _layer_norm(y, params[f"{p}/ln1/scale"], params[f"{p}/ln1/bias"])
+        y = y + _mha(params, f"{p}/self_attn", h, h, causal_bias, cfg)
+        h = _layer_norm(y, params[f"{p}/ln2/scale"], params[f"{p}/ln2/bias"])
+        y = y + _mha(params, f"{p}/cross_attn", h, enc_out, cross_bias, cfg)
+        h = _layer_norm(y, params[f"{p}/ln3/scale"], params[f"{p}/ln3/bias"])
+        y = y + _ffn(params, f"{p}/ff", h)
+    return y
+
+
+def _biases(src, tgt_len):
+    """Additive attention biases from the token ids.
+
+    Returns (src_bias [B,Ss,Ss], causal [B,St,St], cross [B,St,Ss]).
+    """
+    neg = jnp.float32(-1e9)
+    src_pad = (src == PAD_ID)  # [B, Ss]
+    b, ss = src.shape
+    src_bias = jnp.where(src_pad[:, None, :], neg, 0.0)
+    src_bias = jnp.broadcast_to(src_bias, (b, ss, ss))
+    causal = jnp.where(
+        jnp.arange(tgt_len)[None, :, None] >= jnp.arange(tgt_len)[None, None, :],
+        0.0,
+        neg,
+    )
+    causal = jnp.broadcast_to(causal, (b, tgt_len, tgt_len))
+    cross = jnp.broadcast_to(
+        jnp.where(src_pad[:, None, :], neg, 0.0), (b, tgt_len, ss)
+    )
+    return src_bias, causal, cross
+
+
+def _core(
+    emb_src, emb_tgt, proj_w, rest: Dict[str, jnp.ndarray],
+    src, tgt_out, cfg: ModelConfig,
+):
+    """Everything between the embedding lookups and the loss.
+
+    ``emb_src``/``emb_tgt`` are the *gathered* embeddings — formal inputs
+    so that their gradient is the IndexedSlices row-gradient TF would
+    produce.  ``proj_w`` is the tied matrix used for the output
+    projection — a separate formal input so its (dense) gradient is
+    isolated, even though the caller passes the same array.
+    """
+    b, st, d = emb_tgt.shape
+    pe = _positional_encoding(cfg.max_len, cfg.d_model)
+    scale = math.sqrt(cfg.d_model)
+    x = emb_src * scale + pe[None, : emb_src.shape[1], :]
+    y = emb_tgt * scale + pe[None, :st, :]
+
+    src_bias, causal_bias, cross_bias = _biases(src, st)
+    enc = _encoder(rest, cfg, x, src_bias)
+    dec = _decoder(rest, cfg, y, enc, causal_bias, cross_bias)
+    dec = _layer_norm(dec, rest["final_ln/scale"], rest["final_ln/bias"])
+    logits = dec @ proj_w.T  # tied projection [B, St, V]
+
+    # label-smoothed cross entropy over non-pad target positions
+    eps = cfg.label_smoothing
+    v = cfg.vocab
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    onehot_ll = jnp.take_along_axis(logp, tgt_out[..., None], axis=-1)[..., 0]
+    smooth_ll = logp.mean(axis=-1)
+    # smoothing mass spread uniformly over the whole vocabulary
+    nll = -((1.0 - eps) * onehot_ll + eps * smooth_ll)
+    mask = (tgt_out != PAD_ID).astype(jnp.float32)
+    ntok = jnp.maximum(mask.sum(), 1.0)
+    return (nll * mask).sum() / ntok
+
+
+def forward_logits(params, cfg: ModelConfig, src, tgt_in):
+    """Inference forward: logits [B, St, V] (used for greedy decode)."""
+    emb = params["embedding"]
+    emb_src = emb[src]
+    emb_tgt = emb[tgt_in]
+    b, st, d = emb_tgt.shape
+    pe = _positional_encoding(cfg.max_len, cfg.d_model)
+    scale = math.sqrt(cfg.d_model)
+    x = emb_src * scale + pe[None, : src.shape[1], :]
+    y = emb_tgt * scale + pe[None, :st, :]
+    src_bias, causal_bias, cross_bias = _biases(src, st)
+    enc = _encoder(params, cfg, x, src_bias)
+    dec = _decoder(params, cfg, y, enc, causal_bias, cross_bias)
+    dec = _layer_norm(dec, params["final_ln/scale"], params["final_ln/bias"])
+    return dec @ emb.T
+
+
+# ---------------------------------------------------------------------------
+# Training steps (the two accumulation-strategy entry points)
+# ---------------------------------------------------------------------------
+
+
+def _grads(params, cfg, src, tgt_in, tgt_out):
+    """loss + split gradients.
+
+    Returns (loss, g_emb_src_rows [B*Ss, D], g_emb_tgt_rows [B*St, D],
+    g_proj [V, D], rest_grads dict).
+    """
+    emb = params["embedding"]
+    rest = {k: v for k, v in params.items() if k != "embedding"}
+    emb_src = emb[src]
+    emb_tgt = emb[tgt_in]
+
+    def f(e_s, e_t, p_w, r):
+        return _core(e_s, e_t, p_w, r, src, tgt_out, cfg)
+
+    loss, grads = jax.value_and_grad(f, argnums=(0, 1, 2, 3))(
+        emb_src, emb_tgt, emb, rest
+    )
+    g_src, g_tgt, g_proj, g_rest = grads
+    b, ss, d = g_src.shape
+    st = g_tgt.shape[1]
+    return loss, g_src.reshape(b * ss, d), g_tgt.reshape(b * st, d), g_proj, g_rest
+
+
+def rest_names(cfg: ModelConfig) -> List[str]:
+    """Non-embedding parameter names in canonical order."""
+    return [n for n, _ in param_specs(cfg) if n != "embedding"]
+
+
+def step_sparse(params, cfg: ModelConfig, src, tgt_in, tgt_out):
+    """TF-default path: embedding gradient left as IndexedSlices pieces.
+
+    Output order: (loss, g_emb_src_rows, g_emb_tgt_rows, g_proj,
+    *rest grads in canonical order).  The slice indices are the token
+    ids (src flattened, tgt_in flattened) — the coordinator already has
+    them from the batch, exactly as TF's IndexedSlices carries
+    ``indices=input_ids``.
+    """
+    loss, g_src, g_tgt, g_proj, g_rest = _grads(params, cfg, src, tgt_in, tgt_out)
+    return (loss, g_src, g_tgt, g_proj, *[g_rest[n] for n in rest_names(cfg)])
+
+
+def step_dense(params, cfg: ModelConfig, src, tgt_in, tgt_out):
+    """``sparse_as_dense=True`` path: densify inside the graph.
+
+    The Pallas scatter-add folds both row-gradients into the dense
+    projection gradient, producing a single fixed-size [V, D] tensor —
+    Listing 1 of the paper, as a kernel.  Output order: (loss, g_emb,
+    *rest grads).
+    """
+    loss, g_src, g_tgt, g_proj, g_rest = _grads(params, cfg, src, tgt_in, tgt_out)
+    g_emb = densify(src.reshape(-1), g_src, g_proj)
+    g_emb = densify(tgt_in.reshape(-1), g_tgt, g_emb)
+    return (loss, g_emb, *[g_rest[n] for n in rest_names(cfg)])

@@ -1,0 +1,114 @@
+"""AOT pipeline: manifest/artifact agreement, HLO text validity.
+
+These tests exercise the lowering helpers directly on the tiny preset
+(cheap); artifact-on-disk checks run only if `make artifacts` has been
+executed (they are the contract the Rust runtime relies on).
+"""
+
+import json
+import math
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model as M
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+HAVE_ARTIFACTS = os.path.exists(os.path.join(ART, "manifest.json"))
+
+needs_artifacts = pytest.mark.skipif(
+    not HAVE_ARTIFACTS, reason="run `make artifacts` first"
+)
+
+
+class TestLowering:
+    def test_hlo_text_nonempty_and_parseable_header(self):
+        cfg = aot.PRESETS["tiny"]["cfg"]
+        fn = aot._step_fn(cfg, "dense")
+        b, ss, st = 2, 4, 4
+        specs = aot._param_arg_specs(cfg)
+        lowered = jax.jit(fn).lower(
+            *specs, aot._int_spec(b, ss), aot._int_spec(b, st), aot._int_spec(b, st)
+        )
+        text = aot.to_hlo_text(lowered)
+        assert text.startswith("HloModule")
+        assert "ENTRY" in text
+
+    def test_step_fn_positional_order_is_canonical(self):
+        """The jitted signature must follow param_specs order, not the
+        sorted-dict order jax would use for a pytree."""
+        cfg = aot.PRESETS["tiny"]["cfg"]
+        names = [n for n, _ in M.param_specs(cfg)]
+        assert names[0] == "embedding"
+        assert names != sorted(names)  # would be silently reordered via dict
+
+    def test_densify_spec_matches_small_preset(self):
+        cfg = aot.PRESETS["small"]["cfg"]
+        assert aot.DENSIFY_SPEC["v"] == cfg.vocab
+        assert aot.DENSIFY_SPEC["d"] == cfg.d_model
+
+
+@needs_artifacts
+class TestArtifactsOnDisk:
+    @pytest.fixture(scope="class")
+    def manifest(self):
+        with open(os.path.join(ART, "manifest.json")) as f:
+            return json.load(f)
+
+    def test_every_artifact_exists(self, manifest):
+        for preset in manifest["presets"].values():
+            for fname in preset["artifacts"].values():
+                assert os.path.exists(os.path.join(ART, fname)), fname
+        assert os.path.exists(os.path.join(ART, manifest["densify"]["artifact"]))
+
+    def test_params_bin_size(self, manifest):
+        for name, preset in manifest["presets"].items():
+            path = os.path.join(ART, preset["artifacts"]["params_bin"])
+            assert os.path.getsize(path) == preset["n_params"] * 4, name
+
+    def test_param_offsets_contiguous(self, manifest):
+        for preset in manifest["presets"].values():
+            offset = 0
+            for p in preset["params"]:
+                assert p["offset"] == offset
+                assert p["numel"] == math.prod(p["shape"]) if p["shape"] else 1
+                offset += p["numel"]
+            assert offset == preset["n_params"]
+
+    def test_params_bin_matches_init(self, manifest):
+        """Rust reads exactly what init_params(seed=0) produced."""
+        preset = manifest["presets"]["tiny"]
+        cfg = M.ModelConfig(**preset["config"])
+        params = M.init_params(cfg, seed=0)
+        path = os.path.join(ART, preset["artifacts"]["params_bin"])
+        buf = np.fromfile(path, "<f4")
+        expected = np.concatenate(
+            [np.asarray(params[n], np.float32).ravel() for n, _ in M.param_specs(cfg)]
+        )
+        np.testing.assert_array_equal(buf, expected)
+
+    def test_output_shapes_listed(self, manifest):
+        for preset in manifest["presets"].values():
+            assert len(preset["outputs_sparse"]) == len(
+                preset["output_shapes_sparse"]
+            )
+            assert len(preset["outputs_dense"]) == len(preset["output_shapes_dense"])
+            # dense path folds 3 tensors into 1
+            assert (
+                len(preset["outputs_sparse"]) == len(preset["outputs_dense"]) + 2
+            )
+
+    def test_hlo_parameter_count(self, manifest):
+        """HLO entry must take n_params + 3 (src, tgt_in, tgt_out) args."""
+        preset = manifest["presets"]["tiny"]
+        n = len(preset["params"])
+        path = os.path.join(ART, preset["artifacts"]["step_dense"])
+        with open(path) as f:
+            text = f.read()
+        entry = text[text.index("ENTRY"):]
+        body = entry[: entry.index("\n}")]
+        count = body.count("parameter(")
+        assert count == n + 3, (count, n + 3)

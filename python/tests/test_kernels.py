@@ -1,0 +1,211 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle.
+
+hypothesis sweeps shapes/dtypes; every failure here is a real kernel
+bug (the references are straight-line jnp).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import flash_attention
+from compile.kernels.densify import densify
+from compile.kernels.ref import attention_bwd_ref, attention_ref, densify_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand(key, shape, dtype):
+    x = jax.random.normal(key, shape, jnp.float32)
+    return x.astype(dtype)
+
+
+def _tol(dtype):
+    return dict(rtol=2e-2, atol=2e-2) if dtype == jnp.bfloat16 else dict(
+        rtol=2e-4, atol=2e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# densify
+# ---------------------------------------------------------------------------
+
+
+class TestDensify:
+    def test_basic(self):
+        idx = jnp.array([0, 2, 2, 1], jnp.int32)
+        vals = jnp.ones((4, 3), jnp.float32)
+        init = jnp.zeros((4, 3), jnp.float32)
+        out = densify(idx, vals, init)
+        expected = jnp.array(
+            [[1, 1, 1], [1, 1, 1], [2, 2, 2], [0, 0, 0]], jnp.float32
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(expected))
+
+    def test_accumulates_into_init(self):
+        idx = jnp.array([1], jnp.int32)
+        vals = jnp.full((1, 2), 3.0)
+        init = jnp.full((3, 2), 10.0)
+        out = densify(idx, vals, init)
+        np.testing.assert_array_equal(
+            np.asarray(out), np.array([[10, 10], [13, 13], [10, 10]], np.float32)
+        )
+
+    def test_empty_rows_unchanged(self):
+        """Rows never indexed keep their init value."""
+        idx = jnp.array([5], jnp.int32)
+        vals = jnp.ones((1, 4))
+        init = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+        out = densify(idx, vals, init)
+        np.testing.assert_allclose(np.asarray(out[:5]), np.asarray(init[:5]))
+        np.testing.assert_allclose(np.asarray(out[6:]), np.asarray(init[6:]))
+
+    def test_all_same_index(self):
+        """Heavy duplication — the worst case for scatter-add."""
+        t, d, v = 33, 4, 8
+        idx = jnp.full((t,), 3, jnp.int32)
+        vals = jnp.ones((t, d))
+        out = densify(idx, vals, jnp.zeros((v, d)))
+        np.testing.assert_allclose(np.asarray(out[3]), np.full(d, float(t)))
+        assert float(jnp.abs(out).sum()) == t * d
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        t=st.integers(1, 65),
+        d=st.integers(1, 33),
+        v=st.integers(1, 40),
+        block_rows=st.sampled_from([1, 4, 8, 16]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_matches_ref(self, t, d, v, block_rows, seed):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(seed), 3)
+        idx = jax.random.randint(k1, (t,), 0, v)
+        vals = jax.random.normal(k2, (t, d))
+        init = jax.random.normal(k3, (v, d))
+        out = densify(idx, vals, init, block_rows=block_rows)
+        ref = densify_ref(idx, vals, init)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-5, atol=1e-5)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+        idx = jax.random.randint(k1, (17,), 0, 9)
+        vals = _rand(k2, (17, 8), dtype)
+        init = _rand(k3, (9, 8), dtype)
+        out = densify(idx, vals, init)
+        ref = densify_ref(idx, vals, init)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    def test_jit_and_grad_free(self):
+        """densify is used on gradients only — it must be jittable."""
+        f = jax.jit(lambda i, v, z: densify(i, v, z))
+        out = f(
+            jnp.array([0, 1], jnp.int32),
+            jnp.ones((2, 2)),
+            jnp.zeros((2, 2)),
+        )
+        np.testing.assert_array_equal(np.asarray(out), np.eye(2) * 0 + 1)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+
+def _mk_qkvb(seed, h, sq, sk, dh, dtype=jnp.float32, mask_p=0.15):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    q = _rand(ks[0], (h, sq, dh), dtype)
+    k = _rand(ks[1], (h, sk, dh), dtype)
+    v = _rand(ks[2], (h, sk, dh), dtype)
+    keep = jax.random.bernoulli(ks[3], 1.0 - mask_p, (h, sq, sk))
+    # never mask an entire row (softmax of all -inf is undefined)
+    keep = keep.at[:, :, 0].set(True)
+    bias = jnp.where(keep, 0.0, -1e9).astype(jnp.float32)
+    return q, k, v, bias
+
+
+class TestFlashAttention:
+    @settings(max_examples=20, deadline=None)
+    @given(
+        h=st.integers(1, 4),
+        sq=st.integers(1, 33),
+        sk=st.integers(1, 70),
+        dh=st.sampled_from([4, 8, 16]),
+        block_k=st.sampled_from([8, 16, 64]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_fwd_matches_ref(self, h, sq, sk, dh, block_k, seed):
+        q, k, v, bias = _mk_qkvb(seed, h, sq, sk, dh)
+        out = flash_attention(q, k, v, bias, block_k)
+        ref = attention_ref(q, k, v, bias)
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(ref), rtol=2e-5, atol=2e-5
+        )
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        h=st.integers(1, 3),
+        sq=st.integers(2, 17),
+        sk=st.integers(2, 40),
+        dh=st.sampled_from([4, 8]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_bwd_matches_ref(self, h, sq, sk, dh, seed):
+        q, k, v, bias = _mk_qkvb(seed, h, sq, sk, dh)
+        g = jax.random.normal(jax.random.PRNGKey(seed ^ 0xABCD), (h, sq, dh))
+        f = lambda q_, k_, v_: flash_attention(q_, k_, v_, bias, 16)
+        _, vjp = jax.vjp(f, q, k, v)
+        dq, dk, dv = vjp(g)
+        rq, rk, rv = attention_bwd_ref(q, k, v, bias, g)
+        for a, b in [(dq, rq), (dk, rk), (dv, rv)]:
+            np.testing.assert_allclose(
+                np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5
+            )
+
+    def test_causal_mask(self):
+        """Causal bias: position i must not attend to j > i."""
+        h, s, dh = 2, 8, 4
+        q, k, v, _ = _mk_qkvb(3, h, s, s, dh, mask_p=0.0)
+        causal = jnp.where(
+            jnp.arange(s)[:, None] >= jnp.arange(s)[None, :], 0.0, -1e9
+        )
+        bias = jnp.broadcast_to(causal, (h, s, s)).astype(jnp.float32)
+        out = flash_attention(q, k, v, bias)
+        # row 0 attends only to key 0 -> output == v[:, 0]
+        np.testing.assert_allclose(
+            np.asarray(out[:, 0, :]), np.asarray(v[:, 0, :]), rtol=1e-5, atol=1e-6
+        )
+
+    def test_softmax_numerics_large_logits(self):
+        """Online softmax must survive large score magnitudes."""
+        h, sq, sk, dh = 1, 4, 12, 8
+        q, k, v, bias = _mk_qkvb(5, h, sq, sk, dh, mask_p=0.0)
+        q = q * 30.0
+        out = flash_attention(q, k, v, bias, 8)
+        ref = attention_ref(q, k, v, bias)
+        assert np.isfinite(np.asarray(out)).all()
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref), rtol=1e-4, atol=1e-4)
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_dtypes(self, dtype):
+        q, k, v, bias = _mk_qkvb(7, 2, 8, 16, 8, dtype=dtype)
+        out = flash_attention(q, k, v, bias, 8)
+        ref = attention_ref(q, k, v, bias)
+        assert out.dtype == dtype
+        np.testing.assert_allclose(
+            np.asarray(out, np.float32), np.asarray(ref, np.float32), **_tol(dtype)
+        )
+
+    def test_block_k_invariance(self):
+        """Result must be identical (up to fp) for any tiling choice."""
+        q, k, v, bias = _mk_qkvb(11, 2, 9, 50, 8)
+        outs = [
+            np.asarray(flash_attention(q, k, v, bias, bk)) for bk in (4, 16, 64, 128)
+        ]
+        for o in outs[1:]:
+            np.testing.assert_allclose(o, outs[0], rtol=2e-5, atol=2e-5)

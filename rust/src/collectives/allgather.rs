@@ -1,0 +1,180 @@
+//! Allgather(v) — the collective TF's assumed-sparse accumulation
+//! forces onto Horovod (paper §3): every rank must receive every other
+//! rank's IndexedSlices, so the result buffer grows linearly with the
+//! worker count.  Ring algorithm, variable contribution sizes
+//! (MPI_Allgatherv semantics: slice counts differ per rank when
+//! batches have different padding).
+
+use crate::tensor::IndexedSlices;
+use crate::transport::{Payload, Transport};
+
+/// Ring allgather of variable-size f32 blocks. Returns the blocks of
+/// all ranks, indexed by rank.
+pub fn allgatherv_ring(
+    t: &dyn Transport,
+    rank: usize,
+    mine: Vec<f32>,
+    tag_base: u64,
+) -> Vec<Vec<f32>> {
+    let p = t.nranks();
+    let mut blocks: Vec<Option<Vec<f32>>> = (0..p).map(|_| None).collect();
+    blocks[rank] = Some(mine);
+    if p == 1 {
+        return blocks.into_iter().map(Option::unwrap).collect();
+    }
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+    // circulate: at step s we forward the block that originated at
+    // (rank - s) mod p and receive the one from (rank - s - 1) mod p
+    for s in 0..p - 1 {
+        let fwd_origin = (rank + p - s) % p;
+        let tag = tag_base + s as u64;
+        let outgoing = blocks[fwd_origin].as_ref().expect("block not yet received");
+        t.send(rank, next, tag, Payload::F32(outgoing.clone()));
+        let recv_origin = (rank + p - s - 1) % p;
+        let incoming = t.recv(rank, prev, tag).into_f32();
+        blocks[recv_origin] = Some(incoming);
+    }
+    blocks.into_iter().map(Option::unwrap).collect()
+}
+
+/// Allgather of whole IndexedSlices: exchanges (indices, values) pairs
+/// and returns the TF-style *concatenation* across ranks in rank
+/// order.  This is the gather path's network operation; its traffic is
+/// what Fig. 3a / Fig. 5 measure.
+pub fn allgather_indexed_slices(
+    t: &dyn Transport,
+    rank: usize,
+    mine: &IndexedSlices,
+    tag_base: u64,
+) -> IndexedSlices {
+    let p = t.nranks();
+    // ship indices as f32-free payloads: first the i32 indices, then
+    // the f32 values, on separate tag planes
+    let idx_blocks = {
+        let mut blocks: Vec<Option<Vec<i32>>> = (0..p).map(|_| None).collect();
+        blocks[rank] = Some(mine.indices.clone());
+        if p > 1 {
+            let next = (rank + 1) % p;
+            let prev = (rank + p - 1) % p;
+            for s in 0..p - 1 {
+                let fwd_origin = (rank + p - s) % p;
+                let tag = tag_base + s as u64;
+                let out = blocks[fwd_origin].as_ref().unwrap().clone();
+                t.send(rank, next, tag, Payload::I32(out));
+                let recv_origin = (rank + p - s - 1) % p;
+                blocks[recv_origin] = Some(t.recv(rank, prev, tag).into_i32());
+            }
+        }
+        blocks.into_iter().map(Option::unwrap).collect::<Vec<_>>()
+    };
+    let val_blocks = allgatherv_ring(t, rank, mine.values.clone(), tag_base + 1000);
+
+    let total_slices: usize = idx_blocks.iter().map(Vec::len).sum();
+    let mut indices = Vec::with_capacity(total_slices);
+    let mut values = Vec::with_capacity(total_slices * mine.row_width);
+    for (ib, vb) in idx_blocks.into_iter().zip(val_blocks) {
+        debug_assert_eq!(vb.len(), ib.len() * mine.row_width);
+        indices.extend(ib);
+        values.extend(vb);
+    }
+    IndexedSlices::new(mine.nrows, mine.row_width, indices, values)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::run_ranks;
+
+    #[test]
+    fn allgatherv_variable_sizes() {
+        let p = 5;
+        let results = run_ranks(p, move |rank, t| {
+            // rank r contributes r+1 elements, value = rank
+            let mine = vec![rank as f32; rank + 1];
+            allgatherv_ring(t.as_ref(), rank, mine, 0)
+        });
+        for blocks in results {
+            assert_eq!(blocks.len(), p);
+            for (origin, b) in blocks.iter().enumerate() {
+                assert_eq!(b.len(), origin + 1);
+                assert!(b.iter().all(|&x| x == origin as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn allgatherv_single_rank() {
+        let results = run_ranks(1, |rank, t| {
+            allgatherv_ring(t.as_ref(), rank, vec![5.0], 0)
+        });
+        assert_eq!(results[0], vec![vec![5.0]]);
+    }
+
+    #[test]
+    fn indexed_slices_concat_in_rank_order() {
+        let p = 4;
+        let results = run_ranks(p, move |rank, t| {
+            // each rank contributes 2 slices pointing at rows rank, rank+1
+            let mine = IndexedSlices::new(
+                8,
+                3,
+                vec![rank as i32, rank as i32 + 1],
+                vec![rank as f32; 6],
+            );
+            allgather_indexed_slices(t.as_ref(), rank, &mine, 0)
+        });
+        for out in results {
+            assert_eq!(out.nslices(), 2 * p);
+            // rank order: [0,1, 1,2, 2,3, 3,4]
+            assert_eq!(out.indices, vec![0, 1, 1, 2, 2, 3, 3, 4]);
+            for r in 0..p {
+                assert!(out.values[r * 6..(r + 1) * 6]
+                    .iter()
+                    .all(|&x| x == r as f32));
+            }
+        }
+    }
+
+    #[test]
+    fn gathered_bytes_grow_linearly() {
+        // the blow-up property, measured on the wire
+        let mut per_p = Vec::new();
+        for p in [2usize, 4] {
+            let results = run_ranks(p, move |rank, t| {
+                let mine = IndexedSlices::new(64, 4, vec![1; 16], vec![0.5; 64]);
+                let out = allgather_indexed_slices(t.as_ref(), rank, &mine, 0);
+                (out.nbytes(), t.stats().bytes)
+            });
+            per_p.push(results[0].0);
+        }
+        assert_eq!(per_p[1], 2 * per_p[0]);
+    }
+
+    #[test]
+    fn semantic_equivalence_with_dense_reduce() {
+        // gather-then-densify == dense allreduce of the densified slices
+        let p = 3;
+        let results = run_ranks(p, move |rank, t| {
+            let mine = IndexedSlices::new(
+                6,
+                2,
+                vec![rank as i32, 2],
+                vec![1.0, 1.0, 10.0, 10.0],
+            );
+            let gathered = allgather_indexed_slices(t.as_ref(), rank, &mine, 0);
+            gathered.to_dense().data
+        });
+        // expected: rows 0,1,2 each +1 (from their rank), row 2 +10*3
+        let mut expected = vec![0.0f32; 12];
+        for r in 0..p {
+            expected[r * 2] += 1.0;
+            expected[r * 2 + 1] += 1.0;
+            expected[4] += 10.0;
+            expected[5] += 10.0;
+        }
+        for r in results {
+            assert_eq!(r, expected);
+        }
+    }
+}

@@ -1,0 +1,158 @@
+//! Alpha–beta cost models for the collective algorithms.
+//!
+//! `time = α·(message count on the critical path) + bytes/β` per link,
+//! the standard Hockney-model analysis (Thakur et al., "Optimization of
+//! Collective Communication Operations in MPICH").  The cluster
+//! simulator composes these with a node model (PPN ranks share one
+//! NIC) to regenerate the paper's Zenith/Stampede2 curves; the live
+//! LocalTransport runs validate the *algorithms*, these models supply
+//! the *timing* at scales this machine cannot host.
+
+/// Link parameters. Defaults approximate the paper's 100 Gb/s
+/// Intel Omni-Path fabric (α ≈ 1.5 µs MPI latency, β ≈ 12.5 GB/s).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkModel {
+    /// per-message latency, seconds
+    pub alpha: f64,
+    /// per-byte time, seconds (1/bandwidth)
+    pub inv_beta: f64,
+}
+
+impl Default for LinkModel {
+    fn default() -> Self {
+        Self::omni_path()
+    }
+}
+
+impl LinkModel {
+    pub fn omni_path() -> Self {
+        Self { alpha: 1.5e-6, inv_beta: 1.0 / 12.5e9 }
+    }
+
+    /// Shared-memory "link" for ranks on the same node (memcpy-speed).
+    pub fn shared_memory() -> Self {
+        Self { alpha: 0.3e-6, inv_beta: 1.0 / 5.0e9 }
+    }
+
+    pub fn ptp(&self, bytes: f64) -> f64 {
+        self.alpha + bytes * self.inv_beta
+    }
+}
+
+/// Ring allreduce: 2(p-1) steps, each moving n/p bytes.
+pub fn ring_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let steps = 2 * (p - 1);
+    steps as f64 * link.alpha + 2.0 * (p - 1) as f64 / p as f64 * bytes * link.inv_beta
+}
+
+/// Recursive doubling: log2(p) steps, each moving the full buffer.
+pub fn rec_doubling_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let rounds = (p as f64).log2().ceil();
+    rounds * (link.alpha + bytes * link.inv_beta)
+}
+
+/// Binomial reduce + broadcast: 2·log2(p) full-buffer steps.
+pub fn reduce_bcast_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    2.0 * (p as f64).log2().ceil() * (link.alpha + bytes * link.inv_beta)
+}
+
+/// Ring allgather with per-rank contribution `bytes_per_rank`:
+/// (p-1) steps, each forwarding one contribution; total received
+/// (p-1)·bytes_per_rank.
+pub fn ring_allgather_time(link: &LinkModel, p: u64, bytes_per_rank: f64) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    (p - 1) as f64 * (link.alpha + bytes_per_rank * link.inv_beta)
+}
+
+/// Pick the cheaper allreduce for this (p, size) — mirrors what MPI
+/// implementations do with size thresholds.
+pub fn best_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
+    ring_allreduce_time(link, p, bytes)
+        .min(rec_doubling_allreduce_time(link, p, bytes))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_bandwidth_term_flat_in_p() {
+        // the defining property: bytes-on-wire per rank ~ 2n regardless
+        // of p, so time grows only through the latency term
+        let link = LinkModel::omni_path();
+        let n = 139e6;
+        let t64 = ring_allreduce_time(&link, 64, n);
+        let t512 = ring_allreduce_time(&link, 512, n);
+        // bandwidth component: 2·(p-1)/p·n/β — within 2% between 64 and 512
+        let bw64 = 2.0 * 63.0 / 64.0 * n * link.inv_beta;
+        let bw512 = 2.0 * 511.0 / 512.0 * n * link.inv_beta;
+        assert!((bw512 / bw64 - 1.0).abs() < 0.02);
+        // total grows by less than 2x despite 8x the ranks
+        assert!(t512 < 2.0 * t64, "t64={t64} t512={t512}");
+    }
+
+    #[test]
+    fn allgather_grows_linearly_in_p() {
+        let link = LinkModel::omni_path();
+        let per_rank = 170e6; // ~ (T+V)·D·4 from the paper's model
+        let t8 = ring_allgather_time(&link, 8, per_rank);
+        let t64 = ring_allgather_time(&link, 64, per_rank);
+        assert!(t64 / t8 > 8.5, "expected ~9x growth, got {}", t64 / t8);
+    }
+
+    #[test]
+    fn small_messages_prefer_rec_doubling() {
+        let link = LinkModel::omni_path();
+        let p = 64;
+        let small = 4096.0;
+        assert!(
+            rec_doubling_allreduce_time(&link, p, small)
+                < ring_allreduce_time(&link, p, small)
+        );
+    }
+
+    #[test]
+    fn large_messages_prefer_ring() {
+        let link = LinkModel::omni_path();
+        let p = 64;
+        let large = 139e6;
+        assert!(
+            ring_allreduce_time(&link, p, large)
+                < rec_doubling_allreduce_time(&link, p, large)
+        );
+    }
+
+    #[test]
+    fn single_rank_free() {
+        let link = LinkModel::default();
+        assert_eq!(ring_allreduce_time(&link, 1, 1e9), 0.0);
+        assert_eq!(ring_allgather_time(&link, 1, 1e9), 0.0);
+    }
+
+    #[test]
+    fn paper_scale_gap_at_64_ranks() {
+        // Fig. 5 shape: at 64 ranks, gather over 11.4GB total vs ring
+        // reduce over 139MB — the model must show a >=10x gap
+        let link = LinkModel::omni_path();
+        let dense = 139e6;
+        let per_rank_gather = 178e6; // (T+V)(D·4+4) per contributor
+        let t_reduce = ring_allreduce_time(&link, 64, dense);
+        let t_gather = ring_allgather_time(&link, 64, per_rank_gather);
+        assert!(
+            t_gather / t_reduce > 10.0,
+            "gather/reduce = {}",
+            t_gather / t_reduce
+        );
+    }
+}

@@ -1,0 +1,200 @@
+//! Hierarchical (two-level) allreduce: intra-node reduce to a local
+//! leader, inter-node ring allreduce among leaders, intra-node
+//! broadcast.  This is what MVAPICH2/Horovod do on multi-PPN clusters
+//! like Zenith (4 PPN): the NIC carries one rank's worth of traffic
+//! per node instead of `ppn`'s — the ablation bench and the simulator
+//! quantify the effect.
+
+use super::{ring, tree};
+use crate::transport::Transport;
+
+/// Node-aware rank layout: ranks [0..ppn) on node 0, [ppn..2ppn) on
+/// node 1, … (the standard block mapping the paper's runs used).
+#[derive(Debug, Clone, Copy)]
+pub struct NodeLayout {
+    pub ppn: usize,
+}
+
+impl NodeLayout {
+    pub fn node_of(&self, rank: usize) -> usize {
+        rank / self.ppn
+    }
+
+    pub fn local_leader(&self, rank: usize) -> usize {
+        self.node_of(rank) * self.ppn
+    }
+
+    pub fn is_leader(&self, rank: usize) -> bool {
+        rank % self.ppn == 0
+    }
+}
+
+/// In-place hierarchical allreduce (sum).  Requires `p % ppn == 0`
+/// (full nodes) — callers with ragged layouts should fall back to the
+/// flat ring.
+pub fn allreduce_hierarchical(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    ppn: usize,
+    tag_base: u64,
+) {
+    let p = t.nranks();
+    assert!(ppn > 0 && p % ppn == 0, "p={p} must be a multiple of ppn={ppn}");
+    let layout = NodeLayout { ppn };
+    let n_nodes = p / ppn;
+    if p == 1 {
+        return;
+    }
+
+    // Phase 1: intra-node reduce to the local leader.  Binomial tree
+    // over the node's rank block, re-indexed through a sub-transport
+    // view — implemented directly with point-to-point sends for
+    // clarity: children send to leader, leader sums.
+    let leader = layout.local_leader(rank);
+    if ppn > 1 {
+        if rank == leader {
+            for peer in leader + 1..leader + ppn {
+                let incoming = t.recv(rank, peer, tag_base + peer as u64).into_f32();
+                for (d, x) in data.iter_mut().zip(incoming) {
+                    *d += x;
+                }
+            }
+        } else {
+            t.send(
+                rank,
+                leader,
+                tag_base + rank as u64,
+                crate::transport::Payload::F32(data.to_vec()),
+            );
+        }
+    }
+
+    // Phase 2: inter-node ring among leaders (sub-communicator of
+    // n_nodes ranks mapped onto the full transport).
+    if layout.is_leader(rank) && n_nodes > 1 {
+        let node = layout.node_of(rank);
+        let sub = SubRing { t, ppn, n_nodes };
+        sub.ring_allreduce(node, data, tag_base + 10_000);
+    }
+
+    // Phase 3: intra-node broadcast from the leader.
+    if ppn > 1 {
+        if rank == leader {
+            for peer in leader + 1..leader + ppn {
+                t.send(
+                    rank,
+                    peer,
+                    tag_base + 20_000 + peer as u64,
+                    crate::transport::Payload::F32(data.to_vec()),
+                );
+            }
+        } else {
+            let reduced = t
+                .recv(rank, leader, tag_base + 20_000 + rank as u64)
+                .into_f32();
+            data.copy_from_slice(&reduced);
+        }
+    }
+    let _ = tree::broadcast_binomial as fn(&dyn Transport, usize, usize, &mut [f32], u64);
+}
+
+/// Ring allreduce over the leader sub-communicator: node i's leader is
+/// global rank i*ppn.
+struct SubRing<'a> {
+    t: &'a dyn Transport,
+    ppn: usize,
+    n_nodes: usize,
+}
+
+impl SubRing<'_> {
+    fn ring_allreduce(&self, node: usize, data: &mut [f32], tag_base: u64) {
+        let p = self.n_nodes;
+        let ranges = ring::chunk_ranges(data.len(), p);
+        let next = ((node + 1) % p) * self.ppn;
+        let prev = ((node + p - 1) % p) * self.ppn;
+        let me = node * self.ppn;
+        for s in 0..p - 1 {
+            let send_chunk = (node + p - s) % p;
+            let recv_chunk = (node + p - s - 1) % p;
+            let tag = tag_base + s as u64;
+            self.t.send(
+                me,
+                next,
+                tag,
+                crate::transport::Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
+            );
+            let incoming = self.t.recv(me, prev, tag).into_f32();
+            for (d, x) in data[ranges[recv_chunk].clone()].iter_mut().zip(incoming) {
+                *d += x;
+            }
+        }
+        for s in 0..p - 1 {
+            let send_chunk = (node + 1 + p - s) % p;
+            let recv_chunk = (node + p - s) % p;
+            let tag = tag_base + (p + s) as u64;
+            self.t.send(
+                me,
+                next,
+                tag,
+                crate::transport::Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
+            );
+            let incoming = self.t.recv(me, prev, tag).into_f32();
+            data[ranges[recv_chunk].clone()].copy_from_slice(&incoming);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::*;
+
+    #[test]
+    fn matches_expected_sum() {
+        for (p, ppn) in [(4usize, 2usize), (8, 4), (6, 3), (8, 1), (4, 4)] {
+            let results = run_ranks(p, move |rank, t| {
+                let mut data = rank_data(rank, 41);
+                allreduce_hierarchical(t.as_ref(), rank, &mut data, ppn, 0);
+                data
+            });
+            let expected = expected_sum(p, 41);
+            for (rank, r) in results.iter().enumerate() {
+                for (a, b) in r.iter().zip(&expected) {
+                    assert!((a - b).abs() < 1e-3, "p={p} ppn={ppn} rank={rank}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn single_node_pure_intra() {
+        let results = run_ranks(4, |rank, t| {
+            let mut data = vec![rank as f32; 5];
+            allreduce_hierarchical(t.as_ref(), rank, &mut data, 4, 0);
+            data
+        });
+        for r in results {
+            assert!(r.iter().all(|&x| x == 6.0));
+        }
+    }
+
+    #[test]
+    fn layout_helpers() {
+        let l = NodeLayout { ppn: 4 };
+        assert_eq!(l.node_of(0), 0);
+        assert_eq!(l.node_of(7), 1);
+        assert_eq!(l.local_leader(6), 4);
+        assert!(l.is_leader(4));
+        assert!(!l.is_leader(5));
+    }
+
+    #[test]
+    #[should_panic]
+    fn ragged_layout_rejected() {
+        run_ranks(5, |rank, t| {
+            let mut data = vec![0.0; 4];
+            allreduce_hierarchical(t.as_ref(), rank, &mut data, 2, 0);
+        });
+    }
+}

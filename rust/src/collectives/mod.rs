@@ -1,0 +1,175 @@
+//! MPI-style collectives over a [`Transport`].
+//!
+//! The paper's effect is a collective-choice effect: dense accumulation
+//! maps to **allreduce** (fixed-size buffers), TF's assumed-sparse
+//! accumulation maps to **allgather(v)** (buffers growing with the
+//! worker count).  This module implements both families with the
+//! classical algorithms MVAPICH2 would pick at these message sizes —
+//! ring (bandwidth-optimal, large messages), recursive doubling
+//! (latency-optimal, power-of-two ranks), binomial trees — plus naive
+//! reference implementations the property tests compare against.
+//!
+//! Every algorithm has a matching analytic alpha–beta cost function in
+//! [`cost`], used by the cluster simulator at paper scale.
+
+pub mod allgather;
+pub mod cost;
+pub mod hierarchical;
+pub mod naive;
+pub mod rec_double;
+pub mod ring;
+pub mod tree;
+
+use crate::transport::Transport;
+
+pub use allgather::{allgather_indexed_slices, allgatherv_ring};
+
+/// Which allreduce algorithm to run / cost-model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AllreduceAlgo {
+    Ring,
+    RecursiveDoubling,
+    /// reduce-to-root + broadcast (binomial trees)
+    ReduceBcast,
+    /// everyone-sends-to-root reference (tests only)
+    Naive,
+}
+
+impl AllreduceAlgo {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "ring" => Some(Self::Ring),
+            "recursive-doubling" | "rd" => Some(Self::RecursiveDoubling),
+            "reduce-bcast" | "tree" => Some(Self::ReduceBcast),
+            "naive" => Some(Self::Naive),
+            _ => None,
+        }
+    }
+}
+
+/// Dispatching allreduce (sum). `data` is reduced in place; all ranks
+/// end with identical contents. Falls back from recursive doubling to
+/// ring for non-power-of-two rank counts.
+pub fn allreduce(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+) {
+    let p = t.nranks();
+    if p == 1 {
+        return;
+    }
+    match algo {
+        AllreduceAlgo::Ring => ring::allreduce_ring(t, rank, data, tag_base),
+        AllreduceAlgo::RecursiveDoubling => {
+            if p.is_power_of_two() {
+                rec_double::allreduce_rec_doubling(t, rank, data, tag_base)
+            } else {
+                ring::allreduce_ring(t, rank, data, tag_base)
+            }
+        }
+        AllreduceAlgo::ReduceBcast => {
+            tree::reduce_binomial(t, rank, 0, data, tag_base);
+            tree::broadcast_binomial(t, rank, 0, data, tag_base + 1_000_000);
+        }
+        AllreduceAlgo::Naive => naive::allreduce_naive(t, rank, data, tag_base),
+    }
+}
+
+/// Tag-space layout: each collective invocation gets a disjoint block
+/// of tags so concurrent collectives on the same transport can't
+/// cross-match. 2^20 tags per invocation is far beyond what any single
+/// algorithm uses.
+pub const TAG_BLOCK: u64 = 1 << 21;
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use super::*;
+    use crate::transport::LocalTransport;
+    use std::sync::Arc;
+
+    /// Run `f(rank, transport)` on p threads; return per-rank results.
+    pub fn run_ranks<R: Send + 'static>(
+        p: usize,
+        f: impl Fn(usize, Arc<LocalTransport>) -> R + Send + Sync + 'static,
+    ) -> Vec<R> {
+        let t = Arc::new(LocalTransport::new(p));
+        let f = Arc::new(f);
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let t = t.clone();
+                let f = f.clone();
+                std::thread::spawn(move || f(rank, t))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    }
+
+    /// Deterministic pseudo-random vector per (rank, len).
+    pub fn rank_data(rank: usize, len: usize) -> Vec<f32> {
+        (0..len)
+            .map(|i| ((rank * 31 + i * 7 + 3) % 17) as f32 - 8.0)
+            .collect()
+    }
+
+    /// Ground-truth sum across ranks.
+    pub fn expected_sum(p: usize, len: usize) -> Vec<f32> {
+        let mut out = vec![0.0; len];
+        for r in 0..p {
+            for (o, x) in out.iter_mut().zip(rank_data(r, len)) {
+                *o += x;
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::*;
+    use super::*;
+
+    fn check_allreduce(algo: AllreduceAlgo, p: usize, len: usize) {
+        let results = run_ranks(p, move |rank, t| {
+            let mut data = rank_data(rank, len);
+            allreduce(t.as_ref(), rank, &mut data, algo, 0);
+            data
+        });
+        let expected = expected_sum(p, len);
+        for (rank, r) in results.iter().enumerate() {
+            for (a, b) in r.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-3, "algo {algo:?} p={p} rank {rank}");
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_all_algorithms() {
+        for algo in [
+            AllreduceAlgo::Ring,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::ReduceBcast,
+            AllreduceAlgo::Naive,
+        ] {
+            check_allreduce(algo, 4, 37);
+        }
+    }
+
+    #[test]
+    fn rec_doubling_falls_back_for_odd_p() {
+        check_allreduce(AllreduceAlgo::RecursiveDoubling, 3, 10);
+        check_allreduce(AllreduceAlgo::RecursiveDoubling, 6, 25);
+    }
+
+    #[test]
+    fn single_rank_is_identity() {
+        let results = run_ranks(1, |rank, t| {
+            let mut data = vec![1.0, 2.0];
+            allreduce(t.as_ref(), rank, &mut data, AllreduceAlgo::Ring, 0);
+            data
+        });
+        assert_eq!(results[0], vec![1.0, 2.0]);
+    }
+}

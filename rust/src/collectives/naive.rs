@@ -1,0 +1,52 @@
+//! Naive reference collectives: everyone sends to rank 0, rank 0
+//! combines and sends back.  O(p·n) at the root — never used on the
+//! hot path; these exist as oracles for the property tests and as the
+//! "no algorithm" baseline in the collective benches.
+
+use crate::transport::{Payload, Transport};
+
+/// Naive allreduce (sum) via gather-to-root + linear broadcast.
+pub fn allreduce_naive(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base: u64) {
+    let p = t.nranks();
+    if p == 1 {
+        return;
+    }
+    if rank == 0 {
+        for r in 1..p {
+            let incoming = t.recv(0, r, tag_base).into_f32();
+            for (d, x) in data.iter_mut().zip(incoming) {
+                *d += x;
+            }
+        }
+        for r in 1..p {
+            t.send(0, r, tag_base + 1, Payload::F32(data.to_vec()));
+        }
+    } else {
+        t.send(rank, 0, tag_base, Payload::F32(data.to_vec()));
+        let reduced = t.recv(rank, 0, tag_base + 1).into_f32();
+        data.copy_from_slice(&reduced);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::*;
+
+    #[test]
+    fn matches_expected_sum() {
+        for p in [2usize, 3, 7] {
+            let results = run_ranks(p, move |rank, t| {
+                let mut data = rank_data(rank, 19);
+                allreduce_naive(t.as_ref(), rank, &mut data, 0);
+                data
+            });
+            let expected = expected_sum(p, 19);
+            for r in results {
+                for (a, b) in r.iter().zip(&expected) {
+                    assert!((a - b).abs() < 1e-3);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,73 @@
+//! Recursive-doubling allreduce: log2(p) rounds, full-buffer exchange
+//! with partner `rank ^ 2^s`.  Latency-optimal (α·log p) — the right
+//! choice for the small unfused tensors (LayerNorm scales, biases) the
+//! coordinator doesn't pack into the fusion buffer.  Power-of-two rank
+//! counts only; the dispatcher falls back to ring otherwise.
+
+use crate::transport::{Payload, Transport};
+
+/// In-place recursive-doubling allreduce (sum). Panics unless
+/// `t.nranks()` is a power of two.
+pub fn allreduce_rec_doubling(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+) {
+    let p = t.nranks();
+    assert!(p.is_power_of_two(), "recursive doubling requires 2^k ranks");
+    let rounds = p.trailing_zeros();
+    for s in 0..rounds {
+        let partner = rank ^ (1 << s);
+        let tag = tag_base + s as u64;
+        t.send(rank, partner, tag, Payload::F32(data.to_vec()));
+        let incoming = t.recv(rank, partner, tag).into_f32();
+        for (d, x) in data.iter_mut().zip(incoming) {
+            *d += x;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::*;
+
+    #[test]
+    fn matches_sum_pow2() {
+        for p in [2usize, 4, 8, 16] {
+            let results = run_ranks(p, move |rank, t| {
+                let mut data = rank_data(rank, 33);
+                allreduce_rec_doubling(t.as_ref(), rank, &mut data, 0);
+                data
+            });
+            let expected = expected_sum(p, 33);
+            for r in results {
+                for (a, b) in r.iter().zip(&expected) {
+                    assert!((a - b).abs() < 1e-3, "p={p}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn all_ranks_identical_result() {
+        let results = run_ranks(8, |rank, t| {
+            let mut data = rank_data(rank, 10);
+            allreduce_rec_doubling(t.as_ref(), rank, &mut data, 0);
+            data
+        });
+        for r in &results[1..] {
+            assert_eq!(r, &results[0]);
+        }
+    }
+
+    #[test]
+    #[should_panic] // rank-thread panic surfaces through join().unwrap()
+    fn non_pow2_panics() {
+        run_ranks(3, |rank, t| {
+            let mut data = vec![0.0; 4];
+            allreduce_rec_doubling(t.as_ref(), rank, &mut data, 0);
+        });
+    }
+}

@@ -1,0 +1,132 @@
+//! Ring allreduce: reduce-scatter phase + allgather phase.
+//!
+//! Bandwidth-optimal: each rank sends `2 (p-1)/p · n` elements total,
+//! independent of p — which is why dense gradient exchange stays flat
+//! as the paper scales to 1200 processes.  This is the algorithm
+//! Horovod/MVAPICH2 uses for large fused gradient buffers.
+
+use crate::transport::{Payload, Transport};
+
+/// Split `len` into p nearly-equal chunk ranges (first `len % p`
+/// chunks get one extra element).
+pub fn chunk_ranges(len: usize, p: usize) -> Vec<std::ops::Range<usize>> {
+    let base = len / p;
+    let extra = len % p;
+    let mut out = Vec::with_capacity(p);
+    let mut start = 0;
+    for i in 0..p {
+        let size = base + usize::from(i < extra);
+        out.push(start..start + size);
+        start += size;
+    }
+    out
+}
+
+/// In-place ring allreduce (sum).
+pub fn allreduce_ring(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base: u64) {
+    let p = t.nranks();
+    if p == 1 {
+        return;
+    }
+    let ranges = chunk_ranges(data.len(), p);
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+
+    // Phase 1: reduce-scatter. After step s, rank r holds the partial
+    // sum of chunk (r - s) mod p over ranks r-s..r.
+    for s in 0..p - 1 {
+        let send_chunk = (rank + p - s) % p;
+        let recv_chunk = (rank + p - s - 1) % p;
+        let tag = tag_base + s as u64;
+        t.send(
+            rank,
+            next,
+            tag,
+            Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
+        );
+        let incoming = t.recv(rank, prev, tag).into_f32();
+        let dst = &mut data[ranges[recv_chunk].clone()];
+        debug_assert_eq!(incoming.len(), dst.len());
+        for (d, x) in dst.iter_mut().zip(incoming) {
+            *d += x;
+        }
+    }
+
+    // Phase 2: allgather. Rank r now owns the fully-reduced chunk
+    // (r + 1) mod p; circulate the reduced chunks p-1 times.
+    for s in 0..p - 1 {
+        let send_chunk = (rank + 1 + p - s) % p;
+        let recv_chunk = (rank + p - s) % p;
+        let tag = tag_base + (p + s) as u64;
+        t.send(
+            rank,
+            next,
+            tag,
+            Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
+        );
+        let incoming = t.recv(rank, prev, tag).into_f32();
+        let dst = &mut data[ranges[recv_chunk].clone()];
+        debug_assert_eq!(incoming.len(), dst.len());
+        dst.copy_from_slice(&incoming);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::*;
+
+    #[test]
+    fn chunk_ranges_cover_exactly() {
+        for (len, p) in [(10, 3), (7, 7), (5, 8), (0, 2), (100, 4)] {
+            let ranges = chunk_ranges(len, p);
+            assert_eq!(ranges.len(), p);
+            let mut covered = 0;
+            for r in &ranges {
+                assert_eq!(r.start, covered);
+                covered = r.end;
+            }
+            assert_eq!(covered, len);
+            let sizes: Vec<usize> = ranges.iter().map(|r| r.len()).collect();
+            let min = sizes.iter().min().unwrap();
+            let max = sizes.iter().max().unwrap();
+            assert!(max - min <= 1, "unbalanced chunks {sizes:?}");
+        }
+    }
+
+    #[test]
+    fn ring_matches_sum_various_p_and_len() {
+        for p in [2usize, 3, 5, 8] {
+            for len in [1usize, 2, 16, 37, 101] {
+                let results = run_ranks(p, move |rank, t| {
+                    let mut data = rank_data(rank, len);
+                    allreduce_ring(t.as_ref(), rank, &mut data, 0);
+                    data
+                });
+                let expected = expected_sum(p, len);
+                for r in results {
+                    for (a, b) in r.iter().zip(&expected) {
+                        assert!((a - b).abs() < 1e-3, "p={p} len={len}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn ring_len_smaller_than_p() {
+        // degenerate chunks (some empty) must still work
+        let results = run_ranks(6, |rank, t| {
+            let mut data = rank_data(rank, 3);
+            allreduce_ring(t.as_ref(), rank, &mut data, 0);
+            data
+        });
+        let expected = expected_sum(6, 3);
+        for r in results {
+            assert_eq!(r.len(), 3);
+            for (a, b) in r.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+}

@@ -1,0 +1,172 @@
+//! Binomial-tree reduce and broadcast — the classic log(p) patterns
+//! MPI uses for rooted collectives. The coordinator uses broadcast for
+//! the execution plan and reduce+bcast as one of the allreduce options.
+
+use crate::transport::{Payload, Transport};
+
+/// Reduce (sum) to `root`, binomial tree, in place. Non-root ranks end
+/// with partial sums (their contribution consumed); only `root` holds
+/// the total.
+pub fn reduce_binomial(
+    t: &dyn Transport,
+    rank: usize,
+    root: usize,
+    data: &mut [f32],
+    tag_base: u64,
+) {
+    let p = t.nranks();
+    // operate in a rotated space where root is rank 0
+    let vrank = (rank + p - root) % p;
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            // send to the parent and stop participating
+            let parent = ((vrank & !mask) + root) % p;
+            t.send(rank, parent, tag_base + mask as u64, Payload::F32(data.to_vec()));
+            return;
+        }
+        let child_v = vrank | mask;
+        if child_v < p {
+            let child = (child_v + root) % p;
+            let incoming = t.recv(rank, child, tag_base + mask as u64).into_f32();
+            for (d, x) in data.iter_mut().zip(incoming) {
+                *d += x;
+            }
+        }
+        mask <<= 1;
+    }
+}
+
+/// Broadcast from `root`, binomial tree, in place.
+pub fn broadcast_binomial(
+    t: &dyn Transport,
+    rank: usize,
+    root: usize,
+    data: &mut [f32],
+    tag_base: u64,
+) {
+    let p = t.nranks();
+    let vrank = (rank + p - root) % p;
+    // Phase 1 (MPICH structure): climb mask until our lowest set bit —
+    // that is the level at which our parent sends to us.
+    let mut mask = 1usize;
+    while mask < p {
+        if vrank & mask != 0 {
+            let parent = ((vrank - mask) + root) % p;
+            let incoming = t.recv(rank, parent, tag_base + mask as u64).into_f32();
+            data.copy_from_slice(&incoming);
+            break;
+        }
+        mask <<= 1;
+    }
+    // Phase 2: forward to children at every level below our receive
+    // level (the root forwards at every level).
+    mask >>= 1;
+    while mask > 0 {
+        if vrank + mask < p {
+            let child = (vrank + mask + root) % p;
+            t.send(rank, child, tag_base + mask as u64, Payload::F32(data.to_vec()));
+        }
+        mask >>= 1;
+    }
+}
+
+/// Generic broadcast of an opaque payload from `root` (used by the
+/// coordinator for plan distribution).
+pub fn broadcast_payload(
+    t: &dyn Transport,
+    rank: usize,
+    root: usize,
+    data: Option<Payload>,
+    tag: u64,
+) -> Payload {
+    // simple linear broadcast for control messages (tiny payloads;
+    // latency here is not on the measured path)
+    if rank == root {
+        let payload = data.expect("root must supply payload");
+        for r in 0..t.nranks() {
+            if r != root {
+                t.send(root, r, tag, payload.clone());
+            }
+        }
+        payload
+    } else {
+        t.recv(rank, root, tag)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::*;
+
+    #[test]
+    fn reduce_to_each_root() {
+        for p in [2usize, 3, 5, 8] {
+            for root in 0..p.min(3) {
+                let results = run_ranks(p, move |rank, t| {
+                    let mut data = rank_data(rank, 21);
+                    reduce_binomial(t.as_ref(), rank, root, &mut data, 0);
+                    (rank, data)
+                });
+                let expected = expected_sum(p, 21);
+                for (rank, data) in results {
+                    if rank == root {
+                        for (a, b) in data.iter().zip(&expected) {
+                            assert!((a - b).abs() < 1e-3, "p={p} root={root}");
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn broadcast_from_each_root() {
+        for p in [2usize, 4, 7] {
+            for root in 0..p.min(3) {
+                let results = run_ranks(p, move |rank, t| {
+                    let mut data = if rank == root {
+                        vec![42.0, -1.0, 7.5]
+                    } else {
+                        vec![0.0; 3]
+                    };
+                    broadcast_binomial(t.as_ref(), rank, root, &mut data, 0);
+                    data
+                });
+                for r in results {
+                    assert_eq!(r, vec![42.0, -1.0, 7.5], "p={p} root={root}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn reduce_then_broadcast_is_allreduce() {
+        let p = 6;
+        let results = run_ranks(p, move |rank, t| {
+            let mut data = rank_data(rank, 11);
+            reduce_binomial(t.as_ref(), rank, 0, &mut data, 0);
+            broadcast_binomial(t.as_ref(), rank, 0, &mut data, 10_000);
+            data
+        });
+        let expected = expected_sum(p, 11);
+        for r in results {
+            for (a, b) in r.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn payload_broadcast_control_path() {
+        use crate::transport::Payload;
+        let results = run_ranks(4, |rank, t| {
+            let data = (rank == 2).then(|| Payload::U64(vec![9, 8, 7]));
+            broadcast_payload(t.as_ref(), rank, 2, data, 55).into_u64()
+        });
+        for r in results {
+            assert_eq!(r, vec![9, 8, 7]);
+        }
+    }
+}

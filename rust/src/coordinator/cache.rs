@@ -1,0 +1,138 @@
+//! Response cache — Horovod's optimization for steady-state training:
+//! after the first cycle, the set of gradients a transformer submits
+//! never changes, so re-negotiating (gather readiness → build plan →
+//! broadcast) every step wastes α·log p per cycle.  The cache keys on
+//! the full (id, representation, size) fingerprint and replays the
+//! plan; any change (a new tensor, a representation flip) is a miss
+//! and renegotiates.
+//!
+//! The fingerprint covers the *representation*, so the hazard the
+//! negotiation guards against (rank divergence dense-vs-sparse) cannot
+//! slip through the cache: a flip changes the fingerprint, misses, and
+//! goes back to the verifying path.
+
+use super::plan::{Plan, TensorReport};
+use std::collections::HashMap;
+
+/// FNV-1a over the report list.
+fn fingerprint(reports: &[TensorReport]) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    let mut mix = |x: u64| {
+        for b in x.to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x100000001b3);
+        }
+    };
+    mix(reports.len() as u64);
+    for r in reports {
+        mix(r.id);
+        mix(r.is_sparse as u64);
+        mix(r.nbytes);
+    }
+    h
+}
+
+/// Public fingerprint accessor (used by the exchange fast path for
+/// cross-rank agreement).
+pub fn fingerprint_public(reports: &[TensorReport]) -> u64 {
+    fingerprint(reports)
+}
+
+/// Plan cache with hit statistics.
+#[derive(Debug, Default)]
+pub struct ResponseCache {
+    plans: HashMap<u64, Plan>,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl ResponseCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Look up the plan for this report set, if cached.
+    pub fn get(&mut self, reports: &[TensorReport]) -> Option<Plan> {
+        let key = fingerprint(reports);
+        match self.plans.get(&key) {
+            Some(plan) => {
+                self.hits += 1;
+                Some(plan.clone())
+            }
+            None => {
+                self.misses += 1;
+                None
+            }
+        }
+    }
+
+    pub fn put(&mut self, reports: &[TensorReport], plan: Plan) {
+        self.plans.insert(fingerprint(reports), plan);
+    }
+
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::plan::build_plan;
+
+    fn reports(sparse_mid: bool) -> Vec<TensorReport> {
+        vec![
+            TensorReport { id: 1, is_sparse: false, nbytes: 100 },
+            TensorReport { id: 2, is_sparse: sparse_mid, nbytes: 500 },
+            TensorReport { id: 3, is_sparse: false, nbytes: 100 },
+        ]
+    }
+
+    #[test]
+    fn hit_after_put() {
+        let mut cache = ResponseCache::new();
+        let r = reports(false);
+        assert!(cache.get(&r).is_none());
+        let plan = build_plan(&r, 1024);
+        cache.put(&r, plan.clone());
+        assert_eq!(cache.get(&r), Some(plan));
+        assert_eq!(cache.hits, 1);
+        assert_eq!(cache.misses, 1);
+    }
+
+    #[test]
+    fn representation_flip_misses() {
+        // the safety property: dense->sparse flip must renegotiate
+        let mut cache = ResponseCache::new();
+        let dense = reports(false);
+        cache.put(&dense, build_plan(&dense, 1024));
+        let flipped = reports(true);
+        assert!(cache.get(&flipped).is_none(), "flip must miss the cache");
+    }
+
+    #[test]
+    fn size_change_misses() {
+        let mut cache = ResponseCache::new();
+        let r1 = reports(false);
+        cache.put(&r1, build_plan(&r1, 1024));
+        let mut r2 = reports(false);
+        r2[0].nbytes = 999; // e.g. dynamic batch changed slice count
+        assert!(cache.get(&r2).is_none());
+    }
+
+    #[test]
+    fn hit_rate_steady_state() {
+        let mut cache = ResponseCache::new();
+        let r = reports(false);
+        cache.put(&r, build_plan(&r, 1024));
+        for _ in 0..99 {
+            cache.get(&r);
+        }
+        assert!(cache.hit_rate() > 0.98);
+    }
+}

@@ -1,0 +1,85 @@
+//! Tensor fusion buffer — Horovod's batching of small dense gradients
+//! into one collective call (`HOROVOD_FUSION_THRESHOLD`, Listing 2 of
+//! the paper's runtime settings: 128 MB on Zenith).
+//!
+//! Fusion matters because a transformer has hundreds of small tensors
+//! (LayerNorm scales, biases): at α ≈ 1.5 µs per message, unfused
+//! exchange is latency-bound.  The ablation bench `benches/fusion.rs`
+//! quantifies this.
+
+use crate::tensor::DenseTensor;
+
+/// A packed fusion buffer plus the metadata to unpack it.
+#[derive(Debug)]
+pub struct FusionBuffer {
+    pub data: Vec<f32>,
+    /// (offset, len, shape) per packed tensor, in pack order.
+    layout: Vec<(usize, usize, Vec<usize>)>,
+}
+
+impl FusionBuffer {
+    /// Pack dense tensors contiguously. Order is preserved exactly.
+    pub fn pack(tensors: &[&DenseTensor]) -> Self {
+        let total: usize = tensors.iter().map(|t| t.data.len()).sum();
+        let mut data = Vec::with_capacity(total);
+        let mut layout = Vec::with_capacity(tensors.len());
+        for t in tensors {
+            layout.push((data.len(), t.data.len(), t.shape.clone()));
+            data.extend_from_slice(&t.data);
+        }
+        Self { data, layout }
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    pub fn ntensors(&self) -> usize {
+        self.layout.len()
+    }
+
+    /// Unpack back into owned tensors (post-allreduce).
+    pub fn unpack(&self) -> Vec<DenseTensor> {
+        self.layout
+            .iter()
+            .map(|(off, len, shape)| {
+                DenseTensor::from_vec(shape.clone(), self.data[*off..*off + *len].to_vec())
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let a = DenseTensor::from_vec(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = DenseTensor::from_vec(vec![3], vec![5., 6., 7.]);
+        let c = DenseTensor::scalar(8.0);
+        let buf = FusionBuffer::pack(&[&a, &b, &c]);
+        assert_eq!(buf.data, vec![1., 2., 3., 4., 5., 6., 7., 8.]);
+        assert_eq!(buf.ntensors(), 3);
+        let out = buf.unpack();
+        assert_eq!(out, vec![a, b, c]);
+    }
+
+    #[test]
+    fn empty_pack() {
+        let buf = FusionBuffer::pack(&[]);
+        assert_eq!(buf.nbytes(), 0);
+        assert!(buf.unpack().is_empty());
+    }
+
+    #[test]
+    fn mutation_flows_through_unpack() {
+        // simulates the allreduce writing reduced values in place
+        let a = DenseTensor::from_vec(vec![2], vec![1., 1.]);
+        let mut buf = FusionBuffer::pack(&[&a]);
+        for x in &mut buf.data {
+            *x *= 4.0;
+        }
+        assert_eq!(buf.unpack()[0].data, vec![4., 4.]);
+    }
+}

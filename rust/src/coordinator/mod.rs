@@ -1,0 +1,532 @@
+//! The Horovod-class gradient-exchange coordinator — the paper's L3
+//! system contribution.
+//!
+//! Protocol per exchange cycle (identical in shape to Horovod's
+//! controller):
+//!
+//! 1. **Readiness report** — every rank sends rank 0 the ordered list
+//!    of gradients it has ready: `(name-id, representation, bytes)`.
+//! 2. **Negotiation** — rank 0 verifies all ranks agree (same tensors,
+//!    same order, same representation — divergence is a hard error,
+//!    exactly the class of bug that produced the paper's segfaults),
+//!    then builds the execution [`plan::Plan`]: dense tensors packed
+//!    into fusion groups (`fusion_threshold`), sparse tensors as
+//!    singleton allgathers.
+//! 3. **Plan broadcast** — over the same transport (control plane =
+//!    data plane, like MPI).
+//! 4. **Execution** — every rank walks the plan: pack → allreduce →
+//!    unpack for dense groups; `allgather_indexed_slices` (TF
+//!    concatenation semantics) for sparse tensors.  All phases are
+//!    recorded on the [`timeline::Timeline`].
+//!
+//! The *representation* of each gradient is decided upstream by the
+//! [`crate::tensor::AccumStrategy`] (which HLO artifact ran and what
+//! local accumulation did) — the coordinator, like Horovod, dispatches
+//! purely on what it is handed. That faithful division is what lets
+//! one binary reproduce both Fig. 3a (gather) and Fig. 3b (reduce).
+
+pub mod cache;
+pub mod fusion;
+pub mod plan;
+pub mod timeline;
+
+use std::sync::Arc;
+
+use crate::collectives::{self, tree, AllreduceAlgo, TAG_BLOCK};
+use crate::tensor::Grad;
+use crate::transport::{Payload, Transport};
+use cache::ResponseCache;
+use fusion::FusionBuffer;
+use plan::{build_plan, name_id, CollectiveOp, Plan, TensorReport};
+use timeline::{Phase, Timeline};
+
+/// Tag planes inside one cycle's TAG_BLOCK.
+const CTL_READY: u64 = 0;
+const CTL_PLAN: u64 = 1;
+const DATA_BASE: u64 = 16;
+/// Tag space per plan entry (ring/tree use << this many tags).
+const ENTRY_TAGS: u64 = 1 << 12;
+
+/// A named gradient as submitted by the trainer.
+#[derive(Debug, Clone)]
+pub struct NamedGrad {
+    pub name: String,
+    pub grad: Grad,
+}
+
+/// Configuration of the exchange engine.
+#[derive(Debug, Clone, Copy)]
+pub struct ExchangeConfig {
+    pub algo: AllreduceAlgo,
+    /// Fusion threshold in bytes (HOROVOD_FUSION_THRESHOLD; the paper
+    /// ran with 128 MB).
+    pub fusion_threshold: u64,
+    /// Divide reduced gradients by p (data-parallel averaging).
+    pub average: bool,
+    /// Cache negotiated plans keyed by the readiness fingerprint
+    /// (Horovod's response cache).  Steady-state cycles then exchange
+    /// one fingerprint instead of the full readiness report + plan.
+    pub cache_plans: bool,
+}
+
+impl Default for ExchangeConfig {
+    fn default() -> Self {
+        Self {
+            algo: AllreduceAlgo::Ring,
+            fusion_threshold: 128 * 1024 * 1024,
+            average: true,
+            cache_plans: true,
+        }
+    }
+}
+
+/// Measured facts about one exchange cycle, the raw material for
+/// Fig. 3/5 style reporting.
+#[derive(Debug, Clone, Default)]
+pub struct ExchangeReport {
+    /// Peak accumulated representation size across tensors (bytes) —
+    /// the paper's "memory required for accumulation".
+    pub peak_accum_bytes: u64,
+    /// Total bytes this rank put on the wire.
+    pub wire_bytes: u64,
+    /// Wall time of the execution phase, microseconds.
+    pub exec_us: u64,
+    /// Wall time of negotiation, microseconds.
+    pub negotiate_us: u64,
+    pub n_allreduce_groups: usize,
+    pub n_allgather_ops: usize,
+}
+
+/// Per-rank handle on the exchange engine.
+pub struct GradExchange {
+    transport: Arc<dyn Transport>,
+    rank: usize,
+    config: ExchangeConfig,
+    pub timeline: Timeline,
+    cycle: u64,
+    cache: ResponseCache,
+}
+
+impl GradExchange {
+    pub fn new(transport: Arc<dyn Transport>, rank: usize, config: ExchangeConfig) -> Self {
+        Self {
+            transport,
+            rank,
+            config,
+            timeline: Timeline::new(false),
+            cycle: 0,
+            cache: ResponseCache::new(),
+        }
+    }
+
+    /// Response-cache hit rate so far (1.0 in steady state).
+    pub fn cache_hit_rate(&self) -> f64 {
+        self.cache.hit_rate()
+    }
+
+    pub fn enable_timeline(&mut self) {
+        self.timeline = Timeline::new(true);
+    }
+
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    pub fn nranks(&self) -> usize {
+        self.transport.nranks()
+    }
+
+    /// Exchange one cycle of gradients. Every rank must call this with
+    /// the same tensors in the same order and representations (the
+    /// negotiation verifies and panics on divergence). Returns the
+    /// accumulated gradients in submission order.
+    pub fn exchange(&mut self, grads: Vec<NamedGrad>) -> (Vec<NamedGrad>, ExchangeReport) {
+        let t = self.transport.clone();
+        let p = t.nranks();
+        let tag0 = self.cycle * TAG_BLOCK;
+        self.cycle += 1;
+        let mut report = ExchangeReport::default();
+        let wire_before = t.stats().bytes;
+
+        // ---- 1+2+3: negotiation ----
+        let neg_start = self.timeline.now_us();
+        let reports: Vec<TensorReport> = grads
+            .iter()
+            .map(|g| TensorReport {
+                id: name_id(&g.name),
+                is_sparse: g.grad.is_sparse(),
+                nbytes: g.grad.nbytes(),
+            })
+            .collect();
+        let plan = self.negotiate(&reports, tag0);
+        report.negotiate_us = self.timeline.now_us() - neg_start;
+        self.timeline.record_synthetic(
+            "negotiation",
+            Phase::Negotiate,
+            neg_start,
+            report.negotiate_us,
+            0,
+        );
+
+        // ---- 4: execution ----
+        let exec_start = self.timeline.now_us();
+        let mut out: Vec<Option<NamedGrad>> = grads.iter().map(|_| None).collect();
+        let mut slot: Vec<Option<Grad>> = Vec::with_capacity(grads.len());
+        let mut names: Vec<String> = Vec::with_capacity(grads.len());
+        for g in grads {
+            names.push(g.name);
+            slot.push(Some(g.grad));
+        }
+        for (entry_idx, entry) in plan.entries.iter().enumerate() {
+            let tag = tag0 + DATA_BASE + entry_idx as u64 * ENTRY_TAGS;
+            match entry.op {
+                CollectiveOp::Allreduce => {
+                    let label = if entry.tensors.len() == 1 {
+                        names[entry.tensors[0] as usize].clone()
+                    } else {
+                        format!("fused[{}]", entry.tensors.len())
+                    };
+                    let tensors: Vec<_> = entry
+                        .tensors
+                        .iter()
+                        .map(|&i| match slot[i as usize].take().unwrap() {
+                            Grad::Dense(t) => t,
+                            Grad::Sparse(_) => {
+                                panic!("plan says dense but slot {i} is sparse")
+                            }
+                        })
+                        .collect();
+                    let refs: Vec<&_> = tensors.iter().collect();
+                    let mut buf = self.timeline.record(
+                        &label,
+                        Phase::MemcpyInFusionBuffer,
+                        0,
+                        || FusionBuffer::pack(&refs),
+                    );
+                    let bytes = buf.nbytes();
+                    report.peak_accum_bytes = report.peak_accum_bytes.max(bytes);
+                    let algo = self.config.algo;
+                    let rank = self.rank;
+                    let t_ref = t.as_ref();
+                    self.timeline.record(&label, Phase::Allreduce, bytes, || {
+                        collectives::allreduce(t_ref, rank, &mut buf.data, algo, tag);
+                    });
+                    if self.config.average {
+                        let inv = 1.0 / p as f32;
+                        for x in &mut buf.data {
+                            *x *= inv;
+                        }
+                    }
+                    let unpacked = self.timeline.record(
+                        &label,
+                        Phase::MemcpyOutFusionBuffer,
+                        0,
+                        || buf.unpack(),
+                    );
+                    for (&i, tensor) in entry.tensors.iter().zip(unpacked) {
+                        out[i as usize] = Some(NamedGrad {
+                            name: names[i as usize].clone(),
+                            grad: Grad::Dense(tensor),
+                        });
+                    }
+                    report.n_allreduce_groups += 1;
+                }
+                CollectiveOp::Allgather => {
+                    let i = entry.tensors[0] as usize;
+                    let name = names[i].clone();
+                    let mine = match slot[i].take().unwrap() {
+                        Grad::Sparse(s) => s,
+                        Grad::Dense(_) => panic!("plan says sparse but slot {i} is dense"),
+                    };
+                    let rank = self.rank;
+                    let t_ref = t.as_ref();
+                    let mut gathered = self.timeline.record(
+                        &name,
+                        Phase::Allgather,
+                        mine.nbytes() * p as u64,
+                        || collectives::allgather_indexed_slices(t_ref, rank, &mine, tag),
+                    );
+                    report.peak_accum_bytes =
+                        report.peak_accum_bytes.max(gathered.nbytes());
+                    if self.config.average {
+                        gathered.scale(1.0 / p as f32);
+                    }
+                    out[i] = Some(NamedGrad { name, grad: Grad::Sparse(gathered) });
+                    report.n_allgather_ops += 1;
+                }
+            }
+        }
+        report.exec_us = self.timeline.now_us() - exec_start;
+        report.wire_bytes = t.stats().bytes - wire_before;
+        let out: Vec<NamedGrad> = out
+            .into_iter()
+            .map(|g| g.expect("plan did not cover every tensor"))
+            .collect();
+        (out, report)
+    }
+
+    /// Readiness report to rank 0, agreement check, plan broadcast.
+    /// With `cache_plans`, steady-state cycles take the fast path: a
+    /// one-u64 fingerprint agreement instead of the full report+plan
+    /// (a representation flip changes the fingerprint, so the hazard
+    /// check is preserved — mismatch is a hard error on rank 0).
+    fn negotiate(&mut self, reports: &[TensorReport], tag0: u64) -> Plan {
+        let t = self.transport.clone();
+        let t = t.as_ref();
+        let p = t.nranks();
+        if p == 1 {
+            if let Some(plan) = self.config.cache_plans.then(|| self.cache.get(reports)).flatten() {
+                return plan;
+            }
+            let plan = build_plan(reports, self.config.fusion_threshold);
+            if self.config.cache_plans {
+                self.cache.put(reports, plan.clone());
+            }
+            return plan;
+        }
+        if self.config.cache_plans {
+            if let Some(plan) = self.cache.get(reports) {
+                // fast path: fingerprint agreement only
+                let fp = cache::fingerprint_public(reports);
+                if self.rank == 0 {
+                    for other in 1..p {
+                        let theirs = t.recv(0, other, tag0 + CTL_READY).into_u64();
+                        assert_eq!(
+                            theirs,
+                            vec![fp],
+                            "rank {other} diverged from the cached plan fingerprint"
+                        );
+                    }
+                    tree::broadcast_payload(t, 0, 0, Some(Payload::U64(vec![fp])), tag0 + CTL_PLAN);
+                } else {
+                    t.send(self.rank, 0, tag0 + CTL_READY, Payload::U64(vec![fp]));
+                    let confirm =
+                        tree::broadcast_payload(t, self.rank, 0, None, tag0 + CTL_PLAN).into_u64();
+                    assert_eq!(confirm, vec![fp], "cache fingerprint mismatch from leader");
+                }
+                return plan;
+            }
+        }
+        // encode: [n, (id, sparse, bytes)...]
+        let mut msg = vec![reports.len() as u64];
+        for r in reports {
+            msg.push(r.id);
+            msg.push(r.is_sparse as u64);
+            msg.push(r.nbytes);
+        }
+        if self.rank == 0 {
+            for other in 1..p {
+                let theirs = t.recv(0, other, tag0 + CTL_READY).into_u64();
+                assert_eq!(
+                    theirs[0] as usize,
+                    reports.len(),
+                    "rank {other} reported a different tensor count — \
+                     ranks have diverged"
+                );
+                for (i, r) in reports.iter().enumerate() {
+                    let id = theirs[1 + 3 * i];
+                    let sparse = theirs[2 + 3 * i] != 0;
+                    assert_eq!(id, r.id, "rank {other} tensor {i}: name mismatch");
+                    assert_eq!(
+                        sparse, r.is_sparse,
+                        "rank {other} tensor {i}: representation mismatch \
+                         (dense vs sparse) — this is the mixed-representation \
+                         hazard the accumulation strategy must prevent"
+                    );
+                }
+            }
+            let plan = build_plan(reports, self.config.fusion_threshold);
+            tree::broadcast_payload(
+                t,
+                0,
+                0,
+                Some(Payload::U64(plan.encode())),
+                tag0 + CTL_PLAN,
+            );
+            if self.config.cache_plans {
+                self.cache.put(reports, plan.clone());
+            }
+            plan
+        } else {
+            t.send(self.rank, 0, tag0 + CTL_READY, Payload::U64(msg));
+            let encoded =
+                tree::broadcast_payload(t, self.rank, 0, None, tag0 + CTL_PLAN).into_u64();
+            let plan = Plan::decode(&encoded);
+            if self.config.cache_plans {
+                self.cache.put(reports, plan.clone());
+            }
+            plan
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::testutil::run_ranks;
+    use crate::tensor::{DenseTensor, IndexedSlices};
+
+    fn dense_grad(name: &str, data: Vec<f32>) -> NamedGrad {
+        let n = data.len();
+        NamedGrad {
+            name: name.into(),
+            grad: Grad::Dense(DenseTensor::from_vec(vec![n], data)),
+        }
+    }
+
+    fn config(average: bool) -> ExchangeConfig {
+        ExchangeConfig {
+            algo: AllreduceAlgo::Ring,
+            fusion_threshold: 1024,
+            average,
+            cache_plans: true,
+        }
+    }
+
+    #[test]
+    fn dense_exchange_sums_across_ranks() {
+        let p = 4;
+        let results = run_ranks(p, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            let grads = vec![
+                dense_grad("w1", vec![rank as f32; 8]),
+                dense_grad("w2", vec![1.0; 3]),
+            ];
+            let (out, _) = ex.exchange(grads);
+            out
+        });
+        for out in results {
+            match &out[0].grad {
+                Grad::Dense(t) => assert!(t.data.iter().all(|&x| x == 6.0)), // 0+1+2+3
+                _ => panic!(),
+            }
+            match &out[1].grad {
+                Grad::Dense(t) => assert!(t.data.iter().all(|&x| x == 4.0)),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn averaging_divides_by_p() {
+        let results = run_ranks(2, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(true));
+            let (out, _) = ex.exchange(vec![dense_grad("w", vec![4.0, 8.0])]);
+            out
+        });
+        for out in results {
+            match &out[0].grad {
+                Grad::Dense(t) => assert_eq!(t.data, vec![4.0, 8.0]),
+                _ => panic!(),
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_exchange_gathers_with_tf_semantics() {
+        let p = 3;
+        let results = run_ranks(p, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            let grads = vec![NamedGrad {
+                name: "embedding".into(),
+                grad: Grad::Sparse(IndexedSlices::new(
+                    8,
+                    2,
+                    vec![rank as i32],
+                    vec![1.0, 2.0],
+                )),
+            }];
+            ex.exchange(grads)
+        });
+        for (out, report) in results {
+            match &out[0].grad {
+                Grad::Sparse(s) => {
+                    assert_eq!(s.nslices(), p, "concatenation across ranks");
+                    assert_eq!(s.indices, vec![0, 1, 2]);
+                }
+                _ => panic!("expected sparse output"),
+            }
+            assert_eq!(report.n_allgather_ops, 1);
+            assert_eq!(report.n_allreduce_groups, 0);
+        }
+    }
+
+    #[test]
+    fn mixed_cycle_preserves_order_and_kinds() {
+        let results = run_ranks(2, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            let grads = vec![
+                dense_grad("a", vec![1.0; 4]),
+                NamedGrad {
+                    name: "emb".into(),
+                    grad: Grad::Sparse(IndexedSlices::new(4, 1, vec![0], vec![1.0])),
+                },
+                dense_grad("b", vec![2.0; 4]),
+            ];
+            ex.exchange(grads).0
+        });
+        for out in results {
+            assert_eq!(out[0].name, "a");
+            assert_eq!(out[1].name, "emb");
+            assert_eq!(out[2].name, "b");
+            assert!(!out[0].grad.is_sparse());
+            assert!(out[1].grad.is_sparse());
+            assert!(!out[2].grad.is_sparse());
+        }
+    }
+
+    #[test]
+    fn report_tracks_gather_blowup() {
+        // peak accumulation bytes must grow with p on the sparse path
+        let peak_at = |p: usize| {
+            let results = run_ranks(p, move |rank, t| {
+                let mut ex = GradExchange::new(t, rank, config(false));
+                let grads = vec![NamedGrad {
+                    name: "embedding".into(),
+                    grad: Grad::Sparse(IndexedSlices::new(
+                        64,
+                        4,
+                        vec![1; 8],
+                        vec![0.5; 32],
+                    )),
+                }];
+                ex.exchange(grads).1.peak_accum_bytes
+            });
+            results[0]
+        };
+        let p2 = peak_at(2);
+        let p4 = peak_at(4);
+        assert_eq!(p4, 2 * p2, "gather peak must scale linearly with ranks");
+    }
+
+    #[test]
+    fn multiple_cycles_reuse_engine() {
+        let results = run_ranks(2, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            let mut last = 0.0;
+            for step in 0..5 {
+                let (out, _) =
+                    ex.exchange(vec![dense_grad("w", vec![step as f32; 2])]);
+                match &out[0].grad {
+                    Grad::Dense(t) => last = t.data[0],
+                    _ => panic!(),
+                }
+            }
+            last
+        });
+        assert!(results.iter().all(|&x| x == 8.0)); // 4 + 4
+    }
+
+    #[test]
+    fn timeline_captures_phases() {
+        let results = run_ranks(2, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            ex.enable_timeline();
+            ex.exchange(vec![dense_grad("w", vec![1.0; 16])]);
+            ex.timeline.events.len()
+        });
+        for n in results {
+            assert!(n >= 3, "expected pack/allreduce/unpack events, got {n}");
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Execution plans — the coordinator's negotiated decision of *which*
+//! tensors to exchange, *in what order*, *fused how*, and *with which
+//! collective*.  Mirrors Horovod's response cache / coordinator
+//! protocol: workers report readiness, rank 0 forms the plan, the plan
+//! is broadcast, everyone executes the same sequence.
+//!
+//! Plans are encoded to flat `u64` vectors for transport (the control
+//! plane uses the same [`Transport`] as the data plane, so plan
+//! distribution is itself a real message exchange).
+
+/// Collective operation for one plan entry.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveOp {
+    /// Fused dense reduction (one or more tensors packed together).
+    Allreduce,
+    /// Sparse gather (always a single tensor; Horovod does not fuse
+    /// allgather responses).
+    Allgather,
+}
+
+/// One entry: a fused group (Allreduce) or a single tensor (Allgather).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PlanEntry {
+    pub op: CollectiveOp,
+    /// Indices into the negotiated tensor ordering.
+    pub tensors: Vec<u32>,
+}
+
+/// The negotiated execution plan for one exchange cycle.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Plan {
+    pub entries: Vec<PlanEntry>,
+}
+
+/// What each rank reports about one ready tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TensorReport {
+    /// Stable id (hash of the tensor name — all ranks agree on names).
+    pub id: u64,
+    pub is_sparse: bool,
+    pub nbytes: u64,
+}
+
+/// FNV-1a — stable, dependency-free name hashing for tensor ids.
+pub fn name_id(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Build a plan from the (already readiness-validated) tensor reports
+/// in rank-0 submission order.  Dense tensors are greedily packed into
+/// fusion groups of at most `fusion_threshold` bytes (at least one
+/// tensor per group, even if oversized — Horovod semantics: the
+/// threshold bounds *additional* packing, it never splits a tensor).
+/// Sparse tensors become singleton Allgather entries, closing any open
+/// fusion group (ordering is preserved end-to-end).
+pub fn build_plan(reports: &[TensorReport], fusion_threshold: u64) -> Plan {
+    let mut entries = Vec::new();
+    let mut open: Vec<u32> = Vec::new();
+    let mut open_bytes = 0u64;
+    for (i, r) in reports.iter().enumerate() {
+        if r.is_sparse {
+            if !open.is_empty() {
+                entries.push(PlanEntry {
+                    op: CollectiveOp::Allreduce,
+                    tensors: std::mem::take(&mut open),
+                });
+                open_bytes = 0;
+            }
+            entries.push(PlanEntry {
+                op: CollectiveOp::Allgather,
+                tensors: vec![i as u32],
+            });
+        } else {
+            if !open.is_empty() && open_bytes + r.nbytes > fusion_threshold {
+                entries.push(PlanEntry {
+                    op: CollectiveOp::Allreduce,
+                    tensors: std::mem::take(&mut open),
+                });
+                open_bytes = 0;
+            }
+            open.push(i as u32);
+            open_bytes += r.nbytes;
+        }
+    }
+    if !open.is_empty() {
+        entries.push(PlanEntry { op: CollectiveOp::Allreduce, tensors: open });
+    }
+    Plan { entries }
+}
+
+impl Plan {
+    /// Flatten for broadcast over the transport control plane.
+    pub fn encode(&self) -> Vec<u64> {
+        let mut out = vec![self.entries.len() as u64];
+        for e in &self.entries {
+            out.push(match e.op {
+                CollectiveOp::Allreduce => 0,
+                CollectiveOp::Allgather => 1,
+            });
+            out.push(e.tensors.len() as u64);
+            out.extend(e.tensors.iter().map(|&t| t as u64));
+        }
+        out
+    }
+
+    pub fn decode(data: &[u64]) -> Plan {
+        let mut pos = 0;
+        let n = data[pos] as usize;
+        pos += 1;
+        let mut entries = Vec::with_capacity(n);
+        for _ in 0..n {
+            let op = match data[pos] {
+                0 => CollectiveOp::Allreduce,
+                1 => CollectiveOp::Allgather,
+                x => panic!("bad op code {x}"),
+            };
+            pos += 1;
+            let k = data[pos] as usize;
+            pos += 1;
+            let tensors = data[pos..pos + k].iter().map(|&t| t as u32).collect();
+            pos += k;
+            entries.push(PlanEntry { op, tensors });
+        }
+        Plan { entries }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dense(nbytes: u64) -> TensorReport {
+        TensorReport { id: 0, is_sparse: false, nbytes }
+    }
+
+    fn sparse(nbytes: u64) -> TensorReport {
+        TensorReport { id: 0, is_sparse: true, nbytes }
+    }
+
+    #[test]
+    fn all_dense_single_fused_group() {
+        let plan = build_plan(&[dense(10), dense(20), dense(30)], 1000);
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.entries[0].op, CollectiveOp::Allreduce);
+        assert_eq!(plan.entries[0].tensors, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn threshold_splits_groups() {
+        let plan = build_plan(&[dense(60), dense(60), dense(60)], 100);
+        assert_eq!(plan.entries.len(), 3, "60+60 > 100 so each is alone");
+        let plan = build_plan(&[dense(40), dense(40), dense(40)], 100);
+        assert_eq!(plan.entries.len(), 2); // [40+40], [40]
+        assert_eq!(plan.entries[0].tensors, vec![0, 1]);
+    }
+
+    #[test]
+    fn oversized_tensor_never_split() {
+        let plan = build_plan(&[dense(10_000)], 100);
+        assert_eq!(plan.entries.len(), 1);
+        assert_eq!(plan.entries[0].tensors, vec![0]);
+    }
+
+    #[test]
+    fn sparse_breaks_fusion_and_is_singleton() {
+        let plan = build_plan(&[dense(10), sparse(50), dense(10), dense(10)], 1000);
+        assert_eq!(plan.entries.len(), 3);
+        assert_eq!(plan.entries[0], PlanEntry { op: CollectiveOp::Allreduce, tensors: vec![0] });
+        assert_eq!(plan.entries[1], PlanEntry { op: CollectiveOp::Allgather, tensors: vec![1] });
+        assert_eq!(plan.entries[2], PlanEntry { op: CollectiveOp::Allreduce, tensors: vec![2, 3] });
+    }
+
+    #[test]
+    fn order_preserved() {
+        let plan = build_plan(
+            &[dense(1), dense(1), sparse(1), sparse(1), dense(1)],
+            2,
+        );
+        let flat: Vec<u32> = plan
+            .entries
+            .iter()
+            .flat_map(|e| e.tensors.iter().copied())
+            .collect();
+        assert_eq!(flat, vec![0, 1, 2, 3, 4]);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let plan = build_plan(
+            &[dense(10), sparse(5), dense(700), dense(300), sparse(1)],
+            512,
+        );
+        assert_eq!(Plan::decode(&plan.encode()), plan);
+    }
+
+    #[test]
+    fn name_id_stable_and_distinct() {
+        assert_eq!(name_id("embedding"), name_id("embedding"));
+        assert_ne!(name_id("enc0/attn/wq"), name_id("enc0/attn/wk"));
+    }
+}

@@ -1,0 +1,212 @@
+//! Horovod-timeline-style tracing: per-tensor phase events written as
+//! Chrome trace JSON (`chrome://tracing` / Perfetto compatible).  This
+//! is how the paper's Fig. 3a/3b were produced; `densefold repro fig3`
+//! and `examples/timeline_demo.rs` regenerate equivalent timelines for
+//! the two accumulation strategies.
+
+use std::io::Write;
+use std::path::Path;
+use std::time::Instant;
+
+/// Phases matching Horovod's timeline nomenclature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Negotiate,
+    WaitForData,
+    MemcpyInFusionBuffer,
+    Allreduce,
+    Allgather,
+    MemcpyOutFusionBuffer,
+}
+
+impl Phase {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Phase::Negotiate => "NEGOTIATE_ALLREDUCE",
+            Phase::WaitForData => "WAIT_FOR_DATA",
+            Phase::MemcpyInFusionBuffer => "MEMCPY_IN_FUSION_BUFFER",
+            Phase::Allreduce => "ALLREDUCE",
+            Phase::Allgather => "ALLGATHER",
+            Phase::MemcpyOutFusionBuffer => "MEMCPY_OUT_FUSION_BUFFER",
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct Event {
+    /// Tensor (or fused-group) label.
+    pub track: String,
+    pub phase: Phase,
+    pub start_us: u64,
+    pub dur_us: u64,
+    pub bytes: u64,
+}
+
+/// Event recorder with a wall-clock epoch.  In live mode durations are
+/// measured; the simulator records synthetic timestamps directly.
+#[derive(Debug)]
+pub struct Timeline {
+    epoch: Instant,
+    pub events: Vec<Event>,
+    pub enabled: bool,
+}
+
+impl Default for Timeline {
+    fn default() -> Self {
+        Self::new(true)
+    }
+}
+
+impl Timeline {
+    pub fn new(enabled: bool) -> Self {
+        Self { epoch: Instant::now(), events: Vec::new(), enabled }
+    }
+
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Time a closure and record it under (track, phase).
+    pub fn record<R>(
+        &mut self,
+        track: &str,
+        phase: Phase,
+        bytes: u64,
+        f: impl FnOnce() -> R,
+    ) -> R {
+        if !self.enabled {
+            return f();
+        }
+        let start = self.now_us();
+        let out = f();
+        let end = self.now_us();
+        self.events.push(Event {
+            track: track.to_string(),
+            phase,
+            start_us: start,
+            dur_us: (end - start).max(1),
+            bytes,
+        });
+        out
+    }
+
+    /// Record a synthetic event (simulator path).
+    pub fn record_synthetic(
+        &mut self,
+        track: &str,
+        phase: Phase,
+        start_us: u64,
+        dur_us: u64,
+        bytes: u64,
+    ) {
+        if self.enabled {
+            self.events.push(Event {
+                track: track.to_string(),
+                phase,
+                start_us,
+                dur_us: dur_us.max(1),
+                bytes,
+            });
+        }
+    }
+
+    /// Total bytes recorded for a phase (Fig. 3 "what moved where").
+    pub fn phase_bytes(&self, phase: Phase) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.phase == phase)
+            .map(|e| e.bytes)
+            .sum()
+    }
+
+    /// Total duration of a phase in microseconds.
+    pub fn phase_dur_us(&self, phase: Phase) -> u64 {
+        self.events
+            .iter()
+            .filter(|e| e.phase == phase)
+            .map(|e| e.dur_us)
+            .sum()
+    }
+
+    /// Serialize as Chrome trace JSON (array format).
+    pub fn to_chrome_trace(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let items: Vec<Json> = self
+            .events
+            .iter()
+            .map(|e| {
+                let mut obj = BTreeMap::new();
+                obj.insert("name".into(), Json::Str(e.phase.name().into()));
+                obj.insert("cat".into(), Json::Str("horovod".into()));
+                obj.insert("ph".into(), Json::Str("X".into()));
+                obj.insert("ts".into(), Json::Num(e.start_us as f64));
+                obj.insert("dur".into(), Json::Num(e.dur_us as f64));
+                obj.insert("pid".into(), Json::Num(0.0));
+                obj.insert("tid".into(), Json::Str(e.track.clone()));
+                let mut args = BTreeMap::new();
+                args.insert("bytes".into(), Json::Num(e.bytes as f64));
+                obj.insert("args".into(), Json::Obj(args));
+                Json::Obj(obj)
+            })
+            .collect();
+        Json::Arr(items).to_string_pretty()
+    }
+
+    pub fn write_chrome_trace(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_chrome_trace().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_measures_and_returns() {
+        let mut tl = Timeline::new(true);
+        let out = tl.record("embedding", Phase::Allreduce, 100, || 42);
+        assert_eq!(out, 42);
+        assert_eq!(tl.events.len(), 1);
+        assert_eq!(tl.events[0].bytes, 100);
+        assert!(tl.events[0].dur_us >= 1);
+    }
+
+    #[test]
+    fn disabled_records_nothing() {
+        let mut tl = Timeline::new(false);
+        tl.record("x", Phase::Negotiate, 1, || ());
+        tl.record_synthetic("x", Phase::Allgather, 0, 5, 9);
+        assert!(tl.events.is_empty());
+    }
+
+    #[test]
+    fn phase_aggregates() {
+        let mut tl = Timeline::new(true);
+        tl.record_synthetic("a", Phase::Allgather, 0, 10, 100);
+        tl.record_synthetic("b", Phase::Allgather, 10, 20, 200);
+        tl.record_synthetic("c", Phase::Allreduce, 30, 5, 50);
+        assert_eq!(tl.phase_bytes(Phase::Allgather), 300);
+        assert_eq!(tl.phase_dur_us(Phase::Allgather), 30);
+        assert_eq!(tl.phase_bytes(Phase::Allreduce), 50);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_json() {
+        use crate::util::json::Json;
+        let mut tl = Timeline::new(true);
+        tl.record_synthetic("embedding", Phase::Allreduce, 0, 169_000, 139_000_000);
+        let json = tl.to_chrome_trace();
+        let parsed = Json::parse(&json).unwrap();
+        let first = &parsed.as_arr().unwrap()[0];
+        assert_eq!(first.get("name").unwrap().as_str(), Some("ALLREDUCE"));
+        assert_eq!(
+            first.get("args").unwrap().get("bytes").unwrap().as_f64(),
+            Some(139_000_000.0)
+        );
+    }
+}

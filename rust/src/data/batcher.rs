@@ -1,0 +1,204 @@
+//! Token-count batching into the fixed (B, Ss, St) shapes the AOT
+//! artifacts were compiled for.
+//!
+//! The paper sizes batches in *tokens* ("batch size per process was
+//! held constant at 5000 tokens"); the batcher tracks the same metric
+//! while filling fixed-shape padded arrays (padding with PAD, framing
+//! targets with BOS/EOS, truncating to the compiled sequence lengths).
+
+use super::corpus::{Corpus, BOS_ID, EOS_ID, PAD_ID};
+use crate::util::rng::Rng;
+
+/// One fixed-shape training batch, laid out for the HLO inputs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub b: usize,
+    pub ss: usize,
+    pub st: usize,
+    /// `[b, ss]` source token ids (EOS-terminated, PAD-filled).
+    pub src: Vec<i32>,
+    /// `[b, st]` decoder input (BOS-prefixed target).
+    pub tgt_in: Vec<i32>,
+    /// `[b, st]` decoder labels (target shifted, EOS-terminated).
+    pub tgt_out: Vec<i32>,
+}
+
+impl Batch {
+    /// Non-pad label positions (what the loss averages over).
+    pub fn real_tokens(&self) -> usize {
+        self.tgt_out.iter().filter(|&&t| t != PAD_ID).count()
+            + self.src.iter().filter(|&&t| t != PAD_ID).count()
+    }
+}
+
+/// Cycling batcher over a corpus with per-rank sharding: rank r of p
+/// sees pairs r, r+p, r+2p, … (the standard data-parallel shard).
+#[derive(Debug)]
+pub struct Batcher {
+    corpus: Corpus,
+    b: usize,
+    ss: usize,
+    st: usize,
+    rank: usize,
+    nranks: usize,
+    cursor: usize,
+    rng: Rng,
+    shuffle: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(
+        corpus: Corpus,
+        (b, ss, st): (usize, usize, usize),
+        rank: usize,
+        nranks: usize,
+        seed: u64,
+    ) -> Self {
+        assert!(rank < nranks);
+        assert!(!corpus.pairs.is_empty());
+        let mut rng = Rng::new(seed);
+        let mut shuffle: Vec<usize> = (0..corpus.pairs.len()).collect();
+        // Fisher–Yates, same permutation on every rank (seed-shared)
+        for i in (1..shuffle.len()).rev() {
+            let j = rng.gen_range(0, i + 1);
+            shuffle.swap(i, j);
+        }
+        Self { corpus, b, ss, st, rank, nranks, cursor: 0, rng, shuffle }
+    }
+
+    fn next_pair(&mut self) -> usize {
+        // shard: rank r takes every p-th pair of the shuffled order
+        let idx = self.shuffle
+            [(self.cursor * self.nranks + self.rank) % self.shuffle.len()];
+        self.cursor += 1;
+        idx
+    }
+
+    /// Produce the next fixed-shape batch.
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, ss, st) = (self.b, self.ss, self.st);
+        let mut src = vec![PAD_ID; b * ss];
+        let mut tgt_in = vec![PAD_ID; b * st];
+        let mut tgt_out = vec![PAD_ID; b * st];
+        for row in 0..b {
+            let idx = self.next_pair();
+            let pair = &self.corpus.pairs[idx];
+            // source: tokens + EOS, truncated to ss
+            let n_src = pair.src.len().min(ss - 1);
+            for (j, &t) in pair.src.iter().take(n_src).enumerate() {
+                src[row * ss + j] = t;
+            }
+            src[row * ss + n_src] = EOS_ID;
+            // target: BOS + tokens -> tgt_in; tokens + EOS -> tgt_out
+            let n_tgt = pair.tgt.len().min(st - 1);
+            tgt_in[row * st] = BOS_ID;
+            for (j, &t) in pair.tgt.iter().take(n_tgt).enumerate() {
+                tgt_in[row * st + j + 1] = t;
+                tgt_out[row * st + j] = t;
+            }
+            tgt_out[row * st + n_tgt] = EOS_ID;
+        }
+        let _ = &mut self.rng; // reserved for future length-bucketing
+        Batch { b, ss, st, src, tgt_in, tgt_out }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::CorpusConfig;
+
+    fn corpus() -> Corpus {
+        Corpus::generate(&CorpusConfig {
+            n_pairs: 64,
+            min_len: 3,
+            max_len: 6,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn shapes_are_fixed() {
+        let mut b = Batcher::new(corpus(), (4, 8, 8), 0, 1, 1);
+        for _ in 0..5 {
+            let batch = b.next_batch();
+            assert_eq!(batch.src.len(), 32);
+            assert_eq!(batch.tgt_in.len(), 32);
+            assert_eq!(batch.tgt_out.len(), 32);
+        }
+    }
+
+    #[test]
+    fn framing_invariants() {
+        let mut b = Batcher::new(corpus(), (2, 8, 8), 0, 1, 1);
+        let batch = b.next_batch();
+        for row in 0..2 {
+            // tgt_in starts with BOS
+            assert_eq!(batch.tgt_in[row * 8], BOS_ID);
+            // tgt_out contains exactly one EOS
+            let eos_count = batch.tgt_out[row * 8..(row + 1) * 8]
+                .iter()
+                .filter(|&&t| t == EOS_ID)
+                .count();
+            assert_eq!(eos_count, 1);
+            // src contains exactly one EOS
+            let src_eos = batch.src[row * 8..(row + 1) * 8]
+                .iter()
+                .filter(|&&t| t == EOS_ID)
+                .count();
+            assert_eq!(src_eos, 1);
+            // tgt_in is tgt_out shifted right by one
+            for j in 1..8 {
+                let out_prev = batch.tgt_out[row * 8 + j - 1];
+                let in_cur = batch.tgt_in[row * 8 + j];
+                if in_cur != PAD_ID && out_prev != EOS_ID {
+                    assert_eq!(in_cur, out_prev, "row {row} pos {j}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn long_sentences_truncated() {
+        let c = Corpus::generate(&CorpusConfig {
+            n_pairs: 8,
+            min_len: 20,
+            max_len: 20,
+            ..Default::default()
+        });
+        let mut b = Batcher::new(c, (2, 8, 8), 0, 1, 1);
+        let batch = b.next_batch();
+        assert_eq!(batch.src.len(), 16); // no overflow
+    }
+
+    #[test]
+    fn ranks_see_disjoint_pairs() {
+        let c = corpus();
+        let mut b0 = Batcher::new(c.clone(), (4, 8, 8), 0, 2, 7);
+        let mut b1 = Batcher::new(c, (4, 8, 8), 1, 2, 7);
+        let x0 = b0.next_batch();
+        let x1 = b1.next_batch();
+        assert_ne!(x0.src, x1.src, "ranks must get different shards");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = corpus();
+        let mut a = Batcher::new(c.clone(), (4, 8, 8), 0, 1, 3);
+        let mut b = Batcher::new(c, (4, 8, 8), 0, 1, 3);
+        assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn real_tokens_counts_non_pad() {
+        let mut b = Batcher::new(corpus(), (1, 8, 8), 0, 1, 1);
+        let batch = b.next_batch();
+        let manual = batch
+            .src
+            .iter()
+            .chain(&batch.tgt_out)
+            .filter(|&&t| t != PAD_ID)
+            .count();
+        assert_eq!(batch.real_tokens(), manual);
+    }
+}

@@ -1,0 +1,174 @@
+//! Synthetic parallel corpus.
+//!
+//! Source sentences are Zipf-sampled token sequences of variable
+//! length; the target is the *reversed* source with a fixed affine
+//! token remap — a translation-shaped function (reordering + lexical
+//! substitution) that a small transformer can learn, while exercising
+//! the tied embedding exactly like a real NMT pair.
+
+use crate::util::rng::Rng;
+
+pub const PAD_ID: i32 = 0;
+pub const BOS_ID: i32 = 1;
+pub const EOS_ID: i32 = 2;
+/// First usable content token id.
+pub const FIRST_CONTENT_ID: i32 = 3;
+
+#[derive(Debug, Clone)]
+pub struct CorpusConfig {
+    pub vocab: usize,
+    /// sentence length range (content tokens, excluding EOS)
+    pub min_len: usize,
+    pub max_len: usize,
+    pub n_pairs: usize,
+    pub seed: u64,
+    /// Zipf exponent for token frequencies.
+    pub zipf_s: f64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        Self { vocab: 512, min_len: 4, max_len: 10, n_pairs: 1024, seed: 13, zipf_s: 1.2 }
+    }
+}
+
+/// A sentence pair: source and reference target (no BOS/EOS framing;
+/// the batcher adds it).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Pair {
+    pub src: Vec<i32>,
+    pub tgt: Vec<i32>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub pairs: Vec<Pair>,
+    pub vocab: usize,
+}
+
+/// The deterministic "translation": reverse + affine remap over the
+/// content-token range.
+pub fn translate(src: &[i32], vocab: usize) -> Vec<i32> {
+    let n = (vocab as i32) - FIRST_CONTENT_ID;
+    src.iter()
+        .rev()
+        .map(|&t| {
+            let x = t - FIRST_CONTENT_ID;
+            FIRST_CONTENT_ID + ((x * 7 + 3).rem_euclid(n))
+        })
+        .collect()
+}
+
+impl Corpus {
+    pub fn generate(cfg: &CorpusConfig) -> Self {
+        assert!(cfg.vocab as i32 > FIRST_CONTENT_ID + 1, "vocab too small");
+        assert!(cfg.min_len >= 1 && cfg.min_len <= cfg.max_len);
+        let mut rng = Rng::new(cfg.seed);
+        let content = cfg.vocab - FIRST_CONTENT_ID as usize;
+        let pairs = (0..cfg.n_pairs)
+            .map(|_| {
+                let len = rng.gen_range(cfg.min_len, cfg.max_len + 1);
+                let src: Vec<i32> = (0..len)
+                    .map(|_| FIRST_CONTENT_ID + rng.zipf(content, cfg.zipf_s) as i32)
+                    .collect();
+                let tgt = translate(&src, cfg.vocab);
+                Pair { src, tgt }
+            })
+            .collect();
+        Self { pairs, vocab: cfg.vocab }
+    }
+
+    /// Split into train/test (last `n_test` pairs are the test set).
+    pub fn split(&self, n_test: usize) -> (Corpus, Corpus) {
+        assert!(n_test < self.pairs.len());
+        let cut = self.pairs.len() - n_test;
+        (
+            Corpus { pairs: self.pairs[..cut].to_vec(), vocab: self.vocab },
+            Corpus { pairs: self.pairs[cut..].to_vec(), vocab: self.vocab },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_generation() {
+        let cfg = CorpusConfig::default();
+        let a = Corpus::generate(&cfg);
+        let b = Corpus::generate(&cfg);
+        assert_eq!(a.pairs, b.pairs);
+    }
+
+    #[test]
+    fn different_seeds_differ() {
+        let a = Corpus::generate(&CorpusConfig { seed: 1, ..Default::default() });
+        let b = Corpus::generate(&CorpusConfig { seed: 2, ..Default::default() });
+        assert_ne!(a.pairs, b.pairs);
+    }
+
+    #[test]
+    fn translation_is_bijective_per_position() {
+        // affine map with gcd(7, n) = 1 must be a bijection
+        let vocab = 512;
+        let n = vocab as i32 - FIRST_CONTENT_ID;
+        assert_eq!(n % 7 != 0, true);
+        let mut seen = vec![false; n as usize];
+        for t in FIRST_CONTENT_ID..vocab as i32 {
+            let out = translate(&[t], vocab)[0];
+            let idx = (out - FIRST_CONTENT_ID) as usize;
+            assert!(!seen[idx], "collision at {t}");
+            seen[idx] = true;
+        }
+        assert!(seen.iter().all(|&x| x));
+    }
+
+    #[test]
+    fn translation_reverses() {
+        let vocab = 64;
+        let src = vec![3, 4, 5];
+        let tgt = translate(&src, vocab);
+        let expect_last = translate(&[3], vocab)[0];
+        assert_eq!(tgt[2], expect_last);
+        assert_eq!(tgt.len(), 3);
+    }
+
+    #[test]
+    fn tokens_in_content_range() {
+        let cfg = CorpusConfig { vocab: 100, ..Default::default() };
+        let c = Corpus::generate(&cfg);
+        for p in &c.pairs {
+            for &t in p.src.iter().chain(&p.tgt) {
+                assert!((FIRST_CONTENT_ID..100).contains(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn zipf_frequencies_head_heavy() {
+        let cfg = CorpusConfig { n_pairs: 2000, ..Default::default() };
+        let c = Corpus::generate(&cfg);
+        let mut counts = vec![0usize; cfg.vocab];
+        for p in &c.pairs {
+            for &t in &p.src {
+                counts[t as usize] += 1;
+            }
+        }
+        // the most frequent content token should dominate the median one
+        let max = *counts.iter().max().unwrap();
+        let mut nonzero: Vec<usize> =
+            counts.iter().copied().filter(|&c| c > 0).collect();
+        nonzero.sort_unstable();
+        let median = nonzero[nonzero.len() / 2];
+        assert!(max > 5 * median, "max={max} median={median}");
+    }
+
+    #[test]
+    fn split_partitions() {
+        let c = Corpus::generate(&CorpusConfig { n_pairs: 100, ..Default::default() });
+        let (train, test) = c.split(10);
+        assert_eq!(train.pairs.len(), 90);
+        assert_eq!(test.pairs.len(), 10);
+    }
+}

@@ -1,0 +1,15 @@
+//! Synthetic NMT workload: corpus generation, batching, BLEU.
+//!
+//! Substitutes for the paper's WMT-17 En→De corpus (DESIGN.md
+//! §Substitutions): a seeded token-sequence task whose target is a
+//! deterministic transform of the source, so a transformer actually
+//! *learns* it (loss falls, BLEU rises) and the tied-embedding gradient
+//! path is exercised with realistic Zipf-distributed token frequencies.
+
+pub mod batcher;
+pub mod bleu;
+pub mod corpus;
+
+pub use batcher::{Batch, Batcher};
+pub use bleu::bleu;
+pub use corpus::{Corpus, CorpusConfig, PAD_ID, BOS_ID, EOS_ID};

@@ -1,0 +1,142 @@
+//! Fig. 3 (Horovod timelines) and Fig. 5 (accumulate space/time) —
+//! the paper's headline 82× / 25× numbers.
+
+use std::path::Path;
+
+use crate::coordinator::timeline::Timeline;
+use crate::sim::des::{simulate_step, DesConfig};
+use crate::sim::{ClusterModel, PaperModel};
+use crate::tensor::AccumStrategy;
+use crate::util::csv::Table;
+use crate::util::{human_bytes, human_time};
+
+/// Fig. 3: regenerate the before/after Horovod timelines at 64 MPI
+/// processes.  Writes two Chrome-trace JSONs and returns a summary
+/// table of phase totals.
+pub fn fig3_timelines(out_dir: &Path) -> anyhow::Result<Table> {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(1); // paper Fig. 3: 64 nodes, 1 PPN
+    let mut table = Table::new(vec![
+        "strategy", "collective", "bytes", "exchange_time", "trace_file",
+    ]);
+    for (strategy, label) in [
+        (AccumStrategy::TfDefault, "sparse-gather (before)"),
+        (AccumStrategy::SparseAsDense, "dense-reduce (after)"),
+    ] {
+        let mut tl = Timeline::new(true);
+        let cfg = DesConfig { p: 64, strategy, ..Default::default() };
+        let step = simulate_step(&model, &cluster, &cfg, Some(&mut tl));
+        let trace = format!("fig3_{}.trace.json", strategy.name());
+        tl.write_chrome_trace(&out_dir.join(&trace))?;
+        let (collective, bytes) = match strategy {
+            AccumStrategy::TfDefault => (
+                "MPI_Allgather",
+                model.peak_accum_bytes(strategy, 64),
+            ),
+            _ => ("MPI_Allreduce", model.dense_embedding_bytes()),
+        };
+        table.push(vec![
+            label.to_string(),
+            collective.to_string(),
+            human_bytes(bytes),
+            human_time(step.exchange_time),
+            trace,
+        ]);
+    }
+    Ok(table)
+}
+
+/// Fig. 5: space and time of the tied-embedding accumulate, gather vs
+/// reduce, at 64 ranks — plus the ratio row the abstract quotes.
+pub fn fig5_space_time() -> Table {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(1);
+    let mut table = Table::new(vec![
+        "strategy", "accumulate_bytes", "accumulate_time", "paper_bytes", "paper_time",
+    ]);
+    let p = 64;
+    let mut measured = Vec::new();
+    for (strategy, paper_bytes, paper_time) in [
+        (AccumStrategy::TfDefault, "11.4 GB", "4320 ms"),
+        (AccumStrategy::SparseAsDense, "139 MB", "169 ms"),
+    ] {
+        let bytes = model.peak_accum_bytes(strategy, p);
+        let time = model.accumulate_time(&cluster, strategy, p);
+        measured.push((bytes, time));
+        table.push(vec![
+            strategy.name().to_string(),
+            human_bytes(bytes),
+            human_time(time),
+            paper_bytes.to_string(),
+            paper_time.to_string(),
+        ]);
+    }
+    let mem_ratio = measured[0].0 as f64 / measured[1].0 as f64;
+    let time_ratio = measured[0].1 / measured[1].1;
+    table.push(vec![
+        "ratio (gather/reduce)".to_string(),
+        format!("{mem_ratio:.0}x"),
+        format!("{time_ratio:.0}x"),
+        "82x".to_string(),
+        "25.6x".to_string(),
+    ]);
+    table
+}
+
+/// Fig. 5 sweep: the same two curves across rank counts (the figure's
+/// x-axis), for plotting.
+pub fn fig5_sweep() -> Table {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(1);
+    let mut table = Table::new(vec![
+        "p", "gather_bytes", "reduce_bytes", "gather_time_s", "reduce_time_s",
+    ]);
+    for p in [2u64, 4, 8, 16, 32, 64, 128] {
+        table.push(vec![
+            p.to_string(),
+            model.peak_accum_bytes(AccumStrategy::TfDefault, p).to_string(),
+            model.peak_accum_bytes(AccumStrategy::SparseAsDense, p).to_string(),
+            format!("{:.4}", model.accumulate_time(&cluster, AccumStrategy::TfDefault, p)),
+            format!(
+                "{:.4}",
+                model.accumulate_time(&cluster, AccumStrategy::SparseAsDense, p)
+            ),
+        ]);
+    }
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig5_table_has_ratio_row() {
+        let t = fig5_space_time();
+        assert_eq!(t.rows.len(), 3);
+        let ratio_row = &t.rows[2];
+        let mem: f64 = ratio_row[1].trim_end_matches('x').parse().unwrap();
+        assert!(mem > 50.0, "memory ratio {mem} (paper: 82)");
+        let time: f64 = ratio_row[2].trim_end_matches('x').parse().unwrap();
+        assert!(time > 10.0, "time ratio {time} (paper: 25.6)");
+    }
+
+    #[test]
+    fn fig5_sweep_monotone_gather() {
+        let t = fig5_sweep();
+        let gather: Vec<u64> = t.rows.iter().map(|r| r[1].parse().unwrap()).collect();
+        let reduce: Vec<u64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!(gather.windows(2).all(|w| w[1] > w[0]), "gather grows with p");
+        assert!(reduce.windows(2).all(|w| w[1] == w[0]), "reduce flat in p");
+    }
+
+    #[test]
+    fn fig3_writes_traces() {
+        let dir = std::env::temp_dir().join("densefold_fig3_test");
+        let t = fig3_timelines(&dir).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        assert!(dir.join("fig3_tf-default.trace.json").exists());
+        assert!(dir.join("fig3_sparse-as-dense.trace.json").exists());
+        let _ = std::fs::remove_dir_all(dir);
+    }
+}

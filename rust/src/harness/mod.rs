@@ -1,0 +1,38 @@
+//! Experiment harness: one driver per paper table/figure.
+//!
+//! Every driver emits (a) a CSV under `results/` for replotting and
+//! (b) a markdown table printed to stdout and collected into
+//! EXPERIMENTS.md.  DESIGN.md §5 maps figure ids to drivers:
+//!
+//! | id | driver | mode |
+//! |----|--------|------|
+//! | fig3 | [`accumulate::fig3_timelines`] | simulated (64 ranks) |
+//! | fig4 | [`weak::fig4_sparse_speedup`] | simulated |
+//! | fig5 | [`accumulate::fig5_space_time`] | simulated + live |
+//! | fig6 | [`weak::fig6_compare`] | simulated |
+//! | fig7/8 | [`weak::fig7_fig8_dense_300_nodes`] | simulated |
+//! | fig9/10 | [`strong::fig9_fig10_strong`] | simulated |
+//! | fig11 | [`strong::fig11_time_to_solution`] | simulated |
+//! | fig12 | [`quality::fig12_bleu_vs_batch`] | **live** (tiny preset) |
+//! | §4 validation | [`validate::live_vs_model`] | **live** (p ≤ 4) |
+
+pub mod ablation;
+pub mod accumulate;
+pub mod quality;
+pub mod strong;
+pub mod validate;
+pub mod weak;
+
+use std::path::Path;
+
+use crate::util::csv::Table;
+
+/// Write a result table as CSV + print its markdown form.
+pub fn emit(table: &Table, out_dir: &Path, name: &str) -> anyhow::Result<()> {
+    let path = out_dir.join(format!("{name}.csv"));
+    table.write_csv(&path)?;
+    println!("\n## {name}\n");
+    println!("{}", table.to_markdown());
+    println!("(csv: {})", path.display());
+    Ok(())
+}

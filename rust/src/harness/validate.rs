@@ -1,0 +1,70 @@
+//! Live-vs-model validation (DESIGN.md §Live-vs-simulated): run the
+//! real coordinator at small rank counts, measure the same quantities
+//! the simulator predicts at paper scale, and tabulate both.  This is
+//! the evidence that the simulated Figs. 4–11 rest on measured ground.
+
+use crate::coordinator::ExchangeConfig;
+use crate::data::CorpusConfig;
+use crate::runtime::{Engine, Manifest};
+use crate::tensor::accum::peak_bytes_model;
+use crate::tensor::AccumStrategy;
+use crate::train::{run_session_with_engine, SessionConfig};
+use crate::util::csv::Table;
+use crate::util::human_bytes;
+
+/// Live gather-vs-reduce at p ∈ {1, 2, 4}: peak accumulation bytes
+/// (exact, compared against the analytic model the simulator uses) and
+/// measured exchange time.
+pub fn live_vs_model(manifest: &Manifest, steps: usize) -> anyhow::Result<Table> {
+    let engine = Engine::start()?;
+    let preset = manifest.preset("tiny")?;
+    let b = &preset.batch;
+    let slice_rows = (b.b * (b.ss + b.st)) as u64;
+    let v = preset.config.vocab as u64;
+    let d = preset.config.d_model as u64;
+    let mut t = Table::new(vec![
+        "p",
+        "strategy",
+        "live_peak_accum",
+        "model_peak_accum",
+        "live_exchange_ms",
+        "live_wire_bytes_per_step",
+    ]);
+    for p in [1usize, 2, 4] {
+        for strategy in [AccumStrategy::TfDefault, AccumStrategy::SparseAsDense] {
+            let cfg = SessionConfig {
+                preset: "tiny".into(),
+                strategy,
+                nranks: p,
+                steps,
+                // fusion off so the peak tracks the embedding tensor
+                // alone — the quantity the analytic model prices
+                exchange: ExchangeConfig { fusion_threshold: 1, ..Default::default() },
+                corpus: CorpusConfig {
+                    vocab: preset.config.vocab,
+                    n_pairs: 128,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let result = run_session_with_engine(&cfg, manifest, engine.handle())?;
+            let live_peak = result.peak_accum_bytes();
+            let model_peak = peak_bytes_model(strategy, p as u64, slice_rows, v, d, true);
+            let wire: u64 = result
+                .stats
+                .iter()
+                .flat_map(|r| r.iter().map(|s| s.exchange.wire_bytes))
+                .sum::<u64>()
+                / (p * steps) as u64;
+            t.push(vec![
+                p.to_string(),
+                strategy.name().to_string(),
+                human_bytes(live_peak),
+                human_bytes(model_peak),
+                format!("{:.2}", result.mean_exchange_us() / 1000.0),
+                human_bytes(wire),
+            ]);
+        }
+    }
+    Ok(t)
+}

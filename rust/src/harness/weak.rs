@@ -1,0 +1,117 @@
+//! Figs. 4, 6, 7, 8 — the weak-scaling story.
+
+use crate::sim::{weak_scaling, ClusterModel, PaperModel};
+use crate::tensor::AccumStrategy;
+use crate::util::csv::Table;
+
+const STEPS: u32 = 6;
+
+/// Fig. 4: scaled speedup with the sparse (gather) strategy up to 32
+/// MPI processes, 4 PPN — the "before" curve that flattens.
+pub fn fig4_sparse_speedup() -> Table {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(4);
+    let ps = [4u64, 8, 16, 24, 32];
+    let pts = weak_scaling(&model, &cluster, AccumStrategy::TfDefault, &ps, STEPS);
+    let mut t = Table::new(vec!["procs", "nodes", "speedup", "ideal", "efficiency"]);
+    for pt in pts {
+        t.push(vec![
+            pt.p.to_string(),
+            pt.nodes.to_string(),
+            format!("{:.2}", pt.speedup),
+            pt.p.to_string(),
+            format!("{:.3}", pt.efficiency),
+        ]);
+    }
+    t
+}
+
+/// Fig. 6: sparse vs dense weak scaling to 8 nodes (32 procs, 4 PPN).
+/// Paper anchors: dense 95% vs sparse 75% at 32 procs.
+pub fn fig6_compare() -> Table {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(4);
+    let ps = [4u64, 8, 16, 32];
+    let dense = weak_scaling(&model, &cluster, AccumStrategy::SparseAsDense, &ps, STEPS);
+    let sparse = weak_scaling(&model, &cluster, AccumStrategy::TfDefault, &ps, STEPS);
+    let mut t = Table::new(vec![
+        "procs",
+        "dense_speedup",
+        "dense_efficiency",
+        "sparse_speedup",
+        "sparse_efficiency",
+    ]);
+    for (d, s) in dense.iter().zip(&sparse) {
+        t.push(vec![
+            d.p.to_string(),
+            format!("{:.2}", d.speedup),
+            format!("{:.3}", d.efficiency),
+            format!("{:.2}", s.speedup),
+            format!("{:.3}", s.efficiency),
+        ]);
+    }
+    t
+}
+
+/// Fig. 7 + Fig. 8: dense weak scaling from 1 to 300 nodes (4 PPN,
+/// 5000 tokens/proc).  Paper anchors: 95% at 8 nodes → 91.5% at 300.
+pub fn fig7_fig8_dense_300_nodes() -> Table {
+    let model = PaperModel::transformer_big();
+    let cluster = ClusterModel::zenith(4);
+    let nodes = [1u64, 2, 4, 8, 16, 32, 64, 100, 150, 200, 250, 300];
+    let ps: Vec<u64> = nodes.iter().map(|n| n * 4).collect();
+    let pts = weak_scaling(&model, &cluster, AccumStrategy::SparseAsDense, &ps, STEPS);
+    let mut t = Table::new(vec![
+        "nodes",
+        "procs",
+        "step_time_s",
+        "speedup",
+        "efficiency",
+        "throughput_tokens_per_s",
+    ]);
+    for pt in pts {
+        t.push(vec![
+            pt.nodes.to_string(),
+            pt.p.to_string(),
+            format!("{:.3}", pt.step_time),
+            format!("{:.1}", pt.speedup),
+            format!("{:.3}", pt.efficiency),
+            format!("{:.0}", pt.throughput_tokens_per_s),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_efficiency_declines() {
+        let t = fig4_sparse_speedup();
+        let effs: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+        assert!(effs.first().unwrap() > effs.last().unwrap());
+        assert!(*effs.last().unwrap() < 0.85, "32-proc sparse eff {}", effs.last().unwrap());
+    }
+
+    #[test]
+    fn fig6_dense_wins_everywhere() {
+        let t = fig6_compare();
+        for row in &t.rows {
+            let de: f64 = row[2].parse().unwrap();
+            let se: f64 = row[4].parse().unwrap();
+            assert!(de > se, "procs {}", row[0]);
+        }
+    }
+
+    #[test]
+    fn fig7_efficiency_stays_high() {
+        let t = fig7_fig8_dense_300_nodes();
+        let last = t.rows.last().unwrap();
+        let eff: f64 = last[4].parse().unwrap();
+        assert!(eff > 0.85, "300-node efficiency {eff} (paper 0.915)");
+        // near-linear: speedup at 300 nodes within 15% of ideal 1200
+        let speedup: f64 = last[3].parse().unwrap();
+        assert!(speedup > 1000.0, "speedup {speedup}");
+    }
+}

@@ -1,0 +1,36 @@
+//! # densefold
+//!
+//! Reproduction of *"Densifying Assumed-sparse Tensors: Improving Memory
+//! Efficiency and MPI Collective Performance during Tensor Accumulation
+//! for Parallelized Training of Neural Machine Translation Models"*
+//! (Cavdar et al., ISC 2019).
+//!
+//! The crate is the Layer-3 coordinator of a three-layer stack:
+//!
+//! * **L3 (this crate)** — a Horovod-class gradient-exchange runtime:
+//!   tensor accumulation strategies ([`tensor::accum`]), MPI-style
+//!   collectives ([`collectives`]) over an in-process transport
+//!   ([`transport`]), readiness negotiation + tensor fusion + timeline
+//!   ([`coordinator`]), a data-parallel trainer ([`train`]), and a
+//!   calibrated discrete-event cluster simulator ([`sim`]) that
+//!   regenerates the paper's scaling figures at 300-node scale.
+//! * **L2 (JAX, build time)** — the tied-embedding transformer whose
+//!   training step is AOT-lowered to HLO text (`python/compile/`).
+//! * **L1 (Pallas, build time)** — the densify scatter-add kernel (the
+//!   paper's operator) and a flash-attention kernel, fused into the same
+//!   HLO and executed through [`runtime`] via PJRT.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! binary is self-contained.
+
+pub mod collectives;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod model;
+pub mod runtime;
+pub mod sim;
+pub mod tensor;
+pub mod train;
+pub mod transport;
+pub mod util;

@@ -1,0 +1,311 @@
+//! `densefold` — CLI for the Densifying Assumed-sparse Tensors
+//! reproduction.
+//!
+//! ```text
+//! densefold train  [--preset P] [--strategy S] [--ranks N] [--steps N]
+//!                  [--timeline FILE] [--eval N] [--fusion-mb N] [--algo A]
+//! densefold repro  (--fig figN | --all) [--out DIR] [--steps N]
+//! densefold info   [--artifacts DIR]
+//! ```
+//!
+//! (The offline registry has no clap; argument parsing is a small
+//! hand-rolled substrate — see Cargo.toml note.)
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use densefold::collectives::AllreduceAlgo;
+use densefold::coordinator::ExchangeConfig;
+use densefold::data::CorpusConfig;
+use densefold::harness;
+use densefold::runtime::Manifest;
+use densefold::tensor::AccumStrategy;
+use densefold::train::{run_session, SessionConfig};
+use densefold::util::{human_bytes, human_time};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+        std::process::exit(2);
+    }
+    let cmd = args[0].clone();
+    let flags = parse_flags(&args[1..]);
+    let result = match cmd.as_str() {
+        "train" => cmd_train(&flags),
+        "repro" => cmd_repro(&flags),
+        "info" => cmd_info(&flags),
+        "help" | "--help" | "-h" => {
+            usage();
+            Ok(())
+        }
+        other => {
+            eprintln!("unknown command '{other}'");
+            usage();
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "densefold — 'Densifying Assumed-sparse Tensors' (ISC'19) reproduction
+
+commands:
+  train   run a live multi-rank data-parallel training session
+          --preset tiny|small|base   (default tiny)
+          --strategy tf-default|sparse-as-dense|any-dense
+          --ranks N      in-process MPI ranks            (default 2)
+          --steps N      training steps                  (default 20)
+          --eval N       hold out N pairs, report BLEU   (default 0)
+          --timeline F   write rank-0 Horovod timeline JSON
+          --fusion-mb N  fusion threshold in MB          (default 128)
+          --algo ring|rd|tree|naive  allreduce algorithm (default ring)
+  repro   regenerate paper tables/figures
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation
+          --all          every figure
+          --out DIR      output directory (default results/)
+          --steps N      live-run step budget            (default 30)
+  info    print manifest/artifact summary
+          --artifacts DIR                                (default artifacts/)"
+    );
+}
+
+fn parse_flags(args: &[String]) -> HashMap<String, String> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let a = &args[i];
+        if let Some(key) = a.strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            out.insert(key.to_string(), val);
+        } else {
+            eprintln!("ignoring stray argument '{a}'");
+        }
+        i += 1;
+    }
+    out
+}
+
+fn flag<'a>(flags: &'a HashMap<String, String>, key: &str, default: &'a str) -> &'a str {
+    flags.get(key).map(String::as_str).unwrap_or(default)
+}
+
+fn artifacts_dir(flags: &HashMap<String, String>) -> PathBuf {
+    PathBuf::from(flag(flags, "artifacts", "artifacts"))
+}
+
+fn load_manifest(flags: &HashMap<String, String>) -> anyhow::Result<Manifest> {
+    Manifest::load(&artifacts_dir(flags))
+}
+
+fn parse_strategy(s: &str) -> anyhow::Result<AccumStrategy> {
+    AccumStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))
+}
+
+fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let manifest = load_manifest(flags)?;
+    let preset_name = flag(flags, "preset", "tiny").to_string();
+    let preset = manifest.preset(&preset_name)?;
+    let strategy = parse_strategy(flag(flags, "strategy", "sparse-as-dense"))?;
+    let nranks: usize = flag(flags, "ranks", "2").parse()?;
+    let steps: usize = flag(flags, "steps", "20").parse()?;
+    let eval_pairs: usize = flag(flags, "eval", "0").parse()?;
+    let fusion_mb: u64 = flag(flags, "fusion-mb", "128").parse()?;
+    let algo = AllreduceAlgo::parse(flag(flags, "algo", "ring"))
+        .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
+    let timeline_path = flags.get("timeline").cloned();
+
+    let cfg = SessionConfig {
+        preset: preset_name.clone(),
+        strategy,
+        nranks,
+        steps,
+        exchange: ExchangeConfig {
+            algo,
+            fusion_threshold: fusion_mb * 1024 * 1024,
+            average: true,
+            cache_plans: true,
+        },
+        corpus: CorpusConfig {
+            vocab: preset.config.vocab,
+            n_pairs: 2048.max(eval_pairs * 4),
+            min_len: 3,
+            max_len: (preset.batch.ss - 2).min(12),
+            ..Default::default()
+        },
+        eval_pairs,
+        timeline: timeline_path.is_some(),
+        seed: flag(flags, "seed", "17").parse()?,
+        warmup_steps: (steps / 4).max(10) as u64,
+        lr_scale: flag(flags, "lr-scale", "1.0").parse()?,
+    };
+    println!(
+        "training preset={preset_name} strategy={} ranks={nranks} steps={steps} \
+         ({} params, batch {} tokens/rank)",
+        strategy.name(),
+        preset.n_params,
+        preset.batch.tokens()
+    );
+    let result = run_session(&cfg, &manifest)?;
+    let losses = result.loss_curve();
+    for (i, loss) in losses.iter().enumerate() {
+        let s0 = &result.stats[0][i];
+        if i % 5 == 0 || i + 1 == losses.len() {
+            println!(
+                "step {:>4}  loss {:.4}  lr {:.5}  compute {}  exchange {}  peak-accum {}",
+                i + 1,
+                loss,
+                s0.lr,
+                human_time(s0.compute_us as f64 / 1e6),
+                human_time(s0.exchange.exec_us as f64 / 1e6),
+                human_bytes(s0.exchange.peak_accum_bytes),
+            );
+        }
+    }
+    println!(
+        "done in {}: loss {:.4} -> {:.4}; mean exchange {}; peak accum {}",
+        human_time(result.wall_secs),
+        losses.first().unwrap(),
+        losses.last().unwrap(),
+        human_time(result.mean_exchange_us() / 1e6),
+        human_bytes(result.peak_accum_bytes()),
+    );
+    if let Some(b) = result.bleu {
+        println!("BLEU on held-out pairs: {b:.1}");
+    }
+    Ok(())
+}
+
+fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let out_dir = PathBuf::from(flag(flags, "out", "results"));
+    std::fs::create_dir_all(&out_dir)?;
+    let steps: usize = flag(flags, "steps", "30").parse()?;
+    let all = flags.contains_key("all");
+    let which = flag(flags, "fig", "").to_string();
+    let want = |name: &str| all || which == name;
+    let mut ran = 0;
+
+    if want("fig3") {
+        let t = harness::accumulate::fig3_timelines(&out_dir)?;
+        harness::emit(&t, &out_dir, "fig3_timelines")?;
+        ran += 1;
+    }
+    if want("fig4") {
+        harness::emit(&harness::weak::fig4_sparse_speedup(), &out_dir, "fig4_sparse_speedup")?;
+        ran += 1;
+    }
+    if want("fig5") {
+        harness::emit(&harness::accumulate::fig5_space_time(), &out_dir, "fig5_space_time")?;
+        harness::emit(&harness::accumulate::fig5_sweep(), &out_dir, "fig5_sweep")?;
+        ran += 1;
+    }
+    if want("fig6") {
+        harness::emit(&harness::weak::fig6_compare(), &out_dir, "fig6_weak_compare")?;
+        ran += 1;
+    }
+    if want("fig7") || want("fig8") {
+        harness::emit(
+            &harness::weak::fig7_fig8_dense_300_nodes(),
+            &out_dir,
+            "fig7_fig8_weak_dense",
+        )?;
+        ran += 1;
+    }
+    if want("fig9") || want("fig10") {
+        harness::emit(&harness::strong::fig9_fig10_strong(), &out_dir, "fig9_fig10_strong")?;
+        harness::emit(
+            &harness::strong::stampede2_large_batch(),
+            &out_dir,
+            "stampede2_large_batch",
+        )?;
+        ran += 1;
+    }
+    if want("fig11") {
+        harness::emit(
+            &harness::strong::fig11_time_to_solution(),
+            &out_dir,
+            "fig11_time_to_solution",
+        )?;
+        ran += 1;
+    }
+    if want("fig12") {
+        let manifest = load_manifest(flags)?;
+        let t = harness::quality::fig12_bleu_vs_batch(&manifest, steps.max(60))?;
+        harness::emit(&t, &out_dir, "fig12_bleu_vs_batch")?;
+        ran += 1;
+    }
+    if want("equiv") {
+        let manifest = load_manifest(flags)?;
+        let t = harness::quality::strategy_equivalence(&manifest, steps.min(20))?;
+        harness::emit(&t, &out_dir, "strategy_equivalence")?;
+        ran += 1;
+    }
+    if want("ablation") {
+        harness::emit(
+            &harness::ablation::fusion_threshold_sweep(),
+            &out_dir,
+            "ablation_fusion_threshold",
+        )?;
+        harness::emit(
+            &harness::ablation::allreduce_algorithm_menu(),
+            &out_dir,
+            "ablation_allreduce_menu",
+        )?;
+        harness::emit(
+            &harness::ablation::dedup_counterfactual(),
+            &out_dir,
+            "ablation_dedup_counterfactual",
+        )?;
+        harness::emit(
+            &harness::ablation::hierarchical_vs_flat(),
+            &out_dir,
+            "ablation_hierarchical",
+        )?;
+        ran += 1;
+    }
+    if want("validate") {
+        let manifest = load_manifest(flags)?;
+        let t = harness::validate::live_vs_model(&manifest, steps.min(10))?;
+        harness::emit(&t, &out_dir, "live_vs_model")?;
+        ran += 1;
+    }
+    anyhow::ensure!(ran > 0, "nothing to run: pass --all or --fig figN");
+    println!("\n{ran} experiment group(s) written to {}", out_dir.display());
+    Ok(())
+}
+
+fn cmd_info(flags: &HashMap<String, String>) -> anyhow::Result<()> {
+    let manifest = load_manifest(flags)?;
+    println!("manifest version {} at {:?}", manifest.version, manifest.dir);
+    println!(
+        "densify op: T={} D={} V={} ({})",
+        manifest.densify.t, manifest.densify.d, manifest.densify.v, manifest.densify.artifact
+    );
+    for (name, p) in &manifest.presets {
+        println!(
+            "preset {name}: vocab={} d_model={} layers={}+{} params={} ({}), \
+             batch b={} ss={} st={} ({} tokens)",
+            p.config.vocab,
+            p.config.d_model,
+            p.config.n_enc,
+            p.config.n_dec,
+            p.n_params,
+            human_bytes(p.n_params as u64 * 4),
+            p.batch.b,
+            p.batch.ss,
+            p.batch.st,
+            p.batch.tokens(),
+        );
+    }
+    Ok(())
+}

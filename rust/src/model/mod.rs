@@ -1,0 +1,143 @@
+//! Parameter registry: the Rust-side view of the transformer's
+//! parameters, built from the manifest.  Owns the flat parameter
+//! buffer layout and knows which gradient tensors are sparse
+//! (IndexedSlices) under which accumulation strategy — the metadata
+//! TF keeps in its graph and Horovod interrogates.
+
+use crate::runtime::{ParamSpec, Preset};
+
+/// How the gradient for a named output tensor maps onto parameters.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GradKind {
+    /// Dense gradient for the parameter with this manifest name.
+    Dense { param: String },
+    /// Sparse row-gradient into `param`'s rows; indices come from the
+    /// given batch input ("src" or "tgt_in").
+    SparseRows { param: String, index_source: IndexSource },
+    /// Dense gradient that shares (is accumulated into) `param` — the
+    /// tied projection matrix.
+    TiedDense { param: String },
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum IndexSource {
+    Src,
+    TgtIn,
+}
+
+/// Registry over the preset's parameters + gradient-output mapping.
+#[derive(Debug, Clone)]
+pub struct ParamRegistry {
+    pub params: Vec<ParamSpec>,
+    pub n_params: usize,
+    pub vocab: usize,
+    pub d_model: usize,
+}
+
+impl ParamRegistry {
+    pub fn from_preset(preset: &Preset) -> Self {
+        Self {
+            params: preset.params.clone(),
+            n_params: preset.n_params,
+            vocab: preset.config.vocab,
+            d_model: preset.config.d_model,
+        }
+    }
+
+    pub fn spec(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Slice of the flat buffer for one parameter.
+    pub fn view<'a>(&self, flat: &'a [f32], name: &str) -> &'a [f32] {
+        let s = self.spec(name).unwrap_or_else(|| panic!("no param {name}"));
+        &flat[s.offset..s.offset + s.numel]
+    }
+
+    pub fn view_mut<'a>(&self, flat: &'a mut [f32], name: &str) -> &'a mut [f32] {
+        let s = self.spec(name).unwrap_or_else(|| panic!("no param {name}"));
+        &mut flat[s.offset..s.offset + s.numel]
+    }
+
+    /// Interpret a gradient output name from the step artifacts.
+    ///
+    /// The sparse artifact emits `g_emb_src_rows`, `g_emb_tgt_rows`
+    /// (IndexedSlices values whose indices are the batch token ids) and
+    /// `g_proj` (dense but *tied* to the embedding); the dense artifact
+    /// emits `g_emb` (already densified in-graph by the Pallas kernel).
+    /// Everything else is a plain dense gradient named after its
+    /// parameter.
+    pub fn grad_kind(&self, output_name: &str) -> GradKind {
+        match output_name {
+            "g_emb_src_rows" => GradKind::SparseRows {
+                param: "embedding".into(),
+                index_source: IndexSource::Src,
+            },
+            "g_emb_tgt_rows" => GradKind::SparseRows {
+                param: "embedding".into(),
+                index_source: IndexSource::TgtIn,
+            },
+            "g_proj" => GradKind::TiedDense { param: "embedding".into() },
+            "g_emb" => GradKind::Dense { param: "embedding".into() },
+            other => GradKind::Dense { param: other.to_string() },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn registry() -> Option<ParamRegistry> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return None;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        Some(ParamRegistry::from_preset(m.preset("tiny").unwrap()))
+    }
+
+    #[test]
+    fn views_are_disjoint_and_cover() {
+        let Some(reg) = registry() else { return };
+        let flat = vec![0f32; reg.n_params];
+        let mut covered = 0;
+        for p in &reg.params {
+            let v = reg.view(&flat, &p.name);
+            assert_eq!(v.len(), p.numel);
+            covered += v.len();
+        }
+        assert_eq!(covered, reg.n_params);
+    }
+
+    #[test]
+    fn grad_kinds() {
+        let Some(reg) = registry() else { return };
+        assert_eq!(
+            reg.grad_kind("g_emb_src_rows"),
+            GradKind::SparseRows {
+                param: "embedding".into(),
+                index_source: IndexSource::Src
+            }
+        );
+        assert_eq!(
+            reg.grad_kind("g_proj"),
+            GradKind::TiedDense { param: "embedding".into() }
+        );
+        assert_eq!(
+            reg.grad_kind("enc0/attn/wq"),
+            GradKind::Dense { param: "enc0/attn/wq".into() }
+        );
+    }
+
+    #[test]
+    fn view_mut_writes_through() {
+        let Some(reg) = registry() else { return };
+        let mut flat = vec![0f32; reg.n_params];
+        reg.view_mut(&mut flat, "final_ln/scale")[0] = 7.0;
+        let spec = reg.spec("final_ln/scale").unwrap();
+        assert_eq!(flat[spec.offset], 7.0);
+    }
+}

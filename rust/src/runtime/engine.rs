@@ -1,0 +1,286 @@
+//! The PJRT engine thread.
+//!
+//! All `xla` crate objects (`PjRtClient`, `PjRtLoadedExecutable`,
+//! `Literal`) are `Rc`-backed and must stay on one thread.  `Engine`
+//! owns them; [`EngineHandle`] is the cloneable, `Send` front door the
+//! rank threads use.  Requests carry plain `Vec<f32>`/`Vec<i32>`
+//! buffers; the engine thread marshals them into literals, executes,
+//! and ships flat buffers back.
+//!
+//! On a multi-accelerator deployment there would be one engine (and
+//! one PJRT device) per rank; on this single-CPU image the engine is
+//! shared and execution serializes — which is also what one physical
+//! core would do, and the cluster simulator supplies the parallel
+//! timing model.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+/// A host-side tensor crossing the engine boundary.
+#[derive(Debug, Clone)]
+pub enum HostTensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl HostTensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::F32 { shape, data }
+    }
+
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Self {
+        debug_assert_eq!(shape.iter().product::<usize>().max(1), data.len());
+        HostTensor::I32 { shape, data }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            HostTensor::F32 { data, .. } => data,
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+
+    pub fn scalar_f32(&self) -> f32 {
+        match self {
+            HostTensor::F32 { data, .. } => data[0],
+            _ => panic!("expected f32 tensor"),
+        }
+    }
+}
+
+enum Request {
+    /// Compile an HLO-text artifact under a name.
+    Load { name: String, path: PathBuf, reply: mpsc::Sender<anyhow::Result<()>> },
+    /// Execute a loaded executable.
+    Execute {
+        name: String,
+        inputs: Vec<HostTensor>,
+        reply: mpsc::Sender<anyhow::Result<Vec<HostTensor>>>,
+    },
+    Shutdown,
+}
+
+/// Cloneable, Send handle to the engine thread.
+#[derive(Clone)]
+pub struct EngineHandle {
+    tx: mpsc::Sender<Request>,
+}
+
+impl EngineHandle {
+    /// Compile `path` (HLO text) and register it as `name`.
+    pub fn load(&self, name: &str, path: PathBuf) -> anyhow::Result<()> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Load { name: name.to_string(), path, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+
+    /// Execute `name` with the given inputs; returns flattened outputs
+    /// (the artifact's tuple, in order).
+    pub fn execute(&self, name: &str, inputs: Vec<HostTensor>) -> anyhow::Result<Vec<HostTensor>> {
+        let (reply, rx) = mpsc::channel();
+        self.tx
+            .send(Request::Execute { name: name.to_string(), inputs, reply })
+            .map_err(|_| anyhow::anyhow!("engine thread gone"))?;
+        rx.recv()?
+    }
+}
+
+/// Owns the engine thread; dropping shuts it down.
+pub struct Engine {
+    tx: mpsc::Sender<Request>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl Engine {
+    /// Spawn the engine thread with a CPU PJRT client.
+    pub fn start() -> anyhow::Result<Self> {
+        let (tx, rx) = mpsc::channel::<Request>();
+        let (ready_tx, ready_rx) = mpsc::channel();
+        let thread = std::thread::Builder::new()
+            .name("pjrt-engine".into())
+            .spawn(move || engine_main(rx, ready_tx))?;
+        // surface client-creation errors synchronously
+        ready_rx.recv()??;
+        Ok(Self { tx, thread: Some(thread) })
+    }
+
+    pub fn handle(&self) -> EngineHandle {
+        EngineHandle { tx: self.tx.clone() }
+    }
+}
+
+impl Drop for Engine {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Request::Shutdown);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<anyhow::Result<()>>) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => {
+            let _ = ready.send(Ok(()));
+            c
+        }
+        Err(e) => {
+            let _ = ready.send(Err(anyhow::anyhow!("PJRT CPU client: {e}")));
+            return;
+        }
+    };
+    let mut executables: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        match req {
+            Request::Shutdown => break,
+            Request::Load { name, path, reply } => {
+                let result = (|| -> anyhow::Result<()> {
+                    if executables.contains_key(&name) {
+                        return Ok(()); // idempotent: reuse compiled executable
+                    }
+                    let proto = xla::HloModuleProto::from_text_file(
+                        path.to_str().ok_or_else(|| anyhow::anyhow!("bad path"))?,
+                    )
+                    .map_err(|e| anyhow::anyhow!("parse {path:?}: {e}"))?;
+                    let comp = xla::XlaComputation::from_proto(&proto);
+                    let exe = client
+                        .compile(&comp)
+                        .map_err(|e| anyhow::anyhow!("compile {path:?}: {e}"))?;
+                    executables.insert(name, exe);
+                    Ok(())
+                })();
+                let _ = reply.send(result);
+            }
+            Request::Execute { name, inputs, reply } => {
+                let result = (|| -> anyhow::Result<Vec<HostTensor>> {
+                    let exe = executables
+                        .get(&name)
+                        .ok_or_else(|| anyhow::anyhow!("executable '{name}' not loaded"))?;
+                    let literals: Vec<xla::Literal> = inputs
+                        .into_iter()
+                        .map(to_literal)
+                        .collect::<anyhow::Result<_>>()?;
+                    let result = exe
+                        .execute::<xla::Literal>(&literals)
+                        .map_err(|e| anyhow::anyhow!("execute '{name}': {e}"))?;
+                    let tuple = result[0][0]
+                        .to_literal_sync()
+                        .map_err(|e| anyhow::anyhow!("fetch result: {e}"))?;
+                    // artifacts are lowered with return_tuple=True
+                    let parts = tuple
+                        .to_tuple()
+                        .map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+                    parts.into_iter().map(from_literal).collect()
+                })();
+                let _ = reply.send(result);
+            }
+        }
+    }
+}
+
+fn to_literal(t: HostTensor) -> anyhow::Result<xla::Literal> {
+    match t {
+        HostTensor::F32 { shape, data } => {
+            let lit = xla::Literal::vec1(&data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+        }
+        HostTensor::I32 { shape, data } => {
+            let lit = xla::Literal::vec1(&data);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            lit.reshape(&dims).map_err(|e| anyhow::anyhow!("reshape: {e}"))
+        }
+    }
+}
+
+fn from_literal(lit: xla::Literal) -> anyhow::Result<HostTensor> {
+    let shape = lit
+        .array_shape()
+        .map_err(|e| anyhow::anyhow!("shape: {e}"))?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    match shape.ty() {
+        xla::ElementType::F32 => Ok(HostTensor::F32 {
+            shape: dims,
+            data: lit.to_vec::<f32>().map_err(|e| anyhow::anyhow!("{e}"))?,
+        }),
+        xla::ElementType::S32 => Ok(HostTensor::I32 {
+            shape: dims,
+            data: lit.to_vec::<i32>().map_err(|e| anyhow::anyhow!("{e}"))?,
+        }),
+        other => anyhow::bail!("unsupported output element type {other:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn densify_artifact_end_to_end() {
+        // Runs the *Pallas kernel* through the whole stack: HLO text ->
+        // XLA compile -> execute -> compare with the Rust scatter-add.
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let manifest = crate::runtime::Manifest::load(&dir).unwrap();
+        let spec = &manifest.densify;
+        let engine = Engine::start().unwrap();
+        let h = engine.handle();
+        h.load("densify", manifest.artifact_path(&spec.artifact)).unwrap();
+
+        let t = spec.t;
+        let d = spec.d;
+        let v = spec.v;
+        let indices: Vec<i32> = (0..t).map(|i| ((i * 37) % v) as i32).collect();
+        let values: Vec<f32> = (0..t * d).map(|i| (i % 13) as f32 * 0.25).collect();
+        let init: Vec<f32> = (0..v * d).map(|i| (i % 7) as f32 * 0.5).collect();
+
+        let outputs = h
+            .execute(
+                "densify",
+                vec![
+                    HostTensor::i32(vec![t], indices.clone()),
+                    HostTensor::f32(vec![t, d], values.clone()),
+                    HostTensor::f32(vec![v, d], init.clone()),
+                ],
+            )
+            .unwrap();
+        let kernel_out = outputs[0].clone().into_f32();
+
+        // Rust oracle
+        let slices = crate::tensor::IndexedSlices::new(v, d, indices, values);
+        let mut dense = crate::tensor::DenseTensor::from_vec(vec![v, d], init);
+        slices.add_into(&mut dense);
+        assert_eq!(kernel_out.len(), dense.data.len());
+        for (i, (a, b)) in kernel_out.iter().zip(&dense.data).enumerate() {
+            assert!(
+                (a - b).abs() < 1e-4,
+                "mismatch at {i}: kernel {a} vs rust {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn missing_executable_is_error() {
+        let engine = Engine::start().unwrap();
+        let h = engine.handle();
+        assert!(h.execute("nope", vec![]).is_err());
+    }
+
+    #[test]
+    fn handle_is_send_and_clone() {
+        fn assert_send<T: Send + Clone>() {}
+        assert_send::<EngineHandle>();
+    }
+}

@@ -1,0 +1,352 @@
+//! `artifacts/manifest.json` — the contract between the Python compile
+//! path and the Rust runtime: parameter names/shapes/order, batch
+//! shapes, output orders, artifact file names.  Parsed with the
+//! in-crate JSON substrate (`util::json`).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// Model hyper-parameters as recorded by `aot.py` (mirror of the
+/// Python `ModelConfig`).
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_enc: usize,
+    pub n_dec: usize,
+    pub max_len: usize,
+    pub label_smoothing: f32,
+}
+
+#[derive(Debug, Clone)]
+pub struct BatchShape {
+    pub b: usize,
+    pub ss: usize,
+    pub st: usize,
+}
+
+impl BatchShape {
+    /// Tokens per step per rank (source + target positions) — the unit
+    /// the paper's "5000 tokens per process" batch sizes count.
+    pub fn tokens(&self) -> usize {
+        self.b * (self.ss + self.st)
+    }
+}
+
+/// One parameter tensor's layout inside the flat params buffer.
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub numel: usize,
+    pub offset: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Preset {
+    pub config: ModelConfig,
+    pub batch: BatchShape,
+    pub n_params: usize,
+    pub artifacts: BTreeMap<String, String>,
+    pub params: Vec<ParamSpec>,
+    pub outputs_sparse: Vec<String>,
+    pub outputs_dense: Vec<String>,
+    pub output_shapes_sparse: Vec<Vec<usize>>,
+    pub output_shapes_dense: Vec<Vec<usize>>,
+}
+
+#[derive(Debug, Clone)]
+pub struct DensifySpec {
+    pub t: usize,
+    pub d: usize,
+    pub v: usize,
+    pub artifact: String,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u32,
+    pub presets: BTreeMap<String, Preset>,
+    pub densify: DensifySpec,
+    pub dir: PathBuf,
+}
+
+fn usize_field(j: &Json, key: &str) -> anyhow::Result<usize> {
+    j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_usize()
+        .ok_or_else(|| anyhow::anyhow!("'{key}' is not a number"))
+}
+
+fn str_field(j: &Json, key: &str) -> anyhow::Result<String> {
+    Ok(j.req(key)
+        .map_err(anyhow::Error::msg)?
+        .as_str()
+        .ok_or_else(|| anyhow::anyhow!("'{key}' is not a string"))?
+        .to_string())
+}
+
+fn shape_list(j: &Json) -> anyhow::Result<Vec<Vec<usize>>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array of shapes"))?
+        .iter()
+        .map(|s| {
+            s.as_arr()
+                .ok_or_else(|| anyhow::anyhow!("shape is not an array"))?
+                .iter()
+                .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                .collect()
+        })
+        .collect()
+}
+
+fn string_list(j: &Json) -> anyhow::Result<Vec<String>> {
+    j.as_arr()
+        .ok_or_else(|| anyhow::anyhow!("expected array of strings"))?
+        .iter()
+        .map(|s| {
+            Ok(s.as_str()
+                .ok_or_else(|| anyhow::anyhow!("not a string"))?
+                .to_string())
+        })
+        .collect()
+}
+
+impl Manifest {
+    pub fn load(artifacts_dir: &Path) -> anyhow::Result<Self> {
+        let path = artifacts_dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            anyhow::anyhow!("cannot read {path:?} (run `make artifacts` first): {e}")
+        })?;
+        let root = Json::parse(&text)
+            .map_err(|e| anyhow::anyhow!("manifest parse error: {e}"))?;
+
+        let version = usize_field(&root, "version")? as u32;
+        let d = root.req("densify").map_err(anyhow::Error::msg)?;
+        let densify = DensifySpec {
+            t: usize_field(d, "t")?,
+            d: usize_field(d, "d")?,
+            v: usize_field(d, "v")?,
+            artifact: str_field(d, "artifact")?,
+        };
+        let mut presets = BTreeMap::new();
+        let preset_obj = root
+            .req("presets")
+            .map_err(anyhow::Error::msg)?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("'presets' is not an object"))?;
+        for (name, pj) in preset_obj {
+            presets.insert(name.clone(), Preset::from_json(pj)?);
+        }
+        Ok(Manifest { version, presets, densify, dir: artifacts_dir.to_path_buf() })
+    }
+
+    pub fn preset(&self, name: &str) -> anyhow::Result<&Preset> {
+        self.presets.get(name).ok_or_else(|| {
+            anyhow::anyhow!(
+                "preset '{name}' not in manifest (have: {:?})",
+                self.presets.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+
+    pub fn artifact_path(&self, file: &str) -> PathBuf {
+        self.dir.join(file)
+    }
+}
+
+impl Preset {
+    fn from_json(pj: &Json) -> anyhow::Result<Self> {
+        let cj = pj.req("config").map_err(anyhow::Error::msg)?;
+        let config = ModelConfig {
+            vocab: usize_field(cj, "vocab")?,
+            d_model: usize_field(cj, "d_model")?,
+            n_heads: usize_field(cj, "n_heads")?,
+            d_ff: usize_field(cj, "d_ff")?,
+            n_enc: usize_field(cj, "n_enc")?,
+            n_dec: usize_field(cj, "n_dec")?,
+            max_len: usize_field(cj, "max_len")?,
+            label_smoothing: cj
+                .req("label_smoothing")
+                .map_err(anyhow::Error::msg)?
+                .as_f64()
+                .unwrap_or(0.1) as f32,
+        };
+        let bj = pj.req("batch").map_err(anyhow::Error::msg)?;
+        let batch = BatchShape {
+            b: usize_field(bj, "b")?,
+            ss: usize_field(bj, "ss")?,
+            st: usize_field(bj, "st")?,
+        };
+        let mut artifacts = BTreeMap::new();
+        for (k, v) in pj
+            .req("artifacts")
+            .map_err(anyhow::Error::msg)?
+            .as_obj()
+            .ok_or_else(|| anyhow::anyhow!("'artifacts' not an object"))?
+        {
+            artifacts.insert(
+                k.clone(),
+                v.as_str()
+                    .ok_or_else(|| anyhow::anyhow!("artifact path not a string"))?
+                    .to_string(),
+            );
+        }
+        let mut params = Vec::new();
+        for p in pj
+            .req("params")
+            .map_err(anyhow::Error::msg)?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("'params' not an array"))?
+        {
+            params.push(ParamSpec {
+                name: str_field(p, "name")?,
+                shape: p
+                    .req("shape")
+                    .map_err(anyhow::Error::msg)?
+                    .as_arr()
+                    .ok_or_else(|| anyhow::anyhow!("shape not array"))?
+                    .iter()
+                    .map(|d| d.as_usize().ok_or_else(|| anyhow::anyhow!("bad dim")))
+                    .collect::<anyhow::Result<_>>()?,
+                numel: usize_field(p, "numel")?,
+                offset: usize_field(p, "offset")?,
+            });
+        }
+        Ok(Preset {
+            config,
+            batch,
+            n_params: usize_field(pj, "n_params")?,
+            artifacts,
+            params,
+            outputs_sparse: string_list(pj.req("outputs_sparse").map_err(anyhow::Error::msg)?)?,
+            outputs_dense: string_list(pj.req("outputs_dense").map_err(anyhow::Error::msg)?)?,
+            output_shapes_sparse: shape_list(
+                pj.req("output_shapes_sparse").map_err(anyhow::Error::msg)?,
+            )?,
+            output_shapes_dense: shape_list(
+                pj.req("output_shapes_dense").map_err(anyhow::Error::msg)?,
+            )?,
+        })
+    }
+
+    /// Load the deterministic initial parameters (flat f32 LE buffer).
+    pub fn load_params(&self, manifest: &Manifest) -> anyhow::Result<Vec<f32>> {
+        let file = self
+            .artifacts
+            .get("params_bin")
+            .ok_or_else(|| anyhow::anyhow!("no params_bin artifact"))?;
+        let bytes = std::fs::read(manifest.artifact_path(file))?;
+        anyhow::ensure!(
+            bytes.len() == self.n_params * 4,
+            "params file is {} bytes, expected {}",
+            bytes.len(),
+            self.n_params * 4
+        );
+        let mut out = vec![0f32; self.n_params];
+        for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+            out[i] = f32::from_le_bytes(chunk.try_into().unwrap());
+        }
+        Ok(out)
+    }
+
+    pub fn param(&self, name: &str) -> Option<&ParamSpec> {
+        self.params.iter().find(|p| p.name == name)
+    }
+
+    /// Names+shapes of the gradients produced by the given artifact
+    /// kind, *excluding* the leading loss scalar.
+    pub fn grad_outputs(&self, dense: bool) -> Vec<(String, Vec<usize>)> {
+        let (names, shapes) = if dense {
+            (&self.outputs_dense, &self.output_shapes_dense)
+        } else {
+            (&self.outputs_sparse, &self.output_shapes_sparse)
+        };
+        names
+            .iter()
+            .zip(shapes)
+            .skip(1)
+            .map(|(n, s)| (n.clone(), s.clone()))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn load_and_validate_tiny() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let tiny = m.preset("tiny").unwrap();
+        assert_eq!(tiny.params[0].name, "embedding");
+        assert_eq!(tiny.params[0].offset, 0);
+        // offsets contiguous
+        let mut expected = 0;
+        for p in &tiny.params {
+            assert_eq!(p.offset, expected);
+            assert_eq!(p.numel, p.shape.iter().product::<usize>().max(1));
+            expected += p.numel;
+        }
+        assert_eq!(expected, tiny.n_params);
+        // dense outputs = sparse outputs - 2 (3 tensors folded into 1)
+        assert_eq!(tiny.outputs_sparse.len(), tiny.outputs_dense.len() + 2);
+    }
+
+    #[test]
+    fn params_bin_roundtrip() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        let tiny = m.preset("tiny").unwrap();
+        let params = tiny.load_params(&m).unwrap();
+        assert_eq!(params.len(), tiny.n_params);
+        assert!(params.iter().all(|x| x.is_finite()));
+        let emb = tiny.param("embedding").unwrap();
+        let var: f32 = params[..emb.numel].iter().map(|x| x * x).sum::<f32>()
+            / emb.numel as f32;
+        assert!(var > 0.0 && var < 1.0, "embedding variance {var}");
+    }
+
+    #[test]
+    fn missing_preset_is_error() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.preset("nonexistent").is_err());
+    }
+
+    #[test]
+    fn tokens_per_batch() {
+        let b = BatchShape { b: 8, ss: 24, st: 24 };
+        assert_eq!(b.tokens(), 384);
+    }
+
+    #[test]
+    fn densify_spec_parsed() {
+        if !have_artifacts() {
+            return;
+        }
+        let m = Manifest::load(&artifacts_dir()).unwrap();
+        assert!(m.densify.v > 0 && m.densify.d > 0 && m.densify.t > 0);
+        assert!(m.densify.artifact.ends_with(".hlo.txt"));
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: loads the AOT artifacts produced by `make artifacts`
+//! and executes them from the Rust hot path.
+//!
+//! The `xla` crate's handles are `Rc`-based (not `Send`), so all XLA
+//! objects live on one dedicated **engine thread**; ranks talk to it
+//! through plain-data channels ([`engine::Engine`]).  With one
+//! executable per (preset, kind) and literals marshalled from flat
+//! `f32`/`i32` buffers, the request path contains no Python and no
+//! recompilation.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, EngineHandle, HostTensor};
+pub use manifest::{Manifest, ParamSpec, Preset};

@@ -1,0 +1,280 @@
+//! Discrete-event simulation of one (or more) training steps on the
+//! modelled cluster.
+//!
+//! The closed-form models in [`super::paper`] give expected times; the
+//! DES adds what closed forms miss — *stragglers*: per-rank compute
+//! jitter makes the bulk-synchronous exchange start at max(compute),
+//! and fusion cycles pipeline behind the slowest contributor.  It also
+//! emits Horovod-timeline events so `repro fig3` can render the same
+//! picture the paper shows, at 64 simulated ranks.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use super::network::ClusterModel;
+use super::paper::PaperModel;
+use crate::coordinator::timeline::{Phase, Timeline};
+use crate::tensor::accum::AccumStrategy;
+use crate::util::rng::Rng;
+
+/// One simulated step's outcome.
+#[derive(Debug, Clone)]
+pub struct SimStep {
+    /// wall time from step start to all ranks updated, seconds
+    pub step_time: f64,
+    /// time the slowest rank spent computing
+    pub compute_time: f64,
+    /// exchange span (negotiation + collectives)
+    pub exchange_time: f64,
+    /// peak accumulation bytes on any rank
+    pub peak_accum_bytes: u64,
+}
+
+/// DES configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct DesConfig {
+    pub p: u64,
+    pub strategy: AccumStrategy,
+    /// lognormal sigma of per-rank compute jitter (≈5% on HPC nodes)
+    pub jitter_sigma: f64,
+    pub seed: u64,
+    /// number of fusion cycles the dense gradients are split into
+    /// (Horovod ships fused buffers as they fill; the paper's 128 MB
+    /// threshold over ~850 MB of gradients gives ~7 cycles)
+    pub fusion_cycles: u32,
+}
+
+impl Default for DesConfig {
+    fn default() -> Self {
+        Self {
+            p: 64,
+            strategy: AccumStrategy::SparseAsDense,
+            jitter_sigma: 0.02,
+            seed: 42,
+            fusion_cycles: 7,
+        }
+    }
+}
+
+/// Event kinds on the DES queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum Event {
+    ComputeDone { rank: u64 },
+}
+
+/// Simulate one training step; optionally record timeline events.
+pub fn simulate_step(
+    model: &PaperModel,
+    cluster: &ClusterModel,
+    cfg: &DesConfig,
+    timeline: Option<&mut Timeline>,
+) -> SimStep {
+    let mut rng = Rng::new(cfg.seed);
+    // --- phase 1: per-rank compute, jittered, on the event queue ---
+    let mut queue: BinaryHeap<Reverse<(u64, u64)>> = BinaryHeap::new(); // (ns, rank)
+    for rank in 0..cfg.p {
+        let t = model.t_compute * rng.lognormal_jitter(cfg.jitter_sigma);
+        queue.push(Reverse(((t * 1e9) as u64, rank)));
+    }
+    let mut last_done_ns = 0u64;
+    while let Some(Reverse((t_ns, _rank))) = queue.pop() {
+        // (a fuller model would start partial fusion cycles as ranks
+        // finish; Horovod's cycle timer makes the barrier effectively
+        // max(compute) + cycle latency, which is what we take)
+        last_done_ns = t_ns;
+    }
+    let compute_time = last_done_ns as f64 / 1e9;
+    let _ = Event::ComputeDone { rank: 0 }; // event type kept for extension
+
+    // --- phase 2: negotiation ---
+    let t_negotiate = cluster.negotiate_time(cfg.p);
+
+    // --- phase 3: collectives ---
+    // tied embedding under the strategy:
+    let t_embedding = model.accumulate_time(cluster, cfg.strategy, cfg.p);
+    // other gradients: fused dense allreduce in fusion_cycles chunks;
+    // cycles pipeline (bandwidth-bound), so cost ≈ one pass + (c-1)
+    // cycle latencies
+    let per_cycle = model.other_grad_bytes as f64 / cfg.fusion_cycles as f64;
+    let t_cycle = cluster.allreduce_time(cfg.p, per_cycle);
+    // fused cycles launch as backprop produces gradients: `overlap`
+    // of their cost hides under compute (Horovod behaviour; see
+    // PaperModel::exchange_time)
+    let t_other = if cfg.p == 1 {
+        0.0
+    } else {
+        (1.0 - model.overlap) * t_cycle * cfg.fusion_cycles as f64
+    };
+    let exchange_time = if cfg.p == 1 { 0.0 } else { t_negotiate + t_embedding + t_other };
+
+    let peak = model.peak_accum_bytes(cfg.strategy, cfg.p);
+
+    if let Some(tl) = timeline {
+        let us = |s: f64| (s * 1e6) as u64;
+        let mut cursor = 0u64;
+        tl.record_synthetic("compute", Phase::WaitForData, cursor, us(compute_time), 0);
+        cursor += us(compute_time);
+        tl.record_synthetic("negotiation", Phase::Negotiate, cursor, us(t_negotiate), 0);
+        cursor += us(t_negotiate);
+        match cfg.strategy {
+            AccumStrategy::TfDefault => {
+                tl.record_synthetic(
+                    "embedding (IndexedSlices)",
+                    Phase::Allgather,
+                    cursor,
+                    us(t_embedding),
+                    peak,
+                );
+            }
+            _ => {
+                tl.record_synthetic(
+                    "embedding (dense)",
+                    Phase::Allreduce,
+                    cursor,
+                    us(t_embedding),
+                    model.dense_embedding_bytes(),
+                );
+            }
+        }
+        cursor += us(t_embedding);
+        let t_cycle_vis = (1.0 - model.overlap) * t_cycle;
+        for c in 0..cfg.fusion_cycles {
+            if cfg.p == 1 {
+                break;
+            }
+            tl.record_synthetic(
+                &format!("fused-cycle-{c}"),
+                Phase::Allreduce,
+                cursor,
+                us(t_cycle_vis),
+                per_cycle as u64,
+            );
+            cursor += us(t_cycle_vis);
+        }
+    }
+
+    SimStep {
+        step_time: compute_time + exchange_time,
+        compute_time,
+        exchange_time,
+        peak_accum_bytes: peak,
+    }
+}
+
+/// Simulate `n` steps and average (jitter varies per step).
+pub fn simulate_steps(
+    model: &PaperModel,
+    cluster: &ClusterModel,
+    cfg: &DesConfig,
+    n: u32,
+) -> SimStep {
+    let mut acc = SimStep {
+        step_time: 0.0,
+        compute_time: 0.0,
+        exchange_time: 0.0,
+        peak_accum_bytes: 0,
+    };
+    for i in 0..n {
+        let step = simulate_step(
+            model,
+            cluster,
+            &DesConfig { seed: cfg.seed.wrapping_add(i as u64), ..*cfg },
+            None,
+        );
+        acc.step_time += step.step_time;
+        acc.compute_time += step.compute_time;
+        acc.exchange_time += step.exchange_time;
+        acc.peak_accum_bytes = acc.peak_accum_bytes.max(step.peak_accum_bytes);
+    }
+    acc.step_time /= n as f64;
+    acc.compute_time /= n as f64;
+    acc.exchange_time /= n as f64;
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> PaperModel {
+        PaperModel::transformer_big()
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let c = ClusterModel::zenith(4);
+        let cfg = DesConfig::default();
+        let a = simulate_step(&model(), &c, &cfg, None);
+        let b = simulate_step(&model(), &c, &cfg, None);
+        assert_eq!(a.step_time, b.step_time);
+    }
+
+    #[test]
+    fn stragglers_make_compute_exceed_mean() {
+        let c = ClusterModel::zenith(4);
+        let cfg = DesConfig { p: 256, jitter_sigma: 0.05, ..Default::default() };
+        let s = simulate_step(&model(), &c, &cfg, None);
+        // max of 256 lognormal(sigma=0.05) draws is comfortably above the mean
+        assert!(s.compute_time > model().t_compute * 1.05);
+        assert!(s.compute_time < model().t_compute * 1.5);
+    }
+
+    #[test]
+    fn more_ranks_worse_stragglers() {
+        let c = ClusterModel::zenith(4);
+        let mk = |p| {
+            simulate_steps(
+                &model(),
+                &c,
+                &DesConfig { p, ..Default::default() },
+                8,
+            )
+            .compute_time
+        };
+        assert!(mk(1024) > mk(4));
+    }
+
+    #[test]
+    fn gather_step_slower_than_reduce_step() {
+        let c = ClusterModel::zenith(4);
+        let reduce = simulate_step(
+            &model(),
+            &c,
+            &DesConfig { strategy: AccumStrategy::SparseAsDense, ..Default::default() },
+            None,
+        );
+        let gather = simulate_step(
+            &model(),
+            &c,
+            &DesConfig { strategy: AccumStrategy::TfDefault, ..Default::default() },
+            None,
+        );
+        assert!(gather.step_time > reduce.step_time);
+        assert!(gather.peak_accum_bytes > 50 * reduce.peak_accum_bytes);
+    }
+
+    #[test]
+    fn timeline_records_phases() {
+        let c = ClusterModel::zenith(1);
+        let mut tl = Timeline::new(true);
+        simulate_step(
+            &model(),
+            &c,
+            &DesConfig { p: 64, strategy: AccumStrategy::TfDefault, ..Default::default() },
+            Some(&mut tl),
+        );
+        assert!(tl.phase_dur_us(Phase::Allgather) > 0);
+        assert!(tl.phase_bytes(Phase::Allgather) > 10_000_000_000);
+        let mut tl2 = Timeline::new(true);
+        simulate_step(&model(), &c, &DesConfig::default(), Some(&mut tl2));
+        assert_eq!(tl2.phase_bytes(Phase::Allgather), 0);
+        assert!(tl2.phase_dur_us(Phase::Allreduce) > 0);
+    }
+
+    #[test]
+    fn single_rank_no_exchange() {
+        let c = ClusterModel::zenith(1);
+        let s = simulate_step(&model(), &c, &DesConfig { p: 1, ..Default::default() }, None);
+        assert_eq!(s.exchange_time, 0.0);
+    }
+}

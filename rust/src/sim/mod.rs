@@ -1,0 +1,28 @@
+//! Calibrated cluster simulator — how this reproduction reaches the
+//! paper's 300-node / 1200-process scales on a one-core machine.
+//!
+//! Philosophy (DESIGN.md §Live-vs-simulated): everything the paper's
+//! *algorithms* do runs live (real collectives over real threads at
+//! p ≤ 16); what the paper's *cluster* did is modelled:
+//!
+//! * [`network`] — node/NIC topology over the alpha–beta link costs of
+//!   [`crate::collectives::cost`], with PPN contention (4 ranks share
+//!   one Omni-Path NIC on Zenith).
+//! * [`paper`] — the paper's workload constants (transformer-big-class
+//!   gradient sizes, 5000-token batches) and the calibration that
+//!   anchors compute time to the paper's own reported points.
+//! * [`des`] — a discrete-event engine that plays one training step:
+//!   jittered per-rank compute, negotiation, fusion cycles, collective
+//!   transfers; emits the same [`crate::coordinator::timeline`] events
+//!   as the live path (Fig. 3 regeneration).
+//! * [`scaling`] — weak/strong scaling sweep drivers producing the
+//!   rows behind Figs. 4, 6–11.
+
+pub mod des;
+pub mod network;
+pub mod paper;
+pub mod scaling;
+
+pub use network::ClusterModel;
+pub use paper::PaperModel;
+pub use scaling::{strong_scaling, weak_scaling, ScalingPoint};

@@ -1,0 +1,143 @@
+//! Cluster network model: nodes with PPN ranks sharing one NIC,
+//! interconnected by an Omni-Path-class fabric.
+//!
+//! The collective cost functions in [`crate::collectives::cost`] price
+//! a flat set of p ranks on dedicated links; real clusters put `ppn`
+//! ranks behind one NIC, dividing per-rank bandwidth on the inter-node
+//! stages.  The paper runs 4 PPN (weak scaling) and 2 PPN (strong
+//! scaling, NUMA-pinned) — reproducing those choices matters for the
+//! curve shapes.
+
+use crate::collectives::cost::{self, LinkModel};
+
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterModel {
+    /// inter-node link (per NIC)
+    pub link: LinkModel,
+    /// intra-node (shared memory) link
+    pub intra: LinkModel,
+    /// ranks per node sharing the NIC
+    pub ppn: u64,
+    /// per-byte CPU cost of packing/concatenating buffers (gather
+    /// assembly, fusion memcpy) — calibrated; see `paper::calibrate`.
+    pub pack_cost_per_byte: f64,
+}
+
+impl ClusterModel {
+    /// Zenith-like: 100 Gb/s Omni-Path, 4 PPN.
+    pub fn zenith(ppn: u64) -> Self {
+        Self {
+            link: LinkModel::omni_path(),
+            intra: LinkModel::shared_memory(),
+            ppn,
+            pack_cost_per_byte: 3.0e-10, // ≈3.3 GB/s memcpy+concat
+        }
+    }
+
+    /// Stampede2 SKX: same fabric generation, slightly higher latency
+    /// (larger fabric diameter).
+    pub fn stampede2(ppn: u64) -> Self {
+        Self {
+            link: LinkModel { alpha: 2.0e-6, inv_beta: 1.0 / 12.5e9 },
+            intra: LinkModel::shared_memory(),
+            ppn,
+            pack_cost_per_byte: 3.0e-10,
+        }
+    }
+
+    pub fn nodes(&self, p: u64) -> u64 {
+        p.div_ceil(self.ppn)
+    }
+
+    /// Effective inter-node link seen by one rank when all `ppn` ranks
+    /// on the node drive the NIC at once.
+    pub fn effective_link(&self, p: u64) -> LinkModel {
+        if p <= self.ppn {
+            // single node: everything is shared-memory traffic
+            self.intra
+        } else {
+            LinkModel {
+                alpha: self.link.alpha,
+                inv_beta: self.link.inv_beta * self.ppn as f64,
+            }
+        }
+    }
+
+    /// Ring-allreduce time for `bytes` over p ranks on this cluster.
+    pub fn allreduce_time(&self, p: u64, bytes: f64) -> f64 {
+        let link = self.effective_link(p);
+        cost::ring_allreduce_time(&link, p, bytes)
+            + 2.0 * bytes * self.pack_cost_per_byte // fusion in + out memcpy
+    }
+
+    /// Ring-allgather time where each rank contributes
+    /// `bytes_per_rank`, plus the CPU cost of assembling the
+    /// concatenated result (p·bytes_per_rank written on every rank —
+    /// the gather path's hidden tax).
+    pub fn allgather_time(&self, p: u64, bytes_per_rank: f64) -> f64 {
+        let link = self.effective_link(p);
+        cost::ring_allgather_time(&link, p, bytes_per_rank)
+            + p as f64 * bytes_per_rank * self.pack_cost_per_byte
+    }
+
+    /// Negotiation cost: readiness gather + plan broadcast (binomial
+    /// trees of tiny messages).
+    pub fn negotiate_time(&self, p: u64) -> f64 {
+        if p <= 1 {
+            0.0
+        } else {
+            2.0 * (p as f64).log2().ceil() * self.link.alpha
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn single_node_uses_shared_memory() {
+        let c = ClusterModel::zenith(4);
+        let l = c.effective_link(4);
+        assert_eq!(l.alpha, LinkModel::shared_memory().alpha);
+    }
+
+    #[test]
+    fn ppn_divides_bandwidth() {
+        let c1 = ClusterModel::zenith(1);
+        let c4 = ClusterModel::zenith(4);
+        let l1 = c1.effective_link(64);
+        let l4 = c4.effective_link(64);
+        assert!((l4.inv_beta / l1.inv_beta - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn node_count() {
+        let c = ClusterModel::zenith(4);
+        assert_eq!(c.nodes(1200), 300);
+        assert_eq!(c.nodes(5), 2);
+    }
+
+    #[test]
+    fn gather_beats_reduce_only_at_tiny_scale() {
+        // at p=2 the gather can win (less data than 2 passes of ring);
+        // by p=8 reduce must dominate — the paper's crossover story
+        let c = ClusterModel::zenith(1);
+        let dense = 139e6;
+        let per_rank = 178e6;
+        let t_reduce_64 = c.allreduce_time(64, dense);
+        let t_gather_64 = c.allgather_time(64, per_rank);
+        assert!(
+            t_gather_64 > 10.0 * t_reduce_64,
+            "64-rank gap: gather {t_gather_64} reduce {t_reduce_64}"
+        );
+    }
+
+    #[test]
+    fn negotiate_grows_logarithmically() {
+        let c = ClusterModel::zenith(4);
+        let t32 = c.negotiate_time(32);
+        let t1024 = c.negotiate_time(1024);
+        assert!(t1024 / t32 <= 2.01, "log growth expected");
+    }
+}

@@ -1,0 +1,230 @@
+//! Paper-scale workload constants + calibration.
+//!
+//! The paper trains the official TensorFlow Transformer (big config:
+//! d_model = 1024, shared 32k-wordpiece embedding) with 5000 tokens
+//! per MPI process.  The Fig. 3/5 measurements pin the two sizes the
+//! whole story rests on:
+//!
+//! * dense accumulated gradient (tied embedding): **139 MB**
+//!   → `V·D·4 = 139e6` → with D = 1024: V ≈ 33 936 rows.
+//! * gathered IndexedSlices at 64 ranks: **11.4 GB**
+//!   → `64·(T+V)·(D·4+4) ≈ 11.4e9` → T ≈ 9 700 slice rows per rank
+//!   (≈ 2×5000 tokens of lookup gradient), consistent with the 5000-
+//!   token batches.
+//!
+//! Compute time per step is *calibrated* (not asserted) against the
+//! paper's own scaling anchors — 95% weak-scaling efficiency at 32
+//! procs (Fig. 6) — and then every other figure is *predicted* from
+//! the model.  `calibrate_compute` documents the arithmetic.
+
+use super::network::ClusterModel;
+use crate::tensor::accum::{peak_bytes_model, AccumStrategy};
+
+/// Workload constants for the paper's transformer.
+#[derive(Debug, Clone, Copy)]
+pub struct PaperModel {
+    /// embedding rows (V)
+    pub vocab_rows: u64,
+    /// embedding row width (D)
+    pub d_model: u64,
+    /// IndexedSlices rows contributed per rank per step (T)
+    pub slice_rows: u64,
+    /// total dense gradient bytes of all non-embedding parameters
+    pub other_grad_bytes: u64,
+    /// per-rank compute seconds per step (calibrated)
+    pub t_compute: f64,
+    /// tokens per rank per step
+    pub tokens_per_rank: u64,
+    /// fraction of the *non-embedding* gradient exchange hidden under
+    /// backprop (Horovod launches collectives as gradients become
+    /// ready, so most of the dense traffic overlaps with compute; the
+    /// tied-embedding gradient is produced last — backprop reaches the
+    /// first layer at the end — so it cannot overlap).
+    pub overlap: f64,
+}
+
+impl PaperModel {
+    /// The configuration behind Figs. 3–8 (weak scaling, 5000-token
+    /// per-process batches).
+    pub fn transformer_big() -> Self {
+        let vocab_rows = 33_936;
+        let d_model = 1024;
+        Self {
+            vocab_rows,
+            d_model,
+            slice_rows: 9_700,
+            // transformer-big ex-embedding ≈ 178M params ≈ 712 MB grads
+            other_grad_bytes: 712_000_000,
+            t_compute: 6.1, // see calibrate_compute test
+            tokens_per_rank: 5_000,
+            overlap: 0.9,
+        }
+    }
+
+    /// Dense tied-embedding gradient bytes (the reduce path's buffer).
+    pub fn dense_embedding_bytes(&self) -> u64 {
+        self.vocab_rows * self.d_model * 4
+    }
+
+    /// Peak accumulation bytes at p ranks under a strategy (Fig. 5's
+    /// memory axis) — delegates to the same model the unit tests
+    /// verify against the real accumulate().
+    pub fn peak_accum_bytes(&self, strategy: AccumStrategy, p: u64) -> u64 {
+        peak_bytes_model(strategy, p, self.slice_rows, self.vocab_rows, self.d_model, true)
+    }
+
+    /// Per-rank bytes contributed to the gather (IndexedSlices rows of
+    /// the lookup gradient + the sparsified dense projection).
+    pub fn gather_bytes_per_rank(&self) -> f64 {
+        ((self.slice_rows + self.vocab_rows) * (self.d_model * 4 + 4)) as f64
+    }
+
+    /// Time to accumulate the tied-embedding gradient at p ranks.
+    pub fn accumulate_time(&self, cluster: &ClusterModel, strategy: AccumStrategy, p: u64) -> f64 {
+        match strategy {
+            AccumStrategy::TfDefault => {
+                cluster.allgather_time(p, self.gather_bytes_per_rank())
+            }
+            AccumStrategy::SparseAsDense | AccumStrategy::AnyDense => {
+                cluster.allreduce_time(p, self.dense_embedding_bytes() as f64)
+            }
+        }
+    }
+
+    /// Full gradient-exchange time for one step: the tied-embedding
+    /// accumulate (never overlapped — its gradient is the last one
+    /// backprop produces) plus the non-overlapped tail of the other
+    /// gradients' fused allreduce, plus negotiation.
+    pub fn exchange_time(&self, cluster: &ClusterModel, strategy: AccumStrategy, p: u64) -> f64 {
+        let emb = self.accumulate_time(cluster, strategy, p);
+        let rest = cluster.allreduce_time(p, self.other_grad_bytes as f64);
+        emb + (1.0 - self.overlap) * rest + cluster.negotiate_time(p)
+    }
+
+    /// Step time at p ranks (weak scaling: per-rank tokens constant).
+    pub fn step_time(&self, cluster: &ClusterModel, strategy: AccumStrategy, p: u64) -> f64 {
+        if p == 1 {
+            return self.t_compute;
+        }
+        self.t_compute + self.exchange_time(cluster, strategy, p)
+    }
+
+    /// Step time when the per-rank batch shrinks (strong scaling).
+    /// Compute scales ~linearly in tokens down to ~1536 tokens/worker,
+    /// below which per-op dispatch and padding dominate and compute
+    /// time stops shrinking — the paper observes exactly this: 400-node
+    /// runs (1,024 tokens/worker) degrade, and §5.2 concludes
+    /// improvements require per-worker batches "reasonably large
+    /// (> 1536)".  A fixed per-step overhead floor covers launch and
+    /// queueing costs.
+    pub fn step_time_strong(
+        &self,
+        cluster: &ClusterModel,
+        strategy: AccumStrategy,
+        p: u64,
+        tokens_per_rank: f64,
+    ) -> f64 {
+        let tokens_per_rank = tokens_per_rank.max(1536.0); // small-batch floor
+        let frac = tokens_per_rank / self.tokens_per_rank as f64;
+        let overhead_floor = 0.35; // seconds, per-step fixed cost
+        let compute = overhead_floor + (self.t_compute - overhead_floor) * frac;
+        // slice rows shrink with the batch; embedding/dense bytes don't
+        let scaled = PaperModel {
+            slice_rows: (self.slice_rows as f64 * frac) as u64,
+            ..*self
+        };
+        if p == 1 {
+            return compute;
+        }
+        compute + scaled.exchange_time(cluster, strategy, p)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::human_bytes;
+
+    #[test]
+    fn fig5_memory_anchors() {
+        // the headline numbers: 139 MB dense, ~11.4 GB gathered at 64
+        let m = PaperModel::transformer_big();
+        let dense = m.peak_accum_bytes(AccumStrategy::SparseAsDense, 64);
+        assert_eq!(human_bytes(dense), "139.0 MB");
+        let gathered = m.peak_accum_bytes(AccumStrategy::TfDefault, 64);
+        let gb = gathered as f64 / 1e9;
+        assert!(
+            (11.0..12.0).contains(&gb),
+            "gathered at 64 ranks = {gb:.2} GB, paper says 11.4"
+        );
+        // ratio ≈ 82x
+        let ratio = gathered as f64 / dense as f64;
+        assert!((75.0..90.0).contains(&ratio), "memory ratio {ratio:.0}x, paper says 82x");
+    }
+
+    #[test]
+    fn fig5_time_shape() {
+        // gather ≈ seconds, reduce ≈ tenths — a >=10x gap at 64 ranks
+        // (paper: 4320 ms vs 169 ms = 25.6x)
+        let m = PaperModel::transformer_big();
+        let c = ClusterModel::zenith(1); // Fig 5 ran 1 PPN
+        let t_gather = m.accumulate_time(&c, AccumStrategy::TfDefault, 64);
+        let t_reduce = m.accumulate_time(&c, AccumStrategy::SparseAsDense, 64);
+        assert!(t_gather > 2.0 && t_gather < 10.0, "gather {t_gather:.2}s vs paper 4.32s");
+        assert!(t_reduce > 0.03 && t_reduce < 0.5, "reduce {t_reduce:.3}s vs paper 0.169s");
+        let ratio = t_gather / t_reduce;
+        assert!(ratio > 10.0, "time ratio {ratio:.0}x, paper says 25x");
+    }
+
+    #[test]
+    fn calibrate_compute() {
+        // anchor: Fig. 6 — dense strategy hits ~95% weak-scaling
+        // efficiency at 32 procs (8 nodes x 4 PPN) on Zenith
+        let m = PaperModel::transformer_big();
+        let c = ClusterModel::zenith(4);
+        let t1 = m.step_time(&c, AccumStrategy::SparseAsDense, 1);
+        let t32 = m.step_time(&c, AccumStrategy::SparseAsDense, 32);
+        let eff = t1 / t32;
+        assert!(
+            (0.90..0.98).contains(&eff),
+            "dense weak-scaling efficiency at 32 procs = {eff:.3}, paper ~0.95"
+        );
+    }
+
+    #[test]
+    fn sparse_efficiency_collapses_by_32() {
+        // Fig. 6's other half: gather strategy ~75% at 32 procs
+        let m = PaperModel::transformer_big();
+        let c = ClusterModel::zenith(4);
+        let t1 = m.step_time(&c, AccumStrategy::TfDefault, 1);
+        let t32 = m.step_time(&c, AccumStrategy::TfDefault, 32);
+        let eff = t1 / t32;
+        assert!(
+            (0.60..0.85).contains(&eff),
+            "sparse efficiency at 32 procs = {eff:.3}, paper ~0.75"
+        );
+    }
+
+    #[test]
+    fn strong_scaling_saturates_below_1500_tokens() {
+        let m = PaperModel::transformer_big();
+        let c = ClusterModel::zenith(2);
+        let gbz = 819_200.0;
+        // throughput = gbz / step_time; must flatten from 400 to 512 nodes
+        let thr = |nodes: u64| {
+            let p = nodes * 2;
+            gbz / m.step_time_strong(&c, AccumStrategy::SparseAsDense, p, gbz / p as f64)
+        };
+        let t100 = thr(100);
+        let t200 = thr(200);
+        let t400 = thr(400);
+        assert!(t200 > 1.4 * t100 / 2.0 * 2.0 * 0.5, "sanity");
+        let gain_100_200 = t200 / t100;
+        let gain_200_400 = t400 / t200;
+        assert!(gain_100_200 > 1.3, "100->200 nodes gains {gain_100_200:.2}x");
+        assert!(
+            gain_200_400 < gain_100_200,
+            "scaling must be saturating: {gain_200_400:.2} vs {gain_100_200:.2}"
+        );
+    }
+}

@@ -1,0 +1,325 @@
+//! Tensor accumulation strategies — the paper's Algorithms 1 & 2 and
+//! the Horovod `sparse_as_dense` fix in between.
+//!
+//! `accumulate` answers the question TF's `_AggregatedGrads` answers:
+//! given the gradients contributed for one variable (here: by the
+//! ranks of a data-parallel job), produce the accumulated gradient.
+//! The *representation* it picks determines the collective the
+//! distributed layer must run — dense → `MPI_Allreduce` over a fixed
+//! buffer, sparse → `MPI_Allgather` over a buffer that grows with the
+//! worker count.  That choice is the entire subject of the paper.
+
+use super::{Grad, IndexedSlices};
+
+/// Which accumulation algorithm to run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AccumStrategy {
+    /// TF's Algorithm 1: reduce only if *all* inputs are dense,
+    /// otherwise convert everything to IndexedSlices and gather.
+    TfDefault,
+    /// The paper's fix (Horovod `sparse_as_dense=True`, Listing 1):
+    /// densify every sparse input up front, then reduce.
+    SparseAsDense,
+    /// The paper's proposed Algorithm 2: reduce if *any* input is
+    /// dense (densifying the sparse ones); gather only when every
+    /// input is sparse.
+    AnyDense,
+}
+
+impl AccumStrategy {
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "tf-default" | "sparse" | "gather" => Some(Self::TfDefault),
+            "sparse-as-dense" | "dense" | "reduce" => Some(Self::SparseAsDense),
+            "any-dense" | "algorithm2" => Some(Self::AnyDense),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::TfDefault => "tf-default",
+            Self::SparseAsDense => "sparse-as-dense",
+            Self::AnyDense => "any-dense",
+        }
+    }
+}
+
+/// Accumulate the per-contributor gradients of one variable.
+///
+/// Returns the accumulated gradient *and* the peak representation size
+/// in bytes that the chosen path materialized (the quantity in the
+/// paper's Fig. 5 — for the gather path this is the concatenated
+/// IndexedSlices, for the reduce path the dense tensor).
+pub fn accumulate(grads: Vec<Grad>, strategy: AccumStrategy) -> (Grad, u64) {
+    match strategy {
+        AccumStrategy::TfDefault => algorithm1(grads),
+        AccumStrategy::SparseAsDense => {
+            // Listing 1: convert_to_tensor on every IndexedSlices first.
+            let dense: Vec<Grad> =
+                grads.into_iter().map(|g| Grad::Dense(g.densify())).collect();
+            algorithm1(dense)
+        }
+        AccumStrategy::AnyDense => algorithm2(grads),
+    }
+}
+
+/// TF's Algorithm 1 (paper §3).
+fn algorithm1(grads: Vec<Grad>) -> (Grad, u64) {
+    if grads.len() < 2 {
+        // pass-through
+        let g = grads.into_iter().next().expect("no gradients");
+        let bytes = g.nbytes();
+        return (g, bytes);
+    }
+    if grads.iter().all(|g| !g.is_sparse()) {
+        reduce_dense(grads)
+    } else {
+        gather_sparse(grads)
+    }
+}
+
+/// Proposed Algorithm 2 (paper §6): the extra conditional block —
+/// if at least one input is dense, convert all to dense and reduce.
+fn algorithm2(grads: Vec<Grad>) -> (Grad, u64) {
+    if grads.len() < 2 {
+        let g = grads.into_iter().next().expect("no gradients");
+        let bytes = g.nbytes();
+        return (g, bytes);
+    }
+    if grads.iter().all(|g| !g.is_sparse()) {
+        reduce_dense(grads)
+    } else if grads.iter().any(|g| !g.is_sparse()) {
+        let dense: Vec<Grad> =
+            grads.into_iter().map(|g| Grad::Dense(g.densify())).collect();
+        reduce_dense(dense)
+    } else {
+        gather_sparse(grads)
+    }
+}
+
+/// Σ over dense tensors (the reduce path).  Peak size = one tensor.
+fn reduce_dense(grads: Vec<Grad>) -> (Grad, u64) {
+    let mut iter = grads.into_iter();
+    let mut acc = match iter.next().expect("no gradients") {
+        Grad::Dense(t) => t,
+        Grad::Sparse(_) => unreachable!("reduce_dense got sparse input"),
+    };
+    for g in iter {
+        match g {
+            Grad::Dense(t) => acc.add_assign(&t),
+            Grad::Sparse(_) => unreachable!("reduce_dense got sparse input"),
+        }
+    }
+    let bytes = acc.nbytes();
+    (Grad::Dense(acc), bytes)
+}
+
+/// Concatenating gather over IndexedSlices (the sparse path). Dense
+/// inputs are sparsified to all-rows slices first — the pathological
+/// conversion.  Peak size = the full concatenation.
+fn gather_sparse(grads: Vec<Grad>) -> (Grad, u64) {
+    let mut iter = grads.into_iter();
+    let mut acc: IndexedSlices = iter.next().expect("no gradients").sparsify();
+    for g in iter {
+        acc.concat(&g.sparsify());
+    }
+    let bytes = acc.nbytes();
+    (Grad::Sparse(acc), bytes)
+}
+
+/// Analytic peak-bytes model for the same decision procedure — used by
+/// the cluster simulator at scales we cannot materialize (the paper's
+/// 64-rank / 11.4 GB point).  `t_slices` = slice rows per contributor,
+/// `v` = variable rows, `d` = row width, `p` = contributor count.
+/// Mirrors `accumulate` exactly; property-tested against it.
+pub fn peak_bytes_model(
+    strategy: AccumStrategy,
+    p: u64,
+    t_slices: u64,
+    v: u64,
+    d: u64,
+    has_dense_contributor: bool,
+) -> u64 {
+    let dense_bytes = v * d * 4;
+    // each contributor brings t_slices sparse rows (+ indices) and, if
+    // the variable is tied, one dense tensor that sparsifies to v rows
+    let per_rank_sparse = t_slices * (d * 4 + 4);
+    let per_rank_dense_as_sparse = v * (d * 4 + 4);
+    match strategy {
+        AccumStrategy::TfDefault => {
+            if has_dense_contributor {
+                p * (per_rank_sparse + per_rank_dense_as_sparse)
+            } else {
+                p * per_rank_sparse
+            }
+        }
+        AccumStrategy::SparseAsDense => dense_bytes,
+        AccumStrategy::AnyDense => {
+            if has_dense_contributor {
+                dense_bytes
+            } else {
+                p * per_rank_sparse
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::DenseTensor;
+
+    fn dense(v: &[f32]) -> Grad {
+        Grad::Dense(DenseTensor::from_vec(vec![v.len() / 2, 2], v.to_vec()))
+    }
+
+    fn sparse(nrows: usize, idx: &[i32], vals: &[f32]) -> Grad {
+        Grad::Sparse(IndexedSlices::new(nrows, 2, idx.to_vec(), vals.to_vec()))
+    }
+
+    #[test]
+    fn passthrough_single_grad() {
+        let g = dense(&[1., 2.]);
+        let (out, _) = accumulate(vec![g.clone()], AccumStrategy::TfDefault);
+        assert_eq!(out, g);
+    }
+
+    #[test]
+    fn all_dense_reduces() {
+        let (out, bytes) = accumulate(
+            vec![dense(&[1., 2., 3., 4.]), dense(&[10., 20., 30., 40.])],
+            AccumStrategy::TfDefault,
+        );
+        match out {
+            Grad::Dense(t) => assert_eq!(t.data, vec![11., 22., 33., 44.]),
+            _ => panic!("expected dense"),
+        }
+        assert_eq!(bytes, 16);
+    }
+
+    #[test]
+    fn mixed_input_gathers_under_tf_default() {
+        // THE paper bug: one sparse contributor forces everything sparse.
+        let (out, bytes) = accumulate(
+            vec![
+                sparse(2, &[0], &[1., 1.]),
+                dense(&[5., 5., 7., 7.]), // 2x2 variable
+            ],
+            AccumStrategy::TfDefault,
+        );
+        match &out {
+            Grad::Sparse(s) => {
+                // 1 real slice + 2 all-rows slices from the dense tensor
+                assert_eq!(s.nslices(), 3);
+                assert_eq!(s.indices, vec![0, 0, 1]);
+            }
+            _ => panic!("expected sparse (gather) output"),
+        }
+        assert_eq!(bytes, out.nbytes());
+    }
+
+    #[test]
+    fn sparse_as_dense_reduces_mixed_input() {
+        let (out, bytes) = accumulate(
+            vec![sparse(2, &[0], &[1., 1.]), dense(&[5., 5., 7., 7.])],
+            AccumStrategy::SparseAsDense,
+        );
+        match out {
+            Grad::Dense(t) => assert_eq!(t.data, vec![6., 6., 7., 7.]),
+            _ => panic!("expected dense (reduce) output"),
+        }
+        assert_eq!(bytes, 16);
+    }
+
+    #[test]
+    fn algorithm2_matches_sparse_as_dense_when_any_dense() {
+        let inputs = vec![sparse(2, &[1], &[2., 3.]), dense(&[1., 1., 1., 1.])];
+        let (a, _) = accumulate(inputs.clone(), AccumStrategy::AnyDense);
+        let (b, _) = accumulate(inputs, AccumStrategy::SparseAsDense);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn algorithm2_gathers_when_all_sparse() {
+        let (out, _) = accumulate(
+            vec![sparse(4, &[0], &[1., 1.]), sparse(4, &[2], &[2., 2.])],
+            AccumStrategy::AnyDense,
+        );
+        assert!(out.is_sparse(), "all-sparse stays a gather under Alg. 2");
+    }
+
+    #[test]
+    fn gather_bytes_grow_with_contributors() {
+        // the Fig. 5 effect in miniature: gather bytes scale with p,
+        // reduce bytes are constant.
+        let mk = |_| {
+            vec![
+                sparse(16, &[1, 2, 3], &[0.5; 6]),
+                dense(&[0.25; 32]), // 16x2 variable
+            ]
+        };
+        let mut gather_sizes = Vec::new();
+        for p in [2usize, 4, 8] {
+            let grads: Vec<Grad> = (0..p).flat_map(mk).collect();
+            let (_, bytes) = accumulate(grads, AccumStrategy::TfDefault);
+            gather_sizes.push(bytes);
+            let grads: Vec<Grad> = (0..p).flat_map(mk).collect();
+            let (_, dense_bytes) = accumulate(grads, AccumStrategy::SparseAsDense);
+            assert_eq!(dense_bytes, 16 * 2 * 4);
+        }
+        assert!(gather_sizes[1] == 2 * gather_sizes[0]);
+        assert!(gather_sizes[2] == 4 * gather_sizes[0]);
+    }
+
+    #[test]
+    fn strategies_numerically_equivalent_after_densify() {
+        // whatever the representation, the math must be the same update
+        let inputs = || {
+            vec![
+                sparse(3, &[0, 2, 0], &[1., 2., 3., 4., 5., 6.]),
+                dense(&[0.5; 6]),
+                sparse(3, &[1], &[9., 9.]),
+            ]
+        };
+        let (g1, _) = accumulate(inputs(), AccumStrategy::TfDefault);
+        let (g2, _) = accumulate(inputs(), AccumStrategy::SparseAsDense);
+        let (g3, _) = accumulate(inputs(), AccumStrategy::AnyDense);
+        let d1 = g1.densify();
+        let d2 = g2.densify();
+        let d3 = g3.densify();
+        for ((a, b), c) in d1.data.iter().zip(&d2.data).zip(&d3.data) {
+            assert!((a - b).abs() < 1e-6 && (a - c).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn peak_bytes_model_matches_accumulate() {
+        let t_slices = 5u64;
+        let v = 16u64;
+        let d = 2u64;
+        for p in [2u64, 3, 6] {
+            for strategy in [
+                AccumStrategy::TfDefault,
+                AccumStrategy::SparseAsDense,
+                AccumStrategy::AnyDense,
+            ] {
+                let grads: Vec<Grad> = (0..p)
+                    .flat_map(|_| {
+                        vec![
+                            sparse(
+                                v as usize,
+                                &vec![1; t_slices as usize],
+                                &vec![1.0; (t_slices * d) as usize],
+                            ),
+                            Grad::Dense(DenseTensor::zeros(vec![v as usize, d as usize])),
+                        ]
+                    })
+                    .collect();
+                let (_, measured) = accumulate(grads, strategy);
+                let modeled = peak_bytes_model(strategy, p, t_slices, v, d, true);
+                assert_eq!(measured, modeled, "{strategy:?} p={p}");
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Dense f32 tensor — the representation gradient *reduction* operates
+//! on. Deliberately minimal: row-major data + shape, with the handful
+//! of ops the accumulation/optimizer hot paths need.
+
+use super::sparse::IndexedSlices;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DenseTensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl DenseTensor {
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n: usize = shape.iter().product();
+        Self { shape, data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} does not describe {} elements",
+            shape,
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn nbytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
+    }
+
+    /// Leading dimension (rows) for 2-D tensors.
+    pub fn rows(&self) -> usize {
+        *self.shape.first().unwrap_or(&1)
+    }
+
+    /// Trailing element count per row.
+    pub fn row_width(&self) -> usize {
+        if self.shape.len() <= 1 {
+            1
+        } else {
+            self.shape[1..].iter().product()
+        }
+    }
+
+    /// Elementwise in-place add; shapes must match.
+    pub fn add_assign(&mut self, other: &DenseTensor) {
+        assert_eq!(self.shape, other.shape, "shape mismatch in add");
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+    }
+
+    /// In-place scale (used for gradient averaging after allreduce).
+    pub fn scale(&mut self, s: f32) {
+        for a in &mut self.data {
+            *a *= s;
+        }
+    }
+
+    /// Convert to IndexedSlices carrying every row — the pathological
+    /// dense→sparse conversion in TF's Algorithm 1.
+    pub fn to_indexed_slices(self) -> IndexedSlices {
+        let rows = self.rows();
+        let width = self.row_width();
+        IndexedSlices::new(
+            rows,
+            width,
+            (0..rows as i32).collect(),
+            self.data,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = DenseTensor::zeros(vec![2, 5]);
+        assert_eq!(t.data.len(), 10);
+        assert_eq!(t.rows(), 2);
+        assert_eq!(t.row_width(), 5);
+    }
+
+    #[test]
+    fn add_and_scale() {
+        let mut a = DenseTensor::from_vec(vec![3], vec![1., 2., 3.]);
+        let b = DenseTensor::from_vec(vec![3], vec![10., 20., 30.]);
+        a.add_assign(&b);
+        a.scale(0.5);
+        assert_eq!(a.data, vec![5.5, 11.0, 16.5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn add_shape_mismatch() {
+        let mut a = DenseTensor::zeros(vec![2]);
+        a.add_assign(&DenseTensor::zeros(vec![3]));
+    }
+
+    #[test]
+    fn scalar_tensor() {
+        let t = DenseTensor::scalar(4.5);
+        assert_eq!(t.rows(), 1);
+        assert_eq!(t.row_width(), 1);
+        assert_eq!(t.nbytes(), 4);
+    }
+
+    #[test]
+    fn higher_rank_row_width() {
+        let t = DenseTensor::zeros(vec![4, 3, 2]);
+        assert_eq!(t.rows(), 4);
+        assert_eq!(t.row_width(), 6);
+    }
+}

@@ -1,0 +1,103 @@
+//! Gradient tensor representations and accumulation strategies.
+//!
+//! Mirrors the TensorFlow objects at the center of the paper: a
+//! gradient is either a [`DenseTensor`] or an [`IndexedSlices`] (TF's
+//! sparse row-slice form produced by `tf.gather`).  [`accum`]
+//! implements the three accumulation strategies the paper discusses:
+//! TF's Algorithm 1, the Horovod `sparse_as_dense` fix (Listing 1), and
+//! the proposed Algorithm 2.
+
+pub mod accum;
+pub mod dense;
+pub mod merge;
+pub mod sparse;
+
+pub use accum::{accumulate, AccumStrategy};
+pub use dense::DenseTensor;
+pub use sparse::IndexedSlices;
+
+/// A gradient in one of the two TF representations.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Grad {
+    Dense(DenseTensor),
+    Sparse(IndexedSlices),
+}
+
+impl Grad {
+    /// Bytes this representation occupies (values + indices).  This is
+    /// the quantity behind the paper's Fig. 5 "accumulate size".
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Grad::Dense(t) => t.nbytes(),
+            Grad::Sparse(s) => s.nbytes(),
+        }
+    }
+
+    /// Number of f32 values (excluding indices).
+    pub fn numel(&self) -> usize {
+        match self {
+            Grad::Dense(t) => t.data.len(),
+            Grad::Sparse(s) => s.values.len(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, Grad::Sparse(_))
+    }
+
+    /// Densify: identity for dense, scatter-add into a zero tensor for
+    /// sparse.  `Listing 1` of the paper (`tf.convert_to_tensor`).
+    pub fn densify(self) -> DenseTensor {
+        match self {
+            Grad::Dense(t) => t,
+            Grad::Sparse(s) => s.to_dense(),
+        }
+    }
+
+    /// Sparsify: identity for sparse; a dense `[V, D]` tensor becomes
+    /// IndexedSlices carrying **all V rows** — the pathological
+    /// conversion TF's Algorithm 1 performs when any input is sparse
+    /// (paper §3: "convert the remaining dense tensors to indexed
+    /// slices, even though all the gradients being accumulated are
+    /// dense").
+    pub fn sparsify(self) -> IndexedSlices {
+        match self {
+            Grad::Sparse(s) => s,
+            Grad::Dense(t) => t.to_indexed_slices(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nbytes_dense() {
+        let t = DenseTensor::zeros(vec![4, 3]);
+        assert_eq!(Grad::Dense(t).nbytes(), 48);
+    }
+
+    #[test]
+    fn nbytes_sparse_includes_indices() {
+        let s = IndexedSlices::new(10, 3, vec![1, 2], vec![0.0; 6]);
+        // 6 values * 4B + 2 indices * 4B
+        assert_eq!(Grad::Sparse(s).nbytes(), 32);
+    }
+
+    #[test]
+    fn sparsify_dense_carries_all_rows() {
+        let t = DenseTensor::from_vec(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let s = Grad::Dense(t).sparsify();
+        assert_eq!(s.indices, vec![0, 1]);
+        assert_eq!(s.values, vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(s.nrows, 2);
+    }
+
+    #[test]
+    fn densify_sparsify_roundtrip() {
+        let t = DenseTensor::from_vec(vec![3, 2], vec![1., 0., 0., 2., 3., 0.]);
+        let round = Grad::Sparse(Grad::Dense(t.clone()).sparsify()).densify();
+        assert_eq!(round, t);
+    }
+}

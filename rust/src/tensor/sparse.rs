@@ -1,0 +1,138 @@
+//! IndexedSlices — TF's sparse row-slice gradient.
+//!
+//! Produced by `tf.gather` (the embedding lookup): `values[i, :]` is
+//! the gradient of row `indices[i]` of the `[nrows, row_width]`
+//! variable.  Indices may repeat (the same token appearing several
+//! times in a batch); semantics are additive.
+
+use super::dense::DenseTensor;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct IndexedSlices {
+    /// Leading dimension of the dense variable this slices into (V).
+    pub nrows: usize,
+    /// Elements per row (D).
+    pub row_width: usize,
+    /// Row ids, one per slice; may contain duplicates.
+    pub indices: Vec<i32>,
+    /// Slice rows, row-major, `indices.len() * row_width` elements.
+    pub values: Vec<f32>,
+}
+
+impl IndexedSlices {
+    pub fn new(nrows: usize, row_width: usize, indices: Vec<i32>, values: Vec<f32>) -> Self {
+        assert_eq!(
+            values.len(),
+            indices.len() * row_width,
+            "values length {} != {} slices x width {}",
+            values.len(),
+            indices.len(),
+            row_width
+        );
+        debug_assert!(
+            indices.iter().all(|&i| (i as usize) < nrows),
+            "index out of range"
+        );
+        Self { nrows, row_width, indices, values }
+    }
+
+    pub fn empty(nrows: usize, row_width: usize) -> Self {
+        Self { nrows, row_width, indices: Vec::new(), values: Vec::new() }
+    }
+
+    pub fn nslices(&self) -> usize {
+        self.indices.len()
+    }
+
+    /// Bytes: f32 values plus i32 indices (both transferred by the
+    /// gather collective, both counted by the paper's Fig. 5).
+    pub fn nbytes(&self) -> u64 {
+        (self.values.len() * 4 + self.indices.len() * 4) as u64
+    }
+
+    /// Concatenate another IndexedSlices (TF's accumulate-by-gather:
+    /// the output of aggregating sparse gradients is the concatenation,
+    /// *not* a merged/deduplicated form — that is exactly why buffers
+    /// explode with worker count).
+    pub fn concat(&mut self, other: &IndexedSlices) {
+        assert_eq!(self.row_width, other.row_width, "row width mismatch");
+        assert_eq!(self.nrows, other.nrows, "variable shape mismatch");
+        self.indices.extend_from_slice(&other.indices);
+        self.values.extend_from_slice(&other.values);
+    }
+
+    /// Scatter-add into a dense tensor — the densify operator.  This is
+    /// the Rust twin of the Pallas kernel (`python/compile/kernels/
+    /// densify.py`); integration tests check the two agree through the
+    /// PJRT-loaded artifact.
+    pub fn to_dense(&self) -> DenseTensor {
+        let mut out = DenseTensor::zeros(vec![self.nrows, self.row_width]);
+        self.add_into(&mut out);
+        out
+    }
+
+    /// Scatter-add into an existing dense buffer.
+    pub fn add_into(&self, dense: &mut DenseTensor) {
+        assert_eq!(dense.rows(), self.nrows, "dense rows != nrows");
+        assert_eq!(dense.row_width(), self.row_width, "dense width mismatch");
+        let w = self.row_width;
+        for (slice_i, &row) in self.indices.iter().enumerate() {
+            let src = &self.values[slice_i * w..(slice_i + 1) * w];
+            let dst = &mut dense.data[row as usize * w..(row as usize + 1) * w];
+            for (d, s) in dst.iter_mut().zip(src) {
+                *d += s;
+            }
+        }
+    }
+
+    /// In-place scale of the slice values.
+    pub fn scale(&mut self, s: f32) {
+        for v in &mut self.values {
+            *v *= s;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn to_dense_with_duplicates() {
+        let s = IndexedSlices::new(4, 2, vec![1, 1, 3], vec![1., 1., 2., 2., 5., 5.]);
+        let d = s.to_dense();
+        assert_eq!(d.data, vec![0., 0., 3., 3., 0., 0., 5., 5.]);
+    }
+
+    #[test]
+    fn concat_grows_not_merges() {
+        let mut a = IndexedSlices::new(8, 1, vec![2], vec![1.0]);
+        let b = IndexedSlices::new(8, 1, vec![2], vec![1.0]);
+        a.concat(&b);
+        // duplicate index kept twice — the gather-blowup property
+        assert_eq!(a.nslices(), 2);
+        assert_eq!(a.indices, vec![2, 2]);
+        assert_eq!(a.to_dense().data[2], 2.0);
+    }
+
+    #[test]
+    fn empty_is_zero_dense() {
+        let s = IndexedSlices::empty(3, 2);
+        assert_eq!(s.to_dense().data, vec![0.0; 6]);
+        assert_eq!(s.nbytes(), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "values length")]
+    fn bad_lengths_panic() {
+        IndexedSlices::new(4, 2, vec![0, 1], vec![1.0]);
+    }
+
+    #[test]
+    fn add_into_accumulates() {
+        let s = IndexedSlices::new(2, 2, vec![0], vec![1., 2.]);
+        let mut d = DenseTensor::from_vec(vec![2, 2], vec![10., 10., 10., 10.]);
+        s.add_into(&mut d);
+        assert_eq!(d.data, vec![11., 12., 10., 10.]);
+    }
+}

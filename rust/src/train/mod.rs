@@ -1,0 +1,22 @@
+//! Data-parallel training runtime (Layer 3 driver).
+//!
+//! Each rank owns a parameter replica, runs the AOT-compiled training
+//! step through the PJRT engine, exchanges gradients through the
+//! Horovod-style coordinator under a chosen
+//! [`crate::tensor::AccumStrategy`], and applies Adam with the
+//! transformer (Noam) LR schedule.  The strategy decides which HLO
+//! artifact runs and how the tied-embedding gradient is locally
+//! accumulated — reproducing the exact TF/Horovod division of labour
+//! the paper analyses.
+
+pub mod checkpoint;
+pub mod optimizer;
+pub mod schedule;
+pub mod session;
+pub mod trainer;
+
+pub use checkpoint::Checkpoint;
+pub use optimizer::Adam;
+pub use schedule::NoamSchedule;
+pub use session::{run_session, run_session_with_engine, SessionConfig, SessionResult};
+pub use trainer::{StepStats, Trainer, TrainerConfig};

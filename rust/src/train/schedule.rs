@@ -1,0 +1,71 @@
+//! Noam learning-rate schedule (Vaswani et al. §5.3) with linear
+//! warmup — the transformer standard the paper's hyper-parameter
+//! settings ([15, 12] in the paper) build on.  Large-batch runs scale
+//! the base rate, following Ott et al.'s large-batch recipe.
+
+#[derive(Debug, Clone, Copy)]
+pub struct NoamSchedule {
+    pub d_model: usize,
+    pub warmup_steps: u64,
+    /// multiplicative scale on top of the Noam curve (≈ linear batch
+    /// scaling in the paper's large-batch experiments)
+    pub scale: f32,
+}
+
+impl NoamSchedule {
+    pub fn new(d_model: usize, warmup_steps: u64, scale: f32) -> Self {
+        assert!(warmup_steps > 0);
+        Self { d_model, warmup_steps, scale }
+    }
+
+    /// Learning rate at 1-based step `t`.
+    pub fn lr(&self, t: u64) -> f32 {
+        let t = t.max(1) as f32;
+        let w = self.warmup_steps as f32;
+        let base = (self.d_model as f32).powf(-0.5);
+        self.scale * base * (t.powf(-0.5)).min(t * w.powf(-1.5))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_increases_then_decays() {
+        let s = NoamSchedule::new(512, 4000, 1.0);
+        assert!(s.lr(1) < s.lr(2000));
+        assert!(s.lr(2000) < s.lr(4000));
+        assert!(s.lr(4000) > s.lr(16000));
+    }
+
+    #[test]
+    fn peak_at_warmup_boundary() {
+        let s = NoamSchedule::new(512, 1000, 1.0);
+        let peak = s.lr(1000);
+        for t in [1u64, 10, 500, 999, 1001, 2000, 100_000] {
+            assert!(s.lr(t) <= peak + 1e-9, "t={t}");
+        }
+    }
+
+    #[test]
+    fn linear_during_warmup() {
+        let s = NoamSchedule::new(256, 1000, 1.0);
+        let r = s.lr(500) / s.lr(250);
+        assert!((r - 2.0).abs() < 1e-4, "ratio {r}");
+    }
+
+    #[test]
+    fn inverse_sqrt_after_warmup() {
+        let s = NoamSchedule::new(256, 100, 1.0);
+        let r = s.lr(10_000) / s.lr(40_000);
+        assert!((r - 2.0).abs() < 1e-3, "ratio {r}");
+    }
+
+    #[test]
+    fn scale_multiplies() {
+        let a = NoamSchedule::new(512, 4000, 1.0);
+        let b = NoamSchedule::new(512, 4000, 2.0);
+        assert!((b.lr(123) / a.lr(123) - 2.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,195 @@
+//! Multi-rank training session helper: spawns rank threads over a
+//! shared transport + engine, runs N steps, collects per-step stats,
+//! optionally evaluates BLEU at the end.  This is the harness the
+//! examples, the live-calibration path, and the integration tests all
+//! drive.
+
+use std::sync::Arc;
+
+use crate::coordinator::ExchangeConfig;
+use crate::data::{bleu::bleu_smoothed, Corpus, CorpusConfig};
+use crate::runtime::{Engine, Manifest};
+use crate::tensor::AccumStrategy;
+use crate::transport::LocalTransport;
+use crate::train::trainer::{load_artifacts, StepStats, Trainer, TrainerConfig};
+
+/// Everything a live multi-rank run produces.
+#[derive(Debug)]
+pub struct SessionResult {
+    /// `[rank][step]`
+    pub stats: Vec<Vec<StepStats>>,
+    /// BLEU on held-out pairs (rank 0's replica), if eval was requested.
+    pub bleu: Option<f64>,
+    /// total wall time of the training loop, seconds
+    pub wall_secs: f64,
+}
+
+impl SessionResult {
+    /// Mean loss per step across ranks (they see different shards, so
+    /// this is the global batch loss estimate).
+    pub fn loss_curve(&self) -> Vec<f32> {
+        let steps = self.stats[0].len();
+        (0..steps)
+            .map(|s| {
+                self.stats.iter().map(|r| r[s].loss).sum::<f32>() / self.stats.len() as f32
+            })
+            .collect()
+    }
+
+    pub fn mean_exchange_us(&self) -> f64 {
+        let all: Vec<f64> = self
+            .stats
+            .iter()
+            .flat_map(|r| r.iter().map(|s| s.exchange.exec_us as f64))
+            .collect();
+        all.iter().sum::<f64>() / all.len() as f64
+    }
+
+    pub fn peak_accum_bytes(&self) -> u64 {
+        self.stats
+            .iter()
+            .flat_map(|r| r.iter().map(|s| s.exchange.peak_accum_bytes))
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+/// Session parameters for [`run_session`].
+#[derive(Debug, Clone)]
+pub struct SessionConfig {
+    pub preset: String,
+    pub strategy: AccumStrategy,
+    pub nranks: usize,
+    pub steps: usize,
+    pub exchange: ExchangeConfig,
+    pub corpus: CorpusConfig,
+    pub eval_pairs: usize,
+    pub timeline: bool,
+    pub seed: u64,
+    pub warmup_steps: u64,
+    pub lr_scale: f32,
+}
+
+impl Default for SessionConfig {
+    fn default() -> Self {
+        Self {
+            preset: "tiny".into(),
+            strategy: AccumStrategy::SparseAsDense,
+            nranks: 2,
+            steps: 10,
+            exchange: ExchangeConfig::default(),
+            corpus: CorpusConfig::default(),
+            eval_pairs: 0,
+            timeline: false,
+            seed: 17,
+            warmup_steps: 60,
+            lr_scale: 1.0,
+        }
+    }
+}
+
+/// Run a live multi-rank training session end to end, creating a
+/// fresh PJRT engine (convenience wrapper over
+/// [`run_session_with_engine`] — reuse one engine across sessions to
+/// amortize XLA compilation).
+pub fn run_session(cfg: &SessionConfig, manifest: &Manifest) -> anyhow::Result<SessionResult> {
+    let engine = Engine::start()?;
+    run_session_with_engine(cfg, manifest, engine.handle())
+}
+
+/// Run a live multi-rank training session on an existing engine.
+///
+/// Rank 0's trainer stays on the caller thread (so its timeline can be
+/// inspected); other ranks run on spawned threads.  All ranks share
+/// the PJRT engine (execution serializes — see `runtime::engine`).
+/// Artifact loading is idempotent, so repeated sessions on one engine
+/// compile each HLO once.
+pub fn run_session_with_engine(
+    cfg: &SessionConfig,
+    manifest: &Manifest,
+    handle: crate::runtime::EngineHandle,
+) -> anyhow::Result<SessionResult> {
+    let preset = manifest.preset(&cfg.preset)?;
+    anyhow::ensure!(
+        cfg.corpus.vocab == preset.config.vocab,
+        "corpus vocab {} != preset vocab {}",
+        cfg.corpus.vocab,
+        preset.config.vocab
+    );
+    let want_eval = cfg.eval_pairs > 0;
+    load_artifacts(&handle, manifest, &cfg.preset, cfg.strategy, want_eval)?;
+
+    let corpus = Corpus::generate(&cfg.corpus);
+    let (train_corpus, test_corpus) = if want_eval {
+        corpus.split(cfg.eval_pairs)
+    } else {
+        (corpus.clone(), corpus)
+    };
+    let init_params = preset.load_params(manifest)?;
+
+    let transport: Arc<LocalTransport> = Arc::new(LocalTransport::new(cfg.nranks));
+    let tcfg = TrainerConfig {
+        preset: cfg.preset.clone(),
+        strategy: cfg.strategy,
+        exchange: cfg.exchange,
+        warmup_steps: cfg.warmup_steps,
+        lr_scale: cfg.lr_scale,
+        seed: cfg.seed,
+    };
+
+    let mut trainers: Vec<Trainer> = (0..cfg.nranks)
+        .map(|rank| {
+            Trainer::new(
+                &tcfg,
+                manifest,
+                preset,
+                handle.clone(),
+                transport.clone(),
+                rank,
+                train_corpus.clone(),
+                init_params.clone(),
+            )
+        })
+        .collect::<anyhow::Result<_>>()?;
+    if cfg.timeline {
+        trainers[0].enable_timeline();
+    }
+
+    let steps = cfg.steps;
+    let t0 = std::time::Instant::now();
+    let mut rank0 = trainers.remove(0);
+    let handles: Vec<_> = trainers
+        .into_iter()
+        .map(|mut tr| {
+            std::thread::spawn(move || -> anyhow::Result<(usize, Vec<StepStats>)> {
+                let mut stats = Vec::with_capacity(steps);
+                for _ in 0..steps {
+                    stats.push(tr.train_step()?);
+                }
+                Ok((tr.rank, stats))
+            })
+        })
+        .collect();
+    let mut rank0_stats = Vec::with_capacity(steps);
+    for _ in 0..steps {
+        rank0_stats.push(rank0.train_step()?);
+    }
+    let mut all = vec![Vec::new(); cfg.nranks];
+    all[0] = rank0_stats;
+    for h in handles {
+        let (rank, stats) = h.join().map_err(|_| anyhow::anyhow!("rank thread panicked"))??;
+        all[rank] = stats;
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let bleu_score = if want_eval {
+        let srcs: Vec<Vec<i32>> = test_corpus.pairs.iter().map(|p| p.src.clone()).collect();
+        let refs: Vec<Vec<i32>> = test_corpus.pairs.iter().map(|p| p.tgt.clone()).collect();
+        let hyps = rank0.greedy_decode(&srcs)?;
+        Some(bleu_smoothed(&hyps, &refs))
+    } else {
+        None
+    };
+
+    Ok(SessionResult { stats: all, bleu: bleu_score, wall_secs })
+}

@@ -1,0 +1,122 @@
+//! Point-to-point message transport between ranks.
+//!
+//! The collectives in [`crate::collectives`] are written against the
+//! [`Transport`] trait, so the same ring/tree/recursive-doubling code
+//! runs over the in-process [`LocalTransport`] (real threads, real
+//! synchronization — our stand-in for MPI on this single machine) and
+//! can be cost-modelled on the simulated cluster network
+//! ([`crate::sim::network`]).
+
+pub mod local;
+
+pub use local::LocalTransport;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Typed message payload. Collectives move f32 data and occasionally
+/// i32 index/control data; a unified enum keeps tag-matching simple.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    U64(Vec<u64>),
+}
+
+impl Payload {
+    pub fn nbytes(&self) -> u64 {
+        match self {
+            Payload::F32(v) => (v.len() * 4) as u64,
+            Payload::I32(v) => (v.len() * 4) as u64,
+            Payload::U64(v) => (v.len() * 8) as u64,
+        }
+    }
+
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            other => panic!("expected F32 payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_i32(self) -> Vec<i32> {
+        match self {
+            Payload::I32(v) => v,
+            other => panic!("expected I32 payload, got {other:?}"),
+        }
+    }
+
+    pub fn into_u64(self) -> Vec<u64> {
+        match self {
+            Payload::U64(v) => v,
+            other => panic!("expected U64 payload, got {other:?}"),
+        }
+    }
+}
+
+/// MPI-flavoured point-to-point API with tag matching.
+///
+/// `send` is non-blocking (buffered); `recv` blocks until a matching
+/// message arrives. Messages between the same (from, to, tag) triple
+/// are delivered in send order.
+pub trait Transport: Send + Sync {
+    fn nranks(&self) -> usize;
+    fn send(&self, from: usize, to: usize, tag: u64, data: Payload);
+    fn recv(&self, to: usize, from: usize, tag: u64) -> Payload;
+    /// Cumulative traffic statistics (for calibration and tests).
+    fn stats(&self) -> TrafficStats;
+}
+
+/// Aggregate traffic counters, cheap enough to keep always-on.
+#[derive(Debug, Default)]
+pub struct TrafficCounters {
+    pub messages: AtomicU64,
+    pub bytes: AtomicU64,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TrafficStats {
+    pub messages: u64,
+    pub bytes: u64,
+}
+
+impl TrafficCounters {
+    pub fn record(&self, bytes: u64) {
+        self.messages.fetch_add(1, Ordering::Relaxed);
+        self.bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> TrafficStats {
+        TrafficStats {
+            messages: self.messages.load(Ordering::Relaxed),
+            bytes: self.bytes.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_sizes() {
+        assert_eq!(Payload::F32(vec![0.0; 3]).nbytes(), 12);
+        assert_eq!(Payload::I32(vec![0; 2]).nbytes(), 8);
+        assert_eq!(Payload::U64(vec![0; 2]).nbytes(), 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "expected F32")]
+    fn wrong_downcast_panics() {
+        Payload::I32(vec![1]).into_f32();
+    }
+
+    #[test]
+    fn counters_accumulate() {
+        let c = TrafficCounters::default();
+        c.record(10);
+        c.record(32);
+        let s = c.snapshot();
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, 42);
+    }
+}

@@ -1,0 +1,172 @@
+//! Criterion-style micro-benchmark harness (substrate: the offline
+//! registry has no criterion).  Warmup, calibrated iteration counts,
+//! mean/p50/p95 reporting, and optional CSV output so the paper-figure
+//! benches can be replotted.
+
+use std::hint::black_box as bb;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+/// Re-export for bench bodies that need to defeat the optimizer.
+pub fn black_box<T>(x: T) -> T {
+    bb(x)
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub iters: u64,
+    pub samples: usize,
+}
+
+impl BenchResult {
+    fn fmt_ns(ns: f64) -> String {
+        crate::util::human_time(ns / 1e9)
+    }
+}
+
+/// A named group of benchmarks (mirrors criterion's group output).
+pub struct Bench {
+    pub group: String,
+    pub results: Vec<BenchResult>,
+    warmup: Duration,
+    measure: Duration,
+    samples: usize,
+}
+
+impl Bench {
+    pub fn new(group: &str) -> Self {
+        // keep totals modest: single-core machine, many benches
+        Self {
+            group: group.to_string(),
+            results: Vec::new(),
+            warmup: Duration::from_millis(150),
+            measure: Duration::from_millis(700),
+            samples: 12,
+        }
+    }
+
+    pub fn with_budget(mut self, warmup_ms: u64, measure_ms: u64, samples: usize) -> Self {
+        self.warmup = Duration::from_millis(warmup_ms);
+        self.measure = Duration::from_millis(measure_ms);
+        self.samples = samples.max(3);
+        self
+    }
+
+    /// Benchmark `f`, auto-calibrating iterations per sample.
+    pub fn bench<R>(&mut self, name: &str, mut f: impl FnMut() -> R) -> &BenchResult {
+        // warmup + calibration
+        let mut iters = 1u64;
+        let w0 = Instant::now();
+        let mut once = {
+            let t = Instant::now();
+            bb(f());
+            t.elapsed()
+        };
+        while w0.elapsed() < self.warmup {
+            let t = Instant::now();
+            bb(f());
+            once = (once + t.elapsed()) / 2;
+        }
+        let target = self.measure.as_secs_f64() / self.samples as f64;
+        if once.as_secs_f64() > 0.0 {
+            iters = ((target / once.as_secs_f64()).ceil() as u64).clamp(1, 1_000_000);
+        }
+        // measurement
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters {
+                bb(f());
+            }
+            samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
+        }
+        let s = Summary::from(samples);
+        let result = BenchResult {
+            name: name.to_string(),
+            mean_ns: s.mean,
+            p50_ns: s.p50(),
+            p95_ns: s.p95(),
+            iters,
+            samples: s.n(),
+        };
+        println!(
+            "{}/{:<42} mean {:>10}  p50 {:>10}  p95 {:>10}  ({} iters x {} samples)",
+            self.group,
+            result.name,
+            BenchResult::fmt_ns(result.mean_ns),
+            BenchResult::fmt_ns(result.p50_ns),
+            BenchResult::fmt_ns(result.p95_ns),
+            iters,
+            s.n(),
+        );
+        self.results.push(result);
+        self.results.last().unwrap()
+    }
+
+    /// Write all results as CSV (for EXPERIMENTS.md plots).
+    pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut t = crate::util::csv::Table::new(vec![
+            "group", "name", "mean_ns", "p50_ns", "p95_ns", "iters",
+        ]);
+        for r in &self.results {
+            t.push(vec![
+                self.group.clone(),
+                r.name.clone(),
+                format!("{:.1}", r.mean_ns),
+                format!("{:.1}", r.p50_ns),
+                format!("{:.1}", r.p95_ns),
+                r.iters.to_string(),
+            ]);
+        }
+        t.write_csv(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let mut b = Bench::new("test").with_budget(10, 40, 4);
+        let r = b.bench("noop-ish", || {
+            let mut s = 0u64;
+            for i in 0..100u64 {
+                s = s.wrapping_add(i * i);
+            }
+            s
+        });
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p95_ns >= r.p50_ns * 0.5);
+    }
+
+    #[test]
+    fn ordering_of_costs() {
+        let mut b = Bench::new("test").with_budget(10, 60, 4);
+        // black_box each element so LLVM cannot close-form the loops
+        let small = b
+            .bench("small", || (0..100u64).fold(0u64, |a, i| a ^ bb(i)))
+            .mean_ns;
+        let big = b
+            .bench("big", || (0..100_000u64).fold(0u64, |a, i| a ^ bb(i)))
+            .mean_ns;
+        assert!(big > small * 5.0, "big {big} vs small {small}");
+    }
+
+    #[test]
+    fn csv_output() {
+        let mut b = Bench::new("g").with_budget(5, 20, 3);
+        b.bench("x", || 1 + 1);
+        let csv_path = std::env::temp_dir().join("densefold_bench_test.csv");
+        b.write_csv(&csv_path).unwrap();
+        let text = std::fs::read_to_string(&csv_path).unwrap();
+        assert!(text.starts_with("group,name,"));
+        assert!(text.contains("g,x,"));
+        let _ = std::fs::remove_file(csv_path);
+    }
+}

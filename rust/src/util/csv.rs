@@ -1,0 +1,87 @@
+//! Tiny CSV + markdown-table writer used by the experiment harness.
+//! Every figure reproduction emits both: the CSV for plotting, the
+//! markdown for EXPERIMENTS.md.
+
+use std::io::Write;
+use std::path::Path;
+
+/// A rectangular results table with named columns.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub columns: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(columns: Vec<S>) -> Self {
+        Self {
+            columns: columns.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(
+            row.len(),
+            self.columns.len(),
+            "row width {} != column count {}",
+            row.len(),
+            self.columns.len()
+        );
+        self.rows.push(row);
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut out = self.columns.join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("| {} |\n", self.columns.join(" | "));
+        out.push_str(&format!(
+            "|{}\n",
+            "---|".repeat(self.columns.len())
+        ));
+        for row in &self.rows {
+            out.push_str(&format!("| {} |\n", row.join(" | ")));
+        }
+        out
+    }
+
+    pub fn write_csv(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_csv().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let mut t = Table::new(vec!["p", "time_ms"]);
+        t.push(vec!["4", "1.5"]);
+        t.push(vec!["8", "2.5"]);
+        assert_eq!(t.to_csv(), "p,time_ms\n4,1.5\n8,2.5\n");
+        let md = t.to_markdown();
+        assert!(md.contains("| p | time_ms |"));
+        assert!(md.contains("| 8 | 2.5 |"));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width")]
+    fn width_mismatch_panics() {
+        let mut t = Table::new(vec!["a"]);
+        t.push(vec!["1", "2"]);
+    }
+}

@@ -1,0 +1,61 @@
+//! Small shared utilities: deterministic RNG, statistics, formatting,
+//! CSV emission. No external RNG crates — experiments must be exactly
+//! reproducible from a seed across platforms.
+
+pub mod bench;
+pub mod csv;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Format a byte count the way the paper quotes sizes ("11.4 GB").
+pub fn human_bytes(bytes: u64) -> String {
+    const UNITS: [&str; 5] = ["B", "KB", "MB", "GB", "TB"];
+    let mut val = bytes as f64;
+    let mut unit = 0;
+    while val >= 1000.0 && unit < UNITS.len() - 1 {
+        val /= 1000.0;
+        unit += 1;
+    }
+    if unit == 0 {
+        format!("{} {}", bytes, UNITS[0])
+    } else {
+        format!("{:.1} {}", val, UNITS[unit])
+    }
+}
+
+/// Format seconds adaptively (µs/ms/s/h) for report tables.
+pub fn human_time(secs: f64) -> String {
+    if secs < 1e-3 {
+        format!("{:.1} µs", secs * 1e6)
+    } else if secs < 1.0 {
+        format!("{:.1} ms", secs * 1e3)
+    } else if secs < 120.0 {
+        format!("{:.2} s", secs)
+    } else if secs < 7200.0 {
+        format!("{:.1} min", secs / 60.0)
+    } else {
+        format!("{:.1} h", secs / 3600.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(11_400_000_000), "11.4 GB");
+        assert_eq!(human_bytes(139_000_000), "139.0 MB");
+    }
+
+    #[test]
+    fn human_time_units() {
+        assert_eq!(human_time(0.000_004_3), "4.3 µs");
+        assert_eq!(human_time(4.32), "4.32 s");
+        assert_eq!(human_time(0.169), "169.0 ms");
+        assert!(human_time(30.0 * 24.0 * 3600.0).ends_with("h"));
+    }
+}

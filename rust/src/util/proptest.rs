@@ -1,0 +1,103 @@
+//! Tiny property-testing driver (substrate: the offline registry has
+//! no proptest).  Runs a property over N seeded random cases and, on
+//! failure, reports the failing seed so the case is exactly
+//! reproducible with `Gen::new(seed)`.
+
+use super::rng::Rng;
+
+/// Random-value generator handed to properties.
+pub struct Gen {
+    pub rng: Rng,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64) -> Self {
+        Self { rng: Rng::new(seed), seed }
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        self.rng.gen_range(lo, hi)
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.next_f64() as f32
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_i32_in(&mut self, len: usize, lo: i32, hi: i32) -> Vec<i32> {
+        (0..len)
+            .map(|_| lo + (self.rng.next_u64() % (hi - lo) as u64) as i32)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.gen_range(0, xs.len())]
+    }
+}
+
+/// Run `property` over `cases` seeded generators; panic with the seed
+/// on the first failure.  Properties signal failure by panicking
+/// (assert! et al.) — matching std test style.
+pub fn run(cases: u64, property: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let result = std::panic::catch_unwind(|| {
+            let mut g = Gen::new(seed);
+            property(&mut g);
+        });
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed on seed {seed:#x} (case {case}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        run(50, |g| {
+            let n = g.usize_in(0, 100);
+            assert!(n < 100);
+        });
+    }
+
+    #[test]
+    fn reports_failing_seed() {
+        let result = std::panic::catch_unwind(|| {
+            run(50, |g| {
+                let n = g.usize_in(0, 100);
+                assert!(n < 60, "n={n}"); // will fail on some seed
+            });
+        });
+        let err = result.unwrap_err();
+        let msg = err
+            .downcast_ref::<String>()
+            .cloned()
+            .unwrap_or_else(|| "<non-string>".into());
+        assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn gen_is_reproducible() {
+        let mut a = Gen::new(42);
+        let mut b = Gen::new(42);
+        assert_eq!(a.vec_f32(10, -1.0, 1.0), b.vec_f32(10, -1.0, 1.0));
+        assert_eq!(a.usize_in(0, 1000), b.usize_in(0, 1000));
+    }
+}

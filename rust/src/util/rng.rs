@@ -1,0 +1,116 @@
+//! Deterministic xorshift64* RNG. All stochastic pieces of the system
+//! (corpus generation, simulator jitter) derive from explicit seeds so
+//! every experiment row in EXPERIMENTS.md is exactly reproducible.
+
+/// xorshift64* PRNG (Vigna 2016). Not cryptographic; plenty for
+/// workload synthesis and jitter.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        // avoid the all-zero fixed point
+        Self { state: seed.wrapping_mul(0x9E3779B97F4A7C15).max(1) }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let mut x = self.state;
+        x ^= x >> 12;
+        x ^= x << 25;
+        x ^= x >> 27;
+        self.state = x;
+        x.wrapping_mul(0x2545F4914F6CDD1D)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [lo, hi).
+    #[inline]
+    pub fn gen_range(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi > lo, "empty range");
+        lo + (self.next_u64() % (hi - lo) as u64) as usize
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.next_f64().max(1e-12);
+        let u2 = self.next_f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Lognormal multiplicative jitter with the given sigma, mean ~1.
+    pub fn lognormal_jitter(&mut self, sigma: f64) -> f64 {
+        (self.normal() * sigma - 0.5 * sigma * sigma).exp()
+    }
+
+    /// Zipf-like rank sampling over [0, n): token frequencies in real
+    /// corpora are heavy-tailed, which shapes how often each embedding
+    /// row is touched (and therefore the IndexedSlices index pattern).
+    pub fn zipf(&mut self, n: usize, s: f64) -> usize {
+        // inverse-CDF on a truncated power law; cheap approximation.
+        // x ranges over [1, n]; shift to 0-based ranks.
+        let u = self.next_f64();
+        let x = ((n as f64).powf(1.0 - s) * u + (1.0 - u)).powf(1.0 / (1.0 - s));
+        ((x - 1.0).max(0.0) as usize).min(n - 1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range() {
+        let mut r = Rng::new(7);
+        for _ in 0..1000 {
+            let x = r.gen_range(3, 10);
+            assert!((3..10).contains(&x));
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.1, "var {var}");
+    }
+
+    #[test]
+    fn zipf_head_heavy() {
+        let mut r = Rng::new(3);
+        let mut counts = vec![0usize; 100];
+        for _ in 0..10_000 {
+            counts[r.zipf(100, 1.2)] += 1;
+        }
+        assert!(counts[0] > counts[50] && counts[0] > counts[99]);
+    }
+
+    #[test]
+    fn jitter_near_one() {
+        let mut r = Rng::new(9);
+        let n = 5000;
+        let mean: f64 =
+            (0..n).map(|_| r.lognormal_jitter(0.05)).sum::<f64>() / n as f64;
+        assert!((mean - 1.0).abs() < 0.02, "mean {mean}");
+    }
+}

@@ -1,0 +1,84 @@
+//! Summary statistics for bench/experiment reporting.
+
+/// Online-free summary of a sample set (keeps the sorted data).
+#[derive(Debug, Clone)]
+pub struct Summary {
+    sorted: Vec<f64>,
+    pub mean: f64,
+}
+
+impl Summary {
+    pub fn from(mut xs: Vec<f64>) -> Self {
+        assert!(!xs.is_empty(), "empty sample");
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        Self { sorted: xs, mean }
+    }
+
+    pub fn n(&self) -> usize {
+        self.sorted.len()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.sorted[0]
+    }
+
+    pub fn max(&self) -> f64 {
+        *self.sorted.last().unwrap()
+    }
+
+    /// Linear-interpolated quantile, q in [0, 1].
+    pub fn quantile(&self, q: f64) -> f64 {
+        let pos = q.clamp(0.0, 1.0) * (self.sorted.len() - 1) as f64;
+        let lo = pos.floor() as usize;
+        let hi = pos.ceil() as usize;
+        if lo == hi {
+            self.sorted[lo]
+        } else {
+            let w = pos - lo as f64;
+            self.sorted[lo] * (1.0 - w) + self.sorted[hi] * w
+        }
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.5)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn stddev(&self) -> f64 {
+        let m = self.mean;
+        (self.sorted.iter().map(|x| (x - m) * (x - m)).sum::<f64>()
+            / self.sorted.len() as f64)
+            .sqrt()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantiles() {
+        let s = Summary::from(vec![4.0, 1.0, 3.0, 2.0, 5.0]);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert!((s.quantile(0.25) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn stddev_constant_sample() {
+        let s = Summary::from(vec![2.0; 10]);
+        assert_eq!(s.stddev(), 0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "empty")]
+    fn empty_panics() {
+        Summary::from(vec![]);
+    }
+}

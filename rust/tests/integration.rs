@@ -1,0 +1,191 @@
+//! Integration tests: the full stack — AOT artifacts through PJRT,
+//! multi-rank coordination over the live transport, optimizer, data
+//! pipeline — exercised together.  Requires `make artifacts` (tiny
+//! preset); every test skips cleanly if artifacts are absent.
+
+use std::path::PathBuf;
+
+use densefold::coordinator::ExchangeConfig;
+use densefold::collectives::AllreduceAlgo;
+use densefold::data::CorpusConfig;
+use densefold::runtime::Manifest;
+use densefold::tensor::AccumStrategy;
+use densefold::train::{run_session, SessionConfig};
+
+fn manifest() -> Option<Manifest> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Manifest::load(&dir).expect("manifest loads"))
+}
+
+fn base_config(strategy: AccumStrategy, nranks: usize, steps: usize) -> SessionConfig {
+    SessionConfig {
+        preset: "tiny".into(),
+        strategy,
+        nranks,
+        steps,
+        exchange: ExchangeConfig::default(),
+        corpus: CorpusConfig { vocab: 512, n_pairs: 256, ..Default::default() },
+        eval_pairs: 0,
+        timeline: false,
+        seed: 99,
+        warmup_steps: 20,
+        lr_scale: 1.0,
+    }
+}
+
+#[test]
+fn training_converges_live_2_ranks() {
+    let Some(m) = manifest() else { return };
+    let cfg = base_config(AccumStrategy::SparseAsDense, 2, 30);
+    let result = run_session(&cfg, &m).unwrap();
+    let losses = result.loss_curve();
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(
+        last < first * 0.75,
+        "loss should fall by >25%: {first:.3} -> {last:.3}"
+    );
+}
+
+#[test]
+fn all_strategies_identical_trajectory() {
+    // The paper's correctness claim: representation changes, math
+    // doesn't.  Same seed + same data => same loss sequence.
+    let Some(m) = manifest() else { return };
+    let mut curves = Vec::new();
+    for strategy in [
+        AccumStrategy::TfDefault,
+        AccumStrategy::SparseAsDense,
+        AccumStrategy::AnyDense,
+    ] {
+        let cfg = base_config(strategy, 2, 6);
+        let result = run_session(&cfg, &m).unwrap();
+        curves.push(result.loss_curve());
+    }
+    for step in 0..curves[0].len() {
+        let a = curves[0][step];
+        let b = curves[1][step];
+        let c = curves[2][step];
+        assert!(
+            (a - b).abs() < 5e-4 && (a - c).abs() < 5e-4,
+            "step {step}: tf-default {a}, sparse-as-dense {b}, any-dense {c}"
+        );
+    }
+}
+
+#[test]
+fn gather_peak_grows_with_ranks_reduce_does_not() {
+    // Fig. 5's memory effect, measured live on real exchanges.
+    let Some(m) = manifest() else { return };
+    let peak = |strategy, nranks| {
+        let mut cfg = base_config(strategy, nranks, 2);
+        cfg.exchange.fusion_threshold = 1; // isolate the embedding tensor
+        run_session(&cfg, &m).unwrap().peak_accum_bytes()
+    };
+    let g1 = peak(AccumStrategy::TfDefault, 1);
+    let g4 = peak(AccumStrategy::TfDefault, 4);
+    assert_eq!(g4, 4 * g1, "gather grows linearly: {g1} -> {g4}");
+    let r1 = peak(AccumStrategy::SparseAsDense, 1);
+    let r4 = peak(AccumStrategy::SparseAsDense, 4);
+    assert_eq!(r1, r4, "reduce is flat: {r1} vs {r4}");
+    assert!(g4 > 3 * r4, "gather must dwarf reduce at 4 ranks");
+}
+
+#[test]
+fn all_allreduce_algorithms_agree() {
+    let Some(m) = manifest() else { return };
+    let mut finals = Vec::new();
+    for algo in [
+        AllreduceAlgo::Ring,
+        AllreduceAlgo::RecursiveDoubling,
+        AllreduceAlgo::ReduceBcast,
+        AllreduceAlgo::Naive,
+    ] {
+        let mut cfg = base_config(AccumStrategy::SparseAsDense, 2, 4);
+        cfg.exchange.algo = algo;
+        let result = run_session(&cfg, &m).unwrap();
+        finals.push(*result.loss_curve().last().unwrap());
+    }
+    for w in finals.windows(2) {
+        assert!((w[0] - w[1]).abs() < 5e-4, "algorithms diverge: {finals:?}");
+    }
+}
+
+#[test]
+fn four_ranks_with_odd_fusion_threshold() {
+    // stress: tiny fusion threshold => many fused groups; 3 ranks =>
+    // non-power-of-two collectives fall back to ring
+    let Some(m) = manifest() else { return };
+    let mut cfg = base_config(AccumStrategy::AnyDense, 3, 4);
+    cfg.exchange.fusion_threshold = 4096;
+    let result = run_session(&cfg, &m).unwrap();
+    let losses = result.loss_curve();
+    assert!(losses.iter().all(|l| l.is_finite()));
+    // every rank saw every step
+    for r in &result.stats {
+        assert_eq!(r.len(), 4);
+    }
+}
+
+#[test]
+fn timeline_written_and_parseable() {
+    let Some(m) = manifest() else { return };
+    let mut cfg = base_config(AccumStrategy::TfDefault, 2, 3);
+    cfg.timeline = true;
+    let result = run_session(&cfg, &m).unwrap();
+    // session ran; stats include allgather ops on the sparse path
+    let allgathers: usize = result.stats[0]
+        .iter()
+        .map(|s| s.exchange.n_allgather_ops)
+        .sum();
+    assert!(allgathers >= 3, "one allgather per step on the sparse path");
+}
+
+#[test]
+fn bleu_improves_with_training() {
+    // decode quality before vs after training on the copy-reverse task
+    let Some(m) = manifest() else { return };
+    let mut cfg = base_config(AccumStrategy::SparseAsDense, 2, 60);
+    cfg.eval_pairs = 24;
+    cfg.corpus.n_pairs = 512;
+    cfg.warmup_steps = 15;
+    cfg.lr_scale = 2.0;
+    let trained = run_session(&cfg, &m).unwrap();
+
+    let mut cfg0 = cfg.clone();
+    cfg0.steps = 1;
+    cfg0.lr_scale = 1e-9; // effectively untrained
+    let untrained = run_session(&cfg0, &m).unwrap();
+
+    let b_trained = trained.bleu.unwrap();
+    let b_untrained = untrained.bleu.unwrap();
+    assert!(
+        b_trained > b_untrained,
+        "trained BLEU {b_trained:.2} must beat untrained {b_untrained:.2}"
+    );
+}
+
+#[test]
+fn wire_bytes_sparse_exceed_dense() {
+    // the network-traffic asymmetry behind Fig. 3, measured on the
+    // real transport counters
+    let Some(m) = manifest() else { return };
+    let wire = |strategy| {
+        let cfg = base_config(strategy, 4, 3);
+        let result = run_session(&cfg, &m).unwrap();
+        result.stats[0]
+            .iter()
+            .map(|s| s.exchange.wire_bytes)
+            .sum::<u64>()
+    };
+    let sparse = wire(AccumStrategy::TfDefault);
+    let dense = wire(AccumStrategy::SparseAsDense);
+    assert!(
+        sparse > dense,
+        "sparse path must move more bytes: {sparse} vs {dense}"
+    );
+}

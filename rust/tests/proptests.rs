@@ -1,0 +1,237 @@
+//! Randomized property tests over the coordinator-layer invariants,
+//! driven by the in-crate `util::proptest` substrate (seeded,
+//! reproducible — failures print the seed).
+
+use std::sync::Arc;
+
+use densefold::collectives::{self, AllreduceAlgo};
+use densefold::coordinator::plan::{build_plan, CollectiveOp, Plan, TensorReport};
+use densefold::coordinator::fusion::FusionBuffer;
+use densefold::tensor::{accumulate, AccumStrategy, DenseTensor, Grad, IndexedSlices};
+use densefold::transport::LocalTransport;
+use densefold::util::proptest::{run, Gen};
+
+const CASES: u64 = 60;
+
+fn run_ranks<R: Send + 'static>(
+    p: usize,
+    f: impl Fn(usize, Arc<LocalTransport>) -> R + Send + Sync + 'static,
+) -> Vec<R> {
+    let t = Arc::new(LocalTransport::new(p));
+    let f = Arc::new(f);
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let t = t.clone();
+            let f = f.clone();
+            std::thread::spawn(move || f(rank, t))
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().unwrap()).collect()
+}
+
+#[test]
+fn prop_all_allreduce_algorithms_equal_naive() {
+    run(CASES, |g| {
+        let p = g.usize_in(2, 7);
+        let len = g.usize_in(1, 200);
+        let data: Vec<Vec<f32>> = (0..p)
+            .map(|_| g.vec_f32(len, -10.0, 10.0))
+            .collect();
+        let mut expected = vec![0.0f32; len];
+        for d in &data {
+            for (e, x) in expected.iter_mut().zip(d) {
+                *e += x;
+            }
+        }
+        for algo in [
+            AllreduceAlgo::Ring,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::ReduceBcast,
+        ] {
+            let data = data.clone();
+            let results = run_ranks(p, move |rank, t| {
+                let mut mine = data[rank].clone();
+                collectives::allreduce(t.as_ref(), rank, &mut mine, algo, 0);
+                mine
+            });
+            for r in results {
+                for (a, b) in r.iter().zip(&expected) {
+                    assert!(
+                        (a - b).abs() < 1e-2 * (1.0 + b.abs()),
+                        "{algo:?} p={p} len={len}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_accumulate_strategies_numerically_equivalent() {
+    // Whatever representation path Algorithm 1 / Listing 1 /
+    // Algorithm 2 takes, the densified result must be the same tensor.
+    run(CASES, |g| {
+        let v = g.usize_in(2, 24);
+        let d = g.usize_in(1, 8);
+        let n = g.usize_in(2, 6);
+        let grads: Vec<Grad> = (0..n)
+            .map(|_| {
+                if g.bool() {
+                    let t = g.usize_in(1, 12);
+                    Grad::Sparse(IndexedSlices::new(
+                        v,
+                        d,
+                        g.vec_i32_in(t, 0, v as i32),
+                        g.vec_f32(t * d, -4.0, 4.0),
+                    ))
+                } else {
+                    Grad::Dense(DenseTensor::from_vec(
+                        vec![v, d],
+                        g.vec_f32(v * d, -4.0, 4.0),
+                    ))
+                }
+            })
+            .collect();
+        let (g1, _) = accumulate(grads.clone(), AccumStrategy::TfDefault);
+        let (g2, _) = accumulate(grads.clone(), AccumStrategy::SparseAsDense);
+        let (g3, _) = accumulate(grads, AccumStrategy::AnyDense);
+        let d1 = g1.densify();
+        let d2 = g2.densify();
+        let d3 = g3.densify();
+        for i in 0..d1.data.len() {
+            assert!(
+                (d1.data[i] - d2.data[i]).abs() < 1e-3,
+                "alg1 vs listing1 at {i}"
+            );
+            assert!(
+                (d1.data[i] - d3.data[i]).abs() < 1e-3,
+                "alg1 vs alg2 at {i}"
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_fusion_pack_unpack_identity() {
+    run(CASES, |g| {
+        let n = g.usize_in(0, 10);
+        let tensors: Vec<DenseTensor> = (0..n)
+            .map(|_| {
+                let rows = g.usize_in(1, 6);
+                let cols = g.usize_in(1, 6);
+                DenseTensor::from_vec(vec![rows, cols], g.vec_f32(rows * cols, -1.0, 1.0))
+            })
+            .collect();
+        let refs: Vec<&DenseTensor> = tensors.iter().collect();
+        let buf = FusionBuffer::pack(&refs);
+        let out = buf.unpack();
+        assert_eq!(out, tensors);
+    });
+}
+
+#[test]
+fn prop_plan_covers_every_tensor_once_in_order() {
+    run(CASES, |g| {
+        let n = g.usize_in(1, 40);
+        let reports: Vec<TensorReport> = (0..n)
+            .map(|i| TensorReport {
+                id: i as u64,
+                is_sparse: g.bool(),
+                nbytes: g.usize_in(1, 10_000) as u64,
+            })
+            .collect();
+        let threshold = g.usize_in(1, 20_000) as u64;
+        let plan = build_plan(&reports, threshold);
+        // coverage + order
+        let flat: Vec<u32> = plan
+            .entries
+            .iter()
+            .flat_map(|e| e.tensors.iter().copied())
+            .collect();
+        let expected: Vec<u32> = (0..n as u32).collect();
+        assert_eq!(flat, expected, "plan must cover all tensors in order");
+        for e in &plan.entries {
+            match e.op {
+                CollectiveOp::Allgather => {
+                    assert_eq!(e.tensors.len(), 1, "allgather entries are singletons");
+                    assert!(reports[e.tensors[0] as usize].is_sparse);
+                }
+                CollectiveOp::Allreduce => {
+                    // fusion groups never exceed threshold unless singleton
+                    let bytes: u64 =
+                        e.tensors.iter().map(|&i| reports[i as usize].nbytes).sum();
+                    assert!(
+                        e.tensors.len() == 1 || bytes <= threshold,
+                        "fused group of {} tensors = {bytes} > {threshold}",
+                        e.tensors.len()
+                    );
+                    for &i in &e.tensors {
+                        assert!(!reports[i as usize].is_sparse);
+                    }
+                }
+            }
+        }
+        // encode/decode roundtrip
+        assert_eq!(Plan::decode(&plan.encode()), plan);
+    });
+}
+
+#[test]
+fn prop_allgatherv_conserves_all_blocks() {
+    run(30, |g| {
+        let p = g.usize_in(2, 6);
+        let sizes: Vec<usize> = (0..p).map(|_| g.usize_in(0, 50)).collect();
+        let sizes2 = sizes.clone();
+        let results = run_ranks(p, move |rank, t| {
+            let mine = vec![rank as f32 + 0.5; sizes2[rank]];
+            collectives::allgatherv_ring(t.as_ref(), rank, mine, 0)
+        });
+        for blocks in results {
+            for (origin, b) in blocks.iter().enumerate() {
+                assert_eq!(b.len(), sizes[origin]);
+                assert!(b.iter().all(|&x| x == origin as f32 + 0.5));
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sparse_gather_equals_dense_reduce_math() {
+    // end-to-end semantic equivalence on the transport: allgather of
+    // slices then densify == densify locally then allreduce
+    run(20, |g| {
+        let p = g.usize_in(2, 5);
+        let v = g.usize_in(2, 10);
+        let d = g.usize_in(1, 4);
+        let per_rank: Vec<(Vec<i32>, Vec<f32>)> = (0..p)
+            .map(|_| {
+                let t = g.usize_in(1, 8);
+                (g.vec_i32_in(t, 0, v as i32), g.vec_f32(t * d, -2.0, 2.0))
+            })
+            .collect();
+        let per_rank2 = per_rank.clone();
+        let gathered = run_ranks(p, move |rank, t| {
+            let (idx, vals) = per_rank2[rank].clone();
+            let mine = IndexedSlices::new(v, d, idx, vals);
+            collectives::allgather_indexed_slices(t.as_ref(), rank, &mine, 0).to_dense()
+        });
+        let per_rank3 = per_rank.clone();
+        let reduced = run_ranks(p, move |rank, t| {
+            let (idx, vals) = per_rank3[rank].clone();
+            let mut dense = IndexedSlices::new(v, d, idx, vals).to_dense();
+            collectives::allreduce(
+                t.as_ref(),
+                rank,
+                &mut dense.data,
+                AllreduceAlgo::Ring,
+                0,
+            );
+            dense
+        });
+        for (a, b) in gathered.iter().zip(&reduced) {
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert!((x - y).abs() < 1e-3, "gather-densify != densify-reduce");
+            }
+        }
+    });
+}
