@@ -1,10 +1,12 @@
 //! Bench: collective algorithms over the in-process transport — the
 //! allreduce-vs-allgather asymmetry that drives every scaling figure,
-//! plus the algorithm menu (ring / recursive doubling / tree / naive)
-//! across message sizes.
+//! plus the algorithm menu (ring / pipelined ring / recursive doubling
+//! / tree / naive) across message sizes, and the ring-vs-pipelined
+//! head-to-head with a segment-size sweep (the PR's headline number).
 
 use std::sync::Arc;
 
+use densefold::collectives::ring::{allreduce_ring, allreduce_ring_pipelined};
 use densefold::collectives::{self, AllreduceAlgo};
 use densefold::tensor::IndexedSlices;
 use densefold::transport::LocalTransport;
@@ -31,14 +33,15 @@ fn main() {
     let p = 4;
 
     for len in [4_096usize, 262_144, 2_097_152] {
-        let mb = len * 4 / 1024;
+        let kb = len * 4 / 1024;
         for algo in [
             AllreduceAlgo::Ring,
+            AllreduceAlgo::RingPipelined,
             AllreduceAlgo::RecursiveDoubling,
             AllreduceAlgo::ReduceBcast,
             AllreduceAlgo::Naive,
         ] {
-            bench.bench(&format!("allreduce/{algo:?}/{mb}KB/p{p}"), move || {
+            bench.bench(&format!("allreduce/{algo:?}/{kb}KB/p{p}"), move || {
                 run_ranks(p, move |rank, t| {
                     let mut data = vec![rank as f32; len];
                     collectives::allreduce(t.as_ref(), rank, &mut data, algo, 0);
@@ -46,6 +49,53 @@ fn main() {
                 })
             });
         }
+    }
+
+    // Ring vs pipelined ring head-to-head, 16 KB – 8 MB, amortized
+    // over repeated passes on ONE transport so the pipelined path runs
+    // pool-warm (the steady state the exchange engine lives in).
+    const PASSES: u64 = 8;
+    for len in [4_096usize, 65_536, 262_144, 2_097_152] {
+        let kb = len * 4 / 1024;
+        bench.bench(&format!("ring-vs-piped/ring/{kb}KB/p{p}"), move || {
+            run_ranks(p, move |rank, t| {
+                let mut data = vec![rank as f32; len];
+                for pass in 0..PASSES {
+                    allreduce_ring(t.as_ref(), rank, &mut data, pass << 12);
+                }
+                data[0]
+            })
+        });
+        bench.bench(&format!("ring-vs-piped/pipelined/{kb}KB/p{p}"), move || {
+            run_ranks(p, move |rank, t| {
+                let mut data = vec![rank as f32; len];
+                for pass in 0..PASSES {
+                    allreduce_ring_pipelined(
+                        t.as_ref(),
+                        rank,
+                        &mut data,
+                        pass << 12,
+                        collectives::ring::DEFAULT_SEGMENT_ELEMS,
+                    );
+                }
+                data[0]
+            })
+        });
+    }
+
+    // Segment-size sweep at 8 MB: the MVAPICH2-style chunking tunable.
+    let len = 2_097_152usize;
+    for seg_elems in [1_024usize, 4_096, 16_384, 65_536, 1 << 21] {
+        let seg_kb = seg_elems * 4 / 1024;
+        bench.bench(&format!("pipelined-seg/{seg_kb}KB/8192KB/p{p}"), move || {
+            run_ranks(p, move |rank, t| {
+                let mut data = vec![rank as f32; len];
+                for pass in 0..PASSES {
+                    allreduce_ring_pipelined(t.as_ref(), rank, &mut data, pass << 12, seg_elems);
+                }
+                data[0]
+            })
+        });
     }
 
     // allgather of IndexedSlices vs allreduce of equivalent dense size:
@@ -82,4 +132,5 @@ fn main() {
     bench
         .write_csv(std::path::Path::new("results/bench_collectives.csv"))
         .expect("csv");
+    bench.emit_json().expect("json");
 }

@@ -85,8 +85,41 @@ fn main() {
                 .unwrap()
         });
     }
+    // Steady-state exchange: one engine per rank reused across cycles,
+    // so the response cache hits and the FusionArena + transport pool
+    // carry the cycle — this is the allocation-free hot path. Compare
+    // against the cold path above (fresh engines every call).
+    for cycles in [1usize, 8] {
+        let bag = bag.clone();
+        bench.bench(&format!("steady-exchange/{cycles}cycles(arena)/p{p}"), move || {
+            let bag = bag.clone();
+            let t = Arc::new(LocalTransport::new(p));
+            let handles: Vec<_> = (0..p)
+                .map(|rank| {
+                    let t = t.clone();
+                    let bag = bag.clone();
+                    std::thread::spawn(move || {
+                        let mut ex = GradExchange::new(t, rank, ExchangeConfig::default());
+                        let mut groups = 0;
+                        for _ in 0..cycles {
+                            let (_, report) = ex.exchange(bag.clone());
+                            groups = report.n_allreduce_groups;
+                        }
+                        groups
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().unwrap())
+                .max()
+                .unwrap()
+        });
+    }
+
     std::fs::create_dir_all("results").ok();
     bench
         .write_csv(std::path::Path::new("results/bench_fusion.csv"))
         .expect("csv");
+    bench.emit_json().expect("json");
 }

@@ -62,4 +62,5 @@ fn main() {
     bench
         .write_csv(std::path::Path::new("results/bench_train_step.csv"))
         .expect("csv");
+    bench.emit_json().expect("json");
 }

@@ -48,6 +48,32 @@ pub fn ring_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
     steps as f64 * link.alpha + 2.0 * (p - 1) as f64 / p as f64 * bytes * link.inv_beta
 }
 
+/// Segmented pipelined ring allreduce: each n/p chunk is split into S
+/// segments of ~`seg_bytes`, and the 2(p-1) ring steps overlap at
+/// segment granularity (the standard pipelined-collective makespan:
+/// `(steps + S - 1)` slots of one segment each).  `S = 1` recovers the
+/// classic ring exactly; large S trades bandwidth efficiency for
+/// latency hiding, giving the MVAPICH2-style interior optimum in
+/// segment size.
+pub fn ring_pipelined_allreduce_time(
+    link: &LinkModel,
+    p: u64,
+    bytes: f64,
+    seg_bytes: f64,
+) -> f64 {
+    if p <= 1 {
+        return 0.0;
+    }
+    let chunk = bytes / p as f64;
+    if chunk <= 0.0 {
+        return 2.0 * (p - 1) as f64 * link.alpha;
+    }
+    let seg = seg_bytes.max(1.0).min(chunk);
+    let s = (chunk / seg).ceil().max(1.0);
+    let slots = 2.0 * (p - 1) as f64 + (s - 1.0);
+    slots * (link.alpha + (chunk / s) * link.inv_beta)
+}
+
 /// Recursive doubling: log2(p) steps, each moving the full buffer.
 pub fn rec_doubling_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
     if p <= 1 {
@@ -109,6 +135,49 @@ mod tests {
         let t8 = ring_allgather_time(&link, 8, per_rank);
         let t64 = ring_allgather_time(&link, 64, per_rank);
         assert!(t64 / t8 > 8.5, "expected ~9x growth, got {}", t64 / t8);
+    }
+
+    #[test]
+    fn pipelined_with_whole_chunk_segment_is_classic_ring() {
+        let link = LinkModel::omni_path();
+        for p in [2u64, 4, 64] {
+            for bytes in [4096.0, 139e6] {
+                let classic = ring_allreduce_time(&link, p, bytes);
+                let piped = ring_pipelined_allreduce_time(&link, p, bytes, bytes);
+                assert!(
+                    (piped - classic).abs() < 1e-12 * classic.max(1.0),
+                    "p={p} bytes={bytes}: {piped} vs {classic}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn pipelining_helps_large_messages() {
+        // at 8 MB / p=4 a 64 KB segment must beat the classic ring
+        let link = LinkModel::omni_path();
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        let classic = ring_allreduce_time(&link, 4, bytes);
+        let piped = ring_pipelined_allreduce_time(&link, 4, bytes, 64.0 * 1024.0);
+        assert!(piped < classic, "piped {piped} classic {classic}");
+    }
+
+    #[test]
+    fn segment_size_has_interior_optimum() {
+        // too-small segments are latency-bound, too-large lose overlap
+        let link = LinkModel::omni_path();
+        let bytes = 8.0 * 1024.0 * 1024.0;
+        let tiny = ring_pipelined_allreduce_time(&link, 4, bytes, 64.0);
+        let mid = ring_pipelined_allreduce_time(&link, 4, bytes, 64.0 * 1024.0);
+        let huge = ring_pipelined_allreduce_time(&link, 4, bytes, bytes);
+        assert!(mid < tiny, "mid {mid} tiny {tiny}");
+        assert!(mid < huge, "mid {mid} huge {huge}");
+    }
+
+    #[test]
+    fn pipelined_single_rank_free() {
+        let link = LinkModel::default();
+        assert_eq!(ring_pipelined_allreduce_time(&link, 1, 1e9, 65536.0), 0.0);
     }
 
     #[test]

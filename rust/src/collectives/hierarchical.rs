@@ -55,18 +55,10 @@ pub fn allreduce_hierarchical(
     if ppn > 1 {
         if rank == leader {
             for peer in leader + 1..leader + ppn {
-                let incoming = t.recv(rank, peer, tag_base + peer as u64).into_f32();
-                for (d, x) in data.iter_mut().zip(incoming) {
-                    *d += x;
-                }
+                t.recv_add_into(rank, peer, tag_base + peer as u64, data);
             }
         } else {
-            t.send(
-                rank,
-                leader,
-                tag_base + rank as u64,
-                crate::transport::Payload::F32(data.to_vec()),
-            );
+            t.send_slice(rank, leader, tag_base + rank as u64, data);
         }
     }
 
@@ -82,18 +74,10 @@ pub fn allreduce_hierarchical(
     if ppn > 1 {
         if rank == leader {
             for peer in leader + 1..leader + ppn {
-                t.send(
-                    rank,
-                    peer,
-                    tag_base + 20_000 + peer as u64,
-                    crate::transport::Payload::F32(data.to_vec()),
-                );
+                t.send_slice(rank, peer, tag_base + 20_000 + peer as u64, data);
             }
         } else {
-            let reduced = t
-                .recv(rank, leader, tag_base + 20_000 + rank as u64)
-                .into_f32();
-            data.copy_from_slice(&reduced);
+            t.recv_into(rank, leader, tag_base + 20_000 + rank as u64, data);
         }
     }
     let _ = tree::broadcast_binomial as fn(&dyn Transport, usize, usize, &mut [f32], u64);
@@ -118,29 +102,15 @@ impl SubRing<'_> {
             let send_chunk = (node + p - s) % p;
             let recv_chunk = (node + p - s - 1) % p;
             let tag = tag_base + s as u64;
-            self.t.send(
-                me,
-                next,
-                tag,
-                crate::transport::Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
-            );
-            let incoming = self.t.recv(me, prev, tag).into_f32();
-            for (d, x) in data[ranges[recv_chunk].clone()].iter_mut().zip(incoming) {
-                *d += x;
-            }
+            self.t.send_slice(me, next, tag, &data[ranges[send_chunk].clone()]);
+            self.t.recv_add_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()]);
         }
         for s in 0..p - 1 {
             let send_chunk = (node + 1 + p - s) % p;
             let recv_chunk = (node + p - s) % p;
             let tag = tag_base + (p + s) as u64;
-            self.t.send(
-                me,
-                next,
-                tag,
-                crate::transport::Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
-            );
-            let incoming = self.t.recv(me, prev, tag).into_f32();
-            data[ranges[recv_chunk].clone()].copy_from_slice(&incoming);
+            self.t.send_slice(me, next, tag, &data[ranges[send_chunk].clone()]);
+            self.t.recv_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()]);
         }
     }
 }

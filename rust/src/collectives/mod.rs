@@ -28,6 +28,9 @@ pub use allgather::{allgather_indexed_slices, allgatherv_ring};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AllreduceAlgo {
     Ring,
+    /// Segmented pipelined ring over the pooled slice transport API —
+    /// the steady-state hot path (bit-identical results to `Ring`).
+    RingPipelined,
     RecursiveDoubling,
     /// reduce-to-root + broadcast (binomial trees)
     ReduceBcast,
@@ -39,6 +42,7 @@ impl AllreduceAlgo {
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "ring" => Some(Self::Ring),
+            "ring-pipelined" | "pipelined" | "rp" => Some(Self::RingPipelined),
             "recursive-doubling" | "rd" => Some(Self::RecursiveDoubling),
             "reduce-bcast" | "tree" => Some(Self::ReduceBcast),
             "naive" => Some(Self::Naive),
@@ -63,6 +67,13 @@ pub fn allreduce(
     }
     match algo {
         AllreduceAlgo::Ring => ring::allreduce_ring(t, rank, data, tag_base),
+        AllreduceAlgo::RingPipelined => ring::allreduce_ring_pipelined(
+            t,
+            rank,
+            data,
+            tag_base,
+            ring::DEFAULT_SEGMENT_ELEMS,
+        ),
         AllreduceAlgo::RecursiveDoubling => {
             if p.is_power_of_two() {
                 rec_double::allreduce_rec_doubling(t, rank, data, tag_base)
@@ -71,8 +82,14 @@ pub fn allreduce(
             }
         }
         AllreduceAlgo::ReduceBcast => {
+            // tree step masks are powers of two below 2^ceil(log2 p),
+            // so the phases are disjoint iff that bound fits the block
+            assert!(
+                p.next_power_of_two() as u64 <= ALGO_PHASE_TAGS,
+                "too many ranks for tag layout"
+            );
             tree::reduce_binomial(t, rank, 0, data, tag_base);
-            tree::broadcast_binomial(t, rank, 0, data, tag_base + 1_000_000);
+            tree::broadcast_binomial(t, rank, 0, data, tag_base + ALGO_PHASE_TAGS);
         }
         AllreduceAlgo::Naive => naive::allreduce_naive(t, rank, data, tag_base),
     }
@@ -80,9 +97,23 @@ pub fn allreduce(
 
 /// Tag-space layout: each collective invocation gets a disjoint block
 /// of tags so concurrent collectives on the same transport can't
-/// cross-match. 2^20 tags per invocation is far beyond what any single
+/// cross-match. 2^21 tags per invocation is far beyond what any single
 /// algorithm uses.
 pub const TAG_BLOCK: u64 = 1 << 21;
+
+/// Tag offset separating the phases of a multi-phase algorithm (e.g.
+/// binomial reduce then broadcast) *within* one invocation's tag
+/// space.  Each phase uses tags below this offset (ring: 2p tags,
+/// trees: the step mask < p), so a whole allreduce stays inside
+/// `2 * ALGO_PHASE_TAGS` tags — which must fit inside the per-plan-
+/// entry sub-blocks the coordinator carves out (see `ENTRY_TAGS`
+/// there) and, a fortiori, inside [`TAG_BLOCK`].
+pub const ALGO_PHASE_TAGS: u64 = 1 << 11;
+
+const _: () = assert!(
+    2 * ALGO_PHASE_TAGS <= TAG_BLOCK,
+    "one allreduce invocation's tags must fit in TAG_BLOCK"
+);
 
 #[cfg(test)]
 pub(crate) mod testutil {
@@ -149,12 +180,28 @@ mod tests {
     fn dispatch_all_algorithms() {
         for algo in [
             AllreduceAlgo::Ring,
+            AllreduceAlgo::RingPipelined,
             AllreduceAlgo::RecursiveDoubling,
             AllreduceAlgo::ReduceBcast,
             AllreduceAlgo::Naive,
         ] {
             check_allreduce(algo, 4, 37);
         }
+    }
+
+    #[test]
+    fn algo_strings_parse() {
+        assert_eq!(AllreduceAlgo::parse("ring"), Some(AllreduceAlgo::Ring));
+        assert_eq!(
+            AllreduceAlgo::parse("ring-pipelined"),
+            Some(AllreduceAlgo::RingPipelined)
+        );
+        assert_eq!(AllreduceAlgo::parse("rp"), Some(AllreduceAlgo::RingPipelined));
+        assert_eq!(
+            AllreduceAlgo::parse("pipelined"),
+            Some(AllreduceAlgo::RingPipelined)
+        );
+        assert_eq!(AllreduceAlgo::parse("bogus"), None);
     }
 
     #[test]

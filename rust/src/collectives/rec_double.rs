@@ -4,10 +4,12 @@
 //! coordinator doesn't pack into the fusion buffer.  Power-of-two rank
 //! counts only; the dispatcher falls back to ring otherwise.
 
-use crate::transport::{Payload, Transport};
+use crate::transport::Transport;
 
 /// In-place recursive-doubling allreduce (sum). Panics unless
-/// `t.nranks()` is a power of two.
+/// `t.nranks()` is a power of two.  Payloads move through the pooled
+/// slice API, so steady-state rounds are allocation-free on pooled
+/// transports.
 pub fn allreduce_rec_doubling(
     t: &dyn Transport,
     rank: usize,
@@ -20,11 +22,8 @@ pub fn allreduce_rec_doubling(
     for s in 0..rounds {
         let partner = rank ^ (1 << s);
         let tag = tag_base + s as u64;
-        t.send(rank, partner, tag, Payload::F32(data.to_vec()));
-        let incoming = t.recv(rank, partner, tag).into_f32();
-        for (d, x) in data.iter_mut().zip(incoming) {
-            *d += x;
-        }
+        t.send_slice(rank, partner, tag, data);
+        t.recv_add_into(rank, partner, tag, data);
     }
 }
 

@@ -4,6 +4,17 @@
 //! independent of p — which is why dense gradient exchange stays flat
 //! as the paper scales to 1200 processes.  This is the algorithm
 //! Horovod/MVAPICH2 uses for large fused gradient buffers.
+//!
+//! Two implementations share the chunk layout:
+//!
+//! * [`allreduce_ring`] — the reference path: one message per ring
+//!   step, payloads allocated per send (`send`/`recv`).
+//! * [`allreduce_ring_pipelined`] — the hot path: each chunk is split
+//!   into fixed-size segments sent through the transport's pooled
+//!   slice API, so the neighbour starts reducing segment *j* while
+//!   segment *j+1* is still being copied in, and steady-state sends
+//!   recycle payload buffers instead of allocating (MVAPICH2-style
+//!   chunking).
 
 use crate::transport::{Payload, Transport};
 
@@ -20,6 +31,23 @@ pub fn chunk_ranges(len: usize, p: usize) -> Vec<std::ops::Range<usize>> {
         start += size;
     }
     out
+}
+
+/// Default pipeline segment size in elements: 16 Ki f32 = 64 KB, small
+/// enough to overlap copy/reduce within L2, large enough to amortize
+/// per-message latency.
+pub const DEFAULT_SEGMENT_ELEMS: usize = 16 * 1024;
+
+/// Split `range` into consecutive segments of at most `seg_elems`
+/// elements (the last may be shorter). `seg_elems` is clamped to at
+/// least 1; an empty range yields no segments.
+pub fn segment_ranges(
+    range: std::ops::Range<usize>,
+    seg_elems: usize,
+) -> impl Iterator<Item = std::ops::Range<usize>> + Clone {
+    let seg = seg_elems.max(1);
+    let end = range.end;
+    range.step_by(seg).map(move |s| s..(s + seg).min(end))
 }
 
 /// In-place ring allreduce (sum).
@@ -71,6 +99,66 @@ pub fn allreduce_ring(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base
     }
 }
 
+/// In-place segmented, pipelined ring allreduce (sum).
+///
+/// Chunk layout and step schedule are identical to [`allreduce_ring`]
+/// — same neighbours, same per-step chunks, and the same per-element
+/// addition order, so results are bit-identical to the plain ring.
+/// Within each step the chunk moves as segments of `seg_elems`
+/// elements sharing one tag (per-(from, tag) FIFO keeps them ordered):
+/// the receiver reduces segment *j* while the sender is still copying
+/// segment *j+1* into its pooled buffer, and all payload traffic goes
+/// through `send_slice`/`recv_add_into`/`recv_into`, which pooled
+/// transports serve allocation-free in steady state.
+///
+/// `seg_elems` larger than a chunk degenerates to one segment per
+/// step; `seg_elems` of 0 is clamped to 1.
+pub fn allreduce_ring_pipelined(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    seg_elems: usize,
+) {
+    let p = t.nranks();
+    if p == 1 {
+        return;
+    }
+    let ranges = chunk_ranges(data.len(), p);
+    let next = (rank + 1) % p;
+    let prev = (rank + p - 1) % p;
+
+    // Phase 1: segmented reduce-scatter. The sender segments its
+    // send-chunk; the receiver segments its recv-chunk. Both describe
+    // the same global range (my recv_chunk is prev's send_chunk), so
+    // the two segmentations agree exactly.
+    for s in 0..p - 1 {
+        let send_chunk = (rank + p - s) % p;
+        let recv_chunk = (rank + p - s - 1) % p;
+        let tag = tag_base + s as u64;
+        for seg in segment_ranges(ranges[send_chunk].clone(), seg_elems) {
+            t.send_slice(rank, next, tag, &data[seg]);
+        }
+        for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
+            t.recv_add_into(rank, prev, tag, &mut data[seg]);
+        }
+    }
+
+    // Phase 2: segmented allgather — reduced segments land directly in
+    // their final position, no intermediate buffer at all.
+    for s in 0..p - 1 {
+        let send_chunk = (rank + 1 + p - s) % p;
+        let recv_chunk = (rank + p - s) % p;
+        let tag = tag_base + (p + s) as u64;
+        for seg in segment_ranges(ranges[send_chunk].clone(), seg_elems) {
+            t.send_slice(rank, next, tag, &data[seg]);
+        }
+        for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
+            t.recv_into(rank, prev, tag, &mut data[seg]);
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -111,6 +199,98 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn segment_ranges_tile_exactly() {
+        for (range, seg) in [(0..10, 3), (5..5, 4), (2..9, 100), (0..8, 1), (7..20, 0)] {
+            let segs: Vec<_> = segment_ranges(range.clone(), seg).collect();
+            if range.is_empty() {
+                assert!(segs.is_empty());
+                continue;
+            }
+            assert_eq!(segs[0].start, range.start);
+            assert_eq!(segs.last().unwrap().end, range.end);
+            for w in segs.windows(2) {
+                assert_eq!(w[0].end, w[1].start, "segments must be contiguous");
+            }
+            let eff = seg.max(1);
+            assert!(segs.iter().all(|s| s.len() <= eff && !s.is_empty()));
+        }
+    }
+
+    #[test]
+    fn pipelined_bit_matches_plain_ring() {
+        // same chunk schedule + same addition order => identical bits
+        for p in [2usize, 3, 5, 8] {
+            for len in [1usize, 3, 37, 101, 257] {
+                for seg in [1usize, 4, 16, 1 << 20] {
+                    let plain = run_ranks(p, move |rank, t| {
+                        let mut data = rank_data(rank, len);
+                        allreduce_ring(t.as_ref(), rank, &mut data, 0);
+                        data
+                    });
+                    let piped = run_ranks(p, move |rank, t| {
+                        let mut data = rank_data(rank, len);
+                        allreduce_ring_pipelined(t.as_ref(), rank, &mut data, 0, seg);
+                        data
+                    });
+                    for (a, b) in plain.iter().zip(&piped) {
+                        let (abits, bbits): (Vec<u32>, Vec<u32>) = (
+                            a.iter().map(|x| x.to_bits()).collect(),
+                            b.iter().map(|x| x.to_bits()).collect(),
+                        );
+                        assert_eq!(abits, bbits, "p={p} len={len} seg={seg}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_len_smaller_than_p() {
+        // empty chunks => zero segments on both sides; must still agree
+        let results = run_ranks(6, |rank, t| {
+            let mut data = rank_data(rank, 3);
+            allreduce_ring_pipelined(t.as_ref(), rank, &mut data, 0, 2);
+            data
+        });
+        let expected = expected_sum(6, 3);
+        for r in results {
+            for (a, b) in r.iter().zip(&expected) {
+                assert!((a - b).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn pipelined_steady_state_is_pool_clean() {
+        // after a warm-up pass, repeated allreduces over the same
+        // transport must not allocate any payload buffers
+        let t = std::sync::Arc::new(crate::transport::LocalTransport::new(4));
+        let run_pass = |tag: u64| {
+            let handles: Vec<_> = (0..4)
+                .map(|rank| {
+                    let t = t.clone();
+                    std::thread::spawn(move || {
+                        let mut data = rank_data(rank, 4096);
+                        allreduce_ring_pipelined(t.as_ref(), rank, &mut data, tag, 256);
+                    })
+                })
+                .collect();
+            for h in handles {
+                h.join().unwrap();
+            }
+        };
+        run_pass(0);
+        run_pass(1 << 10);
+        let warm = t.pool_stats().allocated;
+        for i in 2..8u64 {
+            run_pass(i << 10);
+        }
+        let steady = t.pool_stats();
+        assert_eq!(steady.allocated, warm, "steady state must not allocate: {steady:?}");
+        assert!(steady.recycled > warm, "recycling must dominate: {steady:?}");
     }
 
     #[test]

@@ -6,7 +6,9 @@ use crate::transport::{Payload, Transport};
 
 /// Reduce (sum) to `root`, binomial tree, in place. Non-root ranks end
 /// with partial sums (their contribution consumed); only `root` holds
-/// the total.
+/// the total.  Payloads move through the pooled slice API, so inner
+/// tree levels reduce incoming buffers without allocating on pooled
+/// transports.
 pub fn reduce_binomial(
     t: &dyn Transport,
     rank: usize,
@@ -22,16 +24,13 @@ pub fn reduce_binomial(
         if vrank & mask != 0 {
             // send to the parent and stop participating
             let parent = ((vrank & !mask) + root) % p;
-            t.send(rank, parent, tag_base + mask as u64, Payload::F32(data.to_vec()));
+            t.send_slice(rank, parent, tag_base + mask as u64, data);
             return;
         }
         let child_v = vrank | mask;
         if child_v < p {
             let child = (child_v + root) % p;
-            let incoming = t.recv(rank, child, tag_base + mask as u64).into_f32();
-            for (d, x) in data.iter_mut().zip(incoming) {
-                *d += x;
-            }
+            t.recv_add_into(rank, child, tag_base + mask as u64, data);
         }
         mask <<= 1;
     }
@@ -53,8 +52,7 @@ pub fn broadcast_binomial(
     while mask < p {
         if vrank & mask != 0 {
             let parent = ((vrank - mask) + root) % p;
-            let incoming = t.recv(rank, parent, tag_base + mask as u64).into_f32();
-            data.copy_from_slice(&incoming);
+            t.recv_into(rank, parent, tag_base + mask as u64, data);
             break;
         }
         mask <<= 1;
@@ -65,7 +63,7 @@ pub fn broadcast_binomial(
     while mask > 0 {
         if vrank + mask < p {
             let child = (vrank + mask + root) % p;
-            t.send(rank, child, tag_base + mask as u64, Payload::F32(data.to_vec()));
+            t.send_slice(rank, child, tag_base + mask as u64, data);
         }
         mask >>= 1;
     }

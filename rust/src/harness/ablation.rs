@@ -13,6 +13,7 @@
 
 use crate::collectives::cost::{
     rec_doubling_allreduce_time, reduce_bcast_allreduce_time, ring_allreduce_time,
+    ring_pipelined_allreduce_time,
 };
 use crate::sim::{ClusterModel, PaperModel};
 use crate::tensor::{DenseTensor, IndexedSlices};
@@ -57,24 +58,39 @@ pub fn fusion_threshold_sweep() -> Table {
 /// LayerNorm tensor.
 pub fn allreduce_algorithm_menu() -> Table {
     let cluster = ClusterModel::zenith(4);
-    let mut t = Table::new(vec!["p", "bytes", "ring_ms", "rec_doubling_ms", "tree_ms", "winner"]);
+    let seg_bytes = 64.0 * 1024.0; // MVAPICH2-style chunking default
+    let mut t = Table::new(vec![
+        "p",
+        "bytes",
+        "ring_ms",
+        "ring_pipelined_ms",
+        "rec_doubling_ms",
+        "tree_ms",
+        "winner",
+    ]);
     for p in [16u64, 64, 256, 1200] {
         for bytes in [4096.0, 139e6] {
             let link = cluster.effective_link(p);
             let ring = ring_allreduce_time(&link, p, bytes);
+            let piped = ring_pipelined_allreduce_time(&link, p, bytes, seg_bytes);
             let rd = rec_doubling_allreduce_time(&link, p, bytes);
             let tree = reduce_bcast_allreduce_time(&link, p, bytes);
-            let winner = if ring <= rd && ring <= tree {
-                "ring"
-            } else if rd <= tree {
-                "rec-doubling"
-            } else {
-                "tree"
-            };
+            let candidates = [
+                ("ring", ring),
+                ("ring-pipelined", piped),
+                ("rec-doubling", rd),
+                ("tree", tree),
+            ];
+            let winner = candidates
+                .iter()
+                .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+                .unwrap()
+                .0;
             t.push(vec![
                 p.to_string(),
                 human_bytes(bytes as u64),
                 format!("{:.3}", ring * 1e3),
+                format!("{:.3}", piped * 1e3),
                 format!("{:.3}", rd * 1e3),
                 format!("{:.3}", tree * 1e3),
                 winner.to_string(),
@@ -166,11 +182,28 @@ mod tests {
     fn menu_small_messages_avoid_ring() {
         let t = allreduce_algorithm_menu();
         for row in &t.rows {
+            let winner = &row[6];
             if row[1] == "4.1 KB" && row[0] == "1200" {
-                assert_ne!(row[5], "ring", "small msgs at high p are latency-bound");
+                assert_ne!(winner, "ring", "small msgs at high p are latency-bound");
+                assert_ne!(winner, "ring-pipelined");
             }
             if row[1] == "139.0 MB" {
-                assert_eq!(row[5], "ring", "big msgs are bandwidth-bound");
+                assert!(
+                    winner.starts_with("ring"),
+                    "big msgs are bandwidth-bound, got {winner}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn menu_pipelined_wins_big_messages() {
+        let t = allreduce_algorithm_menu();
+        for row in &t.rows {
+            if row[1] == "139.0 MB" {
+                let ring: f64 = row[2].parse().unwrap();
+                let piped: f64 = row[3].parse().unwrap();
+                assert!(piped <= ring, "p={}: piped {piped} ring {ring}", row[0]);
             }
         }
     }

@@ -64,7 +64,7 @@ commands:
           --eval N       hold out N pairs, report BLEU   (default 0)
           --timeline F   write rank-0 Horovod timeline JSON
           --fusion-mb N  fusion threshold in MB          (default 128)
-          --algo ring|rd|tree|naive  allreduce algorithm (default ring)
+          --algo ring|ring-pipelined|rd|tree|naive  allreduce algorithm
   repro   regenerate paper tables/figures
           --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation
           --all          every figure
@@ -121,7 +121,7 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let steps: usize = flag(flags, "steps", "20").parse()?;
     let eval_pairs: usize = flag(flags, "eval", "0").parse()?;
     let fusion_mb: u64 = flag(flags, "fusion-mb", "128").parse()?;
-    let algo = AllreduceAlgo::parse(flag(flags, "algo", "ring"))
+    let algo = AllreduceAlgo::parse(flag(flags, "algo", "ring-pipelined"))
         .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
     let timeline_path = flags.get("timeline").cloned();
 

@@ -70,6 +70,14 @@ impl ClusterModel {
             + 2.0 * bytes * self.pack_cost_per_byte // fusion in + out memcpy
     }
 
+    /// Segmented pipelined ring-allreduce time (the live hot path's
+    /// cost model); the arena pack/unpack memcpy tax is unchanged.
+    pub fn allreduce_time_pipelined(&self, p: u64, bytes: f64, seg_bytes: f64) -> f64 {
+        let link = self.effective_link(p);
+        cost::ring_pipelined_allreduce_time(&link, p, bytes, seg_bytes)
+            + 2.0 * bytes * self.pack_cost_per_byte
+    }
+
     /// Ring-allgather time where each rank contributes
     /// `bytes_per_rank`, plus the CPU cost of assembling the
     /// concatenated result (p·bytes_per_rank written on every rank —
@@ -131,6 +139,16 @@ mod tests {
             t_gather_64 > 10.0 * t_reduce_64,
             "64-rank gap: gather {t_gather_64} reduce {t_reduce_64}"
         );
+    }
+
+    #[test]
+    fn pipelined_never_slower_than_classic_on_cluster() {
+        let c = ClusterModel::zenith(4);
+        for p in [8u64, 64, 1200] {
+            let classic = c.allreduce_time(p, 139e6);
+            let piped = c.allreduce_time_pipelined(p, 139e6, 64.0 * 1024.0);
+            assert!(piped <= classic, "p={p}: {piped} vs {classic}");
+        }
     }
 
     #[test]

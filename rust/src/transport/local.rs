@@ -3,11 +3,20 @@
 //! real threads block on real queues, so coordinator bugs (deadlocks,
 //! plan divergence, tag collisions) show up exactly as they would on a
 //! cluster.
+//!
+//! The slice API (`send_slice` / `recv_into` / `recv_add_into`) is
+//! backed by a per-rank free list of `Vec<f32>` payload buffers:
+//! `send_slice` copies into a buffer recycled from the sender's pool,
+//! and the receive side returns the delivered buffer to the receiver's
+//! pool.  In a ring, every rank both sends and receives each step, so
+//! buffers circulate and the steady state performs zero payload
+//! allocations — [`PoolStats`] makes that assertable.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
-use super::{Payload, TrafficCounters, TrafficStats, Transport};
+use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
 
 type Key = (usize, u64); // (from, tag)
 
@@ -22,10 +31,23 @@ impl Mailbox {
     }
 }
 
+/// Per-rank cap on pooled buffers; beyond this, returned buffers are
+/// dropped (bounds worst-case held memory at cap × largest payload).
+const POOL_CAP: usize = 64;
+
+#[derive(Default)]
+struct PoolCounters {
+    recycled: AtomicU64,
+    allocated: AtomicU64,
+    returned: AtomicU64,
+}
+
 /// Shared-memory transport between `nranks` in-process ranks.
 pub struct LocalTransport {
     boxes: Vec<Mailbox>,
     counters: TrafficCounters,
+    pools: Vec<Mutex<Vec<Vec<f32>>>>,
+    pool_counters: PoolCounters,
 }
 
 impl LocalTransport {
@@ -34,7 +56,51 @@ impl LocalTransport {
         Self {
             boxes: (0..nranks).map(|_| Mailbox::new()).collect(),
             counters: TrafficCounters::default(),
+            pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
+            pool_counters: PoolCounters::default(),
         }
+    }
+
+    /// Take a cleared buffer with capacity for `len` elements from
+    /// `rank`'s pool. Best fit (smallest sufficient capacity), so a
+    /// small request never steals a large buffer a later request
+    /// needs — mixed message sizes stay allocation-free.
+    fn acquire(&self, rank: usize, len: usize) -> Vec<f32> {
+        let mut pool = self.pools[rank].lock().unwrap();
+        let fit = pool
+            .iter()
+            .enumerate()
+            .filter(|(_, b)| b.capacity() >= len)
+            .min_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        match fit {
+            Some(i) => {
+                let mut buf = pool.swap_remove(i);
+                drop(pool);
+                self.pool_counters.recycled.fetch_add(1, Ordering::Relaxed);
+                buf.clear();
+                buf
+            }
+            None => {
+                drop(pool);
+                self.pool_counters.allocated.fetch_add(1, Ordering::Relaxed);
+                Vec::with_capacity(len)
+            }
+        }
+    }
+
+    /// Return a delivered payload buffer to `rank`'s pool.
+    fn release(&self, rank: usize, buf: Vec<f32>) {
+        let mut pool = self.pools[rank].lock().unwrap();
+        if pool.len() < POOL_CAP {
+            pool.push(buf);
+            drop(pool);
+            self.pool_counters.returned.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    fn recv_f32(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
+        self.recv(to, from, tag).into_f32()
     }
 }
 
@@ -67,6 +133,36 @@ impl Transport for LocalTransport {
 
     fn stats(&self) -> TrafficStats {
         self.counters.snapshot()
+    }
+
+    fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
+        let mut buf = self.acquire(from, data.len());
+        buf.extend_from_slice(data);
+        self.send(from, to, tag, Payload::F32(buf));
+    }
+
+    fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
+        let v = self.recv_f32(to, from, tag);
+        assert_eq!(v.len(), out.len(), "recv_into length mismatch");
+        out.copy_from_slice(&v);
+        self.release(to, v);
+    }
+
+    fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
+        let v = self.recv_f32(to, from, tag);
+        assert_eq!(v.len(), acc.len(), "recv_add_into length mismatch");
+        for (a, x) in acc.iter_mut().zip(&v) {
+            *a += x;
+        }
+        self.release(to, v);
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        PoolStats {
+            recycled: self.pool_counters.recycled.load(Ordering::Relaxed),
+            allocated: self.pool_counters.allocated.load(Ordering::Relaxed),
+            returned: self.pool_counters.returned.load(Ordering::Relaxed),
+        }
     }
 }
 
@@ -128,5 +224,85 @@ mod tests {
         let s = t.stats();
         assert_eq!(s.messages, 2);
         assert_eq!(s.bytes, 60);
+    }
+
+    #[test]
+    fn slice_roundtrip_recv_into_and_add() {
+        let t = LocalTransport::new(2);
+        t.send_slice(0, 1, 3, &[1.0, 2.0, 3.0]);
+        let mut out = [0.0; 3];
+        t.recv_into(1, 0, 3, &mut out);
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        t.send_slice(0, 1, 4, &[10.0, 20.0, 30.0]);
+        t.recv_add_into(1, 0, 4, &mut out);
+        assert_eq!(out, [11.0, 22.0, 33.0]);
+    }
+
+    #[test]
+    fn slice_sends_count_traffic_exactly() {
+        let t = LocalTransport::new(2);
+        t.send_slice(0, 1, 0, &[0.0; 10]);
+        let mut out = [0.0; 10];
+        t.recv_into(1, 0, 0, &mut out);
+        let s = t.stats();
+        assert_eq!(s.messages, 1);
+        assert_eq!(s.bytes, 40);
+    }
+
+    #[test]
+    fn pool_recycles_in_steady_state() {
+        let t = LocalTransport::new(2);
+        let mut out = [0.0; 8];
+        for _ in 0..10 {
+            t.send_slice(0, 1, 7, &[1.0; 8]);
+            t.recv_into(1, 0, 7, &mut out);
+            t.send_slice(1, 0, 8, &[2.0; 8]);
+            t.recv_into(0, 1, 8, &mut out);
+        }
+        let p = t.pool_stats();
+        // one warm-up allocation; after that the single buffer circulates
+        // 0 -> 1 -> 0 through the two pools and every send recycles it
+        assert_eq!(p.allocated, 1, "{p:?}");
+        assert_eq!(p.recycled, 19, "{p:?}");
+        assert_eq!(p.returned, 20, "{p:?}");
+    }
+
+    #[test]
+    fn pool_prefers_capacity_fit_across_mixed_sizes() {
+        let t = LocalTransport::new(1);
+        // warm the pool with one small and one large buffer
+        t.send_slice(0, 0, 0, &[0.0; 4]);
+        t.send_slice(0, 0, 1, &[0.0; 1024]);
+        let (mut small, mut large) = ([0.0; 4], [0.0; 1024]);
+        t.recv_into(0, 0, 0, &mut small);
+        t.recv_into(0, 0, 1, &mut large);
+        let warm = t.pool_stats().allocated;
+        for _ in 0..5 {
+            t.send_slice(0, 0, 2, &[0.0; 1024]);
+            t.recv_into(0, 0, 2, &mut large);
+            t.send_slice(0, 0, 3, &[0.0; 4]);
+            t.recv_into(0, 0, 3, &mut small);
+        }
+        assert_eq!(t.pool_stats().allocated, warm, "no steady-state growth");
+
+        // adversarial ordering: after this round-trip the pool holds
+        // [large, small]; a small request must take the small buffer
+        // (best fit), not steal the large one and force the next
+        // large request to allocate
+        t.send_slice(0, 0, 4, &[0.0; 4]);
+        t.recv_into(0, 0, 4, &mut small);
+        t.send_slice(0, 0, 5, &[0.0; 4]);
+        t.send_slice(0, 0, 6, &[0.0; 1024]);
+        t.recv_into(0, 0, 5, &mut small);
+        t.recv_into(0, 0, 6, &mut large);
+        assert_eq!(t.pool_stats().allocated, warm, "small must not steal large");
+    }
+
+    #[test]
+    fn plain_recv_after_send_slice_interops() {
+        // compatibility: pooled sends are ordinary messages on the wire
+        let t = LocalTransport::new(2);
+        t.send_slice(0, 1, 9, &[5.0, 6.0]);
+        assert_eq!(t.recv(1, 0, 9), Payload::F32(vec![5.0, 6.0]));
     }
 }

@@ -108,6 +108,46 @@ impl Bench {
         self.results.last().unwrap()
     }
 
+    /// Machine-readable results: `{"group", "results": [{name, iters,
+    /// ns_per_iter, p50_ns, p95_ns, samples}]}` — the format the
+    /// repo's perf trajectory is tracked in across PRs.
+    pub fn to_json(&self) -> String {
+        use crate::util::json::Json;
+        use std::collections::BTreeMap;
+        let results: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = BTreeMap::new();
+                o.insert("name".into(), Json::Str(r.name.clone()));
+                o.insert("iters".into(), Json::Num(r.iters as f64));
+                o.insert("ns_per_iter".into(), Json::Num(r.mean_ns));
+                o.insert("p50_ns".into(), Json::Num(r.p50_ns));
+                o.insert("p95_ns".into(), Json::Num(r.p95_ns));
+                o.insert("samples".into(), Json::Num(r.samples as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        let mut root = BTreeMap::new();
+        root.insert("group".into(), Json::Str(self.group.clone()));
+        root.insert("results".into(), Json::Arr(results));
+        Json::Obj(root).to_string_pretty()
+    }
+
+    /// Write the JSON results to `path`.
+    pub fn write_json(&self, path: &std::path::Path) -> std::io::Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(path, self.to_json())
+    }
+
+    /// Emit `BENCH_<group>.json` in the current directory (bench
+    /// binaries call this so every run leaves a comparable record).
+    pub fn emit_json(&self) -> std::io::Result<()> {
+        self.write_json(std::path::Path::new(&format!("BENCH_{}.json", self.group)))
+    }
+
     /// Write all results as CSV (for EXPERIMENTS.md plots).
     pub fn write_csv(&self, path: &std::path::Path) -> std::io::Result<()> {
         let mut t = crate::util::csv::Table::new(vec![
@@ -156,6 +196,26 @@ mod tests {
             .bench("big", || (0..100_000u64).fold(0u64, |a, i| a ^ bb(i)))
             .mean_ns;
         assert!(big > small * 5.0, "big {big} vs small {small}");
+    }
+
+    #[test]
+    fn json_output_parses_and_carries_fields() {
+        use crate::util::json::Json;
+        let mut b = Bench::new("g").with_budget(5, 20, 3);
+        b.bench("x/y", || 1 + 1);
+        let parsed = Json::parse(&b.to_json()).unwrap();
+        assert_eq!(parsed.get("group").unwrap().as_str(), Some("g"));
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        let r = &results[0];
+        assert_eq!(r.get("name").unwrap().as_str(), Some("x/y"));
+        assert!(r.get("ns_per_iter").unwrap().as_f64().unwrap() > 0.0);
+        assert!(r.get("iters").unwrap().as_f64().unwrap() >= 1.0);
+        let json_path = std::env::temp_dir().join("densefold_bench_test.json");
+        b.write_json(&json_path).unwrap();
+        let text = std::fs::read_to_string(&json_path).unwrap();
+        assert!(Json::parse(&text).is_ok());
+        let _ = std::fs::remove_file(json_path);
     }
 
     #[test]

@@ -101,6 +101,7 @@ fn all_allreduce_algorithms_agree() {
     let mut finals = Vec::new();
     for algo in [
         AllreduceAlgo::Ring,
+        AllreduceAlgo::RingPipelined,
         AllreduceAlgo::RecursiveDoubling,
         AllreduceAlgo::ReduceBcast,
         AllreduceAlgo::Naive,

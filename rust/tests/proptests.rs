@@ -4,9 +4,10 @@
 
 use std::sync::Arc;
 
+use densefold::collectives::ring::allreduce_ring_pipelined;
 use densefold::collectives::{self, AllreduceAlgo};
 use densefold::coordinator::plan::{build_plan, CollectiveOp, Plan, TensorReport};
-use densefold::coordinator::fusion::FusionBuffer;
+use densefold::coordinator::fusion::{FusionArena, FusionBuffer};
 use densefold::tensor::{accumulate, AccumStrategy, DenseTensor, Grad, IndexedSlices};
 use densefold::transport::LocalTransport;
 use densefold::util::proptest::{run, Gen};
@@ -108,6 +109,94 @@ fn prop_accumulate_strategies_numerically_equivalent() {
                 "alg1 vs alg2 at {i}"
             );
         }
+    });
+}
+
+#[test]
+fn prop_ring_pipelined_bit_matches_ring_and_naive() {
+    run(CASES, |g| {
+        let p = g.usize_in(2, 8); // odd rank counts included
+        // ragged lengths, including len < p (degenerate empty chunks)
+        let len = if g.bool() { g.usize_in(1, p) } else { g.usize_in(1, 300) };
+        // segment sizes: single element, small, and segment > chunk
+        let seg = match g.usize_in(0, 3) {
+            0 => 1,
+            1 => g.usize_in(1, 32),
+            _ => len + g.usize_in(1, 64),
+        };
+        let data: Vec<Vec<f32>> = (0..p).map(|_| g.vec_f32(len, -10.0, 10.0)).collect();
+
+        let d = data.clone();
+        let plain = run_ranks(p, move |rank, t| {
+            let mut mine = d[rank].clone();
+            collectives::allreduce(t.as_ref(), rank, &mut mine, AllreduceAlgo::Ring, 0);
+            mine
+        });
+        let d = data.clone();
+        let piped = run_ranks(p, move |rank, t| {
+            let mut mine = d[rank].clone();
+            allreduce_ring_pipelined(t.as_ref(), rank, &mut mine, 0, seg);
+            mine
+        });
+        // same chunk schedule + same addition order => identical bits
+        for (a, b) in plain.iter().zip(&piped) {
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(x.to_bits(), y.to_bits(), "p={p} len={len} seg={seg}");
+            }
+        }
+        // and numerically the true sum (naive reference)
+        let d = data.clone();
+        let naive = run_ranks(p, move |rank, t| {
+            let mut mine = d[rank].clone();
+            collectives::allreduce(t.as_ref(), rank, &mut mine, AllreduceAlgo::Naive, 0);
+            mine
+        });
+        for (a, b) in naive.iter().zip(&piped) {
+            for (x, y) in a.iter().zip(b) {
+                assert!(
+                    (x - y).abs() < 1e-2 * (1.0 + y.abs()),
+                    "p={p} len={len} seg={seg}: naive {x} vs piped {y}"
+                );
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_fusion_arena_bit_matches_fusion_buffer() {
+    run(CASES, |g| {
+        let n = g.usize_in(1, 10);
+        let tensors: Vec<DenseTensor> = (0..n)
+            .map(|_| {
+                let rows = g.usize_in(1, 6);
+                let cols = g.usize_in(1, 6);
+                DenseTensor::from_vec(vec![rows, cols], g.vec_f32(rows * cols, -1.0, 1.0))
+            })
+            .collect();
+        let refs: Vec<&DenseTensor> = tensors.iter().collect();
+        let reference = FusionBuffer::pack(&refs);
+        let total: usize = tensors.iter().map(|t| t.data.len()).sum();
+
+        let mut arena = FusionArena::new();
+        arena.ensure(g.seed, 1, |_| total);
+        arena.pack_entry(0, &refs);
+        assert_eq!(arena.region_mut(0).to_vec(), reference.data);
+
+        // simulate the in-place reduce, then unpack both ways
+        let mut mutated = reference;
+        for v in arena.region_mut(0) {
+            *v = *v * 2.0 + 1.0;
+        }
+        for v in &mut mutated.data {
+            *v = *v * 2.0 + 1.0;
+        }
+        let mut in_place = tensors.clone();
+        arena.unpack_entry(0, &mut in_place);
+        assert_eq!(in_place, mutated.unpack(), "arena round-trip must bit-match");
+
+        // re-ensure with the same key is a no-op; the layout survives
+        arena.ensure(g.seed, 1, |_| total);
+        assert_eq!(arena.relayouts, 1);
     });
 }
 

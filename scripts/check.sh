@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Repo check gate: formatting, lints (warnings are errors), tests.
+# Run from the repo root. Requires a rust toolchain with clippy.
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "== cargo clippy --all-targets -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "All checks passed."
