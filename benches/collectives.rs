@@ -6,11 +6,14 @@
 
 use std::sync::Arc;
 
-use densefold::collectives::ring::{allreduce_ring, allreduce_ring_pipelined};
+use densefold::collectives::ring::{
+    allreduce_ring, allreduce_ring_pipelined, allreduce_ring_pipelined_wire,
+};
 use densefold::collectives::{self, AllreduceAlgo};
 use densefold::tensor::IndexedSlices;
 use densefold::transport::LocalTransport;
-use densefold::util::bench::Bench;
+use densefold::transport::wire::WireFormat;
+use densefold::util::bench::{black_box, Bench};
 
 fn run_ranks<R: Send + 'static>(
     p: usize,
@@ -96,6 +99,47 @@ fn main() {
                 data[0]
             })
         });
+    }
+
+    // Wire-format head-to-head on the pipelined ring: f32 vs fp16 vs
+    // bf16 at the sizes where bandwidth (and therefore compression)
+    // matters; pool-warm like the ring-vs-piped bench above.
+    for len in [262_144usize, 2_097_152] {
+        let kb = len * 4 / 1024;
+        for wire in [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16] {
+            bench.bench(&format!("wire/{}/{kb}KB/p{p}", wire.name()), move || {
+                run_ranks(p, move |rank, t| {
+                    let mut data = vec![rank as f32 * 0.25; len];
+                    for pass in 0..PASSES {
+                        allreduce_ring_pipelined_wire(
+                            t.as_ref(),
+                            rank,
+                            &mut data,
+                            pass << 12,
+                            collectives::ring::DEFAULT_SEGMENT_ELEMS,
+                            wire,
+                        );
+                    }
+                    data[0]
+                })
+            });
+        }
+    }
+
+    // Codec microbench: raw encode/decode throughput of the 16-bit
+    // wire formats (one 1 MB buffer, reused wire buffer).
+    {
+        let src: Vec<f32> = (0..262_144).map(|i| (i as f32) * 1e-3 - 100.0).collect();
+        for wire in [WireFormat::Fp16, WireFormat::Bf16] {
+            let src = src.clone();
+            let mut enc = Vec::new();
+            let mut dst = vec![0.0f32; src.len()];
+            bench.bench(&format!("wire-codec/{}/1MB", wire.name()), move || {
+                wire.encode_into(black_box(&src), &mut enc);
+                wire.decode_to(black_box(&enc), &mut dst);
+                dst[0]
+            });
+        }
     }
 
     // allgather of IndexedSlices vs allreduce of equivalent dense size:

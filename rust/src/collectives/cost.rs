@@ -8,6 +8,8 @@
 //! LocalTransport runs validate the *algorithms*, these models supply
 //! the *timing* at scales this machine cannot host.
 
+use crate::transport::WireFormat;
+
 /// Link parameters. Defaults approximate the paper's 100 Gb/s
 /// Intel Omni-Path fabric (α ≈ 1.5 µs MPI latency, β ≈ 12.5 GB/s).
 #[derive(Debug, Clone, Copy, PartialEq)]
@@ -25,6 +27,7 @@ impl Default for LinkModel {
 }
 
 impl LinkModel {
+    /// The paper's 100 Gb/s Intel Omni-Path fabric.
     pub fn omni_path() -> Self {
         Self { alpha: 1.5e-6, inv_beta: 1.0 / 12.5e9 }
     }
@@ -34,6 +37,7 @@ impl LinkModel {
         Self { alpha: 0.3e-6, inv_beta: 1.0 / 5.0e9 }
     }
 
+    /// Point-to-point time for one message of `bytes`.
     pub fn ptp(&self, bytes: f64) -> f64 {
         self.alpha + bytes * self.inv_beta
     }
@@ -72,6 +76,23 @@ pub fn ring_pipelined_allreduce_time(
     let s = (chunk / seg).ceil().max(1.0);
     let slots = 2.0 * (p - 1) as f64 + (s - 1.0);
     slots * (link.alpha + (chunk / s) * link.inv_beta)
+}
+
+/// [`ring_pipelined_allreduce_time`] under a compressed [`WireFormat`]:
+/// the byte volume on every link (and the segment size, which is fixed
+/// in *elements* on the live path) scales by the format's byte ratio;
+/// the message schedule is unchanged.  `WireFormat::F32` recovers the
+/// uncompressed model exactly.  The codec CPU cost is a node-side
+/// effect and lives in [`crate::sim::ClusterModel::allreduce_time_wire`].
+pub fn ring_pipelined_allreduce_time_wire(
+    link: &LinkModel,
+    p: u64,
+    bytes: f64,
+    seg_bytes: f64,
+    wire: WireFormat,
+) -> f64 {
+    let r = wire.byte_ratio();
+    ring_pipelined_allreduce_time(link, p, bytes * r, seg_bytes * r)
 }
 
 /// Recursive doubling: log2(p) steps, each moving the full buffer.
@@ -172,6 +193,38 @@ mod tests {
         let huge = ring_pipelined_allreduce_time(&link, 4, bytes, bytes);
         assert!(mid < tiny, "mid {mid} tiny {tiny}");
         assert!(mid < huge, "mid {mid} huge {huge}");
+    }
+
+    #[test]
+    fn wire_f32_recovers_uncompressed_model() {
+        let link = LinkModel::omni_path();
+        for p in [2u64, 64] {
+            for bytes in [4096.0, 139e6] {
+                let a = ring_pipelined_allreduce_time(&link, p, bytes, 64.0 * 1024.0);
+                let b = ring_pipelined_allreduce_time_wire(
+                    &link,
+                    p,
+                    bytes,
+                    64.0 * 1024.0,
+                    WireFormat::F32,
+                );
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn wire16_roughly_halves_bandwidth_bound_time() {
+        // at 139 MB with 1 MB segments the transfer is bandwidth-bound,
+        // so fp16 must land near half the f32 time
+        let link = LinkModel::omni_path();
+        let seg = 1024.0 * 1024.0;
+        let f32_t =
+            ring_pipelined_allreduce_time_wire(&link, 64, 139e6, seg, WireFormat::F32);
+        let fp16_t =
+            ring_pipelined_allreduce_time_wire(&link, 64, 139e6, seg, WireFormat::Fp16);
+        let ratio = f32_t / fp16_t;
+        assert!((1.8..2.1).contains(&ratio), "speedup {ratio}");
     }
 
     #[test]

@@ -12,18 +12,22 @@ use crate::transport::Transport;
 /// node 1, … (the standard block mapping the paper's runs used).
 #[derive(Debug, Clone, Copy)]
 pub struct NodeLayout {
+    /// Ranks per node.
     pub ppn: usize,
 }
 
 impl NodeLayout {
+    /// Node index hosting `rank`.
     pub fn node_of(&self, rank: usize) -> usize {
         rank / self.ppn
     }
 
+    /// The leader rank of `rank`'s node (lowest rank on the node).
     pub fn local_leader(&self, rank: usize) -> usize {
         self.node_of(rank) * self.ppn
     }
 
+    /// Whether `rank` is its node's leader.
     pub fn is_leader(&self, rank: usize) -> bool {
         rank % self.ppn == 0
     }

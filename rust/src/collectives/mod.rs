@@ -11,6 +11,7 @@
 //!
 //! Every algorithm has a matching analytic alpha–beta cost function in
 //! [`cost`], used by the cluster simulator at paper scale.
+#![warn(missing_docs)]
 
 pub mod allgather;
 pub mod cost;
@@ -20,17 +21,20 @@ pub mod rec_double;
 pub mod ring;
 pub mod tree;
 
-use crate::transport::Transport;
+use crate::transport::{Transport, WireFormat};
 
 pub use allgather::{allgather_indexed_slices, allgatherv_ring};
 
 /// Which allreduce algorithm to run / cost-model.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum AllreduceAlgo {
+    /// Classic ring: bandwidth-optimal, one chunk message per step.
     Ring,
     /// Segmented pipelined ring over the pooled slice transport API —
     /// the steady-state hot path (bit-identical results to `Ring`).
     RingPipelined,
+    /// Recursive doubling: latency-optimal, power-of-two ranks (the
+    /// dispatcher falls back to ring otherwise).
     RecursiveDoubling,
     /// reduce-to-root + broadcast (binomial trees)
     ReduceBcast,
@@ -39,6 +43,8 @@ pub enum AllreduceAlgo {
 }
 
 impl AllreduceAlgo {
+    /// Parse a CLI/config string (`ring`, `ring-pipelined`/`rp`,
+    /// `recursive-doubling`/`rd`, `reduce-bcast`/`tree`, `naive`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "ring" => Some(Self::Ring),
@@ -93,6 +99,41 @@ pub fn allreduce(
         }
         AllreduceAlgo::Naive => naive::allreduce_naive(t, rank, data, tag_base),
     }
+}
+
+/// [`allreduce`] with a selectable payload [`WireFormat`].
+///
+/// `WireFormat::F32` dispatches to [`allreduce`] unchanged (every
+/// algorithm, lossless).  A 16-bit wire format always rides the
+/// segmented pipelined ring
+/// ([`ring::allreduce_ring_pipelined_wire`]) regardless of `algo`:
+/// compression targets the bandwidth-bound hot path, and the pipelined
+/// ring is the one algorithm with the owner-chunk quantization that
+/// keeps lossy results bit-identical across ranks.  The latency-bound
+/// algorithms (recursive doubling, trees) move small tensors where
+/// halving bytes does not pay for the codec pass.
+pub fn allreduce_wire(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+    wire: WireFormat,
+) {
+    if wire == WireFormat::F32 {
+        return allreduce(t, rank, data, algo, tag_base);
+    }
+    if t.nranks() == 1 {
+        return;
+    }
+    ring::allreduce_ring_pipelined_wire(
+        t,
+        rank,
+        data,
+        tag_base,
+        ring::DEFAULT_SEGMENT_ELEMS,
+        wire,
+    );
 }
 
 /// Tag-space layout: each collective invocation gets a disjoint block

@@ -16,7 +16,7 @@
 //!   recycle payload buffers instead of allocating (MVAPICH2-style
 //!   chunking).
 
-use crate::transport::{Payload, Transport};
+use crate::transport::{Payload, Transport, WireFormat};
 
 /// Split `len` into p nearly-equal chunk ranges (first `len % p`
 /// chunks get one extra element).
@@ -120,6 +120,36 @@ pub fn allreduce_ring_pipelined(
     tag_base: u64,
     seg_elems: usize,
 ) {
+    allreduce_ring_pipelined_wire(t, rank, data, tag_base, seg_elems, WireFormat::F32)
+}
+
+/// [`allreduce_ring_pipelined`] with a selectable [`WireFormat`] for
+/// the payload traffic.
+///
+/// With `WireFormat::F32` this *is* the pipelined ring (the plain
+/// entry point delegates here).  With a 16-bit format, every segment
+/// is encoded on send and decoded on receive; all additions still
+/// happen in f32, so only the per-hop wire rounding is lossy.
+/// **Range caveat**: the wire carries partial sums (up to p× the
+/// per-rank magnitude), so `Fp16` saturates to ±inf beyond ±65 504 —
+/// deterministically on all ranks, with no panic.  Prefer `Bf16` when
+/// element magnitudes are not known to be bounded.
+///
+/// Cross-rank determinism is preserved under lossy wires: at the start
+/// of the allgather phase each rank rounds the chunk it owns through
+/// one encode/decode cycle ([`WireFormat::quantize_in_place`]), so the
+/// owner holds exactly the values it ships — every rank ends with
+/// bit-identical buffers (property-tested in `tests/proptests.rs`).
+/// The adaptive densification policy's lockstep decisions
+/// ([`crate::coordinator::policy`]) rest on this invariant.
+pub fn allreduce_ring_pipelined_wire(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    seg_elems: usize,
+    wire: WireFormat,
+) {
     let p = t.nranks();
     if p == 1 {
         return;
@@ -137,12 +167,19 @@ pub fn allreduce_ring_pipelined(
         let recv_chunk = (rank + p - s - 1) % p;
         let tag = tag_base + s as u64;
         for seg in segment_ranges(ranges[send_chunk].clone(), seg_elems) {
-            t.send_slice(rank, next, tag, &data[seg]);
+            t.send_slice_wire(rank, next, tag, &data[seg], wire);
         }
         for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
-            t.recv_add_into(rank, prev, tag, &mut data[seg]);
+            t.recv_add_into_wire(rank, prev, tag, &mut data[seg], wire);
         }
     }
+
+    // After reduce-scatter this rank owns the fully-reduced chunk
+    // (rank+1) mod p in full f32 precision. Round it through the wire
+    // format once so we keep exactly what the allgather phase ships
+    // (no-op for F32); from the second hop on, forwards re-encode
+    // already-representable values exactly.
+    wire.quantize_in_place(&mut data[ranges[(rank + 1) % p].clone()]);
 
     // Phase 2: segmented allgather — reduced segments land directly in
     // their final position, no intermediate buffer at all.
@@ -151,10 +188,10 @@ pub fn allreduce_ring_pipelined(
         let recv_chunk = (rank + p - s) % p;
         let tag = tag_base + (p + s) as u64;
         for seg in segment_ranges(ranges[send_chunk].clone(), seg_elems) {
-            t.send_slice(rank, next, tag, &data[seg]);
+            t.send_slice_wire(rank, next, tag, &data[seg], wire);
         }
         for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
-            t.recv_into(rank, prev, tag, &mut data[seg]);
+            t.recv_into_wire(rank, prev, tag, &mut data[seg], wire);
         }
     }
 }
@@ -291,6 +328,71 @@ mod tests {
         let steady = t.pool_stats();
         assert_eq!(steady.allocated, warm, "steady state must not allocate: {steady:?}");
         assert!(steady.recycled > warm, "recycling must dominate: {steady:?}");
+    }
+
+    #[test]
+    fn wire_f32_bit_matches_plain_pipelined() {
+        for p in [2usize, 5] {
+            let plain = run_ranks(p, |rank, t| {
+                let mut data = rank_data(rank, 101);
+                allreduce_ring_pipelined(t.as_ref(), rank, &mut data, 0, 16);
+                data
+            });
+            let wired = run_ranks(p, |rank, t| {
+                let mut data = rank_data(rank, 101);
+                allreduce_ring_pipelined_wire(t.as_ref(), rank, &mut data, 0, 16, WireFormat::F32);
+                data
+            });
+            assert_eq!(plain, wired, "p={p}");
+        }
+    }
+
+    #[test]
+    fn wire16_all_ranks_bit_identical() {
+        // the lossy wire must still leave every rank with the same
+        // bits (owner-chunk quantization) — the policy-lockstep
+        // invariant
+        for wire in [WireFormat::Fp16, WireFormat::Bf16] {
+            for p in [2usize, 3, 4] {
+                let results = run_ranks(p, move |rank, t| {
+                    let mut data = rank_data(rank, 67);
+                    allreduce_ring_pipelined_wire(t.as_ref(), rank, &mut data, 0, 8, wire);
+                    data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+                });
+                for r in &results[1..] {
+                    assert_eq!(r, &results[0], "{} p={p}", wire.name());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wire16_approximates_exact_sum() {
+        let p = 4;
+        let len = 256;
+        for (wire, u) in [(WireFormat::Fp16, 1.0 / 2048.0), (WireFormat::Bf16, 1.0 / 256.0)] {
+            let results = run_ranks(p, move |rank, t| {
+                let mut data = rank_data(rank, len);
+                allreduce_ring_pipelined_wire(t.as_ref(), rank, &mut data, 0, 32, wire);
+                data
+            });
+            let expected = expected_sum(p, len);
+            // per-element bound: one encode per reduce-scatter hop plus
+            // the final quantize, relative to the sum of |inputs|
+            for r in results {
+                for (j, (a, b)) in r.iter().zip(&expected).enumerate() {
+                    let sum_abs: f64 = (0..p)
+                        .map(|rk| rank_data(rk, len)[j].abs() as f64)
+                        .sum();
+                    let tol = (p as f64 + 1.0) * u * sum_abs + 1e-3;
+                    assert!(
+                        ((a - b).abs() as f64) <= tol,
+                        "{} elem {j}: {a} vs {b} (tol {tol})",
+                        wire.name()
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -28,16 +28,18 @@
 pub mod cache;
 pub mod fusion;
 pub mod plan;
+pub mod policy;
 pub mod timeline;
 
 use std::sync::Arc;
 
 use crate::collectives::{self, tree, AllreduceAlgo, ALGO_PHASE_TAGS, TAG_BLOCK};
-use crate::tensor::Grad;
-use crate::transport::{Payload, Transport};
+use crate::tensor::{DenseTensor, Grad};
+use crate::transport::{Payload, Transport, WireFormat};
 use cache::ResponseCache;
 use fusion::FusionArena;
 use plan::{build_plan, name_id, CollectiveOp, Plan, TensorReport};
+use policy::{Decision, DensifyPolicy, PolicyEngine};
 use timeline::{Phase, Timeline};
 
 /// Tag planes inside one cycle's TAG_BLOCK.
@@ -66,6 +68,7 @@ pub struct NamedGrad {
 /// Configuration of the exchange engine.
 #[derive(Debug, Clone, Copy)]
 pub struct ExchangeConfig {
+    /// Allreduce algorithm for the fused dense path.
     pub algo: AllreduceAlgo,
     /// Fusion threshold in bytes (HOROVOD_FUSION_THRESHOLD; the paper
     /// ran with 128 MB).
@@ -76,6 +79,14 @@ pub struct ExchangeConfig {
     /// (Horovod's response cache).  Steady-state cycles then exchange
     /// one fingerprint instead of the full readiness report + plan.
     pub cache_plans: bool,
+    /// Densification policy for sparse submissions — consulted per
+    /// tensor per cycle (see [`policy::DensifyPolicy`]).  The default
+    /// `AlwaysGather` reproduces the faithful Horovod dispatch:
+    /// representation decided upstream, coordinator obeys.
+    pub policy: DensifyPolicy,
+    /// Wire encoding for the fused dense payload traffic (the
+    /// allgather control/index traffic stays uncompressed).
+    pub wire: WireFormat,
 }
 
 impl Default for ExchangeConfig {
@@ -87,6 +98,8 @@ impl Default for ExchangeConfig {
             fusion_threshold: 128 * 1024 * 1024,
             average: true,
             cache_plans: true,
+            policy: DensifyPolicy::AlwaysGather,
+            wire: WireFormat::F32,
         }
     }
 }
@@ -106,6 +119,9 @@ pub struct ExchangeReport {
     pub negotiate_us: u64,
     pub n_allreduce_groups: usize,
     pub n_allgather_ops: usize,
+    /// Sparse submissions the densification policy converted to dense
+    /// this cycle.
+    pub n_policy_densified: usize,
 }
 
 /// Per-rank handle on the exchange engine.
@@ -117,6 +133,7 @@ pub struct GradExchange {
     cycle: u64,
     cache: ResponseCache,
     arena: FusionArena,
+    policy: PolicyEngine,
 }
 
 impl GradExchange {
@@ -129,6 +146,7 @@ impl GradExchange {
             cycle: 0,
             cache: ResponseCache::new(),
             arena: FusionArena::new(),
+            policy: PolicyEngine::new(config.policy),
         }
     }
 
@@ -166,6 +184,47 @@ impl GradExchange {
         self.cycle += 1;
         let mut report = ExchangeReport::default();
         let wire_before = t.stats().bytes;
+
+        // ---- 0: densification policy ----
+        // Ask the policy about every sparse submission and densify the
+        // ones it routes to the reduce path.  Decisions are in
+        // lockstep across ranks (each engine observes only exchange
+        // *outputs*, which are identical everywhere), so the readiness
+        // fingerprints below still agree; a divergence would be caught
+        // by the negotiation's representation check.
+        let mut policy_watch: Vec<usize> = Vec::new();
+        let grads: Vec<NamedGrad> = if self.config.policy == DensifyPolicy::AlwaysGather {
+            grads // zero-overhead default: representation decided upstream
+        } else {
+            grads
+                .into_iter()
+                .enumerate()
+                .map(|(i, g)| match g.grad {
+                    Grad::Sparse(s) => {
+                        let id = name_id(&g.name);
+                        if self.config.policy.is_adaptive() {
+                            policy_watch.push(i);
+                        }
+                        let decision =
+                            self.policy.decide(id, s.nrows, s.row_width, p, self.config.wire);
+                        match decision {
+                            Decision::Dense => {
+                                report.n_policy_densified += 1;
+                                // to_dense allocates V×D per cycle; the
+                                // tensor is returned to (and dropped by)
+                                // the caller, so pooling it needs a
+                                // buffer-return API — see ROADMAP
+                                NamedGrad { name: g.name, grad: Grad::Dense(s.to_dense()) }
+                            }
+                            Decision::Gather => {
+                                NamedGrad { name: g.name, grad: Grad::Sparse(s) }
+                            }
+                        }
+                    }
+                    dense => NamedGrad { name: g.name, grad: dense },
+                })
+                .collect()
+        };
 
         // ---- 1+2+3: negotiation ----
         let neg_start = self.timeline.now_us();
@@ -258,13 +317,14 @@ impl GradExchange {
                         );
                     }
                     let algo = self.config.algo;
+                    let wire = self.config.wire;
                     let rank = self.rank;
                     let t_ref = t.as_ref();
                     let average = self.config.average;
                     {
                         let region = self.arena.region_mut(entry_idx);
                         self.timeline.record(&label, Phase::Allreduce, bytes, || {
-                            collectives::allreduce(t_ref, rank, region, algo, tag);
+                            collectives::allreduce_wire(t_ref, rank, region, algo, tag, wire);
                             if average {
                                 let inv = 1.0 / p as f32;
                                 for x in region.iter_mut() {
@@ -321,6 +381,15 @@ impl GradExchange {
             .into_iter()
             .map(|g| g.expect("plan did not cover every tensor"))
             .collect();
+        // Feed the policy-managed tensors' *outputs* back into the
+        // occupancy history — the same bits on every rank, keeping the
+        // engines in lockstep for the next cycle's decisions.
+        if self.config.policy.is_adaptive() {
+            for &i in &policy_watch {
+                let g = &out[i];
+                self.policy.observe(name_id(&g.name), &g.grad, p);
+            }
+        }
         (out, report)
     }
 
@@ -438,7 +507,7 @@ mod tests {
             algo: AllreduceAlgo::Ring,
             fusion_threshold: 1024,
             average,
-            cache_plans: true,
+            ..Default::default()
         }
     }
 
@@ -634,6 +703,152 @@ mod tests {
             assert_eq!(e.arena_relayouts(), 1, "one layout at first negotiation");
         }
         assert!(engines[0].cache_hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn policy_always_dense_densifies_on_first_cycle() {
+        let p = 3;
+        let results = run_ranks(p, move |rank, t| {
+            let cfg = ExchangeConfig {
+                policy: DensifyPolicy::AlwaysDense,
+                fusion_threshold: 1024,
+                average: false,
+                ..Default::default()
+            };
+            let mut ex = GradExchange::new(t, rank, cfg);
+            let grads = vec![NamedGrad {
+                name: "embedding".into(),
+                grad: Grad::Sparse(IndexedSlices::new(4, 2, vec![rank as i32], vec![1.0, 2.0])),
+            }];
+            ex.exchange(grads)
+        });
+        for (out, report) in results {
+            assert_eq!(report.n_policy_densified, 1);
+            assert_eq!(report.n_allreduce_groups, 1);
+            assert_eq!(report.n_allgather_ops, 0);
+            match &out[0].grad {
+                Grad::Dense(d) => {
+                    // rows 0..3 each got one rank's [1, 2]
+                    assert_eq!(d.data, vec![1., 2., 1., 2., 1., 2., 0., 0.]);
+                }
+                _ => panic!("policy must have densified"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_converges_to_dense_on_dense_stream() {
+        // every rank's "sparse" embedding gradient touches every row:
+        // cycle 1 gathers (cold start), the engines observe occupancy
+        // 1.0 in lockstep, every later cycle densifies on all ranks
+        let p = 2;
+        let v = 8usize;
+        let results = run_ranks(p, move |rank, t| {
+            let cfg = ExchangeConfig {
+                policy: DensifyPolicy::Adaptive { dense_above: 0.5 },
+                fusion_threshold: 1024,
+                average: false,
+                ..Default::default()
+            };
+            let mut ex = GradExchange::new(t, rank, cfg);
+            let mut densified = Vec::new();
+            let mut last_dense = false;
+            for _ in 0..4 {
+                let grads = vec![NamedGrad {
+                    name: "embedding".into(),
+                    grad: Grad::Sparse(IndexedSlices::new(
+                        v,
+                        1,
+                        (0..v as i32).collect(),
+                        vec![(rank + 1) as f32; v],
+                    )),
+                }];
+                let (out, report) = ex.exchange(grads);
+                densified.push(report.n_policy_densified);
+                last_dense = !out[0].grad.is_sparse();
+            }
+            (densified, last_dense)
+        });
+        for (densified, last_dense) in results {
+            assert_eq!(densified, vec![0, 1, 1, 1], "cold-start gather, then dense");
+            assert!(last_dense);
+        }
+    }
+
+    #[test]
+    fn adaptive_policy_keeps_gather_on_sparse_stream() {
+        let p = 2;
+        let results = run_ranks(p, move |rank, t| {
+            let cfg = ExchangeConfig {
+                policy: DensifyPolicy::Adaptive { dense_above: 0.5 },
+                fusion_threshold: 1024,
+                average: false,
+                ..Default::default()
+            };
+            let mut ex = GradExchange::new(t, rank, cfg);
+            let mut total_densified = 0;
+            for _ in 0..4 {
+                let grads = vec![NamedGrad {
+                    name: "embedding".into(),
+                    // 2 distinct rows of 64 globally: occupancy ~0.03
+                    grad: Grad::Sparse(IndexedSlices::new(
+                        64,
+                        1,
+                        vec![rank as i32],
+                        vec![1.0],
+                    )),
+                }];
+                let (out, report) = ex.exchange(grads);
+                total_densified += report.n_policy_densified;
+                assert!(out[0].grad.is_sparse());
+            }
+            total_densified
+        });
+        assert!(results.iter().all(|&n| n == 0));
+    }
+
+    #[test]
+    fn fp16_wire_exchange_approximates_f32_and_halves_traffic() {
+        let p = 4;
+        let len = 1024usize;
+        let run_with = |wire: WireFormat| {
+            run_ranks(p, move |rank, t| {
+                let cfg = ExchangeConfig {
+                    wire,
+                    fusion_threshold: 1 << 20,
+                    average: false,
+                    ..Default::default()
+                };
+                let mut ex = GradExchange::new(t.clone(), rank, cfg);
+                let before = t.stats().bytes;
+                let (out, _) =
+                    ex.exchange(vec![dense_grad("w", vec![0.25 + rank as f32; len])]);
+                let data = match &out[0].grad {
+                    Grad::Dense(d) => d.data.clone(),
+                    _ => panic!(),
+                };
+                (data, t.stats().bytes - before)
+            })
+        };
+        let f32_runs = run_with(WireFormat::F32);
+        let fp16_runs = run_with(WireFormat::Fp16);
+        // expected sum: 4*0.25 + 0+1+2+3 = 7.0
+        for (data, _) in &fp16_runs {
+            for &x in data {
+                assert!((x - 7.0).abs() < 0.05, "fp16 result {x}");
+            }
+        }
+        // identical across ranks, bit for bit (lockstep invariant)
+        for (data, _) in &fp16_runs[1..] {
+            assert_eq!(data, &fp16_runs[0].0);
+        }
+        // payload traffic roughly halves (control traffic is shared)
+        let f32_bytes: u64 = f32_runs.iter().map(|r| r.1).max().unwrap();
+        let fp16_bytes: u64 = fp16_runs.iter().map(|r| r.1).max().unwrap();
+        assert!(
+            (fp16_bytes as f64) < 0.7 * f32_bytes as f64,
+            "fp16 {fp16_bytes} vs f32 {f32_bytes}"
+        );
     }
 
     #[test]

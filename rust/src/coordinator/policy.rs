@@ -1,0 +1,342 @@
+//! Densification policy — *when* to turn an assumed-sparse gradient
+//! into a dense one.
+//!
+//! The paper hard-wires its answer (densify the transformer's
+//! embedding gradients) via the per-run
+//! [`crate::tensor::AccumStrategy`].  This module turns that one-time
+//! insight into a measured, self-tuning decision: the coordinator asks
+//! a [`DensifyPolicy`] each cycle, per tensor, whether the sparse
+//! submission should ride the dense allreduce (densify up front) or
+//! the TF-semantics allgather.  Adaptive policies consult the
+//! EWMA-smoothed occupancy history
+//! ([`crate::tensor::occupancy::OccupancyTracker`]); the cost-model
+//! policy prices both collectives with the α–β terms of
+//! [`crate::collectives::cost`], mirroring Mesh-TensorFlow's
+//! per-tensor layout reasoning.
+//!
+//! ## Lockstep determinism
+//!
+//! Every rank runs its own [`PolicyEngine`], and all ranks **must**
+//! reach the same decision every cycle or the readiness negotiation
+//! panics (the paper's mixed-representation hazard).  The engine
+//! guarantees this by construction: decisions are a pure function of
+//! (policy, per-tensor history), and the history is only ever fed
+//! *exchange outputs*, which are identical on all ranks — the
+//! allgather concatenates in rank order, and the ring-family allreduce
+//! is bit-identical across ranks (even under a lossy wire format, via
+//! owner-chunk quantization).  Cold start is deterministic too: no
+//! history means [`Decision::Gather`], the TF-faithful default.
+
+use crate::collectives::cost::{
+    ring_allgather_time, ring_pipelined_allreduce_time_wire, LinkModel,
+};
+use crate::collectives::ring::DEFAULT_SEGMENT_ELEMS;
+use crate::tensor::occupancy::OccupancyTracker;
+use crate::tensor::Grad;
+use crate::transport::WireFormat;
+
+/// EWMA smoothing factor for the occupancy history: heavy enough that
+/// one odd batch cannot flip the representation, light enough to
+/// converge within a few cycles.
+const EWMA_ALPHA: f64 = 0.4;
+
+/// What the coordinator should do with a sparse submission this cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Densify up front and ride the fused dense allreduce.
+    Dense,
+    /// Keep IndexedSlices and allgather (TF concatenation semantics).
+    Gather,
+}
+
+/// Per-tensor densification policy, consulted by
+/// [`crate::coordinator::GradExchange`] every exchange cycle.
+///
+/// ```
+/// use densefold::coordinator::policy::{Decision, DensifyPolicy, PolicyEngine};
+/// use densefold::tensor::{Grad, IndexedSlices};
+/// use densefold::transport::WireFormat;
+///
+/// let mut engine = PolicyEngine::new(DensifyPolicy::Adaptive { dense_above: 0.5 });
+/// // cold start: no history yet — stay on the TF gather path
+/// assert_eq!(engine.decide(7, 8, 4, 2, WireFormat::F32), Decision::Gather);
+///
+/// // the exchange output shows every row of the variable carries
+/// // gradient: the "sparse" tensor is actually dense
+/// let gathered = IndexedSlices::new(8, 4, (0..8i32).collect(), vec![1.0; 32]);
+/// engine.observe(7, &Grad::Sparse(gathered), 2);
+/// assert_eq!(engine.decide(7, 8, 4, 2, WireFormat::F32), Decision::Dense);
+///
+/// // policies parse from the CLI surface
+/// assert_eq!(DensifyPolicy::parse("adaptive:0.25"),
+///            Some(DensifyPolicy::Adaptive { dense_above: 0.25 }));
+/// assert_eq!(DensifyPolicy::parse("cost-model"), Some(DensifyPolicy::CostModel));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DensifyPolicy {
+    /// Respect the submitted representation: sparse stays sparse
+    /// (TF/Horovod default dispatch; the engine's zero-overhead
+    /// default).
+    AlwaysGather,
+    /// Densify every sparse submission (the paper's fix, Listing 1,
+    /// applied at the coordinator instead of the accumulation layer).
+    AlwaysDense,
+    /// Densify when the EWMA-smoothed row occupancy of the *exchanged*
+    /// gradient is at least `dense_above` (in `[0, 1]`).
+    Adaptive {
+        /// Occupancy threshold at/above which the tensor goes dense.
+        dense_above: f64,
+    },
+    /// Price both collectives with the α–β cost model each cycle
+    /// (dense pipelined-ring allreduce of `nrows·row_width` f32 under
+    /// the configured wire format vs. ring allgather of the observed
+    /// per-rank slice volume) and pick the cheaper.
+    CostModel,
+}
+
+impl DensifyPolicy {
+    /// Parse a CLI/config string: `always-gather`/`gather`,
+    /// `always-dense`/`dense`, `adaptive` (threshold 0.5),
+    /// `adaptive:<threshold>`, `cost-model`/`cost`.
+    pub fn parse(s: &str) -> Option<Self> {
+        if let Some(t) = s.strip_prefix("adaptive:") {
+            let dense_above: f64 = t.parse().ok()?;
+            if !(0.0..=1.0).contains(&dense_above) {
+                return None;
+            }
+            return Some(Self::Adaptive { dense_above });
+        }
+        match s {
+            "always-gather" | "gather" => Some(Self::AlwaysGather),
+            "always-dense" | "dense" => Some(Self::AlwaysDense),
+            "adaptive" => Some(Self::Adaptive { dense_above: 0.5 }),
+            "cost-model" | "cost" => Some(Self::CostModel),
+            _ => None,
+        }
+    }
+
+    /// Stable name for tables and logs.
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::AlwaysGather => "always-gather",
+            Self::AlwaysDense => "always-dense",
+            Self::Adaptive { .. } => "adaptive",
+            Self::CostModel => "cost-model",
+        }
+    }
+
+    /// Whether this policy needs the occupancy-observation pass over
+    /// exchange outputs (the fixed policies decide without history).
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self, Self::Adaptive { .. } | Self::CostModel)
+    }
+}
+
+/// Per-rank policy engine: the policy plus the per-tensor occupancy
+/// history it decides from.  See the module docs for the lockstep
+/// determinism argument.
+#[derive(Debug)]
+pub struct PolicyEngine {
+    policy: DensifyPolicy,
+    tracker: OccupancyTracker,
+    /// Link model pricing the cost-model policy (the in-process
+    /// transport is shared-memory-class).
+    link: LinkModel,
+}
+
+impl PolicyEngine {
+    /// Engine for `policy` with the default EWMA smoothing and a
+    /// shared-memory link model.
+    pub fn new(policy: DensifyPolicy) -> Self {
+        Self {
+            policy,
+            tracker: OccupancyTracker::new(EWMA_ALPHA),
+            link: LinkModel::shared_memory(),
+        }
+    }
+
+    /// Engine pricing the cost-model policy against a specific link.
+    pub fn with_link(policy: DensifyPolicy, link: LinkModel) -> Self {
+        Self { policy, tracker: OccupancyTracker::new(EWMA_ALPHA), link }
+    }
+
+    /// The configured policy.
+    pub fn policy(&self) -> DensifyPolicy {
+        self.policy
+    }
+
+    /// Decide the representation for a sparse submission to variable
+    /// `id` of shape `[nrows, row_width]`, exchanged across `p` ranks
+    /// with dense traffic encoded as `wire`.  Pure in the engine state.
+    pub fn decide(
+        &self,
+        id: u64,
+        nrows: usize,
+        row_width: usize,
+        p: usize,
+        wire: WireFormat,
+    ) -> Decision {
+        match self.policy {
+            DensifyPolicy::AlwaysGather => Decision::Gather,
+            DensifyPolicy::AlwaysDense => Decision::Dense,
+            DensifyPolicy::Adaptive { dense_above } => match self.tracker.stats(id) {
+                Some(s) if s.occupancy >= dense_above => Decision::Dense,
+                _ => Decision::Gather,
+            },
+            DensifyPolicy::CostModel => {
+                let Some(s) = self.tracker.stats(id) else {
+                    return Decision::Gather; // deterministic cold start
+                };
+                let dense_bytes = (nrows * row_width * 4) as f64;
+                let seg_bytes = (DEFAULT_SEGMENT_ELEMS * 4) as f64;
+                let reduce_t = ring_pipelined_allreduce_time_wire(
+                    &self.link,
+                    p as u64,
+                    dense_bytes,
+                    seg_bytes,
+                    wire,
+                );
+                // the gather ships f32 values + i32 indices, uncompressed
+                let per_rank = s.rows_per_rank * (row_width as f64 * 4.0 + 4.0);
+                let gather_t = ring_allgather_time(&self.link, p as u64, per_rank);
+                if reduce_t <= gather_t {
+                    Decision::Dense
+                } else {
+                    Decision::Gather
+                }
+            }
+        }
+    }
+
+    /// Feed one exchange *output* back into the history.  Call with
+    /// the accumulated gradient every rank received — identical bits
+    /// on all ranks — never with per-rank inputs.
+    pub fn observe(&mut self, id: u64, out: &Grad, p: usize) {
+        match out {
+            Grad::Sparse(s) => self.tracker.observe_gathered(id, s, p),
+            Grad::Dense(t) => self.tracker.observe_dense(id, t),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::{DenseTensor, IndexedSlices};
+
+    fn gathered(nrows: usize, idx: Vec<i32>) -> Grad {
+        let n = idx.len();
+        Grad::Sparse(IndexedSlices::new(nrows, 2, idx, vec![1.0; n * 2]))
+    }
+
+    #[test]
+    fn fixed_policies_ignore_history() {
+        let mut dense = PolicyEngine::new(DensifyPolicy::AlwaysDense);
+        let mut gather = PolicyEngine::new(DensifyPolicy::AlwaysGather);
+        for e in [&mut dense, &mut gather] {
+            e.observe(1, &gathered(8, vec![0, 1, 2, 3, 4, 5, 6, 7]), 2);
+        }
+        assert_eq!(dense.decide(1, 8, 2, 2, WireFormat::F32), Decision::Dense);
+        assert_eq!(gather.decide(1, 8, 2, 2, WireFormat::F32), Decision::Gather);
+        assert!(!DensifyPolicy::AlwaysDense.is_adaptive());
+        assert!(DensifyPolicy::CostModel.is_adaptive());
+    }
+
+    #[test]
+    fn adaptive_threshold_flips_on_observed_occupancy() {
+        let mut e = PolicyEngine::new(DensifyPolicy::Adaptive { dense_above: 0.5 });
+        assert_eq!(e.decide(1, 8, 2, 2, WireFormat::F32), Decision::Gather, "cold start");
+        e.observe(1, &gathered(8, (0..8).collect()), 2); // occupancy 1.0
+        assert_eq!(e.decide(1, 8, 2, 2, WireFormat::F32), Decision::Dense);
+        // a genuinely sparse tensor under the same engine stays gather
+        e.observe(2, &gathered(100, vec![3, 3]), 2); // occupancy 0.01
+        assert_eq!(e.decide(2, 100, 2, 2, WireFormat::F32), Decision::Gather);
+    }
+
+    #[test]
+    fn adaptive_is_smoothed_not_flappy() {
+        // one dense-looking batch in a sparse stream must not flip the
+        // decision: EWMA needs sustained evidence
+        let mut e = PolicyEngine::new(DensifyPolicy::Adaptive { dense_above: 0.5 });
+        for _ in 0..5 {
+            e.observe(1, &gathered(100, vec![1, 2]), 2); // occ 0.02
+        }
+        e.observe(1, &gathered(100, (0..100).collect()), 2); // occ 1.0 once
+        // EWMA(0.4): 0.02 + 0.4*(1.0-0.02) ≈ 0.41 < 0.5
+        assert_eq!(e.decide(1, 100, 2, 2, WireFormat::F32), Decision::Gather);
+        e.observe(1, &gathered(100, (0..100).collect()), 2); // sustained
+        assert_eq!(e.decide(1, 100, 2, 2, WireFormat::F32), Decision::Dense);
+    }
+
+    #[test]
+    fn adaptive_reads_dense_outputs_too() {
+        // once densified, occupancy is observed on the reduced tensor,
+        // so a stream that turns sparse flips back
+        let mut e = PolicyEngine::new(DensifyPolicy::Adaptive { dense_above: 0.5 });
+        let mut hot = DenseTensor::zeros(vec![4, 2]);
+        hot.data.iter_mut().for_each(|x| *x = 1.0);
+        e.observe(1, &Grad::Dense(hot), 2);
+        assert_eq!(e.decide(1, 4, 2, 2, WireFormat::F32), Decision::Dense);
+        let cold = DenseTensor::zeros(vec![4, 2]); // all rows empty
+        for _ in 0..4 {
+            e.observe(1, &Grad::Dense(cold.clone()), 2);
+        }
+        assert_eq!(e.decide(1, 4, 2, 2, WireFormat::F32), Decision::Gather);
+    }
+
+    #[test]
+    fn cost_model_prefers_dense_at_high_occupancy_scale() {
+        // V=2048, D=16, p=4: dense 128 KB allreduce beats gathering
+        // 4×2048 slice rows (see the sizing argument in the PR notes)
+        let mut e = PolicyEngine::new(DensifyPolicy::CostModel);
+        assert_eq!(e.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Gather, "cold");
+        e.observe(1, &gathered_wide(2048, 16, (0..2048).collect()), 1);
+        assert_eq!(e.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Dense);
+    }
+
+    #[test]
+    fn cost_model_flips_back_when_stream_turns_sparse() {
+        // no one-way ratchet: dense observations keep feeding the
+        // rows-per-rank estimate, so a stream that empties out flips
+        // back to gather
+        let mut e = PolicyEngine::new(DensifyPolicy::CostModel);
+        e.observe(1, &gathered_wide(2048, 16, (0..2048).collect()), 1);
+        assert_eq!(e.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Dense);
+        let mut thin = DenseTensor::zeros(vec![2048, 16]);
+        thin.data[0] = 1.0; // one occupied row
+        for _ in 0..8 {
+            e.observe(1, &Grad::Dense(thin.clone()), 4);
+        }
+        assert_eq!(e.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Gather);
+    }
+
+    #[test]
+    fn cost_model_prefers_gather_when_truly_sparse() {
+        let mut e = PolicyEngine::new(DensifyPolicy::CostModel);
+        e.observe(1, &gathered_wide(2048, 16, vec![5, 9]), 2); // 1 row/rank
+        assert_eq!(e.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Gather);
+    }
+
+    fn gathered_wide(nrows: usize, d: usize, idx: Vec<i32>) -> Grad {
+        let n = idx.len();
+        Grad::Sparse(IndexedSlices::new(nrows, d, idx, vec![1.0; n * d]))
+    }
+
+    #[test]
+    fn parse_roundtrip_and_bounds() {
+        for p in [
+            DensifyPolicy::AlwaysGather,
+            DensifyPolicy::AlwaysDense,
+            DensifyPolicy::Adaptive { dense_above: 0.5 },
+            DensifyPolicy::CostModel,
+        ] {
+            assert_eq!(DensifyPolicy::parse(p.name()).map(|q| q.name()), Some(p.name()));
+        }
+        assert_eq!(
+            DensifyPolicy::parse("adaptive:0.75"),
+            Some(DensifyPolicy::Adaptive { dense_above: 0.75 })
+        );
+        assert_eq!(DensifyPolicy::parse("adaptive:1.5"), None);
+        assert_eq!(DensifyPolicy::parse("nope"), None);
+    }
+}

@@ -15,7 +15,9 @@ use std::collections::HashMap;
 use std::path::PathBuf;
 
 use densefold::collectives::AllreduceAlgo;
+use densefold::coordinator::policy::DensifyPolicy;
 use densefold::coordinator::ExchangeConfig;
+use densefold::transport::WireFormat;
 use densefold::data::CorpusConfig;
 use densefold::harness;
 use densefold::runtime::Manifest;
@@ -65,6 +67,11 @@ commands:
           --timeline F   write rank-0 Horovod timeline JSON
           --fusion-mb N  fusion threshold in MB          (default 128)
           --algo ring|ring-pipelined|rd|tree|naive  allreduce algorithm
+          --policy always-gather|always-dense|adaptive[:T]|cost-model
+                         densification policy            (default always-gather)
+          --wire f32|fp16|bf16  dense-path wire format   (default f32)
+                         (a 16-bit wire always rides the pipelined
+                          ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
           --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation
           --all          every figure
@@ -123,6 +130,18 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     let fusion_mb: u64 = flag(flags, "fusion-mb", "128").parse()?;
     let algo = AllreduceAlgo::parse(flag(flags, "algo", "ring-pipelined"))
         .ok_or_else(|| anyhow::anyhow!("bad --algo"))?;
+    let policy = DensifyPolicy::parse(flag(flags, "policy", "always-gather"))
+        .ok_or_else(|| anyhow::anyhow!("bad --policy"))?;
+    let wire = WireFormat::parse(flag(flags, "wire", "f32"))
+        .ok_or_else(|| anyhow::anyhow!("bad --wire"))?;
+    if wire != WireFormat::F32 && algo != AllreduceAlgo::RingPipelined {
+        eprintln!(
+            "note: --wire {} forces the ring-pipelined allreduce for dense \
+             traffic; --algo {:?} is ignored on that path",
+            wire.name(),
+            algo
+        );
+    }
     let timeline_path = flags.get("timeline").cloned();
 
     let cfg = SessionConfig {
@@ -135,6 +154,8 @@ fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             fusion_threshold: fusion_mb * 1024 * 1024,
             average: true,
             cache_plans: true,
+            policy,
+            wire,
         },
         corpus: CorpusConfig {
             vocab: preset.config.vocab,
@@ -270,6 +291,21 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             &harness::ablation::hierarchical_vs_flat(),
             &out_dir,
             "ablation_hierarchical",
+        )?;
+        harness::emit(
+            &harness::ablation::policy_wire_grid(),
+            &out_dir,
+            "ablation_policy_wire_grid",
+        )?;
+        harness::emit(
+            &harness::ablation::wire_weak_scaling_replot(),
+            &out_dir,
+            "ablation_wire_weak_scaling",
+        )?;
+        harness::emit(
+            &harness::ablation::wire_strong_scaling_replot(),
+            &out_dir,
+            "ablation_wire_strong_scaling",
         )?;
         ran += 1;
     }

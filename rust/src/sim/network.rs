@@ -9,6 +9,12 @@
 //! curve shapes.
 
 use crate::collectives::cost::{self, LinkModel};
+use crate::transport::WireFormat;
+
+/// Per-f32-byte cost of one 16-bit encode *or* decode pass
+/// (vectorized f32↔f16/bf16 conversion runs at memcpy class,
+/// ≈ 33 GB/s — x86 F16C / AVX2 territory).
+const CODEC_COST_PER_BYTE: f64 = 0.3e-10;
 
 #[derive(Debug, Clone, Copy)]
 pub struct ClusterModel {
@@ -75,6 +81,31 @@ impl ClusterModel {
     pub fn allreduce_time_pipelined(&self, p: u64, bytes: f64, seg_bytes: f64) -> f64 {
         let link = self.effective_link(p);
         cost::ring_pipelined_allreduce_time(&link, p, bytes, seg_bytes)
+            + 2.0 * bytes * self.pack_cost_per_byte
+    }
+
+    /// Segmented pipelined ring-allreduce time under a compressed wire
+    /// format.  The codec rides *inside* the pipeline — the sender
+    /// encodes segment *j+1* while segment *j* is in flight, exactly
+    /// like the live path's pooled encode — so each slot's per-byte
+    /// cost becomes `ratio·(1/β) + 2·codec` (encode + decode per f32
+    /// byte) instead of a separate full-buffer pass.  The f32-side
+    /// arena pack/unpack tax is unchanged.  `WireFormat::F32` recovers
+    /// [`ClusterModel::allreduce_time_pipelined`] exactly.
+    pub fn allreduce_time_wire(
+        &self,
+        p: u64,
+        bytes: f64,
+        seg_bytes: f64,
+        wire: WireFormat,
+    ) -> f64 {
+        let link = self.effective_link(p);
+        let codec = if wire == WireFormat::F32 { 0.0 } else { 2.0 * CODEC_COST_PER_BYTE };
+        let link_wire = LinkModel {
+            alpha: link.alpha,
+            inv_beta: wire.byte_ratio() * link.inv_beta + codec,
+        };
+        cost::ring_pipelined_allreduce_time(&link_wire, p, bytes, seg_bytes)
             + 2.0 * bytes * self.pack_cost_per_byte
     }
 
@@ -148,6 +179,29 @@ mod tests {
             let classic = c.allreduce_time(p, 139e6);
             let piped = c.allreduce_time_pipelined(p, 139e6, 64.0 * 1024.0);
             assert!(piped <= classic, "p={p}: {piped} vs {classic}");
+        }
+    }
+
+    #[test]
+    fn wire_f32_matches_pipelined_time() {
+        let c = ClusterModel::zenith(4);
+        let seg = 64.0 * 1024.0;
+        for p in [8u64, 1200] {
+            assert_eq!(
+                c.allreduce_time_wire(p, 139e6, seg, WireFormat::F32),
+                c.allreduce_time_pipelined(p, 139e6, seg),
+            );
+        }
+    }
+
+    #[test]
+    fn wire16_beats_f32_at_scale() {
+        let c = ClusterModel::zenith(4);
+        let seg = 64.0 * 1024.0;
+        for p in [64u64, 1200] {
+            let f = c.allreduce_time_wire(p, 139e6, seg, WireFormat::F32);
+            let h = c.allreduce_time_wire(p, 139e6, seg, WireFormat::Fp16);
+            assert!(h < f, "p={p}: fp16 {h} vs f32 {f}");
         }
     }
 

@@ -19,6 +19,11 @@
 
 use super::network::ClusterModel;
 use crate::tensor::accum::{peak_bytes_model, AccumStrategy};
+use crate::transport::WireFormat;
+
+/// Segment size assumed by the wire-aware step-time models (the live
+/// hot path's `DEFAULT_SEGMENT_ELEMS` in bytes).
+const WIRE_SEG_BYTES: f64 = 64.0 * 1024.0;
 
 /// Workload constants for the paper's transformer.
 #[derive(Debug, Clone, Copy)]
@@ -109,6 +114,59 @@ impl PaperModel {
         self.t_compute + self.exchange_time(cluster, strategy, p)
     }
 
+    /// [`PaperModel::exchange_time`] for the dense strategy with the
+    /// fused allreduce traffic encoded as `wire` (the pipelined-ring
+    /// hot path; gather/index traffic is never wire-compressed).
+    pub fn exchange_time_dense_wire(
+        &self,
+        cluster: &ClusterModel,
+        p: u64,
+        wire: WireFormat,
+    ) -> f64 {
+        let emb =
+            cluster.allreduce_time_wire(p, self.dense_embedding_bytes() as f64, WIRE_SEG_BYTES, wire);
+        let rest =
+            cluster.allreduce_time_wire(p, self.other_grad_bytes as f64, WIRE_SEG_BYTES, wire);
+        emb + (1.0 - self.overlap) * rest + cluster.negotiate_time(p)
+    }
+
+    /// Weak-scaling step time under the dense strategy with a wire
+    /// format (the wire replot axis of the ablation harness).
+    pub fn step_time_dense_wire(&self, cluster: &ClusterModel, p: u64, wire: WireFormat) -> f64 {
+        if p == 1 {
+            return self.t_compute;
+        }
+        self.t_compute + self.exchange_time_dense_wire(cluster, p, wire)
+    }
+
+    /// Strong-scaling step time under the dense strategy with a wire
+    /// format (compute model identical to
+    /// [`PaperModel::step_time_strong`]).
+    pub fn step_time_strong_dense_wire(
+        &self,
+        cluster: &ClusterModel,
+        p: u64,
+        tokens_per_rank: f64,
+        wire: WireFormat,
+    ) -> f64 {
+        let compute = self.strong_compute_time(tokens_per_rank);
+        if p == 1 {
+            return compute;
+        }
+        compute + self.exchange_time_dense_wire(cluster, p, wire)
+    }
+
+    /// Per-step compute seconds at a shrunken per-rank batch (strong
+    /// scaling): ~linear in tokens down to the 1536-token floor, plus
+    /// a fixed launch/queueing overhead (see
+    /// [`PaperModel::step_time_strong`] for the paper anchors).
+    fn strong_compute_time(&self, tokens_per_rank: f64) -> f64 {
+        let tokens_per_rank = tokens_per_rank.max(1536.0);
+        let frac = tokens_per_rank / self.tokens_per_rank as f64;
+        let overhead_floor = 0.35;
+        overhead_floor + (self.t_compute - overhead_floor) * frac
+    }
+
     /// Step time when the per-rank batch shrinks (strong scaling).
     /// Compute scales ~linearly in tokens down to ~1536 tokens/worker,
     /// below which per-op dispatch and padding dominate and compute
@@ -126,8 +184,7 @@ impl PaperModel {
     ) -> f64 {
         let tokens_per_rank = tokens_per_rank.max(1536.0); // small-batch floor
         let frac = tokens_per_rank / self.tokens_per_rank as f64;
-        let overhead_floor = 0.35; // seconds, per-step fixed cost
-        let compute = overhead_floor + (self.t_compute - overhead_floor) * frac;
+        let compute = self.strong_compute_time(tokens_per_rank);
         // slice rows shrink with the batch; embedding/dense bytes don't
         let scaled = PaperModel {
             slice_rows: (self.slice_rows as f64 * frac) as u64,

@@ -27,6 +27,8 @@ pub enum AccumStrategy {
 }
 
 impl AccumStrategy {
+    /// Parse a CLI/config string (`tf-default`/`gather`,
+    /// `sparse-as-dense`/`dense`, `any-dense`/`algorithm2`).
     pub fn parse(s: &str) -> Option<Self> {
         match s {
             "tf-default" | "sparse" | "gather" => Some(Self::TfDefault),
@@ -36,6 +38,7 @@ impl AccumStrategy {
         }
     }
 
+    /// Stable name (inverse of [`AccumStrategy::parse`]).
     pub fn name(&self) -> &'static str {
         match self {
             Self::TfDefault => "tf-default",

@@ -4,18 +4,24 @@
 
 use super::sparse::IndexedSlices;
 
+/// Row-major dense f32 tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DenseTensor {
+    /// Dimension sizes (empty for a scalar).
     pub shape: Vec<usize>,
+    /// Row-major element data, `shape.iter().product()` long.
     pub data: Vec<f32>,
 }
 
 impl DenseTensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: Vec<usize>) -> Self {
         let n: usize = shape.iter().product();
         Self { shape, data: vec![0.0; n] }
     }
 
+    /// Wrap existing row-major data; panics if `shape` and `data`
+    /// disagree on the element count.
     pub fn from_vec(shape: Vec<usize>, data: Vec<f32>) -> Self {
         assert_eq!(
             shape.iter().product::<usize>(),
@@ -27,10 +33,12 @@ impl DenseTensor {
         Self { shape, data }
     }
 
+    /// Zero-rank tensor holding one value.
     pub fn scalar(v: f32) -> Self {
         Self { shape: vec![], data: vec![v] }
     }
 
+    /// Bytes of element data.
     pub fn nbytes(&self) -> u64 {
         (self.data.len() * 4) as u64
     }

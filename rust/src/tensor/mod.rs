@@ -5,21 +5,28 @@
 //! sparse row-slice form produced by `tf.gather`).  [`accum`]
 //! implements the three accumulation strategies the paper discusses:
 //! TF's Algorithm 1, the Horovod `sparse_as_dense` fix (Listing 1), and
-//! the proposed Algorithm 2.
+//! the proposed Algorithm 2.  [`occupancy`] measures at runtime how
+//! dense those "assumed-sparse" gradients actually are, feeding the
+//! coordinator's densification policy.
+#![warn(missing_docs)]
 
 pub mod accum;
 pub mod dense;
 pub mod merge;
+pub mod occupancy;
 pub mod sparse;
 
 pub use accum::{accumulate, AccumStrategy};
 pub use dense::DenseTensor;
+pub use occupancy::OccupancyTracker;
 pub use sparse::IndexedSlices;
 
 /// A gradient in one of the two TF representations.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Grad {
+    /// A dense tensor (the reduce path's representation).
     Dense(DenseTensor),
+    /// TF IndexedSlices (the gather path's representation).
     Sparse(IndexedSlices),
 }
 
@@ -41,6 +48,7 @@ impl Grad {
         }
     }
 
+    /// Whether this gradient is in the IndexedSlices representation.
     pub fn is_sparse(&self) -> bool {
         matches!(self, Grad::Sparse(_))
     }

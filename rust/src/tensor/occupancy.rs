@@ -1,0 +1,262 @@
+//! Runtime occupancy tracking over gradient tensors.
+//!
+//! The paper's insight is a *static* fact about transformers: the
+//! "sparse" embedding gradients are nearly dense in practice, so the
+//! dense allreduce wins.  This module measures that fact at runtime —
+//! **occupancy** is the fraction of a variable's rows that actually
+//! carry gradient — and smooths it with an EWMA so the densification
+//! policy ([`crate::coordinator::policy`]) can *decide* per tensor
+//! instead of trusting a per-run flag, without flapping between
+//! representations on batch-to-batch noise.
+//!
+//! Determinism matters more than precision here: the tracker is fed
+//! the **outputs** of the exchange (which are identical on every rank
+//! — allgather concatenates in rank order, the ring allreduce is
+//! bit-identical across ranks), never per-rank inputs, so every
+//! rank's tracker evolves in lockstep and their policy decisions
+//! cannot diverge.
+
+use std::collections::HashMap;
+
+use super::dense::DenseTensor;
+use super::sparse::IndexedSlices;
+
+/// Exponentially-weighted moving average over an f64 signal.
+#[derive(Debug, Clone, Copy)]
+pub struct Ewma {
+    alpha: f64,
+    value: Option<f64>,
+}
+
+impl Ewma {
+    /// New EWMA with smoothing factor `alpha` in (0, 1]; higher alpha
+    /// weights recent observations more.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha, value: None }
+    }
+
+    /// Fold in one observation and return the smoothed value.  The
+    /// first observation seeds the average directly.
+    pub fn observe(&mut self, x: f64) -> f64 {
+        let v = match self.value {
+            None => x,
+            Some(prev) => prev + self.alpha * (x - prev),
+        };
+        self.value = Some(v);
+        v
+    }
+
+    /// Current smoothed value, if anything has been observed.
+    pub fn value(&self) -> Option<f64> {
+        self.value
+    }
+}
+
+/// Fraction of the variable's rows touched by at least one slice
+/// (duplicate indices count once).  1.0 means the "sparse" gradient is
+/// in fact dense row-wise — the paper's transformer case.
+pub fn slices_occupancy(s: &IndexedSlices) -> f64 {
+    if s.nrows == 0 {
+        return 0.0;
+    }
+    let mut seen = vec![0u64; s.nrows.div_ceil(64)];
+    let mut distinct = 0u64;
+    for &i in &s.indices {
+        let i = i as usize;
+        let (word, bit) = (i / 64, 1u64 << (i % 64));
+        if seen[word] & bit == 0 {
+            seen[word] |= bit;
+            distinct += 1;
+        }
+    }
+    distinct as f64 / s.nrows as f64
+}
+
+/// Fraction of a dense 2-D tensor's rows with any nonzero element —
+/// the occupancy visible after a reduce has already densified the
+/// gradient.
+pub fn dense_row_occupancy(t: &DenseTensor) -> f64 {
+    let rows = t.rows();
+    if rows == 0 {
+        return 0.0;
+    }
+    let w = t.row_width();
+    let occupied = t
+        .data
+        .chunks(w.max(1))
+        .filter(|row| row.iter().any(|&x| x != 0.0))
+        .count();
+    occupied as f64 / rows as f64
+}
+
+/// Smoothed per-tensor statistics, as consumed by the policy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OccupancyStats {
+    /// EWMA of row occupancy in [0, 1].
+    pub occupancy: f64,
+    /// EWMA of slice rows contributed per rank per cycle (the gather
+    /// payload driver).  Gathered cycles feed the measured
+    /// `nslices / p`; dense cycles feed the upper-bound estimate
+    /// `occupancy × nrows` (the real per-rank count is unobservable
+    /// while dense).
+    pub rows_per_rank: f64,
+    /// Number of exchange cycles observed for this tensor.
+    pub cycles: u64,
+}
+
+#[derive(Debug)]
+struct Entry {
+    occupancy: Ewma,
+    rows_per_rank: Ewma,
+    cycles: u64,
+}
+
+/// Per-tensor occupancy history, keyed by the coordinator's stable
+/// tensor id.
+#[derive(Debug)]
+pub struct OccupancyTracker {
+    alpha: f64,
+    map: HashMap<u64, Entry>,
+}
+
+impl OccupancyTracker {
+    /// New tracker; `alpha` is the EWMA smoothing factor for every
+    /// tensor.
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0, "alpha must be in (0, 1]");
+        Self { alpha, map: HashMap::new() }
+    }
+
+    fn entry(&mut self, id: u64) -> &mut Entry {
+        let alpha = self.alpha;
+        self.map.entry(id).or_insert_with(|| Entry {
+            occupancy: Ewma::new(alpha),
+            rows_per_rank: Ewma::new(alpha),
+            cycles: 0,
+        })
+    }
+
+    /// Observe a *gathered* exchange output (the rank-order
+    /// concatenation of all ranks' slices — identical on every rank).
+    /// Updates both the occupancy and the slices-per-rank history.
+    pub fn observe_gathered(&mut self, id: u64, s: &IndexedSlices, p: usize) {
+        let occ = slices_occupancy(s);
+        let per_rank = s.nslices() as f64 / p.max(1) as f64;
+        let e = self.entry(id);
+        e.occupancy.observe(occ);
+        e.rows_per_rank.observe(per_rank);
+        e.cycles += 1;
+    }
+
+    /// Observe a *reduced* (dense) exchange output.  Row occupancy is
+    /// read off the reduced tensor (a row is occupied iff any rank
+    /// contributed to it, modulo exact cancellation).  The true
+    /// per-rank slice count is unobservable while dense, so the
+    /// slices-per-rank EWMA is fed the upper-bound estimate
+    /// `occupancy × nrows` (globally-occupied rows ≥ any rank's
+    /// distinct contribution).  Feeding the EWMA — rather than
+    /// freezing it — keeps cost-model decisions reversible: a stream
+    /// that goes dense and later turns genuinely sparse sees its
+    /// estimated gather volume collapse and flips back to gather.
+    pub fn observe_dense(&mut self, id: u64, t: &DenseTensor) {
+        let occ = dense_row_occupancy(t);
+        let rows = t.rows();
+        let e = self.entry(id);
+        e.occupancy.observe(occ);
+        e.rows_per_rank.observe(occ * rows as f64);
+        e.cycles += 1;
+    }
+
+    /// Smoothed stats for a tensor, if it has been observed.
+    pub fn stats(&self, id: u64) -> Option<OccupancyStats> {
+        let e = self.map.get(&id)?;
+        Some(OccupancyStats {
+            occupancy: e.occupancy.value()?,
+            rows_per_rank: e.rows_per_rank.value().unwrap_or(0.0),
+            cycles: e.cycles,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ewma_seeds_then_smooths() {
+        let mut e = Ewma::new(0.5);
+        assert_eq!(e.value(), None);
+        assert_eq!(e.observe(1.0), 1.0);
+        assert_eq!(e.observe(0.0), 0.5);
+        assert_eq!(e.observe(0.5), 0.5);
+    }
+
+    #[test]
+    #[should_panic(expected = "alpha")]
+    fn ewma_rejects_zero_alpha() {
+        Ewma::new(0.0);
+    }
+
+    #[test]
+    fn slices_occupancy_counts_distinct_rows() {
+        let s = IndexedSlices::new(8, 1, vec![1, 1, 1, 5], vec![1.0; 4]);
+        assert_eq!(slices_occupancy(&s), 2.0 / 8.0);
+        let full = IndexedSlices::new(4, 1, vec![0, 1, 2, 3], vec![1.0; 4]);
+        assert_eq!(slices_occupancy(&full), 1.0);
+        assert_eq!(slices_occupancy(&IndexedSlices::empty(16, 2)), 0.0);
+    }
+
+    #[test]
+    fn slices_occupancy_bitmap_handles_large_rows() {
+        // rows straddling several u64 words
+        let s = IndexedSlices::new(1000, 1, vec![0, 63, 64, 999], vec![1.0; 4]);
+        assert_eq!(slices_occupancy(&s), 4.0 / 1000.0);
+    }
+
+    #[test]
+    fn dense_occupancy_counts_nonzero_rows() {
+        let t = DenseTensor::from_vec(vec![3, 2], vec![0.0, 0.0, 1.0, 0.0, 0.0, 0.0]);
+        assert_eq!(dense_row_occupancy(&t), 1.0 / 3.0);
+        assert_eq!(dense_row_occupancy(&DenseTensor::zeros(vec![4, 2])), 0.0);
+    }
+
+    #[test]
+    fn tracker_smooths_and_counts_cycles() {
+        let mut tr = OccupancyTracker::new(0.5);
+        assert_eq!(tr.stats(7), None);
+        let hi = IndexedSlices::new(4, 1, vec![0, 1, 2, 3], vec![1.0; 4]);
+        tr.observe_gathered(7, &hi, 2);
+        let s = tr.stats(7).unwrap();
+        assert_eq!(s.occupancy, 1.0);
+        assert_eq!(s.rows_per_rank, 2.0);
+        assert_eq!(s.cycles, 1);
+        let lo = IndexedSlices::new(4, 1, vec![0], vec![1.0]);
+        tr.observe_gathered(7, &lo, 2);
+        let s = tr.stats(7).unwrap();
+        assert_eq!(s.occupancy, 0.625); // 1.0 + 0.5*(0.25 - 1.0)
+        assert_eq!(s.cycles, 2);
+    }
+
+    #[test]
+    fn dense_observations_keep_rows_estimate_live() {
+        let mut tr = OccupancyTracker::new(0.5);
+        let t = DenseTensor::from_vec(vec![4, 1], vec![1.0, 1.0, 0.0, 0.0]);
+        tr.observe_dense(9, &t);
+        let s = tr.stats(9).unwrap();
+        assert_eq!(s.occupancy, 0.5);
+        assert_eq!(s.rows_per_rank, 2.0); // 0.5 * 4 rows (upper bound)
+        // gathered observations feed the same EWMA
+        let g = IndexedSlices::new(4, 1, vec![0, 0, 1, 1], vec![1.0; 4]);
+        tr.observe_gathered(9, &g, 4);
+        let s = tr.stats(9).unwrap();
+        assert_eq!(s.rows_per_rank, 1.5); // 2.0 + 0.5*(4/4 - 2.0)
+        // ...and a dense stream that empties out drags the estimate
+        // back down (no one-way ratchet: cost-model can flip back)
+        let empty = DenseTensor::zeros(vec![4, 1]);
+        for _ in 0..6 {
+            tr.observe_dense(9, &empty);
+        }
+        assert!(tr.stats(9).unwrap().rows_per_rank < 0.1);
+    }
+}

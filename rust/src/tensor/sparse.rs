@@ -7,6 +7,7 @@
 
 use super::dense::DenseTensor;
 
+/// TF's sparse row-slice gradient representation (see module docs).
 #[derive(Debug, Clone, PartialEq)]
 pub struct IndexedSlices {
     /// Leading dimension of the dense variable this slices into (V).
@@ -20,6 +21,8 @@ pub struct IndexedSlices {
 }
 
 impl IndexedSlices {
+    /// Build from parts; panics if `values` does not hold exactly
+    /// `indices.len() * row_width` elements.
     pub fn new(nrows: usize, row_width: usize, indices: Vec<i32>, values: Vec<f32>) -> Self {
         assert_eq!(
             values.len(),
@@ -36,10 +39,12 @@ impl IndexedSlices {
         Self { nrows, row_width, indices, values }
     }
 
+    /// IndexedSlices with no slices (a zero gradient).
     pub fn empty(nrows: usize, row_width: usize) -> Self {
         Self { nrows, row_width, indices: Vec::new(), values: Vec::new() }
     }
 
+    /// Number of slice rows (duplicates counted).
     pub fn nslices(&self) -> usize {
         self.indices.len()
     }

@@ -16,6 +16,7 @@ use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use super::wire::WireFormat;
 use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
 
 type Key = (usize, u64); // (from, tag)
@@ -47,60 +48,89 @@ pub struct LocalTransport {
     boxes: Vec<Mailbox>,
     counters: TrafficCounters,
     pools: Vec<Mutex<Vec<Vec<f32>>>>,
+    /// Free lists for 16-bit wire buffers (compressed payloads),
+    /// sharing the same [`PoolStats`] counters as the f32 pools.
+    pools16: Vec<Mutex<Vec<Vec<u16>>>>,
     pool_counters: PoolCounters,
 }
 
 impl LocalTransport {
+    /// Create a transport connecting `nranks` in-process ranks.
     pub fn new(nranks: usize) -> Self {
         assert!(nranks > 0);
         Self {
             boxes: (0..nranks).map(|_| Mailbox::new()).collect(),
             counters: TrafficCounters::default(),
             pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
+            pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pool_counters: PoolCounters::default(),
         }
     }
 
     /// Take a cleared buffer with capacity for `len` elements from
-    /// `rank`'s pool. Best fit (smallest sufficient capacity), so a
-    /// small request never steals a large buffer a later request
-    /// needs — mixed message sizes stay allocation-free.
+    /// `rank`'s f32 pool (see [`acquire_from`] for the discipline).
     fn acquire(&self, rank: usize, len: usize) -> Vec<f32> {
-        let mut pool = self.pools[rank].lock().unwrap();
-        let fit = pool
-            .iter()
-            .enumerate()
-            .filter(|(_, b)| b.capacity() >= len)
-            .min_by_key(|(_, b)| b.capacity())
-            .map(|(i, _)| i);
-        match fit {
-            Some(i) => {
-                let mut buf = pool.swap_remove(i);
-                drop(pool);
-                self.pool_counters.recycled.fetch_add(1, Ordering::Relaxed);
-                buf.clear();
-                buf
-            }
-            None => {
-                drop(pool);
-                self.pool_counters.allocated.fetch_add(1, Ordering::Relaxed);
-                Vec::with_capacity(len)
-            }
-        }
+        acquire_from(&self.pools[rank], &self.pool_counters, len)
     }
 
-    /// Return a delivered payload buffer to `rank`'s pool.
+    /// Return a delivered payload buffer to `rank`'s f32 pool.
     fn release(&self, rank: usize, buf: Vec<f32>) {
-        let mut pool = self.pools[rank].lock().unwrap();
-        if pool.len() < POOL_CAP {
-            pool.push(buf);
-            drop(pool);
-            self.pool_counters.returned.fetch_add(1, Ordering::Relaxed);
-        }
+        release_to(&self.pools[rank], &self.pool_counters, buf)
+    }
+
+    /// Take a cleared u16 wire buffer from `rank`'s 16-bit pool.
+    fn acquire16(&self, rank: usize, len: usize) -> Vec<u16> {
+        acquire_from(&self.pools16[rank], &self.pool_counters, len)
+    }
+
+    /// Return a delivered 16-bit wire buffer to `rank`'s pool.
+    fn release16(&self, rank: usize, buf: Vec<u16>) {
+        release_to(&self.pools16[rank], &self.pool_counters, buf)
     }
 
     fn recv_f32(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
         self.recv(to, from, tag).into_f32()
+    }
+}
+
+/// Take a cleared buffer with capacity for `len` elements from a
+/// free-list pool. Best fit (smallest sufficient capacity), so a small
+/// request never steals a large buffer a later request needs — mixed
+/// message sizes stay allocation-free. One implementation serves the
+/// f32 payload pools and the u16 wire pools, so the discipline and the
+/// shared [`PoolStats`] counters cannot drift apart.
+fn acquire_from<T>(pool: &Mutex<Vec<Vec<T>>>, counters: &PoolCounters, len: usize) -> Vec<T> {
+    let mut pool = pool.lock().unwrap();
+    let fit = pool
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.capacity() >= len)
+        .min_by_key(|(_, b)| b.capacity())
+        .map(|(i, _)| i);
+    match fit {
+        Some(i) => {
+            let mut buf = pool.swap_remove(i);
+            drop(pool);
+            counters.recycled.fetch_add(1, Ordering::Relaxed);
+            buf.clear();
+            buf
+        }
+        None => {
+            drop(pool);
+            counters.allocated.fetch_add(1, Ordering::Relaxed);
+            Vec::with_capacity(len)
+        }
+    }
+}
+
+/// Return a delivered buffer to its free-list pool (dropped beyond
+/// [`POOL_CAP`]).
+fn release_to<T>(pool: &Mutex<Vec<Vec<T>>>, counters: &PoolCounters, buf: Vec<T>) {
+    let mut pool = pool.lock().unwrap();
+    if pool.len() < POOL_CAP {
+        pool.push(buf);
+        drop(pool);
+        counters.returned.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -155,6 +185,46 @@ impl Transport for LocalTransport {
             *a += x;
         }
         self.release(to, v);
+    }
+
+    fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.send_slice(from, to, tag, data),
+            _ => {
+                let mut buf = self.acquire16(from, data.len());
+                w.encode_into(data, &mut buf);
+                self.send(from, to, tag, Payload::U16(buf));
+            }
+        }
+    }
+
+    fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.recv_into(to, from, tag, out),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_to(&v, out);
+                self.release16(to, v);
+            }
+        }
+    }
+
+    fn recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+    ) {
+        match w {
+            WireFormat::F32 => self.recv_add_into(to, from, tag, acc),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_add_to(&v, acc);
+                self.release16(to, v);
+            }
+        }
     }
 
     fn pool_stats(&self) -> PoolStats {
@@ -296,6 +366,45 @@ mod tests {
         t.recv_into(0, 0, 5, &mut small);
         t.recv_into(0, 0, 6, &mut large);
         assert_eq!(t.pool_stats().allocated, warm, "small must not steal large");
+    }
+
+    #[test]
+    fn wire16_pool_recycles_in_steady_state() {
+        // the compressed wire path must reach the same allocation-free
+        // fixed point as the f32 path: u16 buffers circulate through
+        // the per-rank 16-bit pools
+        let t = LocalTransport::new(2);
+        let mut out = [0.0f32; 8];
+        for w in [WireFormat::Fp16, WireFormat::Bf16] {
+            for _ in 0..6 {
+                t.send_slice_wire(0, 1, 7, &[1.0; 8], w);
+                t.recv_into_wire(1, 0, 7, &mut out, w);
+                t.send_slice_wire(1, 0, 8, &[2.0; 8], w);
+                t.recv_add_into_wire(0, 1, 8, &mut out, w);
+            }
+        }
+        let warm = t.pool_stats().allocated;
+        for _ in 0..10 {
+            t.send_slice_wire(0, 1, 9, &[1.0; 8], WireFormat::Fp16);
+            t.recv_into_wire(1, 0, 9, &mut out, WireFormat::Fp16);
+            t.send_slice_wire(1, 0, 10, &[2.0; 8], WireFormat::Fp16);
+            t.recv_into_wire(0, 1, 10, &mut out, WireFormat::Fp16);
+        }
+        let steady = t.pool_stats();
+        assert_eq!(steady.allocated, warm, "wire16 steady state must not allocate: {steady:?}");
+        assert!(steady.recycled > warm);
+    }
+
+    #[test]
+    fn wire16_bytes_are_half_on_the_wire() {
+        let t = LocalTransport::new(2);
+        t.send_slice_wire(0, 1, 0, &[0.0; 100], WireFormat::Bf16);
+        assert_eq!(t.stats().bytes, 200);
+        let mut out = [0.0f32; 100];
+        t.recv_into_wire(1, 0, 0, &mut out, WireFormat::Bf16);
+        t.send_slice_wire(0, 1, 1, &[0.0; 100], WireFormat::F32);
+        assert_eq!(t.stats().bytes, 600);
+        t.recv_into_wire(1, 0, 1, &mut out, WireFormat::F32);
     }
 
     #[test]

@@ -6,10 +6,13 @@
 //! synchronization — our stand-in for MPI on this single machine) and
 //! can be cost-modelled on the simulated cluster network
 //! ([`crate::sim::network`]).
+#![warn(missing_docs)]
 
 pub mod local;
+pub mod wire;
 
 pub use local::LocalTransport;
+pub use wire::WireFormat;
 
 use std::sync::atomic::{AtomicU64, Ordering};
 
@@ -17,20 +20,29 @@ use std::sync::atomic::{AtomicU64, Ordering};
 /// i32 index/control data; a unified enum keeps tag-matching simple.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
+    /// f32 gradient data (the data plane).
     F32(Vec<f32>),
+    /// i32 index data (IndexedSlices row ids).
     I32(Vec<i32>),
+    /// 16-bit compressed gradient data — fp16 or bf16 bit patterns
+    /// produced by a [`WireFormat`] encode (the compressed data plane).
+    U16(Vec<u16>),
+    /// u64 control data (readiness reports, plans, fingerprints).
     U64(Vec<u64>),
 }
 
 impl Payload {
+    /// Bytes this payload puts on the wire.
     pub fn nbytes(&self) -> u64 {
         match self {
             Payload::F32(v) => (v.len() * 4) as u64,
             Payload::I32(v) => (v.len() * 4) as u64,
+            Payload::U16(v) => (v.len() * 2) as u64,
             Payload::U64(v) => (v.len() * 8) as u64,
         }
     }
 
+    /// Unwrap an F32 payload; panics on any other variant.
     pub fn into_f32(self) -> Vec<f32> {
         match self {
             Payload::F32(v) => v,
@@ -38,6 +50,7 @@ impl Payload {
         }
     }
 
+    /// Unwrap an I32 payload; panics on any other variant.
     pub fn into_i32(self) -> Vec<i32> {
         match self {
             Payload::I32(v) => v,
@@ -45,6 +58,15 @@ impl Payload {
         }
     }
 
+    /// Unwrap a U16 payload; panics on any other variant.
+    pub fn into_u16(self) -> Vec<u16> {
+        match self {
+            Payload::U16(v) => v,
+            other => panic!("expected U16 payload, got {other:?}"),
+        }
+    }
+
+    /// Unwrap a U64 payload; panics on any other variant.
     pub fn into_u64(self) -> Vec<u64> {
         match self {
             Payload::U64(v) => v,
@@ -68,8 +90,11 @@ impl Payload {
 /// path); the collectives are written against the slice API and pick
 /// up pooling wherever the transport provides it.
 pub trait Transport: Send + Sync {
+    /// Number of ranks this transport connects.
     fn nranks(&self) -> usize;
+    /// Non-blocking (buffered) send of an owned payload.
     fn send(&self, from: usize, to: usize, tag: u64, data: Payload);
+    /// Blocking receive of the next message matching (from, tag).
     fn recv(&self, to: usize, from: usize, tag: u64) -> Payload;
     /// Cumulative traffic statistics (for calibration and tests).
     fn stats(&self) -> TrafficStats;
@@ -96,6 +121,54 @@ pub trait Transport: Send + Sync {
         assert_eq!(v.len(), acc.len(), "recv_add_into length mismatch");
         for (a, x) in acc.iter_mut().zip(&v) {
             *a += x;
+        }
+    }
+
+    /// [`Transport::send_slice`] with a selectable wire encoding:
+    /// `F32` forwards to `send_slice` unchanged; 16-bit formats encode
+    /// into a `U16` payload (pooled implementations recycle the wire
+    /// buffer — see [`LocalTransport`]).
+    fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.send_slice(from, to, tag, data),
+            _ => {
+                let mut buf = Vec::with_capacity(data.len());
+                w.encode_into(data, &mut buf);
+                self.send(from, to, tag, Payload::U16(buf));
+            }
+        }
+    }
+
+    /// [`Transport::recv_into`] with a selectable wire encoding: the
+    /// matching message is decoded from the 16-bit wire format into
+    /// `out` (full f32 for `F32`).
+    fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.recv_into(to, from, tag, out),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_to(&v, out);
+            }
+        }
+    }
+
+    /// [`Transport::recv_add_into`] with a selectable wire encoding:
+    /// the payload is decoded and accumulated into `acc` *in f32* —
+    /// only the wire is 16-bit, never the reduction.
+    fn recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+    ) {
+        match w {
+            WireFormat::F32 => self.recv_add_into(to, from, tag, acc),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_add_to(&v, acc);
+            }
         }
     }
 
@@ -126,22 +199,29 @@ pub struct PoolStats {
 /// Aggregate traffic counters, cheap enough to keep always-on.
 #[derive(Debug, Default)]
 pub struct TrafficCounters {
+    /// Messages sent so far.
     pub messages: AtomicU64,
+    /// Payload bytes sent so far.
     pub bytes: AtomicU64,
 }
 
+/// A point-in-time snapshot of [`TrafficCounters`].
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TrafficStats {
+    /// Messages sent so far.
     pub messages: u64,
+    /// Payload bytes sent so far.
     pub bytes: u64,
 }
 
 impl TrafficCounters {
+    /// Count one sent message of `bytes` payload bytes.
     pub fn record(&self, bytes: u64) {
         self.messages.fetch_add(1, Ordering::Relaxed);
         self.bytes.fetch_add(bytes, Ordering::Relaxed);
     }
 
+    /// Read the counters (relaxed; exact once senders are quiescent).
     pub fn snapshot(&self) -> TrafficStats {
         TrafficStats {
             messages: self.messages.load(Ordering::Relaxed),
@@ -208,5 +288,25 @@ mod tests {
         t.recv_add_into(1, 0, 2, &mut out);
         assert_eq!(out, [11.0, 12.0]);
         assert_eq!(t.pool_stats(), PoolStats::default());
+    }
+
+    #[test]
+    fn default_wire_api_encodes_and_halves_bytes() {
+        let t = MinimalTransport(LocalTransport::new(2));
+        let data = [1.0f32, -0.5, 2.25, 8.0];
+        t.send_slice_wire(0, 1, 1, &data, WireFormat::Fp16);
+        let sent = t.stats().bytes;
+        assert_eq!(sent, 8, "fp16 wire must carry 2 bytes/elem");
+        let mut out = [0.0f32; 4];
+        t.recv_into_wire(1, 0, 1, &mut out, WireFormat::Fp16);
+        assert_eq!(out, data, "these values are exactly fp16-representable");
+        t.send_slice_wire(0, 1, 2, &data, WireFormat::Bf16);
+        t.recv_add_into_wire(1, 0, 2, &mut out, WireFormat::Bf16);
+        assert_eq!(out, [2.0, -1.0, 4.5, 16.0]);
+        // F32 routes through the plain slice API
+        t.send_slice_wire(0, 1, 3, &data, WireFormat::F32);
+        let mut out2 = [0.0f32; 4];
+        t.recv_into_wire(1, 0, 3, &mut out2, WireFormat::F32);
+        assert_eq!(out2, data);
     }
 }

@@ -1,0 +1,416 @@
+//! Compressed wire formats for payload traffic.
+//!
+//! Scaling NMT (Ott et al., 2018) showed that exchanging gradients in
+//! reduced precision compounds the dense-allreduce win: the collective
+//! is bandwidth-bound at transformer sizes, so halving the bytes on
+//! the wire halves the bandwidth term.  This module provides the two
+//! standard 16-bit encodings — IEEE 754 binary16 ([`WireFormat::Fp16`])
+//! and bfloat16 ([`WireFormat::Bf16`]) — as pure encode/decode between
+//! `f32` compute buffers and `u16` wire buffers.  *Only the wire* is
+//! 16-bit: every reduction is still performed in f32 after decode, so
+//! error comes only from the per-hop rounding (bounded by
+//! [`WireFormat::unit_roundoff`]; property-tested in
+//! `tests/proptests.rs`).
+//!
+//! The codecs are hand-rolled (the offline registry has no `half`
+//! crate) with round-to-nearest-even, and are exact round-trips for
+//! every representable 16-bit value — asserted exhaustively over all
+//! 65 536 bit patterns in the unit tests below.
+
+/// On-the-wire element encoding for f32 payload traffic.
+///
+/// Threaded through the slice transport API
+/// ([`super::Transport::send_slice_wire`] and friends), the segmented
+/// pipelined ring ([`crate::collectives::ring::allreduce_ring_pipelined_wire`]),
+/// the exchange engine ([`crate::coordinator::ExchangeConfig::wire`]) and
+/// the cost model ([`crate::collectives::cost::ring_pipelined_allreduce_time_wire`]).
+///
+/// ```
+/// use densefold::transport::wire::WireFormat;
+///
+/// let xs = [1.0f32, -0.375, 2.5];
+/// let mut wire = Vec::new();
+/// WireFormat::Fp16.encode_into(&xs, &mut wire);
+/// assert_eq!(wire.len(), 3); // 2 bytes per element on the wire
+///
+/// let mut back = [0.0f32; 3];
+/// WireFormat::Fp16.decode_to(&wire, &mut back);
+/// assert_eq!(back, xs); // these values are exactly representable
+///
+/// // the knob parses from the CLI surface:
+/// assert_eq!(WireFormat::parse("fp16"), Some(WireFormat::Fp16));
+/// assert_eq!(WireFormat::F32.bytes_per_elem(), 4);
+/// assert_eq!(WireFormat::Bf16.bytes_per_elem(), 2);
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireFormat {
+    /// Full-precision f32 payloads — the lossless default.
+    F32,
+    /// IEEE 754 binary16: 10 mantissa bits, narrow range (max 65 504).
+    /// Lowest rounding error of the 16-bit pair — but **saturating**:
+    /// any value beyond ±65 504 encodes to ±infinity, and in a
+    /// reduce-scatter the wire carries *partial sums* (up to p× the
+    /// per-rank magnitude), so an overflow silently turns the whole
+    /// element to inf on every rank.  Use [`WireFormat::Bf16`] (full
+    /// f32 range) or scale gradients when magnitudes are unbounded.
+    Fp16,
+    /// bfloat16: f32's 8-bit exponent, 7 mantissa bits.  Full f32
+    /// range (no overflow hazard on large partial sums), coarser
+    /// rounding.
+    Bf16,
+}
+
+impl WireFormat {
+    /// Parse a CLI/config string (`f32`, `fp16`/`half`, `bf16`/`bfloat16`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "f32" | "fp32" | "full" => Some(Self::F32),
+            "fp16" | "f16" | "half" => Some(Self::Fp16),
+            "bf16" | "bfloat16" => Some(Self::Bf16),
+            _ => None,
+        }
+    }
+
+    /// Stable name (inverse of [`WireFormat::parse`]).
+    pub fn name(&self) -> &'static str {
+        match self {
+            Self::F32 => "f32",
+            Self::Fp16 => "fp16",
+            Self::Bf16 => "bf16",
+        }
+    }
+
+    /// Bytes one f32 element occupies on the wire.
+    pub fn bytes_per_elem(&self) -> u64 {
+        match self {
+            Self::F32 => 4,
+            Self::Fp16 | Self::Bf16 => 2,
+        }
+    }
+
+    /// Fraction of the f32 byte volume this format puts on the wire.
+    pub fn byte_ratio(&self) -> f64 {
+        self.bytes_per_elem() as f64 / 4.0
+    }
+
+    /// Worst-case relative rounding error of one encode for normal
+    /// values (half an ulp): `2^-11` for fp16, `2^-8` for bf16, `0`
+    /// for f32.  The allreduce round-trip error bound is
+    /// `(hops + 1) · unit_roundoff` relative to the sum of absolute
+    /// inputs (see `prop_wire16_allreduce_error_bounded`).
+    pub fn unit_roundoff(&self) -> f64 {
+        match self {
+            Self::F32 => 0.0,
+            Self::Fp16 => 1.0 / 2048.0,
+            Self::Bf16 => 1.0 / 256.0,
+        }
+    }
+
+    /// Encode `src` into the 16-bit wire buffer `dst` (cleared first).
+    ///
+    /// # Panics
+    /// For [`WireFormat::F32`], which has no 16-bit encoding — callers
+    /// branch on `F32` before reaching the u16 path.
+    pub fn encode_into(&self, src: &[f32], dst: &mut Vec<u16>) {
+        dst.clear();
+        dst.reserve(src.len());
+        match self {
+            Self::F32 => panic!("F32 payloads do not use the 16-bit wire path"),
+            Self::Fp16 => dst.extend(src.iter().map(|&x| f32_to_f16_bits(x))),
+            Self::Bf16 => dst.extend(src.iter().map(|&x| f32_to_bf16_bits(x))),
+        }
+    }
+
+    /// Decode a 16-bit wire buffer into `out` (same length).
+    ///
+    /// # Panics
+    /// For [`WireFormat::F32`] (see [`WireFormat::encode_into`]), or on
+    /// length mismatch.
+    pub fn decode_to(&self, src: &[u16], out: &mut [f32]) {
+        assert_eq!(src.len(), out.len(), "wire decode length mismatch");
+        match self {
+            Self::F32 => panic!("F32 payloads do not use the 16-bit wire path"),
+            Self::Fp16 => {
+                for (o, &b) in out.iter_mut().zip(src) {
+                    *o = f16_bits_to_f32(b);
+                }
+            }
+            Self::Bf16 => {
+                for (o, &b) in out.iter_mut().zip(src) {
+                    *o = bf16_bits_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// Decode a 16-bit wire buffer and add it elementwise into `acc`
+    /// — the reduce-scatter primitive (accumulation stays in f32).
+    ///
+    /// # Panics
+    /// For [`WireFormat::F32`], or on length mismatch.
+    pub fn decode_add_to(&self, src: &[u16], acc: &mut [f32]) {
+        assert_eq!(src.len(), acc.len(), "wire decode length mismatch");
+        match self {
+            Self::F32 => panic!("F32 payloads do not use the 16-bit wire path"),
+            Self::Fp16 => {
+                for (a, &b) in acc.iter_mut().zip(src) {
+                    *a += f16_bits_to_f32(b);
+                }
+            }
+            Self::Bf16 => {
+                for (a, &b) in acc.iter_mut().zip(src) {
+                    *a += bf16_bits_to_f32(b);
+                }
+            }
+        }
+    }
+
+    /// Round every element through one encode/decode cycle in place.
+    /// No-op for f32.  The pipelined ring uses this so the rank that
+    /// *owns* a reduced chunk holds the same 16-bit-rounded values it
+    /// ships to everyone else — keeping allreduce results bit-identical
+    /// across ranks even under a lossy wire (the invariant the adaptive
+    /// densification policy's lockstep decisions rest on).
+    pub fn quantize_in_place(&self, data: &mut [f32]) {
+        match self {
+            Self::F32 => {}
+            Self::Fp16 => {
+                for x in data {
+                    *x = f16_bits_to_f32(f32_to_f16_bits(*x));
+                }
+            }
+            Self::Bf16 => {
+                for x in data {
+                    *x = bf16_bits_to_f32(f32_to_bf16_bits(*x));
+                }
+            }
+        }
+    }
+}
+
+/// Convert f32 to IEEE 754 binary16 bits, round-to-nearest-even.
+/// Overflow saturates to ±infinity; NaN payloads are preserved
+/// truncated (quiet bit forced).
+pub fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xff) as i32;
+    let mant = bits & 0x007f_ffff;
+    if exp == 255 {
+        // infinity or NaN
+        return if mant == 0 {
+            sign | 0x7c00
+        } else {
+            // keep the top payload bits, force quiet so it stays a NaN
+            sign | 0x7c00 | 0x0200 | ((mant >> 13) as u16 & 0x03ff)
+        };
+    }
+    let unbiased = exp - 127;
+    if unbiased >= 16 {
+        return sign | 0x7c00; // overflow -> infinity
+    }
+    if unbiased >= -14 {
+        // normal half
+        let half_exp = (unbiased + 15) as u32;
+        let half_mant = mant >> 13;
+        let rem = mant & 0x1fff;
+        let mut h = (half_exp << 10) | half_mant;
+        if rem > 0x1000 || (rem == 0x1000 && (half_mant & 1) == 1) {
+            h += 1; // may carry into the exponent; the bit layout makes that correct
+        }
+        return sign | h as u16;
+    }
+    if unbiased < -25 {
+        return sign; // underflow to signed zero
+    }
+    // subnormal half: value = full_mant · 2^(unbiased-23); one half
+    // subnormal ulp is 2^-24, so the target mantissa is
+    // full_mant >> (-unbiased - 1)  (shift in 14..=24)
+    let full_mant = mant | 0x0080_0000;
+    let shift = (-unbiased - 1) as u32;
+    let h_mant = full_mant >> shift;
+    let rem = full_mant & ((1u32 << shift) - 1);
+    let halfway = 1u32 << (shift - 1);
+    let mut h = h_mant;
+    if rem > halfway || (rem == halfway && (h_mant & 1) == 1) {
+        h += 1; // may round up into the smallest normal; layout again correct
+    }
+    sign | h as u16
+}
+
+/// Convert IEEE 754 binary16 bits to f32 (exact — every binary16
+/// value is representable in f32).
+pub fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = (h >> 10) & 0x1f;
+    let mant = (h & 0x03ff) as u32;
+    let bits = match exp {
+        0 => {
+            if mant == 0 {
+                sign // signed zero
+            } else {
+                // subnormal: normalize into an f32 normal
+                let mut e = 113u32; // biased f32 exponent of 2^-14
+                let mut m = mant;
+                while m & 0x400 == 0 {
+                    m <<= 1;
+                    e -= 1;
+                }
+                sign | (e << 23) | ((m & 0x3ff) << 13)
+            }
+        }
+        31 => sign | 0x7f80_0000 | (mant << 13), // inf / NaN
+        e => sign | (((e as u32) + 112) << 23) | (mant << 13),
+    };
+    f32::from_bits(bits)
+}
+
+/// Convert f32 to bfloat16 bits, round-to-nearest-even (NaN kept
+/// quiet, sign preserved).
+pub fn f32_to_bf16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    if x.is_nan() {
+        return ((bits >> 16) as u16) | 0x0040; // quiet, payload truncated
+    }
+    let lsb = (bits >> 16) & 1;
+    let rounded = bits.wrapping_add(0x7fff + lsb);
+    (rounded >> 16) as u16
+}
+
+/// Convert bfloat16 bits to f32 (exact: bf16 is truncated f32).
+pub fn bf16_bits_to_f32(b: u16) -> f32 {
+    f32::from_bits((b as u32) << 16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fp16_known_values() {
+        assert_eq!(f32_to_f16_bits(0.0), 0x0000);
+        assert_eq!(f32_to_f16_bits(-0.0), 0x8000);
+        assert_eq!(f32_to_f16_bits(1.0), 0x3c00);
+        assert_eq!(f32_to_f16_bits(-2.0), 0xc000);
+        assert_eq!(f32_to_f16_bits(0.5), 0x3800);
+        assert_eq!(f32_to_f16_bits(65504.0), 0x7bff); // fp16 max
+        assert_eq!(f32_to_f16_bits(65536.0), 0x7c00); // overflow -> inf
+        assert_eq!(f32_to_f16_bits(f32::INFINITY), 0x7c00);
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-24)), 0x0001); // min subnormal
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-14)), 0x0400); // min normal
+        assert_eq!(f32_to_f16_bits(2.0f32.powi(-26)), 0x0000); // underflow
+        assert!(f16_bits_to_f32(f32_to_f16_bits(f32::NAN)).is_nan());
+    }
+
+    #[test]
+    fn fp16_round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and the next fp16
+        // value; ties go to the even mantissa (1.0 = 0x3c00)
+        let halfway = 1.0f32 + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(halfway), 0x3c00);
+        // just above halfway rounds up
+        let above = 1.0f32 + 2.0f32.powi(-11) + 2.0f32.powi(-20);
+        assert_eq!(f32_to_f16_bits(above), 0x3c01);
+        // halfway with odd mantissa rounds up to even
+        let odd_half = f16_bits_to_f32(0x3c01) + 2.0f32.powi(-11);
+        assert_eq!(f32_to_f16_bits(odd_half), 0x3c02);
+    }
+
+    #[test]
+    fn fp16_roundtrip_identity_for_all_bit_patterns() {
+        // encode(decode(h)) == h for every non-NaN binary16 value —
+        // the codec is exact on representable values (the property the
+        // ring's forward-after-first-hop exactness rests on)
+        for h in 0..=u16::MAX {
+            let x = f16_bits_to_f32(h);
+            if x.is_nan() {
+                assert!(f16_bits_to_f32(f32_to_f16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_f16_bits(x), h, "bits {h:#06x} -> {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_identity_for_all_bit_patterns() {
+        for b in 0..=u16::MAX {
+            let x = bf16_bits_to_f32(b);
+            if x.is_nan() {
+                assert!(bf16_bits_to_f32(f32_to_bf16_bits(x)).is_nan());
+            } else {
+                assert_eq!(f32_to_bf16_bits(x), b, "bits {b:#06x} -> {x}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_known_values() {
+        assert_eq!(f32_to_bf16_bits(1.0), 0x3f80);
+        assert_eq!(f32_to_bf16_bits(-1.0), 0xbf80);
+        assert_eq!(bf16_bits_to_f32(0x3f80), 1.0);
+        // round-to-nearest-even at the halfway point
+        let one_ulp = bf16_bits_to_f32(0x3f81) - 1.0;
+        assert_eq!(f32_to_bf16_bits(1.0 + one_ulp / 2.0), 0x3f80); // tie -> even
+        assert_eq!(f32_to_bf16_bits(1.0 + 0.75 * one_ulp), 0x3f81);
+        // bf16 keeps f32 range: no overflow far beyond fp16's limit
+        let big = bf16_bits_to_f32(f32_to_bf16_bits(1e30));
+        assert!(big.is_finite() && (big / 1e30 - 1.0).abs() < 1.0 / 256.0);
+    }
+
+    #[test]
+    fn encode_decode_roundtrip_error_bounded() {
+        for (wire, tol) in [(WireFormat::Fp16, 1.0 / 2048.0), (WireFormat::Bf16, 1.0 / 256.0)] {
+            let xs: Vec<f32> = (0..1000).map(|i| (i as f32 - 500.0) * 0.137).collect();
+            let mut w = Vec::new();
+            wire.encode_into(&xs, &mut w);
+            let mut back = vec![0.0f32; xs.len()];
+            wire.decode_to(&w, &mut back);
+            for (&x, &y) in xs.iter().zip(&back) {
+                assert!(
+                    ((x - y).abs() as f64) <= tol * (x.abs() as f64) + 1e-6,
+                    "{}: {x} -> {y}",
+                    wire.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn decode_add_accumulates_in_f32() {
+        let mut w = Vec::new();
+        WireFormat::Fp16.encode_into(&[1.0, 2.0, 3.0], &mut w);
+        let mut acc = [10.0f32, 10.0, 10.0];
+        WireFormat::Fp16.decode_add_to(&w, &mut acc);
+        assert_eq!(acc, [11.0, 12.0, 13.0]);
+    }
+
+    #[test]
+    fn quantize_in_place_is_idempotent() {
+        for wire in [WireFormat::Fp16, WireFormat::Bf16] {
+            let mut a = vec![0.1f32, -3.7, 1e-5, 42.0];
+            wire.quantize_in_place(&mut a);
+            let once = a.clone();
+            wire.quantize_in_place(&mut a);
+            assert_eq!(a, once, "{}", wire.name());
+        }
+        let mut a = vec![0.1f32, -3.7];
+        let orig = a.clone();
+        WireFormat::F32.quantize_in_place(&mut a);
+        assert_eq!(a, orig);
+    }
+
+    #[test]
+    fn parse_and_names_roundtrip() {
+        for w in [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16] {
+            assert_eq!(WireFormat::parse(w.name()), Some(w));
+        }
+        assert_eq!(WireFormat::parse("half"), Some(WireFormat::Fp16));
+        assert_eq!(WireFormat::parse("bogus"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "16-bit wire path")]
+    fn f32_has_no_16bit_encode() {
+        WireFormat::F32.encode_into(&[1.0], &mut Vec::new());
+    }
+}

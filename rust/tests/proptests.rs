@@ -4,12 +4,15 @@
 
 use std::sync::Arc;
 
-use densefold::collectives::ring::allreduce_ring_pipelined;
+use densefold::collectives::ring::{allreduce_ring_pipelined, allreduce_ring_pipelined_wire};
 use densefold::collectives::{self, AllreduceAlgo};
-use densefold::coordinator::plan::{build_plan, CollectiveOp, Plan, TensorReport};
 use densefold::coordinator::fusion::{FusionArena, FusionBuffer};
+use densefold::coordinator::plan::{build_plan, CollectiveOp, Plan, TensorReport};
+use densefold::coordinator::policy::DensifyPolicy;
+use densefold::coordinator::{ExchangeConfig, GradExchange, NamedGrad};
 use densefold::tensor::{accumulate, AccumStrategy, DenseTensor, Grad, IndexedSlices};
 use densefold::transport::LocalTransport;
+use densefold::transport::wire::{f16_bits_to_f32, f32_to_f16_bits, WireFormat};
 use densefold::util::proptest::{run, Gen};
 
 const CASES: u64 = 60;
@@ -158,6 +161,127 @@ fn prop_ring_pipelined_bit_matches_ring_and_naive() {
                     "p={p} len={len} seg={seg}: naive {x} vs piped {y}"
                 );
             }
+        }
+    });
+}
+
+#[test]
+fn prop_wire16_allreduce_error_bounded_and_rank_identical() {
+    // The 16-bit wire allreduce must (a) stay within the analytic
+    // error bound — one encode per reduce-scatter hop plus the final
+    // owner quantize, each ≤ unit_roundoff relative to the running
+    // magnitude — and (b) leave bit-identical buffers on every rank.
+    run(CASES, |g| {
+        let p = g.usize_in(2, 7);
+        let len = g.usize_in(1, 200);
+        let seg = match g.usize_in(0, 3) {
+            0 => 1,
+            1 => g.usize_in(1, 32),
+            _ => len + 1,
+        };
+        let wire = *g.choose(&[WireFormat::Fp16, WireFormat::Bf16]);
+        let data: Vec<Vec<f32>> = (0..p).map(|_| g.vec_f32(len, -8.0, 8.0)).collect();
+        let mut exact = vec![0.0f64; len];
+        let mut sum_abs = vec![0.0f64; len];
+        for d in &data {
+            for (j, &x) in d.iter().enumerate() {
+                exact[j] += x as f64;
+                sum_abs[j] += x.abs() as f64;
+            }
+        }
+        let d = data.clone();
+        let results = run_ranks(p, move |rank, t| {
+            let mut mine = d[rank].clone();
+            allreduce_ring_pipelined_wire(t.as_ref(), rank, &mut mine, 0, seg, wire);
+            mine
+        });
+        let u = wire.unit_roundoff();
+        for r in &results {
+            for (j, &x) in r.iter().enumerate() {
+                let tol = (p as f64 + 1.0) * u * sum_abs[j] + 1e-3;
+                assert!(
+                    ((x as f64) - exact[j]).abs() <= tol,
+                    "{} p={p} len={len} seg={seg} elem {j}: {x} vs {} (tol {tol})",
+                    wire.name(),
+                    exact[j]
+                );
+            }
+        }
+        let bits: Vec<Vec<u32>> = results
+            .iter()
+            .map(|r| r.iter().map(|x| x.to_bits()).collect())
+            .collect();
+        for b in &bits[1..] {
+            assert_eq!(b, &bits[0], "{} p={p}: ranks diverged", wire.name());
+        }
+    });
+}
+
+#[test]
+fn prop_fp16_codec_roundtrip_error_bounded() {
+    run(CASES, |g| {
+        let x = g.f32_in(-1000.0, 1000.0);
+        let y = f16_bits_to_f32(f32_to_f16_bits(x));
+        assert!(
+            ((x - y).abs() as f64) <= (x.abs() as f64) / 2048.0 + 1e-6,
+            "{x} -> {y}"
+        );
+        // re-encoding a representable value is exact
+        assert_eq!(f16_bits_to_f32(f32_to_f16_bits(y)), y);
+    });
+}
+
+#[test]
+fn prop_adaptive_policy_converges_per_stream_density() {
+    // On a stream whose "sparse" gradient covers (nearly) all rows the
+    // adaptive policy must settle on dense; on a genuinely sparse
+    // stream it must stay on gather — and either way all ranks agree
+    // every cycle (a disagreement would panic inside negotiation).
+    run(12, |g| {
+        let p = g.usize_in(2, 4);
+        let d = g.usize_in(1, 4);
+        let dense_stream = g.bool();
+        let (v, rows_per_rank) = if dense_stream {
+            let v = g.usize_in(4, 24);
+            (v, v) // full coverage per rank: global occupancy 1.0
+        } else {
+            let v = g.usize_in(64, 200);
+            (v, 2) // ≤ 2p distinct rows: occupancy ≤ 8/64 < 0.5
+        };
+        let cycles = 4;
+        let results = run_ranks(p, move |rank, t| {
+            let cfg = ExchangeConfig {
+                policy: DensifyPolicy::Adaptive { dense_above: 0.5 },
+                fusion_threshold: 1 << 16,
+                average: false,
+                ..Default::default()
+            };
+            let mut ex = GradExchange::new(t, rank, cfg);
+            let mut reprs = Vec::new();
+            for _ in 0..cycles {
+                let idx: Vec<i32> = if rows_per_rank >= v {
+                    (0..v as i32).collect()
+                } else {
+                    (0..rows_per_rank).map(|k| ((rank * 2 + k) % v) as i32).collect()
+                };
+                let n = idx.len();
+                let grads = vec![NamedGrad {
+                    name: "emb".into(),
+                    grad: Grad::Sparse(IndexedSlices::new(v, d, idx, vec![0.5; n * d])),
+                }];
+                let (out, _) = ex.exchange(grads);
+                reprs.push(!out[0].grad.is_sparse());
+            }
+            reprs
+        });
+        for reprs in &results {
+            assert!(!reprs[0], "cycle 1 is always a cold-start gather");
+            for &dense in &reprs[1..] {
+                assert_eq!(dense, dense_stream, "converged representation");
+            }
+        }
+        for r in &results[1..] {
+            assert_eq!(r, &results[0], "ranks must agree on every cycle");
         }
     });
 }

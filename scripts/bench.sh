@@ -1,0 +1,35 @@
+#!/usr/bin/env bash
+# Regenerate the repo's live bench numbers.
+#
+# Runs every bench binary in release mode. Each one prints mean/p50/p95
+# per case and leaves two artifacts in the repo root / results/:
+#
+#   BENCH_<name>.json          machine-readable perf trajectory record
+#                              ({group, results:[{name, iters,
+#                              ns_per_iter, p50_ns, p95_ns, samples}]})
+#   results/bench_<name>.csv   the same rows for plotting
+#
+# These are the "live" columns referenced from CHANGES.md — e.g. the
+# ring-vs-pipelined table reads `ring-vs-piped/{ring,pipelined}/…` and
+# the wire-format table `wire/{f32,fp16,bf16}/…` out of
+# BENCH_collectives.json. Compare ns_per_iter for the same result name
+# between two checkouts to see a perf delta.
+#
+# Usage: scripts/bench.sh [name…]   (default: all four groups)
+set -euo pipefail
+
+cd "$(dirname "$0")/.."
+
+benches=("$@")
+if [ ${#benches[@]} -eq 0 ]; then
+    benches=(collectives fusion accumulate train_step)
+fi
+
+for b in "${benches[@]}"; do
+    echo "== cargo run --release --bin $b =="
+    cargo run --release --bin "$b"
+done
+
+echo
+echo "Done. JSON records:"
+ls -1 BENCH_*.json 2>/dev/null || true

@@ -14,4 +14,10 @@ cargo clippy --all-targets -- -D warnings
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo doc --no-deps (warnings are errors) =="
+RUSTDOCFLAGS="-D warnings" cargo doc --no-deps --quiet
+
+echo "== cargo test --doc =="
+cargo test --doc -q
+
 echo "All checks passed."
