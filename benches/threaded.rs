@@ -1,0 +1,16 @@
+//! Bench: the threaded rank executor — wall-clock overlap vs
+//! no-overlap cycles and the live ring-vs-pipelined numbers over real
+//! OS-thread ranks (`BENCH_threaded.json`; same measurements as
+//! `densefold repro threaded`, default knobs).
+
+use densefold::harness::threaded::{threaded_bench, ThreadedOpts};
+
+fn main() {
+    let (bench, table) = threaded_bench(&ThreadedOpts::default());
+    println!("\n{}", table.to_markdown());
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_threaded.csv"))
+        .expect("csv");
+    bench.emit_json().expect("json");
+}

@@ -31,11 +31,12 @@ pub mod plan;
 pub mod policy;
 pub mod timeline;
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::collectives::{self, tree, AllreduceAlgo, ALGO_PHASE_TAGS, TAG_BLOCK};
-use crate::tensor::{DenseTensor, Grad};
-use crate::transport::{Payload, Transport, WireFormat};
+use crate::tensor::{DenseTensor, Grad, IndexedSlices};
+use crate::transport::pool::{acquire_from, release_to, PoolCounters};
+use crate::transport::{Payload, PoolStats, Transport, WireFormat};
 use cache::ResponseCache;
 use fusion::FusionArena;
 use plan::{build_plan, name_id, CollectiveOp, Plan, TensorReport};
@@ -134,6 +135,13 @@ pub struct GradExchange {
     cache: ResponseCache,
     arena: FusionArena,
     policy: PolicyEngine,
+    /// Buffer-return pool: f32 backing buffers handed back by the
+    /// caller via [`GradExchange::return_grads`], recycled by the
+    /// policy-densified path instead of a fresh `to_dense` allocation.
+    /// Same free-list discipline (and module) as the transport payload
+    /// pools — `crate::transport::pool`.
+    dense_pool: Mutex<Vec<Vec<f32>>>,
+    dense_pool_counters: PoolCounters,
 }
 
 impl GradExchange {
@@ -147,7 +155,47 @@ impl GradExchange {
             cache: ResponseCache::new(),
             arena: FusionArena::new(),
             policy: PolicyEngine::new(config.policy),
+            dense_pool: Mutex::new(Vec::new()),
+            dense_pool_counters: PoolCounters::default(),
         }
+    }
+
+    /// Buffer-return API (the ROADMAP open item): hand a previous
+    /// cycle's gradient outputs back to the engine once the optimizer
+    /// is done with them.  Dense backing buffers go into a per-engine
+    /// free list that the policy-densified path draws from, so the
+    /// V×D densification in phase 0 stops allocating once the pool is
+    /// warm; sparse outputs are simply dropped.  Purely an
+    /// optimization — callers that never return buffers keep the old
+    /// allocate-per-cycle behaviour.
+    pub fn return_grads(&mut self, grads: Vec<NamedGrad>) {
+        for g in grads {
+            if let Grad::Dense(t) = g.grad {
+                release_to(&self.dense_pool, &self.dense_pool_counters, t.data);
+            }
+        }
+    }
+
+    /// Counters for the buffer-return densification pool — the
+    /// densified-path twin of the transport's
+    /// [`Transport::pool_stats`]: flat `allocated` across steady-state
+    /// cycles means the phase-0 densification is allocation-free.
+    pub fn densify_pool_stats(&self) -> PoolStats {
+        self.dense_pool_counters.snapshot()
+    }
+
+    /// Densify a sparse submission through the buffer-return pool:
+    /// best-fit a returned f32 buffer (allocating only when none
+    /// fits — the shared `transport::pool` discipline), zero it,
+    /// scatter-add the slices in.
+    fn densify_pooled(&mut self, s: &IndexedSlices) -> DenseTensor {
+        let elems = s.nrows * s.row_width;
+        // acquire_from returns a cleared buffer; resize zero-fills
+        let mut buf = acquire_from(&self.dense_pool, &self.dense_pool_counters, elems);
+        buf.resize(elems, 0.0);
+        let mut dense = DenseTensor::from_vec(vec![s.nrows, s.row_width], buf);
+        s.add_into(&mut dense);
+        dense
     }
 
     /// Response-cache hit rate so far (1.0 in steady state).
@@ -196,10 +244,9 @@ impl GradExchange {
         let grads: Vec<NamedGrad> = if self.config.policy == DensifyPolicy::AlwaysGather {
             grads // zero-overhead default: representation decided upstream
         } else {
-            grads
-                .into_iter()
-                .enumerate()
-                .map(|(i, g)| match g.grad {
+            let mut converted = Vec::with_capacity(grads.len());
+            for (i, g) in grads.into_iter().enumerate() {
+                let out = match g.grad {
                     Grad::Sparse(s) => {
                         let id = name_id(&g.name);
                         if self.config.policy.is_adaptive() {
@@ -210,11 +257,11 @@ impl GradExchange {
                         match decision {
                             Decision::Dense => {
                                 report.n_policy_densified += 1;
-                                // to_dense allocates V×D per cycle; the
-                                // tensor is returned to (and dropped by)
-                                // the caller, so pooling it needs a
-                                // buffer-return API — see ROADMAP
-                                NamedGrad { name: g.name, grad: Grad::Dense(s.to_dense()) }
+                                // the V×D buffer comes from the
+                                // buffer-return pool (return_grads);
+                                // cold engines allocate once per shape
+                                let dense = self.densify_pooled(&s);
+                                NamedGrad { name: g.name, grad: Grad::Dense(dense) }
                             }
                             Decision::Gather => {
                                 NamedGrad { name: g.name, grad: Grad::Sparse(s) }
@@ -222,8 +269,10 @@ impl GradExchange {
                         }
                     }
                     dense => NamedGrad { name: g.name, grad: dense },
-                })
-                .collect()
+                };
+                converted.push(out);
+            }
+            converted
         };
 
         // ---- 1+2+3: negotiation ----
@@ -649,7 +698,10 @@ mod tests {
     fn steady_state_exchange_is_allocation_free() {
         // the PR's acceptance property: once the response cache hits
         // and the transport pool is warm, a fused dense exchange cycle
-        // allocates zero payload buffers and never relays out the arena
+        // allocates zero payload buffers and never relays out the arena.
+        // The cycle includes a policy-densified sparse submission whose
+        // V×D buffer must come from the buffer-return pool
+        // (return_grads), so the densified path is covered too.
         use crate::transport::LocalTransport;
         use std::sync::Arc;
 
@@ -659,7 +711,11 @@ mod tests {
             GradExchange::new(
                 t.clone(),
                 rank,
-                ExchangeConfig { fusion_threshold: 1024, ..Default::default() },
+                ExchangeConfig {
+                    fusion_threshold: 1024,
+                    policy: DensifyPolicy::AlwaysDense,
+                    ..Default::default()
+                },
             )
         };
         let engines: Vec<GradExchange> = (0..p).map(mk).collect();
@@ -673,8 +729,20 @@ mod tests {
                             let grads = vec![
                                 dense_grad("w1", vec![rank as f32; 4096]),
                                 dense_grad("w2", vec![1.0; 300]),
+                                NamedGrad {
+                                    name: "emb".into(),
+                                    grad: Grad::Sparse(IndexedSlices::new(
+                                        64,
+                                        4,
+                                        vec![rank as i32; 8],
+                                        vec![0.5; 32],
+                                    )),
+                                },
                             ];
-                            ex.exchange(grads);
+                            let (out, report) = ex.exchange(grads);
+                            assert_eq!(report.n_policy_densified, 1);
+                            // optimizer done: hand the buffers back
+                            ex.return_grads(out);
                         }
                         ex
                     })
@@ -683,7 +751,7 @@ mod tests {
             handles.into_iter().map(|h| h.join().unwrap()).collect()
         };
 
-        let engines = run_cycles(engines, 3); // negotiate + warm the pool
+        let engines = run_cycles(engines, 3); // negotiate + warm the pools
         let warm_allocated = t.pool_stats().allocated;
         let warm_relayouts: Vec<u64> =
             engines.iter().map(|e| e.arena_relayouts()).collect();
@@ -701,8 +769,31 @@ mod tests {
         for (e, before) in engines.iter().zip(warm_relayouts) {
             assert_eq!(e.arena_relayouts(), before, "arena relaid out on a cache hit");
             assert_eq!(e.arena_relayouts(), 1, "one layout at first negotiation");
+            let d = e.densify_pool_stats();
+            assert_eq!(
+                d.allocated, 1,
+                "densified path must allocate exactly once (cold cycle): {d:?}"
+            );
+            assert!(d.recycled >= 10, "densify pool must recycle in steady state: {d:?}");
         }
         assert!(engines[0].cache_hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn return_grads_without_densify_policy_is_inert() {
+        // AlwaysGather never consults the dense pool; returning buffers
+        // must be safe and the counters must stay at returned-only
+        let results = run_ranks(2, move |rank, t| {
+            let mut ex = GradExchange::new(t, rank, config(false));
+            let (out, _) = ex.exchange(vec![dense_grad("w", vec![rank as f32; 16])]);
+            ex.return_grads(out);
+            ex.densify_pool_stats()
+        });
+        for stats in results {
+            assert_eq!(stats.allocated, 0);
+            assert_eq!(stats.recycled, 0);
+            assert_eq!(stats.returned, 1);
+        }
     }
 
     #[test]

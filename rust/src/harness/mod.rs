@@ -15,11 +15,13 @@
 //! | fig11 | [`strong::fig11_time_to_solution`] | simulated |
 //! | fig12 | [`quality::fig12_bleu_vs_batch`] | **live** (tiny preset) |
 //! | §4 validation | [`validate::live_vs_model`] | **live** (p ≤ 4) |
+//! | threaded | [`threaded::threaded_bench`] | **live** (OS-thread ranks) |
 
 pub mod ablation;
 pub mod accumulate;
 pub mod quality;
 pub mod strong;
+pub mod threaded;
 pub mod validate;
 pub mod weak;
 

@@ -1,0 +1,181 @@
+//! Wall-clock benchmarking of the threaded rank executor — the live
+//! numbers the analytic α–β model could only predict.
+//!
+//! `densefold repro threaded` (and the `threaded` bench binary) run
+//! three measurements over real OS-thread ranks on a
+//! [`ShmTransport`](crate::transport::ShmTransport):
+//!
+//! 1. **Bit-identity gate** — every allreduce algorithm × wire format
+//!    through the overlap scheduler must match the `LocalTransport`
+//!    reference bit for bit (a wrong-fast runtime is worthless).
+//! 2. **Overlap vs no-overlap** — the multi-layer workload with
+//!    per-layer backward compute, cycle wall-clock measured with the
+//!    Horovod-style overlap scheduler on and off.
+//! 3. **Live ring vs pipelined ring** — full exchange cycles over one
+//!    dense tensor per size, the measured counterpart of the
+//!    `ring-vs-piped` model table in CHANGES.md.
+//!
+//! Results land in `BENCH_threaded.json` (the repo's perf-trajectory
+//! format) plus a summary table/CSV.
+
+use crate::collectives::AllreduceAlgo;
+use crate::coordinator::ExchangeConfig;
+use crate::coordinator::policy::DensifyPolicy;
+use crate::runtime::executor::{self, ComputeModel, ExecutorConfig, LayerSpec, ThreadedRun};
+use crate::util::bench::Bench;
+use crate::util::csv::Table;
+
+/// Knobs for the threaded wall-clock run (`repro threaded` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ThreadedOpts {
+    /// OS-thread ranks (`--ranks`).
+    pub ranks: usize,
+    /// Exchange cycles per measurement; the first is warm-up
+    /// (`--cycles`).
+    pub cycles: usize,
+    /// Dense layers in the multi-layer workload (`--layers`).
+    pub layers: usize,
+    /// Size of each dense layer's gradient in KB (`--layer-kb`).
+    pub layer_kb: usize,
+    /// Backward compute per layer, microseconds of calibrated spin
+    /// (`--compute-us`).
+    pub compute_us: u64,
+}
+
+impl Default for ThreadedOpts {
+    fn default() -> Self {
+        Self { ranks: 4, cycles: 8, layers: 4, layer_kb: 1024, compute_us: 400 }
+    }
+}
+
+/// The overlap workload: `layers` dense transformer-ish layers plus
+/// one assumed-sparse embedding the densification policy routes to
+/// the dense path — so a threaded cycle exercises policy → densify →
+/// fusion → pipelined-ring collectives end to end.
+fn overlap_workload(opts: &ThreadedOpts) -> Vec<LayerSpec> {
+    let elems = (opts.layer_kb * 1024 / 4).max(1);
+    let mut layers = vec![LayerSpec::sparse("embedding", 2048, (elems / 2048).max(1), 256)];
+    for i in 0..opts.layers {
+        layers.push(LayerSpec::dense(&format!("dense{i}"), elems));
+    }
+    layers
+}
+
+fn executor_config(opts: &ThreadedOpts, overlap: bool) -> ExecutorConfig {
+    ExecutorConfig {
+        nranks: opts.ranks,
+        layers: overlap_workload(opts),
+        cycles: opts.cycles.max(2),
+        exchange: ExchangeConfig {
+            policy: DensifyPolicy::AlwaysDense,
+            ..Default::default()
+        },
+        overlap,
+        compute: ComputeModel::Spin { us: opts.compute_us },
+        max_jitter_us: 0,
+        jitter_seed: 17,
+    }
+}
+
+/// Per-cycle wall samples in ns, skipping the warm-up cycle when
+/// there is more than one.
+fn wall_samples_ns(run: &ThreadedRun) -> Vec<f64> {
+    let walls = run.cycle_walls_max_ns();
+    let skip = usize::from(walls.len() > 1);
+    walls[skip..].iter().map(|&ns| ns as f64).collect()
+}
+
+/// Run the three measurements; returns the bench record (group
+/// `threaded`, destined for `BENCH_threaded.json`) and the summary
+/// table.
+pub fn threaded_bench(opts: &ThreadedOpts) -> (Bench, Table) {
+    let mut bench = Bench::new("threaded");
+    let p = opts.ranks;
+
+    // 1. bit-identity gate (p capped at 4 to keep the sweep fast);
+    // always-dense policy so the sweep crosses policy -> densify ->
+    // collective, not just the plain dense path
+    let gate_p = p.clamp(2, 4);
+    let mut gate_cfg = ExecutorConfig::verification(gate_p);
+    gate_cfg.exchange.policy = DensifyPolicy::AlwaysDense;
+    let combos = executor::verify_bit_identity(&gate_cfg);
+    println!(
+        "threaded/bit-identity: {combos} algo x wire combinations match the \
+         LocalTransport reference at p={gate_p}"
+    );
+
+    // 2. overlap on/off on the multi-layer workload
+    let no_overlap = executor::run_threaded(&executor_config(opts, false));
+    let overlap = executor::run_threaded(&executor_config(opts, true));
+    overlap.assert_ranks_agree();
+    assert_eq!(
+        overlap.grad_bits(),
+        no_overlap.grad_bits(),
+        "overlap scheduler changed the exchanged gradients"
+    );
+    bench.push_samples(&format!("overlap/off/p{p}"), wall_samples_ns(&no_overlap), 1);
+    bench.push_samples(&format!("overlap/on/p{p}"), wall_samples_ns(&overlap), 1);
+    let no_ms = no_overlap.mean_cycle_us(1) / 1e3;
+    let ovl_ms = overlap.mean_cycle_us(1) / 1e3;
+    let speedup = no_ms / ovl_ms.max(1e-9);
+
+    // 3. live ring vs pipelined ring, full exchange cycles per size
+    for len in [4_096usize, 65_536, 262_144, 2_097_152] {
+        let kb = len * 4 / 1024;
+        for (label, algo) in
+            [("ring", AllreduceAlgo::Ring), ("pipelined", AllreduceAlgo::RingPipelined)]
+        {
+            let cfg = ExecutorConfig {
+                nranks: p,
+                layers: vec![LayerSpec::dense("fused", len)],
+                cycles: opts.cycles.max(4),
+                exchange: ExchangeConfig { algo, ..Default::default() },
+                overlap: false,
+                compute: ComputeModel::Idle,
+                max_jitter_us: 0,
+                jitter_seed: 17,
+            };
+            let run = executor::run_threaded(&cfg);
+            bench.push_samples(&format!("live/{label}/{kb}KB/p{p}"), wall_samples_ns(&run), 1);
+        }
+    }
+
+    let mut table = Table::new(vec!["metric", "value"]);
+    table.push(vec!["ranks".into(), p.to_string()]);
+    table.push(vec!["layers (dense+sparse)".into(), format!("{}+1", opts.layers)]);
+    table.push(vec!["layer size".into(), format!("{} KB", opts.layer_kb)]);
+    table.push(vec!["compute per layer".into(), format!("{} µs", opts.compute_us)]);
+    table.push(vec!["bit-identity combos verified".into(), combos.to_string()]);
+    table.push(vec!["cycle, no overlap".into(), format!("{no_ms:.3} ms")]);
+    table.push(vec!["cycle, overlap".into(), format!("{ovl_ms:.3} ms")]);
+    table.push(vec!["overlap speedup".into(), format!("{speedup:.2}x")]);
+    (bench, table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn threaded_bench_smoke() {
+        // tiny workload: the full pipeline (gate + overlap pair + one
+        // size sweep) must run and produce well-formed records
+        let opts = ThreadedOpts {
+            ranks: 2,
+            cycles: 2,
+            layers: 1,
+            layer_kb: 8,
+            compute_us: 0,
+        };
+        let (bench, table) = threaded_bench(&opts);
+        assert!(bench.results.iter().any(|r| r.name == "overlap/on/p2"));
+        assert!(bench.results.iter().any(|r| r.name == "live/pipelined/16KB/p2"));
+        assert!(bench.results.iter().all(|r| r.mean_ns > 0.0));
+        // summary table carries the speedup row
+        let md = table.to_markdown();
+        assert!(md.contains("overlap speedup"));
+        // JSON parses in the trajectory format
+        let parsed = crate::util::json::Json::parse(&bench.to_json()).unwrap();
+        assert_eq!(parsed.get("group").unwrap().as_str(), Some("threaded"));
+    }
+}

@@ -32,7 +32,13 @@ fn main() {
         std::process::exit(2);
     }
     let cmd = args[0].clone();
-    let flags = parse_flags(&args[1..]);
+    let mut rest: Vec<String> = args[1..].to_vec();
+    // `repro <fig>` positional sugar: `densefold repro threaded` is
+    // `densefold repro --fig threaded`
+    if cmd == "repro" && rest.first().is_some_and(|a| !a.starts_with("--")) {
+        rest.insert(0, "--fig".to_string());
+    }
+    let flags = parse_flags(&rest);
     let result = match cmd.as_str() {
         "train" => cmd_train(&flags),
         "repro" => cmd_repro(&flags),
@@ -73,10 +79,18 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded
+                         (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
           --steps N      live-run step budget            (default 30)
+          threaded mode (real OS-thread ranks, wall-clock; writes
+          BENCH_threaded.json):
+          --ranks N      threaded ranks                  (default 4)
+          --cycles N     exchange cycles per measurement (default 8)
+          --layers N     dense layers in the workload    (default 4)
+          --layer-kb N   per-layer gradient size in KB   (default 1024)
+          --compute-us N backward spin per layer, µs     (default 400)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -313,6 +327,21 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         let manifest = load_manifest(flags)?;
         let t = harness::validate::live_vs_model(&manifest, steps.min(10))?;
         harness::emit(&t, &out_dir, "live_vs_model")?;
+        ran += 1;
+    }
+    if want("threaded") {
+        let opts = harness::threaded::ThreadedOpts {
+            ranks: flag(flags, "ranks", "4").parse()?,
+            cycles: flag(flags, "cycles", "8").parse()?,
+            layers: flag(flags, "layers", "4").parse()?,
+            layer_kb: flag(flags, "layer-kb", "1024").parse()?,
+            compute_us: flag(flags, "compute-us", "400").parse()?,
+        };
+        let (bench, t) = harness::threaded::threaded_bench(&opts);
+        bench.emit_json()?;
+        bench.write_csv(&out_dir.join("bench_threaded.csv"))?;
+        println!("(bench json: BENCH_threaded.json)");
+        harness::emit(&t, &out_dir, "threaded_overlap")?;
         ran += 1;
     }
     anyhow::ensure!(ran > 0, "nothing to run: pass --all or --fig figN");

@@ -1,0 +1,630 @@
+//! Threaded rank executor: real OS-thread ranks over a shared-memory
+//! transport, with Horovod-style compute/exchange overlap.
+//!
+//! Everything upstream of this module runs ranks either inside ad-hoc
+//! test harnesses or strictly in lockstep; this is the subsystem that
+//! turns the repo from a simulator into a system.  The executor spawns
+//! **one OS thread per rank** (plus, in overlap mode, one background
+//! exchange thread per rank, exactly like Horovod's controller
+//! thread), drives the full gradient-exchange cycle — densification
+//! policy → fusion → pipelined-ring / wire collectives — concurrently
+//! on all ranks over a [`ShmTransport`], and measures real wall-clock
+//! time per phase.
+//!
+//! ## Thread and ownership layout
+//!
+//! ```text
+//! run_on(transport, cfg)
+//!   ├─ rank-0 thread ──────────────┐ owns: scratch, jitter Rng
+//!   │    backward layer L-1..0     │ Barrier::wait at cycle start
+//!   │    │ grad per layer          │
+//!   │    ▼ mpsc::channel           │
+//!   │  exchange-0 thread           │ owns: GradExchange (arena,
+//!   │    policy→negotiate→collective  response cache, dense pool)
+//!   ├─ rank-1 thread ── exchange-1 thread
+//!   ┆        …        ┆      …        (all over one Arc<dyn Transport>)
+//!   └─ rank-p-1 ────── exchange-p-1
+//! ```
+//!
+//! ## Overlap timeline (one cycle, 3 layers)
+//!
+//! ```text
+//! no overlap:  [bwd L2][bwd L1][bwd L0][xchg L2][xchg L1][xchg L0]
+//! overlap:     [bwd L2][bwd L1][bwd L0]
+//!                      [xchg L2]      [xchg L1][xchg L0]
+//!              layer k's exchange rides under layer k-1's backward
+//! ```
+//!
+//! Overlap never changes the answer: submissions happen in the same
+//! order either way, every exchange cycle runs the same deterministic
+//! collectives, so the exchanged gradients are **bit-identical**
+//! between overlap on/off, between [`ShmTransport`] and
+//! [`LocalTransport`], and across ranks ([`assert_matches_reference`]
+//! checks all three; `verify_bit_identity` sweeps every allreduce
+//! algorithm × wire format).
+#![warn(missing_docs)]
+
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::{ExchangeConfig, GradExchange, NamedGrad};
+use crate::tensor::{DenseTensor, Grad, IndexedSlices};
+use crate::transport::{LocalTransport, ShmTransport, Transport};
+use crate::util::rng::Rng;
+
+/// What one layer of the synthetic multi-layer workload submits per
+/// exchange cycle.
+#[derive(Debug, Clone)]
+pub enum LayerKind {
+    /// A dense gradient of `elems` f32 elements.
+    Dense {
+        /// Element count of the flat dense gradient.
+        elems: usize,
+    },
+    /// An assumed-sparse gradient: `nslices` IndexedSlices rows into a
+    /// `[nrows, row_width]` variable (the embedding-layer shape the
+    /// densification policy reasons about).
+    Sparse {
+        /// Leading dimension of the variable (V).
+        nrows: usize,
+        /// Elements per row (D).
+        row_width: usize,
+        /// Slice rows submitted per rank per cycle.
+        nslices: usize,
+    },
+}
+
+/// One layer of the executor's synthetic model: a name (stable tensor
+/// id across ranks) plus the gradient it produces each cycle.
+#[derive(Debug, Clone)]
+pub struct LayerSpec {
+    /// Tensor name reported to the coordinator (must agree across
+    /// ranks — it is the negotiation id).
+    pub name: String,
+    /// Gradient representation and size.
+    pub kind: LayerKind,
+}
+
+impl LayerSpec {
+    /// A dense layer of `elems` f32 elements.
+    pub fn dense(name: &str, elems: usize) -> Self {
+        Self { name: name.to_string(), kind: LayerKind::Dense { elems } }
+    }
+
+    /// A sparse (IndexedSlices) layer into a `[nrows, row_width]`
+    /// variable, submitting `nslices` rows per rank per cycle.
+    pub fn sparse(name: &str, nrows: usize, row_width: usize, nslices: usize) -> Self {
+        Self { name: name.to_string(), kind: LayerKind::Sparse { nrows, row_width, nslices } }
+    }
+
+    /// f32 elements this layer's gradient carries (values only).
+    pub fn elems(&self) -> usize {
+        match self.kind {
+            LayerKind::Dense { elems } => elems,
+            LayerKind::Sparse { row_width, nslices, .. } => row_width * nslices,
+        }
+    }
+}
+
+/// The per-layer backward "compute" the executor interleaves with
+/// exchange — either a calibrated spin or real accumulation work, so
+/// overlap is measured against something that actually occupies the
+/// core.
+#[derive(Debug, Clone, Copy)]
+pub enum ComputeModel {
+    /// No backward work (pure-exchange runs and the bit-identity
+    /// reference).
+    Idle,
+    /// Calibrated busy-spin of `us` microseconds per layer.
+    Spin {
+        /// Spin duration per layer, microseconds.
+        us: u64,
+    },
+    /// Real work: `passes` fused-multiply-add passes over an
+    /// `elems`-element scratch buffer per layer.
+    Fma {
+        /// Scratch buffer length in f32 elements.
+        elems: usize,
+        /// Number of full passes over the buffer.
+        passes: usize,
+    },
+}
+
+impl ComputeModel {
+    /// Run one layer's worth of backward compute against `scratch`.
+    pub fn run(&self, scratch: &mut Vec<f32>) {
+        match self {
+            ComputeModel::Idle => {}
+            ComputeModel::Spin { us } => {
+                let t0 = Instant::now();
+                let budget = u128::from(*us);
+                while t0.elapsed().as_micros() < budget {
+                    std::hint::spin_loop();
+                }
+            }
+            ComputeModel::Fma { elems, passes } => {
+                if scratch.len() != *elems {
+                    scratch.clear();
+                    scratch.resize(*elems, 1.0);
+                }
+                for _ in 0..*passes {
+                    for x in scratch.iter_mut() {
+                        *x = x.mul_add(1.000_000_1, 1.0e-7);
+                    }
+                }
+                std::hint::black_box(scratch.first().copied());
+            }
+        }
+    }
+}
+
+/// Full description of one threaded run: the rank count, the model,
+/// the exchange engine configuration, and the schedule.
+#[derive(Debug, Clone)]
+pub struct ExecutorConfig {
+    /// Number of ranks (one OS thread each, plus one exchange thread
+    /// each in overlap mode).
+    pub nranks: usize,
+    /// The synthetic model, layer 0 first.  Backward runs in reverse
+    /// (layer L-1 down to 0), like a real backprop.
+    pub layers: Vec<LayerSpec>,
+    /// Exchange cycles (training steps) to run.
+    pub cycles: usize,
+    /// Exchange engine configuration (algorithm, wire format,
+    /// densification policy, fusion threshold).
+    pub exchange: ExchangeConfig,
+    /// Overlap scheduler on/off.  On: each layer's exchange is handed
+    /// to the rank's background exchange thread as soon as its
+    /// backward finishes, Horovod-style.  Off: all backward compute,
+    /// then the same per-layer exchanges sequentially.
+    pub overlap: bool,
+    /// Per-layer backward compute model.
+    pub compute: ComputeModel,
+    /// Upper bound (exclusive) of a deterministic per-rank random
+    /// sleep injected before each layer's backward — scheduling-skew
+    /// stress for the concurrency tests.  0 disables.
+    pub max_jitter_us: u64,
+    /// Seed for the jitter stream (each rank derives its own).
+    pub jitter_seed: u64,
+}
+
+impl ExecutorConfig {
+    /// Small deterministic workload — three dense layers plus one
+    /// assumed-sparse embedding — used by the bit-identity gate and
+    /// the concurrency tests.  Fusion threshold is set low enough that
+    /// the dense layers exercise distinct plan shapes.
+    pub fn verification(nranks: usize) -> Self {
+        Self {
+            nranks,
+            layers: vec![
+                LayerSpec::sparse("embedding", 96, 8, 12),
+                LayerSpec::dense("ffn", 2048),
+                LayerSpec::dense("attn", 515),
+                LayerSpec::dense("norm", 33),
+            ],
+            cycles: 2,
+            exchange: ExchangeConfig { fusion_threshold: 4096, ..Default::default() },
+            overlap: true,
+            compute: ComputeModel::Idle,
+            max_jitter_us: 0,
+            jitter_seed: 7,
+        }
+    }
+}
+
+/// Bit-exact image of one exchanged gradient: (name, indices, value
+/// bits).  Dense gradients carry an empty index vector.
+pub type GradBits = (String, Vec<i32>, Vec<u32>);
+
+/// `[cycle][submission order]` gradient bits for one rank.
+pub type RankGradBits = Vec<Vec<GradBits>>;
+
+/// What one rank thread brings back from a run.
+#[derive(Debug, Default)]
+pub struct RankOutcome {
+    /// Exchanged gradients, `[cycle][submission order]` (submission
+    /// order is reverse layer order — backward runs last layer first).
+    pub grads: Vec<Vec<NamedGrad>>,
+    /// Total backward-compute wall time, microseconds.
+    pub compute_us: u64,
+    /// Total time spent inside `GradExchange::exchange`, microseconds
+    /// (on the background thread in overlap mode).
+    pub exchange_us: u64,
+    /// Wall-clock time of each cycle in nanoseconds, barrier to last
+    /// exchange drained (ns so the smallest live measurements carry
+    /// no truncation bias into `BENCH_threaded.json`).
+    pub cycle_wall_ns: Vec<u64>,
+}
+
+/// All ranks' outcomes from one threaded run.
+#[derive(Debug)]
+pub struct ThreadedRun {
+    /// Outcome per rank, index = rank.
+    pub per_rank: Vec<RankOutcome>,
+}
+
+impl ThreadedRun {
+    /// Per-cycle wall time in nanoseconds, taking the slowest rank
+    /// each cycle (the quantity a synchronous data-parallel step
+    /// actually pays).
+    pub fn cycle_walls_max_ns(&self) -> Vec<u64> {
+        let cycles = self.per_rank.first().map_or(0, |r| r.cycle_wall_ns.len());
+        (0..cycles)
+            .map(|c| self.per_rank.iter().map(|r| r.cycle_wall_ns[c]).max().unwrap_or(0))
+            .collect()
+    }
+
+    /// Mean per-cycle wall time in microseconds, skipping the first
+    /// `skip_warmup` cycles (negotiation + pool warm-up).
+    pub fn mean_cycle_us(&self, skip_warmup: usize) -> f64 {
+        let walls = self.cycle_walls_max_ns();
+        let tail = &walls[skip_warmup.min(walls.len().saturating_sub(1))..];
+        tail.iter().sum::<u64>() as f64 / tail.len().max(1) as f64 / 1e3
+    }
+
+    /// Bit-exact image of every exchanged gradient,
+    /// `[rank][cycle][submission order]`.
+    pub fn grad_bits(&self) -> Vec<RankGradBits> {
+        self.per_rank
+            .iter()
+            .map(|r| {
+                r.grads
+                    .iter()
+                    .map(|cycle| cycle.iter().map(grad_bits).collect())
+                    .collect()
+            })
+            .collect()
+    }
+
+    /// Assert every rank holds bit-identical exchanged gradients —
+    /// the lockstep invariant the densification policy rests on.
+    pub fn assert_ranks_agree(&self) {
+        let bits = self.grad_bits();
+        for (rank, b) in bits.iter().enumerate().skip(1) {
+            assert_eq!(*b, bits[0], "rank {rank} diverged from rank 0");
+        }
+    }
+}
+
+/// Bit-exact image of one gradient (see [`GradBits`]).
+pub fn grad_bits(g: &NamedGrad) -> GradBits {
+    match &g.grad {
+        Grad::Dense(t) => (
+            g.name.clone(),
+            Vec::new(),
+            t.data.iter().map(|x| x.to_bits()).collect(),
+        ),
+        Grad::Sparse(s) => (
+            g.name.clone(),
+            s.indices.clone(),
+            s.values.iter().map(|x| x.to_bits()).collect(),
+        ),
+    }
+}
+
+/// Deterministic gradient for (rank, cycle, layer): the same function
+/// on every transport and schedule, so any bit divergence is the
+/// executor's fault, never the workload's.
+pub fn grad_for(rank: usize, cycle: usize, layer: usize, spec: &LayerSpec) -> NamedGrad {
+    let val = |i: usize| -> f32 {
+        ((rank * 31 + cycle * 17 + layer * 13 + i * 7 + 3) % 23) as f32 * 0.25 - 2.75
+    };
+    let grad = match spec.kind {
+        LayerKind::Dense { elems } => {
+            let data: Vec<f32> = (0..elems).map(val).collect();
+            Grad::Dense(DenseTensor::from_vec(vec![elems], data))
+        }
+        LayerKind::Sparse { nrows, row_width, nslices } => {
+            let indices: Vec<i32> = (0..nslices)
+                .map(|j| ((rank * 7 + cycle * 3 + j * 11) % nrows) as i32)
+                .collect();
+            let values: Vec<f32> = (0..nslices * row_width).map(val).collect();
+            Grad::Sparse(IndexedSlices::new(nrows, row_width, indices, values))
+        }
+    };
+    NamedGrad { name: spec.name.clone(), grad }
+}
+
+/// Run the configured workload with one OS thread per rank over a
+/// fresh [`ShmTransport`].
+pub fn run_threaded(cfg: &ExecutorConfig) -> ThreadedRun {
+    run_on(Arc::new(ShmTransport::new(cfg.nranks)), cfg)
+}
+
+/// The reference execution the tentpole asserts against: the same
+/// workload, no overlap, no compute, no jitter, over the established
+/// [`LocalTransport`] — i.e. exactly the execution mode every earlier
+/// PR's tests run in.
+pub fn reference_run(cfg: &ExecutorConfig) -> ThreadedRun {
+    let mut rcfg = cfg.clone();
+    rcfg.overlap = false;
+    rcfg.compute = ComputeModel::Idle;
+    rcfg.max_jitter_us = 0;
+    run_on(Arc::new(LocalTransport::new(rcfg.nranks)), &rcfg)
+}
+
+/// Run the workload over an explicit transport (the two public entry
+/// points wrap this; tests use it to pin the transport).
+pub fn run_on(transport: Arc<dyn Transport>, cfg: &ExecutorConfig) -> ThreadedRun {
+    assert!(cfg.nranks >= 1, "need at least one rank");
+    assert!(!cfg.layers.is_empty(), "need at least one layer");
+    assert_eq!(transport.nranks(), cfg.nranks, "transport sized for a different rank count");
+    let barrier = Arc::new(Barrier::new(cfg.nranks));
+    let cfg = Arc::new(cfg.clone());
+    let handles: Vec<_> = (0..cfg.nranks)
+        .map(|rank| {
+            let transport = transport.clone();
+            let cfg = cfg.clone();
+            let barrier = barrier.clone();
+            thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || {
+                    if cfg.overlap {
+                        run_rank_overlapped(rank, transport, &cfg, &barrier)
+                    } else {
+                        run_rank_sequential(rank, transport, &cfg, &barrier)
+                    }
+                })
+                .expect("spawn rank thread")
+        })
+        .collect();
+    let per_rank = handles
+        .into_iter()
+        .map(|h| h.join().expect("rank thread panicked"))
+        .collect();
+    ThreadedRun { per_rank }
+}
+
+/// Per-rank jitter stream: deterministic, decorrelated across ranks.
+fn jitter_rng(cfg: &ExecutorConfig, rank: usize) -> Rng {
+    Rng::new(cfg.jitter_seed ^ (rank as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15))
+}
+
+fn maybe_jitter(max_us: u64, rng: &mut Rng) {
+    if max_us > 0 {
+        let us = rng.gen_range(0, max_us as usize) as u64;
+        thread::sleep(Duration::from_micros(us));
+    }
+}
+
+/// Sequential mode: all backward compute, then the same per-layer
+/// exchange cycles in submission order.  One thread per rank.
+fn run_rank_sequential(
+    rank: usize,
+    transport: Arc<dyn Transport>,
+    cfg: &ExecutorConfig,
+    barrier: &Barrier,
+) -> RankOutcome {
+    let mut ex = GradExchange::new(transport, rank, cfg.exchange);
+    let mut outcome = RankOutcome::default();
+    let mut scratch = Vec::new();
+    let mut rng = jitter_rng(cfg, rank);
+    for cycle in 0..cfg.cycles {
+        barrier.wait();
+        let t0 = Instant::now();
+        let mut ready = Vec::with_capacity(cfg.layers.len());
+        for layer in (0..cfg.layers.len()).rev() {
+            maybe_jitter(cfg.max_jitter_us, &mut rng);
+            let c0 = Instant::now();
+            cfg.compute.run(&mut scratch);
+            outcome.compute_us += c0.elapsed().as_micros() as u64;
+            ready.push(grad_for(rank, cycle, layer, &cfg.layers[layer]));
+        }
+        let mut outs = Vec::with_capacity(ready.len());
+        for g in ready {
+            let e0 = Instant::now();
+            let (mut out, _) = ex.exchange(vec![g]);
+            outcome.exchange_us += e0.elapsed().as_micros() as u64;
+            outs.push(out.pop().expect("one grad in, one out"));
+        }
+        outcome.cycle_wall_ns.push(t0.elapsed().as_nanos() as u64);
+        outcome.grads.push(outs);
+    }
+    outcome
+}
+
+/// Messages from a rank's compute thread to its exchange thread.
+enum Msg {
+    /// One layer's gradient is ready for exchange.
+    Grad(NamedGrad),
+    /// The cycle's last gradient has been submitted.
+    EndCycle,
+}
+
+/// Overlap mode: the rank thread runs backward compute and streams
+/// each ready gradient to a background exchange thread (Horovod's
+/// controller-thread shape); layer k's collective rides under layer
+/// k-1's backward.
+fn run_rank_overlapped(
+    rank: usize,
+    transport: Arc<dyn Transport>,
+    cfg: &ExecutorConfig,
+    barrier: &Barrier,
+) -> RankOutcome {
+    let mut ex = GradExchange::new(transport, rank, cfg.exchange);
+    let (grad_tx, grad_rx) = mpsc::channel::<Msg>();
+    let (done_tx, done_rx) = mpsc::channel::<(Vec<NamedGrad>, u64)>();
+    let bg = thread::Builder::new()
+        .name(format!("exchange-{rank}"))
+        .spawn(move || {
+            let mut cur: Vec<NamedGrad> = Vec::new();
+            let mut exchange_us = 0u64;
+            while let Ok(msg) = grad_rx.recv() {
+                match msg {
+                    Msg::Grad(g) => {
+                        let e0 = Instant::now();
+                        let (mut out, _) = ex.exchange(vec![g]);
+                        exchange_us += e0.elapsed().as_micros() as u64;
+                        cur.push(out.pop().expect("one grad in, one out"));
+                    }
+                    Msg::EndCycle => {
+                        done_tx
+                            .send((std::mem::take(&mut cur), exchange_us))
+                            .expect("executor rank thread gone");
+                    }
+                }
+            }
+        })
+        .expect("spawn exchange thread");
+    let mut outcome = RankOutcome::default();
+    let mut scratch = Vec::new();
+    let mut rng = jitter_rng(cfg, rank);
+    for cycle in 0..cfg.cycles {
+        barrier.wait();
+        let t0 = Instant::now();
+        for layer in (0..cfg.layers.len()).rev() {
+            maybe_jitter(cfg.max_jitter_us, &mut rng);
+            let c0 = Instant::now();
+            cfg.compute.run(&mut scratch);
+            outcome.compute_us += c0.elapsed().as_micros() as u64;
+            grad_tx
+                .send(Msg::Grad(grad_for(rank, cycle, layer, &cfg.layers[layer])))
+                .expect("exchange thread died");
+        }
+        grad_tx.send(Msg::EndCycle).expect("exchange thread died");
+        let (outs, ex_us) = done_rx.recv().expect("exchange thread died");
+        outcome.exchange_us = ex_us; // cumulative on the exchange thread
+        outcome.cycle_wall_ns.push(t0.elapsed().as_nanos() as u64);
+        outcome.grads.push(outs);
+    }
+    drop(grad_tx);
+    bg.join().expect("exchange thread panicked");
+    outcome
+}
+
+/// Run `cfg` on the threaded executor (ShmTransport, as configured)
+/// and assert its exchanged gradients are bit-identical across ranks
+/// *and* to the [`reference_run`] over `LocalTransport`.
+pub fn assert_matches_reference(cfg: &ExecutorConfig) {
+    let threaded = run_threaded(cfg);
+    threaded.assert_ranks_agree();
+    let reference = reference_run(cfg);
+    assert_eq!(
+        threaded.grad_bits(),
+        reference.grad_bits(),
+        "threaded run diverged from the LocalTransport reference \
+         (algo {:?}, wire {:?}, overlap {})",
+        cfg.exchange.algo,
+        cfg.exchange.wire,
+        cfg.overlap,
+    );
+}
+
+/// Sweep every allreduce algorithm × wire format over `base` (its
+/// `algo`/`wire` fields are overwritten) and assert bit-identity for
+/// each; returns the number of combinations verified.
+pub fn verify_bit_identity(base: &ExecutorConfig) -> usize {
+    use crate::collectives::AllreduceAlgo;
+    use crate::transport::WireFormat;
+    let algos = [
+        AllreduceAlgo::Ring,
+        AllreduceAlgo::RingPipelined,
+        AllreduceAlgo::RecursiveDoubling,
+        AllreduceAlgo::ReduceBcast,
+        AllreduceAlgo::Naive,
+    ];
+    let wires = [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16];
+    let mut n = 0;
+    for algo in algos {
+        for wire in wires {
+            let mut cfg = base.clone();
+            cfg.exchange.algo = algo;
+            cfg.exchange.wire = wire;
+            assert_matches_reference(&cfg);
+            n += 1;
+        }
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::policy::DensifyPolicy;
+
+    #[test]
+    fn overlapped_matches_reference() {
+        let cfg = ExecutorConfig::verification(4);
+        assert_matches_reference(&cfg);
+    }
+
+    #[test]
+    fn sequential_and_overlap_agree_on_shm() {
+        let mut cfg = ExecutorConfig::verification(3);
+        cfg.overlap = false;
+        let seq = run_threaded(&cfg);
+        cfg.overlap = true;
+        let ovl = run_threaded(&cfg);
+        assert_eq!(seq.grad_bits(), ovl.grad_bits());
+    }
+
+    #[test]
+    fn densify_policy_path_matches_reference() {
+        let mut cfg = ExecutorConfig::verification(4);
+        cfg.exchange.policy = DensifyPolicy::AlwaysDense;
+        assert_matches_reference(&cfg);
+        // the sparse embedding must have come back dense
+        let run = run_threaded(&cfg);
+        let emb = run.per_rank[0].grads[0]
+            .iter()
+            .find(|g| g.name == "embedding")
+            .expect("embedding exchanged");
+        assert!(!emb.grad.is_sparse(), "policy must have densified");
+    }
+
+    #[test]
+    fn single_rank_runs() {
+        let mut cfg = ExecutorConfig::verification(1);
+        cfg.cycles = 3;
+        let run = run_threaded(&cfg);
+        assert_eq!(run.per_rank.len(), 1);
+        assert_eq!(run.per_rank[0].grads.len(), 3);
+        assert_eq!(run.cycle_walls_max_ns().len(), 3);
+    }
+
+    #[test]
+    fn outcome_shape_and_timers() {
+        let mut cfg = ExecutorConfig::verification(2);
+        cfg.compute = ComputeModel::Spin { us: 200 };
+        let run = run_threaded(&cfg);
+        for r in &run.per_rank {
+            assert_eq!(r.grads.len(), cfg.cycles);
+            for cycle in &r.grads {
+                assert_eq!(cycle.len(), cfg.layers.len());
+            }
+            // 2 cycles x 4 layers x 200 µs of spin, measured
+            assert!(r.compute_us >= 8 * 200, "compute_us {}", r.compute_us);
+            assert!(r.exchange_us > 0);
+            assert_eq!(r.cycle_wall_ns.len(), cfg.cycles);
+        }
+        assert!(run.mean_cycle_us(1) > 0.0);
+    }
+
+    #[test]
+    fn fma_compute_does_real_work() {
+        let mut scratch = Vec::new();
+        ComputeModel::Fma { elems: 64, passes: 3 }.run(&mut scratch);
+        assert_eq!(scratch.len(), 64);
+        assert!(scratch[0] > 1.0, "fma passes must have moved the values");
+    }
+
+    #[test]
+    fn grad_for_is_deterministic_and_rank_dependent() {
+        let spec = LayerSpec::dense("w", 16);
+        let a = grad_bits(&grad_for(1, 2, 3, &spec));
+        let b = grad_bits(&grad_for(1, 2, 3, &spec));
+        let c = grad_bits(&grad_for(2, 2, 3, &spec));
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        let sp = LayerSpec::sparse("e", 32, 4, 5);
+        let g = grad_for(0, 0, 0, &sp);
+        match &g.grad {
+            Grad::Sparse(s) => {
+                assert_eq!(s.nslices(), 5);
+                assert!(s.indices.iter().all(|&i| (i as usize) < 32));
+            }
+            _ => panic!("sparse spec must produce sparse grad"),
+        }
+    }
+}

@@ -7,9 +7,16 @@
 //! executable per (preset, kind) and literals marshalled from flat
 //! `f32`/`i32` buffers, the request path contains no Python and no
 //! recompilation.
+//!
+//! [`executor`] is the other half of the runtime: the threaded rank
+//! executor that runs one OS thread per rank over a shared-memory
+//! transport, overlapping backward compute with gradient exchange
+//! (Horovod-style) and measuring real wall-clock phase times.
 
 pub mod engine;
+pub mod executor;
 pub mod manifest;
 
 pub use engine::{Engine, EngineHandle, HostTensor};
+pub use executor::{ExecutorConfig, ThreadedRun};
 pub use manifest::{Manifest, ParamSpec, Preset};

@@ -13,9 +13,9 @@
 //! allocations — [`PoolStats`] makes that assertable.
 
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Condvar, Mutex};
 
+use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
 use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
 
@@ -30,17 +30,6 @@ impl Mailbox {
     fn new() -> Self {
         Self { queues: Mutex::new(HashMap::new()), signal: Condvar::new() }
     }
-}
-
-/// Per-rank cap on pooled buffers; beyond this, returned buffers are
-/// dropped (bounds worst-case held memory at cap × largest payload).
-const POOL_CAP: usize = 64;
-
-#[derive(Default)]
-struct PoolCounters {
-    recycled: AtomicU64,
-    allocated: AtomicU64,
-    returned: AtomicU64,
 }
 
 /// Shared-memory transport between `nranks` in-process ranks.
@@ -90,47 +79,6 @@ impl LocalTransport {
 
     fn recv_f32(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
         self.recv(to, from, tag).into_f32()
-    }
-}
-
-/// Take a cleared buffer with capacity for `len` elements from a
-/// free-list pool. Best fit (smallest sufficient capacity), so a small
-/// request never steals a large buffer a later request needs — mixed
-/// message sizes stay allocation-free. One implementation serves the
-/// f32 payload pools and the u16 wire pools, so the discipline and the
-/// shared [`PoolStats`] counters cannot drift apart.
-fn acquire_from<T>(pool: &Mutex<Vec<Vec<T>>>, counters: &PoolCounters, len: usize) -> Vec<T> {
-    let mut pool = pool.lock().unwrap();
-    let fit = pool
-        .iter()
-        .enumerate()
-        .filter(|(_, b)| b.capacity() >= len)
-        .min_by_key(|(_, b)| b.capacity())
-        .map(|(i, _)| i);
-    match fit {
-        Some(i) => {
-            let mut buf = pool.swap_remove(i);
-            drop(pool);
-            counters.recycled.fetch_add(1, Ordering::Relaxed);
-            buf.clear();
-            buf
-        }
-        None => {
-            drop(pool);
-            counters.allocated.fetch_add(1, Ordering::Relaxed);
-            Vec::with_capacity(len)
-        }
-    }
-}
-
-/// Return a delivered buffer to its free-list pool (dropped beyond
-/// [`POOL_CAP`]).
-fn release_to<T>(pool: &Mutex<Vec<Vec<T>>>, counters: &PoolCounters, buf: Vec<T>) {
-    let mut pool = pool.lock().unwrap();
-    if pool.len() < POOL_CAP {
-        pool.push(buf);
-        drop(pool);
-        counters.returned.fetch_add(1, Ordering::Relaxed);
     }
 }
 
@@ -228,11 +176,7 @@ impl Transport for LocalTransport {
     }
 
     fn pool_stats(&self) -> PoolStats {
-        PoolStats {
-            recycled: self.pool_counters.recycled.load(Ordering::Relaxed),
-            allocated: self.pool_counters.allocated.load(Ordering::Relaxed),
-            returned: self.pool_counters.returned.load(Ordering::Relaxed),
-        }
+        self.pool_counters.snapshot()
     }
 }
 

@@ -2,16 +2,22 @@
 //!
 //! The collectives in [`crate::collectives`] are written against the
 //! [`Transport`] trait, so the same ring/tree/recursive-doubling code
-//! runs over the in-process [`LocalTransport`] (real threads, real
+//! runs over the in-process transports (real threads, real
 //! synchronization — our stand-in for MPI on this single machine) and
 //! can be cost-modelled on the simulated cluster network
-//! ([`crate::sim::network`]).
+//! ([`crate::sim::network`]).  Two in-process implementations:
+//! [`LocalTransport`] (one mailbox per receiving rank) and
+//! [`ShmTransport`] (one mailbox per ordered rank *pair*, the data
+//! plane of the threaded rank executor).
 #![warn(missing_docs)]
 
 pub mod local;
+pub(crate) mod pool;
+pub mod shm;
 pub mod wire;
 
 pub use local::LocalTransport;
+pub use shm::ShmTransport;
 pub use wire::WireFormat;
 
 use std::sync::atomic::{AtomicU64, Ordering};

@@ -1,0 +1,124 @@
+//! Free-list payload-buffer pools shared by the in-process transports.
+//!
+//! [`LocalTransport`](super::LocalTransport) and
+//! [`ShmTransport`](super::ShmTransport) implement the same pooled
+//! slice API (`send_slice` / `recv_into` / `recv_add_into` and the
+//! 16-bit wire variants).  Both keep one free list of reusable payload
+//! buffers per rank and per element type; this module holds the single
+//! acquire/release implementation so the best-fit discipline and the
+//! shared [`PoolStats`](super::PoolStats) counters cannot drift apart
+//! between transports.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::PoolStats;
+
+/// Per-rank cap on pooled buffers; beyond this, returned buffers are
+/// dropped (bounds worst-case held memory at cap × largest payload).
+pub(crate) const POOL_CAP: usize = 64;
+
+/// Always-on pool counters backing [`PoolStats`] snapshots.  One set
+/// of counters serves every pool of a transport (f32 and u16 alike),
+/// matching the aggregate view tests assert on.
+#[derive(Default)]
+pub(crate) struct PoolCounters {
+    recycled: AtomicU64,
+    allocated: AtomicU64,
+    returned: AtomicU64,
+}
+
+impl PoolCounters {
+    /// Read the counters (relaxed; exact once senders are quiescent).
+    pub(crate) fn snapshot(&self) -> PoolStats {
+        PoolStats {
+            recycled: self.recycled.load(Ordering::Relaxed),
+            allocated: self.allocated.load(Ordering::Relaxed),
+            returned: self.returned.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Take a cleared buffer with capacity for `len` elements from a
+/// free-list pool. Best fit (smallest sufficient capacity), so a small
+/// request never steals a large buffer a later request needs — mixed
+/// message sizes stay allocation-free. One implementation serves the
+/// f32 payload pools and the u16 wire pools of every transport, so the
+/// discipline and the shared [`PoolStats`] counters cannot drift
+/// apart.
+pub(crate) fn acquire_from<T>(
+    pool: &Mutex<Vec<Vec<T>>>,
+    counters: &PoolCounters,
+    len: usize,
+) -> Vec<T> {
+    let mut pool = pool.lock().unwrap();
+    let fit = pool
+        .iter()
+        .enumerate()
+        .filter(|(_, b)| b.capacity() >= len)
+        .min_by_key(|(_, b)| b.capacity())
+        .map(|(i, _)| i);
+    match fit {
+        Some(i) => {
+            let mut buf = pool.swap_remove(i);
+            drop(pool);
+            counters.recycled.fetch_add(1, Ordering::Relaxed);
+            buf.clear();
+            buf
+        }
+        None => {
+            drop(pool);
+            counters.allocated.fetch_add(1, Ordering::Relaxed);
+            Vec::with_capacity(len)
+        }
+    }
+}
+
+/// Return a delivered buffer to its free-list pool (dropped beyond
+/// [`POOL_CAP`]).
+pub(crate) fn release_to<T>(
+    pool: &Mutex<Vec<Vec<T>>>,
+    counters: &PoolCounters,
+    buf: Vec<T>,
+) {
+    let mut pool = pool.lock().unwrap();
+    if pool.len() < POOL_CAP {
+        pool.push(buf);
+        drop(pool);
+        counters.returned.fetch_add(1, Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn acquire_allocates_then_recycles_best_fit() {
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let small = acquire_from(&pool, &counters, 4);
+        let large = acquire_from(&pool, &counters, 1024);
+        assert_eq!(counters.snapshot().allocated, 2);
+        release_to(&pool, &counters, large);
+        release_to(&pool, &counters, small);
+        // a small request must take the small buffer, not the large one
+        let got = acquire_from(&pool, &counters, 4);
+        assert!(got.capacity() < 1024, "best fit must not steal the large buffer");
+        let s = counters.snapshot();
+        assert_eq!(s.recycled, 1);
+        assert_eq!(s.returned, 2);
+        assert_eq!(s.allocated, 2);
+    }
+
+    #[test]
+    fn release_drops_beyond_cap() {
+        let pool: Mutex<Vec<Vec<u16>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        for _ in 0..POOL_CAP + 5 {
+            release_to(&pool, &counters, Vec::with_capacity(1));
+        }
+        assert_eq!(pool.lock().unwrap().len(), POOL_CAP);
+        assert_eq!(counters.snapshot().returned, POOL_CAP as u64);
+    }
+}

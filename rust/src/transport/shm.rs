@@ -1,0 +1,301 @@
+//! Shared-memory transport with one channel per (sender, receiver)
+//! rank pair — the data plane of the threaded rank executor
+//! ([`crate::runtime::executor`]).
+//!
+//! [`LocalTransport`](super::LocalTransport) funnels every message for
+//! a receiving rank through one mutex: with p real OS threads inside
+//! one exchange cycle, p-1 senders can contend on a single receiver's
+//! lock.  `ShmTransport` gives every ordered rank pair its own
+//! condvar-signalled mailbox, so a ring neighbour exchange never takes
+//! a lock any third rank can touch — the contention profile of a real
+//! per-peer MPI channel.  Payload buffers come from the same per-rank
+//! free-list pool implementation as `LocalTransport`, so the
+//! steady-state exchange stays allocation-free and the same
+//! [`PoolStats`] assertions hold.
+//!
+//! Semantics are identical to `LocalTransport` (tag-matched, per
+//! (from, tag) FIFO, blocking `recv`), which is what lets the threaded
+//! executor assert bit-identity between the two transports.
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Condvar, Mutex};
+
+use super::pool::{acquire_from, release_to, PoolCounters};
+use super::wire::WireFormat;
+use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
+
+/// One ordered rank pair's mailbox: tag-keyed FIFO queues plus the
+/// condvar the (single) receiver blocks on.
+struct PairChannel {
+    queues: Mutex<HashMap<u64, VecDeque<Payload>>>,
+    signal: Condvar,
+}
+
+impl PairChannel {
+    fn new() -> Self {
+        Self { queues: Mutex::new(HashMap::new()), signal: Condvar::new() }
+    }
+}
+
+/// Shared-memory transport with a dedicated channel per ordered rank
+/// pair (see the module docs for how this differs from
+/// [`LocalTransport`](super::LocalTransport)).
+pub struct ShmTransport {
+    nranks: usize,
+    /// `channels[from * nranks + to]`.
+    channels: Vec<PairChannel>,
+    counters: TrafficCounters,
+    pools: Vec<Mutex<Vec<Vec<f32>>>>,
+    /// Free lists for 16-bit wire buffers, sharing the same
+    /// [`PoolStats`] counters as the f32 pools.
+    pools16: Vec<Mutex<Vec<Vec<u16>>>>,
+    pool_counters: PoolCounters,
+}
+
+impl ShmTransport {
+    /// Create a transport connecting `nranks` in-process ranks.
+    pub fn new(nranks: usize) -> Self {
+        assert!(nranks > 0);
+        Self {
+            nranks,
+            channels: (0..nranks * nranks).map(|_| PairChannel::new()).collect(),
+            counters: TrafficCounters::default(),
+            pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
+            pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
+            pool_counters: PoolCounters::default(),
+        }
+    }
+
+    fn channel(&self, from: usize, to: usize) -> &PairChannel {
+        assert!(from < self.nranks && to < self.nranks, "rank out of range");
+        &self.channels[from * self.nranks + to]
+    }
+}
+
+impl Transport for ShmTransport {
+    fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u64, data: Payload) {
+        self.counters.record(data.nbytes());
+        let ch = self.channel(from, to);
+        let mut queues = ch.queues.lock().unwrap();
+        queues.entry(tag).or_default().push_back(data);
+        ch.signal.notify_all();
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u64) -> Payload {
+        let ch = self.channel(from, to);
+        let mut queues = ch.queues.lock().unwrap();
+        loop {
+            if let Some(q) = queues.get_mut(&tag) {
+                if let Some(msg) = q.pop_front() {
+                    return msg;
+                }
+            }
+            queues = ch.signal.wait(queues).unwrap();
+        }
+    }
+
+    fn stats(&self) -> TrafficStats {
+        self.counters.snapshot()
+    }
+
+    fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
+        let mut buf = acquire_from(&self.pools[from], &self.pool_counters, data.len());
+        buf.extend_from_slice(data);
+        self.send(from, to, tag, Payload::F32(buf));
+    }
+
+    fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
+        let v = self.recv(to, from, tag).into_f32();
+        assert_eq!(v.len(), out.len(), "recv_into length mismatch");
+        out.copy_from_slice(&v);
+        release_to(&self.pools[to], &self.pool_counters, v);
+    }
+
+    fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
+        let v = self.recv(to, from, tag).into_f32();
+        assert_eq!(v.len(), acc.len(), "recv_add_into length mismatch");
+        for (a, x) in acc.iter_mut().zip(&v) {
+            *a += x;
+        }
+        release_to(&self.pools[to], &self.pool_counters, v);
+    }
+
+    fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.send_slice(from, to, tag, data),
+            _ => {
+                let mut buf =
+                    acquire_from(&self.pools16[from], &self.pool_counters, data.len());
+                w.encode_into(data, &mut buf);
+                self.send(from, to, tag, Payload::U16(buf));
+            }
+        }
+    }
+
+    fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.recv_into(to, from, tag, out),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_to(&v, out);
+                release_to(&self.pools16[to], &self.pool_counters, v);
+            }
+        }
+    }
+
+    fn recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+    ) {
+        match w {
+            WireFormat::F32 => self.recv_add_into(to, from, tag, acc),
+            _ => {
+                let v = self.recv(to, from, tag).into_u16();
+                w.decode_add_to(&v, acc);
+                release_to(&self.pools16[to], &self.pool_counters, v);
+            }
+        }
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.pool_counters.snapshot()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn send_recv_roundtrip() {
+        let t = ShmTransport::new(2);
+        t.send(0, 1, 7, Payload::F32(vec![1.0, 2.0]));
+        assert_eq!(t.recv(1, 0, 7), Payload::F32(vec![1.0, 2.0]));
+    }
+
+    #[test]
+    fn fifo_per_tag_and_tags_do_not_cross() {
+        let t = ShmTransport::new(2);
+        t.send(0, 1, 2, Payload::I32(vec![22]));
+        t.send(0, 1, 1, Payload::I32(vec![11]));
+        t.send(0, 1, 1, Payload::I32(vec![12]));
+        assert_eq!(t.recv(1, 0, 1), Payload::I32(vec![11]));
+        assert_eq!(t.recv(1, 0, 1), Payload::I32(vec![12]));
+        assert_eq!(t.recv(1, 0, 2), Payload::I32(vec![22]));
+    }
+
+    #[test]
+    fn senders_do_not_cross() {
+        // pairs have physically separate channels
+        let t = ShmTransport::new(3);
+        t.send(2, 0, 5, Payload::F32(vec![2.0]));
+        t.send(1, 0, 5, Payload::F32(vec![1.0]));
+        assert_eq!(t.recv(0, 1, 5), Payload::F32(vec![1.0]));
+        assert_eq!(t.recv(0, 2, 5), Payload::F32(vec![2.0]));
+    }
+
+    #[test]
+    fn blocking_recv_across_threads() {
+        let t = Arc::new(ShmTransport::new(2));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.recv(1, 0, 9).into_f32());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        t.send(0, 1, 9, Payload::F32(vec![3.5]));
+        assert_eq!(h.join().unwrap(), vec![3.5]);
+    }
+
+    #[test]
+    fn slice_api_pools_in_steady_state() {
+        let t = ShmTransport::new(2);
+        let mut out = [0.0; 8];
+        for _ in 0..10 {
+            t.send_slice(0, 1, 7, &[1.0; 8]);
+            t.recv_into(1, 0, 7, &mut out);
+            t.send_slice(1, 0, 8, &[2.0; 8]);
+            t.recv_into(0, 1, 8, &mut out);
+        }
+        let p = t.pool_stats();
+        // one warm-up allocation; after that the single buffer circulates
+        assert_eq!(p.allocated, 1, "{p:?}");
+        assert_eq!(p.recycled, 19, "{p:?}");
+        assert_eq!(p.returned, 20, "{p:?}");
+    }
+
+    #[test]
+    fn wire16_halves_bytes_and_pools() {
+        let t = ShmTransport::new(2);
+        t.send_slice_wire(0, 1, 0, &[0.0; 100], WireFormat::Bf16);
+        assert_eq!(t.stats().bytes, 200);
+        let mut out = [0.0f32; 100];
+        t.recv_into_wire(1, 0, 0, &mut out, WireFormat::Bf16);
+        // ping-pong so wire buffers circulate 0 -> 1 -> 0 (as in a
+        // ring); one warm round trip, then the steady state is clean
+        let mut sink = [0.0f32; 100];
+        t.send_slice_wire(1, 0, 500, &[0.0; 100], WireFormat::Bf16);
+        t.recv_into_wire(0, 1, 500, &mut sink, WireFormat::Bf16);
+        let warm = t.pool_stats().allocated;
+        for i in 0..6u64 {
+            t.send_slice_wire(0, 1, i + 1, &[1.5; 100], WireFormat::Bf16);
+            t.recv_add_into_wire(1, 0, i + 1, &mut out, WireFormat::Bf16);
+            t.send_slice_wire(1, 0, 100 + i, &[0.0; 100], WireFormat::Bf16);
+            t.recv_into_wire(0, 1, 100 + i, &mut sink, WireFormat::Bf16);
+        }
+        let steady = t.pool_stats();
+        assert_eq!(steady.allocated, warm, "wire16 steady state must not allocate: {steady:?}");
+        assert_eq!(out[0], 9.0, "six bf16-exact adds of 1.5");
+    }
+
+    #[test]
+    fn traffic_stats_count_bytes() {
+        let t = ShmTransport::new(2);
+        t.send(0, 1, 0, Payload::F32(vec![0.0; 10]));
+        t.send(1, 0, 0, Payload::I32(vec![0; 5]));
+        let s = t.stats();
+        assert_eq!(s.messages, 2);
+        assert_eq!(s.bytes, 60);
+    }
+
+    #[test]
+    fn collectives_match_local_transport_bit_for_bit() {
+        // the executor's bit-identity claim starts here: the same
+        // allreduce over both transports produces identical bits
+        use crate::collectives::{self, AllreduceAlgo};
+        use crate::transport::LocalTransport;
+
+        let p = 4;
+        let len = 101;
+        let run = |t: Arc<dyn Transport>| -> Vec<Vec<u32>> {
+            let handles: Vec<_> = (0..p)
+                .map(|rank| {
+                    let t = t.clone();
+                    std::thread::spawn(move || {
+                        let mut data: Vec<f32> = (0..len)
+                            .map(|i| ((rank * 31 + i * 7 + 3) % 17) as f32 - 8.0)
+                            .collect();
+                        collectives::allreduce(
+                            t.as_ref(),
+                            rank,
+                            &mut data,
+                            AllreduceAlgo::RingPipelined,
+                            0,
+                        );
+                        data.iter().map(|x| x.to_bits()).collect()
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        };
+        let local = run(Arc::new(LocalTransport::new(p)));
+        let shm = run(Arc::new(ShmTransport::new(p)));
+        assert_eq!(local, shm);
+    }
+}

@@ -85,7 +85,15 @@ impl Bench {
             }
             samples.push(t.elapsed().as_nanos() as f64 / iters as f64);
         }
-        let s = Summary::from(samples);
+        self.push_samples(name, samples, iters)
+    }
+
+    /// Record externally-measured per-iteration samples (nanoseconds)
+    /// under `name` — for wall-clock harnesses (e.g. the threaded
+    /// executor) whose iterations cannot be re-driven by a closure.
+    /// Reported in the same JSON/CSV schema as [`Bench::bench`].
+    pub fn push_samples(&mut self, name: &str, ns: Vec<f64>, iters: u64) -> &BenchResult {
+        let s = Summary::from(ns);
         let result = BenchResult {
             name: name.to_string(),
             mean_ns: s.mean,
@@ -216,6 +224,16 @@ mod tests {
         let text = std::fs::read_to_string(&json_path).unwrap();
         assert!(Json::parse(&text).is_ok());
         let _ = std::fs::remove_file(json_path);
+    }
+
+    #[test]
+    fn push_samples_reports_summary() {
+        let mut b = Bench::new("g").with_budget(5, 20, 3);
+        let r = b.push_samples("wall", vec![100.0, 200.0, 300.0], 1);
+        assert_eq!(r.mean_ns, 200.0);
+        assert_eq!(r.p50_ns, 200.0);
+        assert_eq!(r.samples, 3);
+        assert_eq!(b.results.len(), 1);
     }
 
     #[test]

@@ -22,7 +22,7 @@ cd "$(dirname "$0")/.."
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-    benches=(collectives fusion accumulate train_step)
+    benches=(collectives fusion accumulate train_step threaded)
 fi
 
 for b in "${benches[@]}"; do
