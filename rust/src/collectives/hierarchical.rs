@@ -6,7 +6,8 @@
 //! quantify the effect.
 
 use super::{ring, tree};
-use crate::transport::Transport;
+use crate::transport::{Transport, TransportError};
+use std::time::Duration;
 
 /// Node-aware rank layout: ranks [0..ppn) on node 0, [ppn..2ppn) on
 /// node 1, … (the standard block mapping the paper's runs used).
@@ -35,7 +36,8 @@ impl NodeLayout {
 
 /// In-place hierarchical allreduce (sum).  Requires `p % ppn == 0`
 /// (full nodes) — callers with ragged layouts should fall back to the
-/// flat ring.
+/// flat ring.  Panics if a peer dies mid-collective; use
+/// [`try_allreduce_hierarchical`] when the caller can recover.
 pub fn allreduce_hierarchical(
     t: &dyn Transport,
     rank: usize,
@@ -43,12 +45,27 @@ pub fn allreduce_hierarchical(
     ppn: usize,
     tag_base: u64,
 ) {
+    try_allreduce_hierarchical(t, rank, data, ppn, tag_base, None)
+        .unwrap_or_else(|e| panic!("allreduce_hierarchical(rank={rank}): {e}"))
+}
+
+/// Fallible [`allreduce_hierarchical`]: every receive in all three
+/// phases is bounded by `timeout` and validated.  On error `data` is
+/// poisoned (see [`ring::try_allreduce_ring`]).
+pub fn try_allreduce_hierarchical(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    ppn: usize,
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     assert!(ppn > 0 && p % ppn == 0, "p={p} must be a multiple of ppn={ppn}");
     let layout = NodeLayout { ppn };
     let n_nodes = p / ppn;
     if p == 1 {
-        return;
+        return Ok(());
     }
 
     // Phase 1: intra-node reduce to the local leader.  Binomial tree
@@ -59,7 +76,7 @@ pub fn allreduce_hierarchical(
     if ppn > 1 {
         if rank == leader {
             for peer in leader + 1..leader + ppn {
-                t.recv_add_into(rank, peer, tag_base + peer as u64, data);
+                t.try_recv_add_into(rank, peer, tag_base + peer as u64, data, timeout)?;
             }
         } else {
             t.send_slice(rank, leader, tag_base + rank as u64, data);
@@ -71,7 +88,7 @@ pub fn allreduce_hierarchical(
     if layout.is_leader(rank) && n_nodes > 1 {
         let node = layout.node_of(rank);
         let sub = SubRing { t, ppn, n_nodes };
-        sub.ring_allreduce(node, data, tag_base + 10_000);
+        sub.ring_allreduce(node, data, tag_base + 10_000, timeout)?;
     }
 
     // Phase 3: intra-node broadcast from the leader.
@@ -81,10 +98,11 @@ pub fn allreduce_hierarchical(
                 t.send_slice(rank, peer, tag_base + 20_000 + peer as u64, data);
             }
         } else {
-            t.recv_into(rank, leader, tag_base + 20_000 + rank as u64, data);
+            t.try_recv_into(rank, leader, tag_base + 20_000 + rank as u64, data, timeout)?;
         }
     }
     let _ = tree::broadcast_binomial as fn(&dyn Transport, usize, usize, &mut [f32], u64);
+    Ok(())
 }
 
 /// Ring allreduce over the leader sub-communicator: node i's leader is
@@ -96,7 +114,13 @@ struct SubRing<'a> {
 }
 
 impl SubRing<'_> {
-    fn ring_allreduce(&self, node: usize, data: &mut [f32], tag_base: u64) {
+    fn ring_allreduce(
+        &self,
+        node: usize,
+        data: &mut [f32],
+        tag_base: u64,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
         let p = self.n_nodes;
         let ranges = ring::chunk_ranges(data.len(), p);
         let next = ((node + 1) % p) * self.ppn;
@@ -107,15 +131,18 @@ impl SubRing<'_> {
             let recv_chunk = (node + p - s - 1) % p;
             let tag = tag_base + s as u64;
             self.t.send_slice(me, next, tag, &data[ranges[send_chunk].clone()]);
-            self.t.recv_add_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()]);
+            self.t
+                .try_recv_add_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()], timeout)?;
         }
         for s in 0..p - 1 {
             let send_chunk = (node + 1 + p - s) % p;
             let recv_chunk = (node + p - s) % p;
             let tag = tag_base + (p + s) as u64;
             self.t.send_slice(me, next, tag, &data[ranges[send_chunk].clone()]);
-            self.t.recv_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()]);
+            self.t
+                .try_recv_into(me, prev, tag, &mut data[ranges[recv_chunk].clone()], timeout)?;
         }
+        Ok(())
     }
 }
 

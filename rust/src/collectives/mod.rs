@@ -21,7 +21,8 @@ pub mod rec_double;
 pub mod ring;
 pub mod tree;
 
-use crate::transport::{Transport, WireFormat};
+use crate::transport::{Transport, TransportError, WireFormat};
+use std::time::Duration;
 
 pub use allgather::{allgather_indexed_slices, allgatherv_ring};
 
@@ -59,7 +60,9 @@ impl AllreduceAlgo {
 
 /// Dispatching allreduce (sum). `data` is reduced in place; all ranks
 /// end with identical contents. Falls back from recursive doubling to
-/// ring for non-power-of-two rank counts.
+/// ring for non-power-of-two rank counts.  Panics if a peer dies or
+/// corrupts traffic mid-collective; use [`try_allreduce`] when the
+/// caller can recover.
 pub fn allreduce(
     t: &dyn Transport,
     rank: usize,
@@ -67,24 +70,44 @@ pub fn allreduce(
     algo: AllreduceAlgo,
     tag_base: u64,
 ) {
+    try_allreduce(t, rank, data, algo, tag_base, None)
+        .unwrap_or_else(|e| panic!("allreduce(rank={rank}, {algo:?}): {e}"))
+}
+
+/// Fallible [`allreduce`]: same dispatch table, but every receive in
+/// the chosen algorithm is bounded by `timeout` and validated, so a
+/// dead rank, a dropped message, or a corrupted payload surfaces as a
+/// typed [`TransportError`] instead of a hang or panic.  On error
+/// `data` is poisoned (partially reduced) — the elastic runtime
+/// retries from its own copy of the gradients.
+pub fn try_allreduce(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     if p == 1 {
-        return;
+        return Ok(());
     }
     match algo {
-        AllreduceAlgo::Ring => ring::allreduce_ring(t, rank, data, tag_base),
-        AllreduceAlgo::RingPipelined => ring::allreduce_ring_pipelined(
+        AllreduceAlgo::Ring => ring::try_allreduce_ring(t, rank, data, tag_base, timeout),
+        AllreduceAlgo::RingPipelined => ring::try_allreduce_ring_pipelined_wire(
             t,
             rank,
             data,
             tag_base,
             ring::DEFAULT_SEGMENT_ELEMS,
+            WireFormat::F32,
+            timeout,
         ),
         AllreduceAlgo::RecursiveDoubling => {
             if p.is_power_of_two() {
-                rec_double::allreduce_rec_doubling(t, rank, data, tag_base)
+                rec_double::try_allreduce_rec_doubling(t, rank, data, tag_base, timeout)
             } else {
-                ring::allreduce_ring(t, rank, data, tag_base)
+                ring::try_allreduce_ring(t, rank, data, tag_base, timeout)
             }
         }
         AllreduceAlgo::ReduceBcast => {
@@ -94,10 +117,10 @@ pub fn allreduce(
                 p.next_power_of_two() as u64 <= ALGO_PHASE_TAGS,
                 "too many ranks for tag layout"
             );
-            tree::reduce_binomial(t, rank, 0, data, tag_base);
-            tree::broadcast_binomial(t, rank, 0, data, tag_base + ALGO_PHASE_TAGS);
+            tree::try_reduce_binomial(t, rank, 0, data, tag_base, timeout)?;
+            tree::try_broadcast_binomial(t, rank, 0, data, tag_base + ALGO_PHASE_TAGS, timeout)
         }
-        AllreduceAlgo::Naive => naive::allreduce_naive(t, rank, data, tag_base),
+        AllreduceAlgo::Naive => naive::try_allreduce_naive(t, rank, data, tag_base, timeout),
     }
 }
 
@@ -120,20 +143,36 @@ pub fn allreduce_wire(
     tag_base: u64,
     wire: WireFormat,
 ) {
+    try_allreduce_wire(t, rank, data, algo, tag_base, wire, None)
+        .unwrap_or_else(|e| panic!("allreduce_wire(rank={rank}, {algo:?}): {e}"))
+}
+
+/// Fallible [`allreduce_wire`]: same wire-format dispatch, bounded,
+/// validated receives throughout (see [`try_allreduce`]).
+pub fn try_allreduce_wire(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+    wire: WireFormat,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     if wire == WireFormat::F32 {
-        return allreduce(t, rank, data, algo, tag_base);
+        return try_allreduce(t, rank, data, algo, tag_base, timeout);
     }
     if t.nranks() == 1 {
-        return;
+        return Ok(());
     }
-    ring::allreduce_ring_pipelined_wire(
+    ring::try_allreduce_ring_pipelined_wire(
         t,
         rank,
         data,
         tag_base,
         ring::DEFAULT_SEGMENT_ELEMS,
         wire,
-    );
+        timeout,
+    )
 }
 
 /// Tag-space layout: each collective invocation gets a disjoint block
@@ -249,6 +288,46 @@ mod tests {
     fn rec_doubling_falls_back_for_odd_p() {
         check_allreduce(AllreduceAlgo::RecursiveDoubling, 3, 10);
         check_allreduce(AllreduceAlgo::RecursiveDoubling, 6, 25);
+    }
+
+    #[test]
+    fn try_allreduce_surfaces_faults_for_every_algo() {
+        // rank 3 is dead before the collective starts: every surviving
+        // rank must come back with a typed error (RankDead on the ranks
+        // talking to 3 directly, Timeout on ranks starved downstream)
+        // rather than hanging or panicking
+        use std::sync::Arc;
+        use std::time::Duration;
+        for algo in [
+            AllreduceAlgo::Ring,
+            AllreduceAlgo::RingPipelined,
+            AllreduceAlgo::RecursiveDoubling,
+            AllreduceAlgo::ReduceBcast,
+            AllreduceAlgo::Naive,
+        ] {
+            let t = Arc::new(crate::transport::LocalTransport::new(4));
+            t.mark_dead(3);
+            let handles: Vec<_> = (0..3)
+                .map(|rank| {
+                    let t = t.clone();
+                    std::thread::spawn(move || {
+                        let mut data = rank_data(rank, 16);
+                        try_allreduce(
+                            t.as_ref(),
+                            rank,
+                            &mut data,
+                            algo,
+                            0,
+                            Some(Duration::from_millis(300)),
+                        )
+                    })
+                })
+                .collect();
+            for (rank, h) in handles.into_iter().enumerate() {
+                let r = h.join().unwrap();
+                assert!(r.is_err(), "{algo:?} rank {rank} should fail: {r:?}");
+            }
+        }
     }
 
     #[test]

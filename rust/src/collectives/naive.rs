@@ -3,17 +3,34 @@
 //! hot path; these exist as oracles for the property tests and as the
 //! "no algorithm" baseline in the collective benches.
 
-use crate::transport::{Payload, Transport};
+use crate::transport::{Payload, Transport, TransportError};
+use std::time::Duration;
 
 /// Naive allreduce (sum) via gather-to-root + linear broadcast.
+/// Panics if a peer dies mid-collective; use [`try_allreduce_naive`]
+/// when the caller can recover.
 pub fn allreduce_naive(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base: u64) {
+    try_allreduce_naive(t, rank, data, tag_base, None)
+        .unwrap_or_else(|e| panic!("allreduce_naive(rank={rank}): {e}"))
+}
+
+/// Fallible [`allreduce_naive`]: every receive is bounded by `timeout`
+/// and validated.  On error `data` is poisoned at the root (partially
+/// accumulated) and untouched elsewhere.
+pub fn try_allreduce_naive(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     if p == 1 {
-        return;
+        return Ok(());
     }
     if rank == 0 {
         for r in 1..p {
-            let incoming = t.recv(0, r, tag_base).into_f32();
+            let incoming = t.try_recv(0, r, tag_base, timeout)?.try_into_f32()?;
             for (d, x) in data.iter_mut().zip(incoming) {
                 *d += x;
             }
@@ -23,9 +40,9 @@ pub fn allreduce_naive(t: &dyn Transport, rank: usize, data: &mut [f32], tag_bas
         }
     } else {
         t.send(rank, 0, tag_base, Payload::F32(data.to_vec()));
-        let reduced = t.recv(rank, 0, tag_base + 1).into_f32();
-        data.copy_from_slice(&reduced);
+        t.try_recv_into(rank, 0, tag_base + 1, data, timeout)?;
     }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -4,18 +4,35 @@
 //! coordinator doesn't pack into the fusion buffer.  Power-of-two rank
 //! counts only; the dispatcher falls back to ring otherwise.
 
-use crate::transport::Transport;
+use crate::transport::{Transport, TransportError};
+use std::time::Duration;
 
 /// In-place recursive-doubling allreduce (sum). Panics unless
 /// `t.nranks()` is a power of two.  Payloads move through the pooled
 /// slice API, so steady-state rounds are allocation-free on pooled
-/// transports.
+/// transports.  Panics if a partner dies mid-collective; use
+/// [`try_allreduce_rec_doubling`] when the caller can recover.
 pub fn allreduce_rec_doubling(
     t: &dyn Transport,
     rank: usize,
     data: &mut [f32],
     tag_base: u64,
 ) {
+    try_allreduce_rec_doubling(t, rank, data, tag_base, None)
+        .unwrap_or_else(|e| panic!("allreduce_rec_doubling(rank={rank}): {e}"))
+}
+
+/// Fallible [`allreduce_rec_doubling`]: every receive is bounded by
+/// `timeout` and validated, so a dead or silent partner surfaces as a
+/// typed [`TransportError`].  On error `data` is poisoned (partially
+/// reduced) — retry from the caller's own copy of the inputs.
+pub fn try_allreduce_rec_doubling(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     assert!(p.is_power_of_two(), "recursive doubling requires 2^k ranks");
     let rounds = p.trailing_zeros();
@@ -23,8 +40,9 @@ pub fn allreduce_rec_doubling(
         let partner = rank ^ (1 << s);
         let tag = tag_base + s as u64;
         t.send_slice(rank, partner, tag, data);
-        t.recv_add_into(rank, partner, tag, data);
+        t.try_recv_add_into(rank, partner, tag, data, timeout)?;
     }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -16,7 +16,19 @@
 //!   recycle payload buffers instead of allocating (MVAPICH2-style
 //!   chunking).
 
-use crate::transport::{Payload, Transport, WireFormat};
+use crate::transport::{CorruptKind, Payload, Transport, TransportError, WireFormat};
+use std::time::Duration;
+
+/// Fail with a typed length error when a received chunk does not match
+/// the destination range (a mis-sized message is a corruption, not a
+/// programming error, once faults are in play).
+fn expect_len(expected: usize, got: usize) -> Result<(), TransportError> {
+    if expected == got {
+        Ok(())
+    } else {
+        Err(TransportError::Corrupt(CorruptKind::Length { expected, got }))
+    }
+}
 
 /// Split `len` into p nearly-equal chunk ranges (first `len % p`
 /// chunks get one extra element).
@@ -51,10 +63,32 @@ pub fn segment_ranges(
 }
 
 /// In-place ring allreduce (sum).
+///
+/// Panics if a peer dies or corrupts traffic mid-collective; use
+/// [`try_allreduce_ring`] when the caller can recover.
 pub fn allreduce_ring(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base: u64) {
+    try_allreduce_ring(t, rank, data, tag_base, None)
+        .unwrap_or_else(|e| panic!("allreduce_ring(rank={rank}): {e}"))
+}
+
+/// Fallible in-place ring allreduce (sum).
+///
+/// Every receive is bounded by `timeout` (`None` blocks forever) and
+/// every incoming payload is type/length-checked, so a dead neighbour,
+/// a dropped message, or a corrupted chunk surfaces as a typed
+/// [`TransportError`] instead of a hang or panic.  On error `data` is
+/// left partially reduced — callers must treat the buffer as poisoned
+/// and retry from their own copy of the inputs.
+pub fn try_allreduce_ring(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     if p == 1 {
-        return;
+        return Ok(());
     }
     let ranges = chunk_ranges(data.len(), p);
     let next = (rank + 1) % p;
@@ -72,9 +106,9 @@ pub fn allreduce_ring(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base
             tag,
             Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
         );
-        let incoming = t.recv(rank, prev, tag).into_f32();
+        let incoming = t.try_recv(rank, prev, tag, timeout)?.try_into_f32()?;
         let dst = &mut data[ranges[recv_chunk].clone()];
-        debug_assert_eq!(incoming.len(), dst.len());
+        expect_len(dst.len(), incoming.len())?;
         for (d, x) in dst.iter_mut().zip(incoming) {
             *d += x;
         }
@@ -92,11 +126,12 @@ pub fn allreduce_ring(t: &dyn Transport, rank: usize, data: &mut [f32], tag_base
             tag,
             Payload::F32(data[ranges[send_chunk].clone()].to_vec()),
         );
-        let incoming = t.recv(rank, prev, tag).into_f32();
+        let incoming = t.try_recv(rank, prev, tag, timeout)?.try_into_f32()?;
         let dst = &mut data[ranges[recv_chunk].clone()];
-        debug_assert_eq!(incoming.len(), dst.len());
+        expect_len(dst.len(), incoming.len())?;
         dst.copy_from_slice(&incoming);
     }
+    Ok(())
 }
 
 /// In-place segmented, pipelined ring allreduce (sum).
@@ -150,9 +185,27 @@ pub fn allreduce_ring_pipelined_wire(
     seg_elems: usize,
     wire: WireFormat,
 ) {
+    try_allreduce_ring_pipelined_wire(t, rank, data, tag_base, seg_elems, wire, None)
+        .unwrap_or_else(|e| panic!("allreduce_ring_pipelined_wire(rank={rank}): {e}"))
+}
+
+/// Fallible [`allreduce_ring_pipelined_wire`]: identical schedule,
+/// identical bits on success, but every receive is bounded by
+/// `timeout` and validated, so faults surface as a typed
+/// [`TransportError`].  On error `data` is poisoned (see
+/// [`try_allreduce_ring`]).
+pub fn try_allreduce_ring_pipelined_wire(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    seg_elems: usize,
+    wire: WireFormat,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     if p == 1 {
-        return;
+        return Ok(());
     }
     let ranges = chunk_ranges(data.len(), p);
     let next = (rank + 1) % p;
@@ -170,7 +223,7 @@ pub fn allreduce_ring_pipelined_wire(
             t.send_slice_wire(rank, next, tag, &data[seg], wire);
         }
         for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
-            t.recv_add_into_wire(rank, prev, tag, &mut data[seg], wire);
+            t.try_recv_add_into_wire(rank, prev, tag, &mut data[seg], wire, timeout)?;
         }
     }
 
@@ -191,9 +244,10 @@ pub fn allreduce_ring_pipelined_wire(
             t.send_slice_wire(rank, next, tag, &data[seg], wire);
         }
         for seg in segment_ranges(ranges[recv_chunk].clone(), seg_elems) {
-            t.recv_into_wire(rank, prev, tag, &mut data[seg], wire);
+            t.try_recv_into_wire(rank, prev, tag, &mut data[seg], wire, timeout)?;
         }
     }
+    Ok(())
 }
 
 #[cfg(test)]
@@ -393,6 +447,44 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn try_ring_times_out_when_a_rank_is_silent() {
+        // ranks 0 and 1 run the collective; rank 2 never participates,
+        // so its neighbour must get a typed Timeout instead of hanging
+        let t = std::sync::Arc::new(crate::transport::LocalTransport::new(3));
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let t = t.clone();
+                std::thread::spawn(move || {
+                    let mut data = rank_data(rank, 12);
+                    try_allreduce_ring(
+                        t.as_ref(),
+                        rank,
+                        &mut data,
+                        0,
+                        Some(Duration::from_millis(100)),
+                    )
+                })
+            })
+            .collect();
+        let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+        assert!(
+            results
+                .iter()
+                .any(|r| matches!(r, Err(TransportError::Timeout { .. }))),
+            "{results:?}"
+        );
+    }
+
+    #[test]
+    fn try_ring_dead_rank_yields_rank_dead() {
+        let t = std::sync::Arc::new(crate::transport::LocalTransport::new(2));
+        t.mark_dead(1);
+        let mut data = rank_data(0, 8);
+        let err = try_allreduce_ring(t.as_ref(), 0, &mut data, 0, None).unwrap_err();
+        assert_eq!(err, TransportError::RankDead { rank: 1 });
     }
 
     #[test]

@@ -2,13 +2,15 @@
 //! MPI uses for rooted collectives. The coordinator uses broadcast for
 //! the execution plan and reduce+bcast as one of the allreduce options.
 
-use crate::transport::{Payload, Transport};
+use crate::transport::{Payload, Transport, TransportError};
+use std::time::Duration;
 
 /// Reduce (sum) to `root`, binomial tree, in place. Non-root ranks end
 /// with partial sums (their contribution consumed); only `root` holds
 /// the total.  Payloads move through the pooled slice API, so inner
 /// tree levels reduce incoming buffers without allocating on pooled
-/// transports.
+/// transports.  Panics if a child dies mid-reduce; use
+/// [`try_reduce_binomial`] when the caller can recover.
 pub fn reduce_binomial(
     t: &dyn Transport,
     rank: usize,
@@ -16,6 +18,22 @@ pub fn reduce_binomial(
     data: &mut [f32],
     tag_base: u64,
 ) {
+    try_reduce_binomial(t, rank, root, data, tag_base, None)
+        .unwrap_or_else(|e| panic!("reduce_binomial(rank={rank}, root={root}): {e}"))
+}
+
+/// Fallible [`reduce_binomial`]: receives from children are bounded by
+/// `timeout` and validated, so a dead or silent child surfaces as a
+/// typed [`TransportError`].  On error `data` is poisoned (partially
+/// reduced).
+pub fn try_reduce_binomial(
+    t: &dyn Transport,
+    rank: usize,
+    root: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     // operate in a rotated space where root is rank 0
     let vrank = (rank + p - root) % p;
@@ -25,18 +43,21 @@ pub fn reduce_binomial(
             // send to the parent and stop participating
             let parent = ((vrank & !mask) + root) % p;
             t.send_slice(rank, parent, tag_base + mask as u64, data);
-            return;
+            return Ok(());
         }
         let child_v = vrank | mask;
         if child_v < p {
             let child = (child_v + root) % p;
-            t.recv_add_into(rank, child, tag_base + mask as u64, data);
+            t.try_recv_add_into(rank, child, tag_base + mask as u64, data, timeout)?;
         }
         mask <<= 1;
     }
+    Ok(())
 }
 
-/// Broadcast from `root`, binomial tree, in place.
+/// Broadcast from `root`, binomial tree, in place.  Panics if the
+/// parent dies mid-broadcast; use [`try_broadcast_binomial`] when the
+/// caller can recover.
 pub fn broadcast_binomial(
     t: &dyn Transport,
     rank: usize,
@@ -44,6 +65,22 @@ pub fn broadcast_binomial(
     data: &mut [f32],
     tag_base: u64,
 ) {
+    try_broadcast_binomial(t, rank, root, data, tag_base, None)
+        .unwrap_or_else(|e| panic!("broadcast_binomial(rank={rank}, root={root}): {e}"))
+}
+
+/// Fallible [`broadcast_binomial`]: the receive from the parent is
+/// bounded by `timeout` and validated.  On error `data` is untouched
+/// (the one receive failed), but downstream children have not been fed
+/// — the whole group must abort together.
+pub fn try_broadcast_binomial(
+    t: &dyn Transport,
+    rank: usize,
+    root: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     let vrank = (rank + p - root) % p;
     // Phase 1 (MPICH structure): climb mask until our lowest set bit —
@@ -52,7 +89,7 @@ pub fn broadcast_binomial(
     while mask < p {
         if vrank & mask != 0 {
             let parent = ((vrank - mask) + root) % p;
-            t.recv_into(rank, parent, tag_base + mask as u64, data);
+            t.try_recv_into(rank, parent, tag_base + mask as u64, data, timeout)?;
             break;
         }
         mask <<= 1;
@@ -67,6 +104,7 @@ pub fn broadcast_binomial(
         }
         mask >>= 1;
     }
+    Ok(())
 }
 
 /// Generic broadcast of an opaque payload from `root` (used by the

@@ -1,0 +1,238 @@
+//! Chaos-recovery drill: kill ranks and inject link faults into a
+//! live elastic training session, then prove the survivors recovered.
+//!
+//! `densefold repro chaos` runs
+//! [`run_elastic_session`](crate::train::run_elastic_session) with a
+//! fault plan built from the CLI flags — by default killing one rank
+//! mid-run at p=4 — and asserts the recovery contract end to end:
+//!
+//! 1. the run **completes** (no deadlock: every receive is bounded,
+//!    every silent rank is declared dead by the monitor);
+//! 2. survivors **shrink** to exactly `p - kills` and agree on the
+//!    final group membership and epoch;
+//! 3. survivors rolled back to the last checkpoint and finished every
+//!    step with **bit-identical** parameters.
+//!
+//! The summary table (`chaos_recovery.csv`) records what happened:
+//! who died and when, retries forced by injected corruption/drops,
+//! rollbacks, and the final group.
+
+use std::time::Duration;
+
+use crate::collectives::AllreduceAlgo;
+use crate::train::{run_elastic_session, ElasticConfig, ElasticReport};
+use crate::transport::{FaultPlan, LinkFault, WireFormat};
+use crate::util::csv::Table;
+
+/// Knobs for the chaos drill (`repro chaos` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct ChaosOpts {
+    /// Initial world size (`--ranks`).
+    pub ranks: usize,
+    /// Training steps survivors must complete (`--cycles`).
+    pub cycles: usize,
+    /// Rank to kill mid-run, if any (`--kill-rank`).
+    pub kill_rank: Option<usize>,
+    /// Step at which the victim dies (`--kill-cycle`).
+    pub kill_cycle: usize,
+    /// Checkpoint cadence in committed steps (`--ckpt-every`).
+    pub ckpt_every: usize,
+    /// Message drop probability on every link (`--drop`).
+    pub drop_p: f64,
+    /// Payload corruption probability on every link (`--corrupt`).
+    pub corrupt_p: f64,
+    /// Fixed delivery delay on every link, µs (`--delay-us`).
+    pub delay_us: u64,
+    /// Gradient/parameter vector length (`--elems`).
+    pub elems: usize,
+    /// Seed for parameters, gradients, and fault streams (`--seed`).
+    pub seed: u64,
+}
+
+impl Default for ChaosOpts {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            cycles: 8,
+            kill_rank: Some(2),
+            kill_cycle: 3,
+            ckpt_every: 2,
+            drop_p: 0.0,
+            corrupt_p: 0.0,
+            delay_us: 0,
+            elems: 4096,
+            seed: 42,
+        }
+    }
+}
+
+fn fault_plan(opts: &ChaosOpts) -> FaultPlan {
+    let mut plan = FaultPlan::seeded(opts.seed);
+    if opts.drop_p > 0.0 || opts.corrupt_p > 0.0 || opts.delay_us > 0 {
+        plan = plan.with_link(
+            LinkFault::on_all()
+                .drop_p(opts.drop_p)
+                .corrupt_p(opts.corrupt_p)
+                .delay_us(opts.delay_us),
+        );
+    }
+    if let Some(rank) = opts.kill_rank {
+        plan = plan.with_kill(rank, opts.kill_cycle);
+    }
+    plan
+}
+
+fn elastic_config(opts: &ChaosOpts) -> ElasticConfig {
+    ElasticConfig {
+        nranks: opts.ranks,
+        steps: opts.cycles,
+        elems: opts.elems,
+        lr: 0.05,
+        checkpoint_every: opts.ckpt_every,
+        algo: AllreduceAlgo::Ring,
+        wire: WireFormat::F32,
+        // CLI timings are looser than the unit tests': a loaded CI
+        // box must never false-positive a live rank as dead.
+        recv_timeout: Duration::from_millis(250),
+        heartbeat_deadline: Duration::from_millis(1000),
+        faults: fault_plan(opts),
+        // unique per configuration: parallel test threads in one
+        // process must not share a checkpoint file
+        ckpt_path: std::env::temp_dir().join(format!(
+            "densefold_chaos_{}_{}x{}_s{}.ckpt",
+            std::process::id(),
+            opts.ranks,
+            opts.cycles,
+            opts.seed
+        )),
+        seed: opts.seed,
+    }
+}
+
+/// Run the drill and hard-assert the recovery contract; returns the
+/// summary table.  Panics (rather than returning `Err`) on a contract
+/// violation so CI fails loudly.
+pub fn chaos_recovery(opts: &ChaosOpts) -> anyhow::Result<Table> {
+    let cfg = elastic_config(opts);
+    println!(
+        "chaos: p={} steps={} kill={:?}@{} drop={} corrupt={} delay={}µs",
+        opts.ranks,
+        opts.cycles,
+        opts.kill_rank,
+        opts.kill_cycle,
+        opts.drop_p,
+        opts.corrupt_p,
+        opts.delay_us,
+    );
+    let report = run_elastic_session(&cfg)?;
+    let _ = std::fs::remove_file(&cfg.ckpt_path);
+    assert_contract(opts, &report);
+    Ok(summary(opts, &report))
+}
+
+fn assert_contract(opts: &ChaosOpts, report: &ElasticReport) {
+    let expected_dead: Vec<usize> = opts.kill_rank.into_iter().collect();
+    let dead: Vec<usize> = report.died.iter().map(|&(r, _)| r).collect();
+    assert_eq!(dead, expected_dead, "death log does not match the kill schedule");
+    assert!(report.failed.is_empty(), "hard failures: {:?}", report.failed);
+    assert!(report.evicted.is_empty(), "false-positive evictions: {:?}", report.evicted);
+    let expected_survivors: Vec<usize> =
+        (0..opts.ranks).filter(|r| !dead.contains(r)).collect();
+    let survivors: Vec<usize> = report.survivors.iter().map(|s| s.rank).collect();
+    assert_eq!(survivors, expected_survivors, "wrong survivor set");
+    assert_eq!(report.final_members(), expected_survivors, "wrong final group");
+    // finished every step, agreed on epoch/membership, bit-identical
+    report.assert_survivors_agree(opts.cycles as u64);
+    if opts.kill_rank.is_some() {
+        assert!(
+            report.survivors.iter().all(|s| s.rollbacks >= 1),
+            "a shrink must roll survivors back to the checkpoint"
+        );
+        assert!(
+            report.survivors.iter().all(|s| s.final_epoch >= 1),
+            "a shrink must advance the group epoch"
+        );
+    }
+    println!(
+        "chaos: recovered — survivors {:?}, epoch {}, retries {}, rollbacks {}",
+        survivors,
+        report.survivors.first().map_or(0, |s| s.final_epoch),
+        report.survivors.iter().map(|s| s.retries).max().unwrap_or(0),
+        report.survivors.first().map_or(0, |s| s.rollbacks),
+    );
+}
+
+fn summary(opts: &ChaosOpts, report: &ElasticReport) -> Table {
+    let mut table = Table::new(vec!["metric", "value"]);
+    table.push(vec!["initial ranks".into(), opts.ranks.to_string()]);
+    table.push(vec!["steps completed".into(), opts.cycles.to_string()]);
+    table.push(vec![
+        "killed".into(),
+        if report.died.is_empty() {
+            "none".into()
+        } else {
+            report
+                .died
+                .iter()
+                .map(|(r, c)| format!("rank {r} at step {c}"))
+                .collect::<Vec<_>>()
+                .join("; ")
+        },
+    ]);
+    table.push(vec!["final group".into(), format!("{:?}", report.final_members())]);
+    table.push(vec![
+        "final epoch".into(),
+        report.survivors.first().map_or(0, |s| s.final_epoch).to_string(),
+    ]);
+    table.push(vec![
+        "retries (max over ranks)".into(),
+        report.survivors.iter().map(|s| s.retries).max().unwrap_or(0).to_string(),
+    ]);
+    table.push(vec![
+        "rollbacks".into(),
+        report.survivors.first().map_or(0, |s| s.rollbacks).to_string(),
+    ]);
+    table.push(vec![
+        "link faults".into(),
+        format!(
+            "drop={} corrupt={} delay={}µs",
+            opts.drop_p, opts.corrupt_p, opts.delay_us
+        ),
+    ]);
+    table.push(vec!["survivors bit-identical".into(), "yes".into()]);
+    table
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_drill_default_kill_recovers() {
+        // the CI smoke configuration, shrunk: kill rank 2 at step 3 of
+        // 6 at p=4 — must complete, shrink to {0,1,3}, and agree
+        let opts = ChaosOpts {
+            cycles: 6,
+            elems: 512,
+            ..ChaosOpts::default()
+        };
+        let table = chaos_recovery(&opts).unwrap();
+        let md = table.to_markdown();
+        assert!(md.contains("rank 2 at step 3"), "{md}");
+        assert!(md.contains("[0, 1, 3]"), "{md}");
+    }
+
+    #[test]
+    fn chaos_drill_fault_free() {
+        let opts = ChaosOpts {
+            ranks: 2,
+            cycles: 3,
+            kill_rank: None,
+            elems: 256,
+            seed: 7,
+            ..ChaosOpts::default()
+        };
+        let table = chaos_recovery(&opts).unwrap();
+        assert!(table.to_markdown().contains("none"));
+    }
+}

@@ -16,9 +16,11 @@
 //! | fig12 | [`quality::fig12_bleu_vs_batch`] | **live** (tiny preset) |
 //! | §4 validation | [`validate::live_vs_model`] | **live** (p ≤ 4) |
 //! | threaded | [`threaded::threaded_bench`] | **live** (OS-thread ranks) |
+//! | chaos | [`chaos::chaos_recovery`] | **live** (fault injection + elastic recovery) |
 
 pub mod ablation;
 pub mod accumulate;
+pub mod chaos;
 pub mod quality;
 pub mod strong;
 pub mod threaded;

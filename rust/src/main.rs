@@ -79,7 +79,7 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos
                          (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
@@ -91,6 +91,19 @@ commands:
           --layers N     dense layers in the workload    (default 4)
           --layer-kb N   per-layer gradient size in KB   (default 1024)
           --compute-us N backward spin per layer, µs     (default 400)
+          chaos mode (fault injection + elastic recovery drill; kills
+          a rank mid-run and asserts survivors shrink, roll back to
+          the checkpoint, and finish bit-identical):
+          --ranks N      initial world size              (default 4)
+          --cycles N     training steps                  (default 8)
+          --kill-rank R  rank to kill, or 'none'         (default 2)
+          --kill-cycle N step at which it dies           (default 3)
+          --ckpt-every N checkpoint cadence              (default 2)
+          --drop P       per-link message drop prob      (default 0)
+          --corrupt P    per-link corruption prob        (default 0)
+          --delay-us N   per-link delivery delay, µs     (default 0)
+          --elems N      gradient vector length          (default 4096)
+          --seed N       param/gradient/fault seed       (default 42)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -327,6 +340,24 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         let manifest = load_manifest(flags)?;
         let t = harness::validate::live_vs_model(&manifest, steps.min(10))?;
         harness::emit(&t, &out_dir, "live_vs_model")?;
+        ran += 1;
+    }
+    if want("chaos") {
+        let kill = flag(flags, "kill-rank", "2");
+        let opts = harness::chaos::ChaosOpts {
+            ranks: flag(flags, "ranks", "4").parse()?,
+            cycles: flag(flags, "cycles", "8").parse()?,
+            kill_rank: if kill == "none" { None } else { Some(kill.parse()?) },
+            kill_cycle: flag(flags, "kill-cycle", "3").parse()?,
+            ckpt_every: flag(flags, "ckpt-every", "2").parse()?,
+            drop_p: flag(flags, "drop", "0").parse()?,
+            corrupt_p: flag(flags, "corrupt", "0").parse()?,
+            delay_us: flag(flags, "delay-us", "0").parse()?,
+            elems: flag(flags, "elems", "4096").parse()?,
+            seed: flag(flags, "seed", "42").parse()?,
+        };
+        let t = harness::chaos::chaos_recovery(&opts)?;
+        harness::emit(&t, &out_dir, "chaos_recovery")?;
         ran += 1;
     }
     if want("threaded") {

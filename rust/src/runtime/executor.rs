@@ -49,6 +49,7 @@ use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::coordinator::{ExchangeConfig, GradExchange, NamedGrad};
+use crate::runtime::health::{Death, Health, HealthOpts, Monitor};
 use crate::tensor::{DenseTensor, Grad, IndexedSlices};
 use crate::transport::{LocalTransport, ShmTransport, Transport};
 use crate::util::rng::Rng;
@@ -493,6 +494,96 @@ fn run_rank_overlapped(
     outcome
 }
 
+/// How one rank thread of an elastic run ended (see [`run_elastic`]).
+#[derive(Debug)]
+pub enum RankExit<T> {
+    /// The worker ran to completion and produced its result.
+    Finished(T),
+    /// The worker simulated a crash (fault injection) at this cycle —
+    /// it stopped beating and the monitor declared it dead.
+    Died {
+        /// Cycle index at which the simulated crash fired.
+        cycle: usize,
+    },
+    /// The monitor falsely declared this still-running rank dead; the
+    /// survivors moved on without it and it exited cleanly.
+    Evicted,
+    /// The worker hit an unrecoverable error (retry budget exhausted,
+    /// checkpoint I/O failure) or its thread panicked.
+    Failed(String),
+}
+
+impl<T> RankExit<T> {
+    /// The finished payload, if this rank finished.
+    pub fn finished(self) -> Option<T> {
+        match self {
+            RankExit::Finished(x) => Some(x),
+            _ => None,
+        }
+    }
+}
+
+/// Everything an elastic run brings back: per-rank exits plus the
+/// monitor's death log.
+#[derive(Debug)]
+pub struct ElasticRun<T> {
+    /// Exit status per rank, index = physical rank.
+    pub exits: Vec<RankExit<T>>,
+    /// Deaths the monitor declared, in declaration order.
+    pub deaths: Vec<Death>,
+}
+
+/// Fault-tolerant sibling of [`run_on`]: one OS thread per rank plus
+/// a [`Monitor`] thread watching heartbeats.  The `worker` closure is
+/// the per-rank body; it must call [`Health::beat`] at least once per
+/// cycle and is responsible for running the health protocol
+/// (sync/commit/regroup) itself — [`crate::train::session`] supplies
+/// the training-loop incarnation.  Workers that return
+/// [`RankExit::Died`] are *not* marked done, so the monitor declares
+/// them dead exactly as it would a real crash; every other exit marks
+/// the rank done.  Panicking workers become [`RankExit::Failed`].
+pub fn run_elastic<T, F>(
+    transport: Arc<dyn Transport>,
+    opts: HealthOpts,
+    worker: F,
+) -> ElasticRun<T>
+where
+    T: Send + 'static,
+    F: Fn(usize, Arc<dyn Transport>, Arc<Health>) -> RankExit<T> + Send + Sync + 'static,
+{
+    let nranks = transport.nranks();
+    let health = Arc::new(Health::new(nranks));
+    let monitor = Monitor::spawn(health.clone(), transport.clone(), opts);
+    let worker = Arc::new(worker);
+    let handles: Vec<_> = (0..nranks)
+        .map(|rank| {
+            let transport = transport.clone();
+            let health = health.clone();
+            let worker = worker.clone();
+            thread::Builder::new()
+                .name(format!("elastic-rank-{rank}"))
+                .spawn(move || {
+                    let exit = worker(rank, transport, health.clone());
+                    if !matches!(exit, RankExit::Died { .. }) {
+                        health.mark_done(rank);
+                    }
+                    exit
+                })
+                .expect("spawn elastic rank thread")
+        })
+        .collect();
+    let exits = handles
+        .into_iter()
+        .map(|h| {
+            h.join().unwrap_or_else(|_| {
+                RankExit::Failed("rank thread panicked".to_string())
+            })
+        })
+        .collect();
+    let deaths = monitor.stop();
+    ElasticRun { exits, deaths }
+}
+
 /// Run `cfg` on the threaded executor (ShmTransport, as configured)
 /// and assert its exchanged gradients are bit-identical across ranks
 /// *and* to the [`reference_run`] over `LocalTransport`.
@@ -607,6 +698,48 @@ mod tests {
         ComputeModel::Fma { elems: 64, passes: 3 }.run(&mut scratch);
         assert_eq!(scratch.len(), 64);
         assert!(scratch[0] > 1.0, "fma passes must have moved the values");
+    }
+
+    #[test]
+    fn run_elastic_all_finish() {
+        let t: Arc<dyn Transport> = Arc::new(ShmTransport::new(3));
+        let run = run_elastic(t, crate::runtime::health::HealthOpts::default(), |rank, _t, h| {
+            for _ in 0..5 {
+                h.beat(rank);
+                thread::sleep(Duration::from_millis(2));
+            }
+            RankExit::Finished(rank * 10)
+        });
+        assert!(run.deaths.is_empty(), "{:?}", run.deaths);
+        let vals: Vec<usize> =
+            run.exits.into_iter().map(|e| e.finished().expect("finished")).collect();
+        assert_eq!(vals, vec![0, 10, 20]);
+    }
+
+    #[test]
+    fn run_elastic_declares_dying_rank_dead() {
+        let opts = crate::runtime::health::HealthOpts {
+            heartbeat_deadline: Duration::from_millis(100),
+            poll: Duration::from_millis(5),
+        };
+        let t: Arc<dyn Transport> = Arc::new(ShmTransport::new(2));
+        let run = run_elastic(t.clone(), opts, |rank, t, h| {
+            if rank == 1 {
+                // simulated crash: stop beating and exit
+                return RankExit::Died { cycle: 0 };
+            }
+            // rank 0 waits (beating) until the monitor declares 1 dead
+            while !h.is_dead(1) {
+                h.beat(rank);
+                thread::sleep(Duration::from_millis(5));
+            }
+            RankExit::Finished(())
+        });
+        assert_eq!(run.deaths.len(), 1);
+        assert_eq!(run.deaths[0].rank, 1);
+        assert!(t.is_dead(1), "transport must be poisoned");
+        assert!(matches!(run.exits[0], RankExit::Finished(())));
+        assert!(matches!(run.exits[1], RankExit::Died { cycle: 0 }));
     }
 
     #[test]

@@ -1,0 +1,593 @@
+//! Rank health protocol: heartbeats, a failure monitor, and the
+//! keyed barrier rounds the elastic runtime coordinates through.
+//!
+//! The threaded runtime has no MPI runtime underneath it to detect
+//! failures, so this module supplies the minimum machinery a
+//! fault-tolerant data-parallel step needs:
+//!
+//! * **Heartbeats** — every rank thread calls [`Health::beat`] at
+//!   least once per cycle (and while parked inside protocol waits);
+//!   a rank that stops beating is presumed crashed.
+//! * **Monitor** — one background thread ([`Monitor`]) polls the
+//!   heartbeat table and *declares* silent ranks dead: it records the
+//!   death here (waking every parked waiter) and calls
+//!   [`Transport::mark_dead`] so blocked receives fail over to
+//!   [`TransportError::RankDead`](crate::transport::TransportError).
+//! * **Rounds** — survivors agree on what to do next through keyed
+//!   barrier rounds `(kind, epoch, seq)`: adopt the retry attempt
+//!   ([`Health::sync_start`]), vote on a step's outcome
+//!   ([`Health::commit`] → [`Verdict`]), fence a checkpoint
+//!   ([`Health::sync_point`]), or re-form the group without the dead
+//!   ([`Health::regroup`]).
+//!
+//! A round completes when every **live** member of the group has
+//! arrived; deaths declared mid-wait wake the waiters, which
+//! re-evaluate completion against the shrunk live set.  The first
+//! waiter to observe completion computes the round's result once,
+//! under the lock, and stores it — so every member reads the *same*
+//! verdict even while the death set keeps moving underneath.  A
+//! declared-dead rank that is actually still running (a false
+//! positive under extreme scheduling delay) gets [`Evicted`] from the
+//! next round it touches and exits cleanly rather than corrupting the
+//! survivors' agreement.
+#![warn(missing_docs)]
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::transport::Transport;
+
+/// A communicator membership at one epoch of the elastic run.  Epoch
+/// 0 is the full world; each shrink forms epoch `e + 1` from the
+/// survivors of epoch `e`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Group {
+    /// Shrink generation (0 = initial full world).
+    pub epoch: u64,
+    /// Member physical ranks, sorted ascending.
+    pub members: Vec<usize>,
+}
+
+impl Group {
+    /// The full world at epoch 0.
+    pub fn world(nranks: usize) -> Self {
+        Self { epoch: 0, members: (0..nranks).collect() }
+    }
+
+    /// Dense rank of physical rank `phys` within this group.
+    pub fn dense_rank(&self, phys: usize) -> Option<usize> {
+        self.members.binary_search(&phys).ok()
+    }
+
+    /// The group leader (lowest member) — owns checkpoint writes.
+    pub fn leader(&self) -> usize {
+        self.members[0]
+    }
+
+    /// Whether `phys` is a member.
+    pub fn contains(&self, phys: usize) -> bool {
+        self.dense_rank(phys).is_some()
+    }
+}
+
+/// Outcome of a [`Health::commit`] vote.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Verdict {
+    /// Every member succeeded: apply the step and advance.
+    Commit,
+    /// At least one member hit a transient error (timeout, corrupt
+    /// payload) but nobody died: rerun the step at the next attempt.
+    Retry,
+    /// A member died: re-form the group and roll back.
+    Shrink,
+}
+
+/// Returned to a rank the monitor declared dead while it was in fact
+/// still running (false positive): the survivors have moved on
+/// without it, so it must exit instead of rejoining.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Evicted {
+    /// The evicted rank.
+    pub rank: usize,
+}
+
+impl std::fmt::Display for Evicted {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "rank {} was declared dead and evicted from the group", self.rank)
+    }
+}
+
+impl std::error::Error for Evicted {}
+
+/// Tuning knobs for failure detection.
+#[derive(Debug, Clone, Copy)]
+pub struct HealthOpts {
+    /// A rank silent for longer than this is declared dead.  Must
+    /// comfortably exceed the collectives' receive timeout plus one
+    /// cycle's compute, or healthy-but-blocked ranks get evicted.
+    pub heartbeat_deadline: Duration,
+    /// Monitor polling interval.
+    pub poll: Duration,
+}
+
+impl Default for HealthOpts {
+    fn default() -> Self {
+        Self { heartbeat_deadline: Duration::from_millis(1000), poll: Duration::from_millis(10) }
+    }
+}
+
+/// How often a rank parked inside a protocol wait re-beats (must be
+/// far below any reasonable heartbeat deadline).
+const WAIT_SLICE: Duration = Duration::from_millis(25);
+
+const KIND_START: u8 = 0;
+const KIND_COMMIT: u8 = 1;
+const KIND_SYNC: u8 = 2;
+const KIND_REGROUP: u8 = 3;
+
+/// Result of a completed round: a scalar (max attempt, verdict code)
+/// plus, for regroup rounds, the new membership.
+#[derive(Clone)]
+struct Outcome {
+    value: u64,
+    members: Vec<usize>,
+}
+
+#[derive(Default)]
+struct Round {
+    /// rank → proposed value (attempt, vote, 0).
+    arrived: BTreeMap<usize, u64>,
+    result: Option<Outcome>,
+    /// Ranks that have consumed the result.  The round is removed once
+    /// every *live* arrived rank has read — counting reads by rank
+    /// (not a plain counter) so a death after reading can never
+    /// retire the round while a live member still owes a read.
+    read: BTreeSet<usize>,
+}
+
+#[derive(Default)]
+struct State {
+    dead: BTreeSet<usize>,
+    done: BTreeSet<usize>,
+    rounds: HashMap<(u8, u64, u64), Round>,
+}
+
+/// Shared health table for one elastic run (see module docs).
+pub struct Health {
+    nranks: usize,
+    started: Instant,
+    /// Per-rank ms-since-start of the last beat.
+    beats: Vec<AtomicU64>,
+    state: Mutex<State>,
+    cv: Condvar,
+}
+
+impl Health {
+    /// A fresh table for `nranks` ranks, all considered just-beaten.
+    pub fn new(nranks: usize) -> Self {
+        Self {
+            nranks,
+            started: Instant::now(),
+            beats: (0..nranks).map(|_| AtomicU64::new(0)).collect(),
+            state: Mutex::new(State::default()),
+            cv: Condvar::new(),
+        }
+    }
+
+    /// Total ranks tracked (the epoch-0 world size).
+    pub fn nranks(&self) -> usize {
+        self.nranks
+    }
+
+    fn now_ms(&self) -> u64 {
+        self.started.elapsed().as_millis() as u64
+    }
+
+    /// Record a heartbeat for `rank`.
+    pub fn beat(&self, rank: usize) {
+        self.beats[rank].store(self.now_ms(), Ordering::Relaxed);
+    }
+
+    /// Milliseconds since `rank` last beat.
+    pub fn silence_ms(&self, rank: usize) -> u64 {
+        self.now_ms().saturating_sub(self.beats[rank].load(Ordering::Relaxed))
+    }
+
+    /// Mark `rank` as cleanly finished (stops the monitor expecting
+    /// beats from it).
+    pub fn mark_done(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.done.insert(rank);
+        self.cv.notify_all();
+    }
+
+    /// Declare `rank` dead, waking every parked protocol waiter so
+    /// rounds re-evaluate completion against the shrunk live set.
+    /// (The caller is responsible for also poisoning the transport
+    /// via [`Transport::mark_dead`] — the [`Monitor`] does both.)
+    pub fn declare_dead(&self, rank: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.dead.insert(rank);
+        self.cv.notify_all();
+    }
+
+    /// Whether `rank` has been declared dead.
+    pub fn is_dead(&self, rank: usize) -> bool {
+        self.state.lock().unwrap().dead.contains(&rank)
+    }
+
+    /// Whether `rank` has marked itself done.
+    pub fn is_done(&self, rank: usize) -> bool {
+        self.state.lock().unwrap().done.contains(&rank)
+    }
+
+    /// All declared deaths so far, ascending.
+    pub fn deaths(&self) -> Vec<usize> {
+        self.state.lock().unwrap().dead.iter().copied().collect()
+    }
+
+    /// Whether every rank is accounted for (done or dead) — the
+    /// monitor's exit condition.
+    pub fn all_accounted_for(&self) -> bool {
+        let st = self.state.lock().unwrap();
+        (0..self.nranks).all(|r| st.done.contains(&r) || st.dead.contains(&r))
+    }
+
+    /// Whether any member of `group` has been declared dead (the
+    /// step is doomed; skip its collective and go straight to vote).
+    pub fn group_impaired(&self, group: &Group) -> bool {
+        let st = self.state.lock().unwrap();
+        group.members.iter().any(|m| st.dead.contains(m))
+    }
+
+    /// One keyed barrier round.  Blocks (re-beating every
+    /// [`WAIT_SLICE`]) until every live member of `group` has arrived,
+    /// then returns the round's single stored outcome.  `compute` maps
+    /// the arrival table + current death set to that outcome; it runs
+    /// exactly once, in whichever waiter first observes completion.
+    fn round(
+        &self,
+        rank: usize,
+        group: &Group,
+        kind: u8,
+        seq: u64,
+        value: u64,
+        compute: impl Fn(&BTreeMap<usize, u64>, &BTreeSet<usize>) -> Outcome,
+    ) -> Result<Outcome, Evicted> {
+        debug_assert!(group.contains(rank), "rank {rank} not in group {group:?}");
+        let key = (kind, group.epoch, seq);
+        let mut st = self.state.lock().unwrap();
+        st.rounds.entry(key).or_default().arrived.insert(rank, value);
+        loop {
+            if st.dead.contains(&rank) {
+                // Our arrival stays recorded (harmless: completion only
+                // counts live members) but we are out of the group.
+                return Err(Evicted { rank });
+            }
+            let State { dead, rounds, .. } = &mut *st;
+            let round = rounds.get_mut(&key).expect("round entry exists while waiting");
+            if round.result.is_none() {
+                let live: Vec<usize> = group
+                    .members
+                    .iter()
+                    .copied()
+                    .filter(|m| !dead.contains(m))
+                    .collect();
+                if !live.is_empty() && live.iter().all(|m| round.arrived.contains_key(m)) {
+                    round.result = Some(compute(&round.arrived, dead));
+                }
+            }
+            if let Some(outcome) = round.result.clone() {
+                round.read.insert(rank);
+                let all_read = round
+                    .arrived
+                    .keys()
+                    .filter(|m| !dead.contains(m))
+                    .all(|m| round.read.contains(m));
+                if all_read {
+                    rounds.remove(&key);
+                }
+                self.cv.notify_all();
+                return Ok(outcome);
+            }
+            let (guard, _) = self.cv.wait_timeout(st, WAIT_SLICE).unwrap();
+            st = guard;
+            self.beat(rank);
+        }
+    }
+
+    /// Cycle-start barrier: members propose their retry `attempt` and
+    /// everyone adopts the maximum, so a rank whose collective failed
+    /// (attempt bumped) and a rank whose collective succeeded (attempt
+    /// unchanged) re-enter the step aligned.  Returns the adopted
+    /// attempt.
+    pub fn sync_start(
+        &self,
+        rank: usize,
+        group: &Group,
+        seq: u64,
+        attempt: u64,
+    ) -> Result<u64, Evicted> {
+        self.round(rank, group, KIND_START, seq, attempt, |arrived, _| Outcome {
+            value: arrived.values().copied().max().unwrap_or(0),
+            members: Vec::new(),
+        })
+        .map(|o| o.value)
+    }
+
+    /// Post-collective vote: `ok` is whether this member's collective
+    /// succeeded.  The shared verdict is [`Verdict::Shrink`] if any
+    /// group member is dead, else [`Verdict::Retry`] if any member
+    /// voted failure, else [`Verdict::Commit`] — so either every
+    /// survivor applies the step or none does.
+    pub fn commit(
+        &self,
+        rank: usize,
+        group: &Group,
+        seq: u64,
+        ok: bool,
+    ) -> Result<Verdict, Evicted> {
+        let members = group.members.clone();
+        let o = self.round(rank, group, KIND_COMMIT, seq, u64::from(ok), move |arrived, dead| {
+            let value = if members.iter().any(|m| dead.contains(m)) {
+                2
+            } else if arrived.values().any(|&v| v == 0) {
+                1
+            } else {
+                0
+            };
+            Outcome { value, members: Vec::new() }
+        })?;
+        Ok(match o.value {
+            0 => Verdict::Commit,
+            1 => Verdict::Retry,
+            _ => Verdict::Shrink,
+        })
+    }
+
+    /// Plain fence (used after checkpoint writes: nobody proceeds past
+    /// the fence until the leader's checkpoint is durably on disk).
+    pub fn sync_point(&self, rank: usize, group: &Group, seq: u64) -> Result<(), Evicted> {
+        self.round(rank, group, KIND_SYNC, seq, 0, |_, _| Outcome {
+            value: 0,
+            members: Vec::new(),
+        })
+        .map(|_| ())
+    }
+
+    /// Re-form the group after a death: survivors of `group` barrier
+    /// and receive the next-epoch [`Group`] holding exactly the
+    /// members alive at formation time.
+    pub fn regroup(&self, rank: usize, group: &Group) -> Result<Group, Evicted> {
+        let members = group.members.clone();
+        let o = self.round(rank, group, KIND_REGROUP, 0, 0, move |_, dead| Outcome {
+            value: 0,
+            members: members.iter().copied().filter(|m| !dead.contains(m)).collect(),
+        })?;
+        Ok(Group { epoch: group.epoch + 1, members: o.members })
+    }
+}
+
+/// Death log entry: which rank, and how long it had been silent when
+/// declared.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Death {
+    /// The declared-dead rank.
+    pub rank: usize,
+    /// Silence at declaration time, milliseconds.
+    pub silent_ms: u64,
+}
+
+/// Background failure detector: polls the heartbeat table and
+/// declares silent ranks dead (in the [`Health`] table *and* on the
+/// transport, so blocked receives fail over immediately).
+pub struct Monitor {
+    stop: Arc<AtomicBool>,
+    handle: JoinHandle<Vec<Death>>,
+}
+
+impl Monitor {
+    /// Start monitoring.  Exits on [`Monitor::stop`] or once every
+    /// rank is done or dead.
+    pub fn spawn(health: Arc<Health>, transport: Arc<dyn Transport>, opts: HealthOpts) -> Self {
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let handle = std::thread::Builder::new()
+            .name("health-monitor".into())
+            .spawn(move || {
+                let mut log = Vec::new();
+                let deadline_ms = opts.heartbeat_deadline.as_millis() as u64;
+                while !stop2.load(Ordering::Relaxed) && !health.all_accounted_for() {
+                    for rank in 0..health.nranks() {
+                        if health.is_dead(rank) {
+                            continue;
+                        }
+                        // done ranks stop beating legitimately
+                        if health.is_done(rank) {
+                            continue;
+                        }
+                        let silent_ms = health.silence_ms(rank);
+                        if silent_ms > deadline_ms {
+                            health.declare_dead(rank);
+                            transport.mark_dead(rank);
+                            log.push(Death { rank, silent_ms });
+                        }
+                    }
+                    std::thread::sleep(opts.poll);
+                }
+                log
+            })
+            .expect("spawn health monitor");
+        Self { stop, handle }
+    }
+
+    /// Stop the monitor and return the death log (declaration order).
+    pub fn stop(self) -> Vec<Death> {
+        self.stop.store(true, Ordering::Relaxed);
+        self.handle.join().expect("health monitor panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::LocalTransport;
+
+    #[test]
+    fn group_helpers() {
+        let g = Group { epoch: 1, members: vec![0, 2, 5] };
+        assert_eq!(g.dense_rank(5), Some(2));
+        assert_eq!(g.dense_rank(1), None);
+        assert_eq!(g.leader(), 0);
+        assert!(g.contains(2));
+        assert!(!g.contains(3));
+        assert_eq!(Group::world(3).members, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn sync_start_adopts_max_attempt() {
+        let h = Arc::new(Health::new(3));
+        let g = Group::world(3);
+        let handles: Vec<_> = (0..3)
+            .map(|rank| {
+                let h = h.clone();
+                let g = g.clone();
+                std::thread::spawn(move || h.sync_start(rank, &g, 0, rank as u64 * 2))
+            })
+            .collect();
+        for handle in handles {
+            assert_eq!(handle.join().unwrap(), Ok(4));
+        }
+        // round must have been garbage-collected
+        assert!(h.state.lock().unwrap().rounds.is_empty());
+    }
+
+    #[test]
+    fn commit_verdicts() {
+        // all ok → Commit; one failure → Retry; a death → Shrink
+        let cases: [(bool, Option<usize>, Verdict); 3] = [
+            (true, None, Verdict::Commit),
+            (false, None, Verdict::Retry),
+            (true, Some(1), Verdict::Shrink),
+        ];
+        for (rank1_ok, kill, want) in cases {
+            let h = Arc::new(Health::new(2));
+            let g = Group::world(2);
+            if let Some(k) = kill {
+                h.declare_dead(k);
+            }
+            let participants: Vec<usize> =
+                (0..2).filter(|r| Some(*r) != kill).collect();
+            let handles: Vec<_> = participants
+                .into_iter()
+                .map(|rank| {
+                    let h = h.clone();
+                    let g = g.clone();
+                    let ok = if rank == 1 { rank1_ok } else { true };
+                    std::thread::spawn(move || h.commit(rank, &g, 9, ok))
+                })
+                .collect();
+            for handle in handles {
+                assert_eq!(handle.join().unwrap(), Ok(want), "{want:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn death_mid_round_unblocks_survivors() {
+        // ranks 0 and 1 arrive; rank 2 never does. Declaring 2 dead
+        // must complete the round for the survivors.
+        let h = Arc::new(Health::new(3));
+        let g = Group::world(3);
+        let handles: Vec<_> = (0..2)
+            .map(|rank| {
+                let h = h.clone();
+                let g = g.clone();
+                std::thread::spawn(move || h.sync_start(rank, &g, 0, 1))
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(60));
+        h.declare_dead(2);
+        for handle in handles {
+            assert_eq!(handle.join().unwrap(), Ok(1));
+        }
+    }
+
+    #[test]
+    fn regroup_drops_the_dead() {
+        let h = Arc::new(Health::new(4));
+        let g = Group::world(4);
+        h.declare_dead(2);
+        let handles: Vec<_> = [0usize, 1, 3]
+            .into_iter()
+            .map(|rank| {
+                let h = h.clone();
+                let g = g.clone();
+                std::thread::spawn(move || h.regroup(rank, &g))
+            })
+            .collect();
+        for handle in handles {
+            let ng = handle.join().unwrap().unwrap();
+            assert_eq!(ng.epoch, 1);
+            assert_eq!(ng.members, vec![0, 1, 3]);
+        }
+    }
+
+    #[test]
+    fn declared_dead_rank_gets_evicted() {
+        let h = Arc::new(Health::new(2));
+        let g = Group::world(2);
+        h.declare_dead(1);
+        // rank 1 is still running (false positive) and tries to join a
+        // round: it must get Evicted, not hang or corrupt the round
+        assert_eq!(h.sync_start(1, &g, 0, 0), Err(Evicted { rank: 1 }));
+        // rank 0 alone completes the round
+        assert_eq!(h.sync_start(0, &g, 0, 7), Ok(7));
+    }
+
+    #[test]
+    fn monitor_declares_silent_rank_dead() {
+        let h = Arc::new(Health::new(2));
+        let t: Arc<dyn Transport> = Arc::new(LocalTransport::new(2));
+        let opts = HealthOpts {
+            heartbeat_deadline: Duration::from_millis(80),
+            poll: Duration::from_millis(5),
+        };
+        let mon = Monitor::spawn(h.clone(), t.clone(), opts);
+        // rank 0 beats and finishes; rank 1 goes silent
+        let h0 = h.clone();
+        let beater = std::thread::spawn(move || {
+            for _ in 0..30 {
+                h0.beat(0);
+                std::thread::sleep(Duration::from_millis(10));
+            }
+            h0.mark_done(0);
+        });
+        beater.join().unwrap();
+        // by now rank 1 has been silent for ~300 ms >> 80 ms
+        let log = mon.stop();
+        assert_eq!(log.len(), 1);
+        assert_eq!(log[0].rank, 1);
+        assert!(h.is_dead(1));
+        assert!(t.is_dead(1), "monitor must poison the transport too");
+        assert!(!h.is_dead(0));
+    }
+
+    #[test]
+    fn waiters_keep_beating_while_parked() {
+        let h = Arc::new(Health::new(2));
+        let g = Group::world(2);
+        let h0 = h.clone();
+        let g0 = g.clone();
+        let waiter = std::thread::spawn(move || h0.sync_start(0, &g0, 0, 0));
+        std::thread::sleep(Duration::from_millis(120));
+        // parked in the round, rank 0 must still look alive
+        assert!(h.silence_ms(0) < 100, "parked waiter stopped beating");
+        h.beat(1);
+        assert_eq!(h.sync_start(1, &g, 0, 3), Ok(3));
+        assert_eq!(waiter.join().unwrap(), Ok(3));
+    }
+}

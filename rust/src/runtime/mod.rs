@@ -12,11 +12,18 @@
 //! executor that runs one OS thread per rank over a shared-memory
 //! transport, overlapping backward compute with gradient exchange
 //! (Horovod-style) and measuring real wall-clock phase times.
+//!
+//! [`health`] adds the fault-tolerance layer on top: per-rank
+//! heartbeats, a monitor thread that declares silent ranks dead, and
+//! the keyed barrier rounds through which survivors agree to retry a
+//! step, commit it, or shrink the group and recover.
 
 pub mod engine;
 pub mod executor;
+pub mod health;
 pub mod manifest;
 
 pub use engine::{Engine, EngineHandle, HostTensor};
-pub use executor::{ExecutorConfig, ThreadedRun};
+pub use executor::{ExecutorConfig, RankExit, ThreadedRun};
+pub use health::{Group, Health, HealthOpts, Monitor, Verdict};
 pub use manifest::{Manifest, ParamSpec, Preset};

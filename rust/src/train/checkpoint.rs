@@ -1,27 +1,53 @@
 //! Checkpointing: save/restore parameters + optimizer state.
 //!
 //! A production trainer must survive preemption — the paper's month-
-//! long single-node baselines make that concrete.  Format: a small
-//! header (magic, version, counts), then raw little-endian f32 blocks
-//! for params, Adam m, Adam v, plus the step counter.  Written
-//! atomically (temp file + rename).
+//! long single-node baselines make that concrete — and with elastic
+//! recovery in the picture (see [`crate::train::session`]) a
+//! checkpoint is also what survivors roll back to after a shrink, so
+//! a silently-corrupt file would poison every surviving rank at once.
+//! Format (version 2): a small header (magic, version, step, count),
+//! raw little-endian f32 blocks for params, Adam m, Adam v, and a
+//! trailing FNV-1a-64 digest of everything before it.  Written
+//! atomically (temp file + rename).  [`Checkpoint::load`] validates
+//! the file size against the header *before* allocating and verifies
+//! the digest, so truncation, tail-padding, and bit-flips all fail
+//! with descriptive errors instead of returning plausible garbage.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
+use crate::transport::error::Fnv1a;
+
 const MAGIC: &[u8; 8] = b"DFOLDCKP";
-const VERSION: u32 = 1;
+const VERSION: u32 = 2;
+
+/// magic + version + step + count, before the f32 blocks.
+const HEADER_BYTES: u64 = 8 + 4 + 8 + 8;
+/// Trailing FNV-1a-64 digest.
+const DIGEST_BYTES: u64 = 8;
 
 /// Serializable training state.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Checkpoint {
+    /// Optimizer step the state was captured at.
     pub step: u64,
+    /// Parameter replica.
     pub params: Vec<f32>,
+    /// Adam first-moment state.
     pub adam_m: Vec<f32>,
+    /// Adam second-moment state.
     pub adam_v: Vec<f32>,
 }
 
 impl Checkpoint {
+    /// Total on-disk size of a checkpoint holding `n` elements per
+    /// block.
+    fn file_bytes(n: u64) -> u64 {
+        HEADER_BYTES + 3 * n * 4 + DIGEST_BYTES
+    }
+
+    /// Write atomically (temp file + rename), appending a digest of
+    /// the header and blocks.
     pub fn save(&self, path: &Path) -> anyhow::Result<()> {
         anyhow::ensure!(
             self.params.len() == self.adam_m.len()
@@ -34,10 +60,15 @@ impl Checkpoint {
         let tmp = path.with_extension("tmp");
         {
             let mut f = std::io::BufWriter::new(std::fs::File::create(&tmp)?);
-            f.write_all(MAGIC)?;
-            f.write_all(&VERSION.to_le_bytes())?;
-            f.write_all(&self.step.to_le_bytes())?;
-            f.write_all(&(self.params.len() as u64).to_le_bytes())?;
+            let mut digest = Fnv1a::new();
+            let mut put = |f: &mut dyn Write, bytes: &[u8]| -> std::io::Result<()> {
+                digest.update(bytes);
+                f.write_all(bytes)
+            };
+            put(&mut f, MAGIC)?;
+            put(&mut f, &VERSION.to_le_bytes())?;
+            put(&mut f, &self.step.to_le_bytes())?;
+            put(&mut f, &(self.params.len() as u64).to_le_bytes())?;
             for block in [&self.params, &self.adam_m, &self.adam_v] {
                 // bulk byte-copy (hot for 100M-param checkpoints)
                 let bytes: &[u8] = unsafe {
@@ -46,39 +77,78 @@ impl Checkpoint {
                         block.len() * 4,
                     )
                 };
-                f.write_all(bytes)?;
+                put(&mut f, bytes)?;
             }
+            f.write_all(&digest.finish().to_le_bytes())?;
             f.flush()?;
         }
         std::fs::rename(&tmp, path)?;
         Ok(())
     }
 
+    /// Load and fully validate a checkpoint.  Fails with a descriptive
+    /// error on wrong magic, unsupported version, a file shorter or
+    /// longer than the header's element count implies, or a digest
+    /// mismatch (any flipped byte anywhere in the file).
     pub fn load(path: &Path) -> anyhow::Result<Checkpoint> {
+        let actual_bytes = std::fs::metadata(path)?.len();
+        anyhow::ensure!(
+            actual_bytes >= HEADER_BYTES + DIGEST_BYTES,
+            "truncated checkpoint: {actual_bytes} bytes is shorter than the fixed header"
+        );
         let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+        let mut digest = Fnv1a::new();
         let mut magic = [0u8; 8];
         f.read_exact(&mut magic)?;
+        digest.update(&magic);
         anyhow::ensure!(&magic == MAGIC, "not a densefold checkpoint");
         let mut u32buf = [0u8; 4];
         f.read_exact(&mut u32buf)?;
+        digest.update(&u32buf);
         let version = u32::from_le_bytes(u32buf);
         anyhow::ensure!(version == VERSION, "unsupported version {version}");
         let mut u64buf = [0u8; 8];
         f.read_exact(&mut u64buf)?;
+        digest.update(&u64buf);
         let step = u64::from_le_bytes(u64buf);
         f.read_exact(&mut u64buf)?;
-        let n = u64::from_le_bytes(u64buf) as usize;
-        let mut read_block = |n: usize| -> anyhow::Result<Vec<f32>> {
+        digest.update(&u64buf);
+        let n64 = u64::from_le_bytes(u64buf);
+        // size check BEFORE trusting n with an allocation: a corrupt
+        // count can neither over-allocate nor mis-split the blocks
+        // (the first bound also keeps file_bytes() from overflowing)
+        anyhow::ensure!(
+            n64 <= actual_bytes / 4,
+            "truncated or mis-sized checkpoint: header promises {n64} elements, \
+             file has only {actual_bytes} bytes"
+        );
+        anyhow::ensure!(
+            actual_bytes == Self::file_bytes(n64),
+            "truncated or mis-sized checkpoint: header promises {} elements \
+             ({} bytes), file has {actual_bytes} bytes",
+            n64,
+            Self::file_bytes(n64),
+        );
+        let n = n64 as usize;
+        let mut read_block = |f: &mut dyn Read, digest: &mut Fnv1a| -> anyhow::Result<Vec<f32>> {
             let mut bytes = vec![0u8; n * 4];
             f.read_exact(&mut bytes)?;
+            digest.update(&bytes);
             Ok(bytes
                 .chunks_exact(4)
                 .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
                 .collect())
         };
-        let params = read_block(n)?;
-        let adam_m = read_block(n)?;
-        let adam_v = read_block(n)?;
+        let params = read_block(&mut f, &mut digest)?;
+        let adam_m = read_block(&mut f, &mut digest)?;
+        let adam_v = read_block(&mut f, &mut digest)?;
+        f.read_exact(&mut u64buf)?;
+        let stored = u64::from_le_bytes(u64buf);
+        let computed = digest.finish();
+        anyhow::ensure!(
+            stored == computed,
+            "checkpoint checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+        );
         Ok(Checkpoint { step, params, adam_m, adam_v })
     }
 }
@@ -112,8 +182,70 @@ mod tests {
         let dir = std::env::temp_dir().join("densefold_ckpt_test2");
         std::fs::create_dir_all(&dir).unwrap();
         let path = dir.join("bad.ckpt");
-        std::fs::write(&path, b"not a checkpoint at all").unwrap();
-        assert!(Checkpoint::load(&path).is_err());
+        std::fs::write(&path, b"not a checkpoint at all, but long enough to get past the header size gate").unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("not a densefold checkpoint"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn magic_and_version_checked() {
+        let dir = std::env::temp_dir().join("densefold_ckpt_test_magic");
+        let path = dir.join("v.ckpt");
+        sample(8).save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        assert_eq!(&bytes[..8], MAGIC);
+        assert_eq!(u32::from_le_bytes(bytes[8..12].try_into().unwrap()), VERSION);
+        // bump the version field: must fail with the version message
+        let mut wrong = bytes.clone();
+        wrong[8..12].copy_from_slice(&(VERSION + 1).to_le_bytes());
+        std::fs::write(&path, &wrong).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("unsupported version"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn truncated_file_rejected_with_descriptive_error() {
+        let dir = std::env::temp_dir().join("densefold_ckpt_test_trunc");
+        let path = dir.join("t.ckpt");
+        sample(64).save(&path).unwrap();
+        let bytes = std::fs::read(&path).unwrap();
+        // chop mid-block: size no longer matches the header's count
+        std::fs::write(&path, &bytes[..bytes.len() - 100]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // shorter than even the fixed header
+        std::fs::write(&path, &bytes[..10]).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("truncated"), "{err}");
+        // trailing junk is also a size mismatch, not silently ignored
+        let mut padded = bytes.clone();
+        padded.extend_from_slice(&[0u8; 7]);
+        std::fs::write(&path, &padded).unwrap();
+        let err = Checkpoint::load(&path).unwrap_err().to_string();
+        assert!(err.contains("mis-sized") || err.contains("truncated"), "{err}");
+        let _ = std::fs::remove_dir_all(dir);
+    }
+
+    #[test]
+    fn corrupt_byte_anywhere_fails_checksum() {
+        let dir = std::env::temp_dir().join("densefold_ckpt_test_corrupt");
+        let path = dir.join("c.ckpt");
+        sample(32).save(&path).unwrap();
+        let clean = std::fs::read(&path).unwrap();
+        // flip one byte in the params block, the adam_v block, and the
+        // step field — every one must be caught by the digest
+        for &offset in &[HEADER_BYTES as usize + 3, clean.len() - 12, 13] {
+            let mut bad = clean.clone();
+            bad[offset] ^= 0x40;
+            std::fs::write(&path, &bad).unwrap();
+            let err = Checkpoint::load(&path).unwrap_err().to_string();
+            assert!(
+                err.contains("checksum mismatch"),
+                "offset {offset}: {err}"
+            );
+        }
         let _ = std::fs::remove_dir_all(dir);
     }
 

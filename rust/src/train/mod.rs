@@ -18,5 +18,8 @@ pub mod trainer;
 pub use checkpoint::Checkpoint;
 pub use optimizer::Adam;
 pub use schedule::NoamSchedule;
-pub use session::{run_session, run_session_with_engine, SessionConfig, SessionResult};
+pub use session::{
+    run_elastic_session, run_session, run_session_with_engine, ElasticConfig, ElasticOutcome,
+    ElasticReport, SessionConfig, SessionResult,
+};
 pub use trainer::{StepStats, Trainer, TrainerConfig};

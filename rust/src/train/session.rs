@@ -3,15 +3,34 @@
 //! optionally evaluates BLEU at the end.  This is the harness the
 //! examples, the live-calibration path, and the integration tests all
 //! drive.
+//!
+//! The second half of this module is the **elastic session**
+//! ([`run_elastic_session`]): a synthetic data-parallel training loop
+//! that survives injected faults.  Each step the group barriers
+//! ([`Health::sync_start`]), runs a fallible allreduce over a
+//! [`SubTransport`] view of the survivors, and votes
+//! ([`Health::commit`]): `Commit` applies the step, `Retry` reruns it
+//! after a transient fault, and `Shrink` (a death) re-forms the group
+//! at p′ < p and rolls every survivor back to the last checkpoint —
+//! the Elastic-Horovod recovery shape, in-process.
 
+use std::path::PathBuf;
 use std::sync::Arc;
+use std::time::Duration;
 
+use crate::collectives::{self, AllreduceAlgo, TAG_BLOCK};
 use crate::coordinator::ExchangeConfig;
 use crate::data::{bleu::bleu_smoothed, Corpus, CorpusConfig};
+use crate::runtime::executor::{run_elastic, RankExit};
+use crate::runtime::health::{Group, Health, HealthOpts};
 use crate::runtime::{Engine, Manifest};
 use crate::tensor::AccumStrategy;
-use crate::transport::LocalTransport;
+use crate::train::checkpoint::Checkpoint;
 use crate::train::trainer::{load_artifacts, StepStats, Trainer, TrainerConfig};
+use crate::transport::{
+    FaultPlan, FaultyTransport, LocalTransport, ShmTransport, SubTransport, Transport, WireFormat,
+};
+use crate::util::rng::Rng;
 
 /// Everything a live multi-rank run produces.
 #[derive(Debug)]
@@ -192,4 +211,415 @@ pub fn run_session_with_engine(
     };
 
     Ok(SessionResult { stats: all, bleu: bleu_score, wall_secs })
+}
+
+// ---------------------------------------------------------------------------
+// Elastic session: checkpoint-based recovery under injected faults
+// ---------------------------------------------------------------------------
+
+/// Retry budget per step: sync_start adopts the same attempt on every
+/// member, so hitting the cap is a collective decision.  The era
+/// formula (`epoch * 1024 + attempt`) needs attempt < 1024; 512 is
+/// far beyond anything a sub-certain fault rate produces.
+const MAX_ATTEMPTS: u64 = 512;
+
+/// Configuration for [`run_elastic_session`].
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Initial world size (shrinks as ranks die).
+    pub nranks: usize,
+    /// Training steps to complete (survivors finish all of them, re-
+    /// running rolled-back ones as needed).
+    pub steps: usize,
+    /// Parameter / gradient vector length.
+    pub elems: usize,
+    /// SGD learning rate (applied to the mean gradient, so the update
+    /// stays scale-consistent as the group shrinks).
+    pub lr: f32,
+    /// Save a checkpoint every N committed steps (0 = only the final
+    /// one).  The baseline step-0 checkpoint is always written.
+    pub checkpoint_every: usize,
+    /// Allreduce algorithm for the gradient exchange.
+    pub algo: AllreduceAlgo,
+    /// Wire format for the gradient exchange.
+    pub wire: WireFormat,
+    /// Per-receive timeout inside collectives.
+    pub recv_timeout: Duration,
+    /// Monitor deadline: a rank silent this long is declared dead.
+    /// Must comfortably exceed `recv_timeout` plus one step's work.
+    pub heartbeat_deadline: Duration,
+    /// Fault plan: link faults wrap the transport in a
+    /// [`FaultyTransport`]; kill schedules make ranks exit mid-run.
+    pub faults: FaultPlan,
+    /// Checkpoint file path (shared by all ranks — they run in one
+    /// process).
+    pub ckpt_path: PathBuf,
+    /// Seed for initial parameters and synthetic gradients.
+    pub seed: u64,
+}
+
+impl ElasticConfig {
+    /// Small fast defaults for tests and the chaos harness.
+    pub fn quick(nranks: usize, steps: usize, ckpt_path: PathBuf) -> Self {
+        Self {
+            nranks,
+            steps,
+            elems: 2048,
+            lr: 0.05,
+            checkpoint_every: 2,
+            algo: AllreduceAlgo::Ring,
+            wire: WireFormat::F32,
+            recv_timeout: Duration::from_millis(150),
+            heartbeat_deadline: Duration::from_millis(500),
+            faults: FaultPlan::none(),
+            ckpt_path,
+            seed: 42,
+        }
+    }
+}
+
+/// What one surviving rank brings back from an elastic run.
+#[derive(Debug, Clone)]
+pub struct ElasticOutcome {
+    /// Physical rank.
+    pub rank: usize,
+    /// Final parameter replica (bit-identical across survivors).
+    pub params: Vec<f32>,
+    /// Steps committed (always `cfg.steps` for a survivor).
+    pub steps_done: u64,
+    /// Transient-fault retries this rank voted through.
+    pub retries: u64,
+    /// Checkpoint rollbacks (one per shrink this rank lived through).
+    pub rollbacks: u64,
+    /// Final group epoch (number of shrinks survived).
+    pub final_epoch: u64,
+    /// Final group membership.
+    pub members: Vec<usize>,
+}
+
+/// Everything an elastic run produces.
+#[derive(Debug)]
+pub struct ElasticReport {
+    /// Ranks that finished, ascending rank order.
+    pub survivors: Vec<ElasticOutcome>,
+    /// Ranks that died per the kill schedule, with the cycle.
+    pub died: Vec<(usize, usize)>,
+    /// Ranks evicted on a false-positive death declaration.
+    pub evicted: Vec<usize>,
+    /// Ranks that failed hard, with the reason.
+    pub failed: Vec<(usize, String)>,
+}
+
+impl ElasticReport {
+    /// The final group membership (from any survivor).
+    pub fn final_members(&self) -> Vec<usize> {
+        self.survivors.first().map(|s| s.members.clone()).unwrap_or_default()
+    }
+
+    /// Assert every survivor finished every step, agrees on the final
+    /// membership/epoch, and holds **bit-identical** parameters — the
+    /// elastic analogue of the executor's lockstep invariant.
+    pub fn assert_survivors_agree(&self, steps: u64) {
+        assert!(!self.survivors.is_empty(), "no survivors");
+        let first = &self.survivors[0];
+        let bits: Vec<u32> = first.params.iter().map(|x| x.to_bits()).collect();
+        for s in &self.survivors {
+            assert_eq!(s.steps_done, steps, "rank {} stopped early", s.rank);
+            assert_eq!(s.members, first.members, "rank {} membership", s.rank);
+            assert_eq!(s.final_epoch, first.final_epoch, "rank {} epoch", s.rank);
+            let sb: Vec<u32> = s.params.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(sb, bits, "rank {} params diverged from rank {}", s.rank, first.rank);
+        }
+    }
+}
+
+/// Deterministic synthetic gradient for (physical rank, step): the
+/// closed form lets a rolled-back survivor regenerate exactly the
+/// gradient it contributed before the fault.
+fn grad_vec(rank: usize, step: u64, elems: usize, seed: u64) -> Vec<f32> {
+    (0..elems as u64)
+        .map(|i| {
+            let h = rank as u64 * 31 + step * 17 + i * 7 + seed * 13 + 3;
+            (h % 23) as f32 * 0.25 - 2.75
+        })
+        .collect()
+}
+
+/// Deterministic initial parameters (identical on every rank).
+fn init_params(elems: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xE1A5);
+    (0..elems).map(|_| (rng.gen_range(0, 2001) as f32 - 1000.0) / 1000.0).collect()
+}
+
+/// Run a fault-tolerant synthetic training session: one OS thread per
+/// rank over a [`ShmTransport`] (wrapped in a [`FaultyTransport`] when
+/// the plan injects link faults), a health monitor, and checkpoint-
+/// based shrink recovery.  Returns once every rank has exited.
+///
+/// Guarantees (asserted by `tests/chaos.rs` and the `repro chaos`
+/// gate): the run terminates — no deadlock — even when ranks are
+/// killed mid-step; survivors complete all `cfg.steps`; and their
+/// final parameters are bit-identical, because every survivor sees
+/// the same verdict sequence, the same group epochs, and collectives
+/// that produce cross-rank-identical bits.
+pub fn run_elastic_session(cfg: &ElasticConfig) -> anyhow::Result<ElasticReport> {
+    anyhow::ensure!(cfg.nranks >= 1, "need at least one rank");
+    anyhow::ensure!(cfg.steps >= 1, "need at least one step");
+    anyhow::ensure!(cfg.elems >= 1, "need at least one element");
+
+    // Baseline checkpoint (step 0) before any worker starts: the very
+    // first shrink always has something to roll back to.
+    let params0 = init_params(cfg.elems, cfg.seed);
+    let zeros = vec![0.0f32; cfg.elems];
+    Checkpoint {
+        step: 0,
+        params: params0,
+        adam_m: zeros.clone(),
+        adam_v: zeros,
+    }
+    .save(&cfg.ckpt_path)?;
+
+    let base: Arc<dyn Transport> = Arc::new(ShmTransport::new(cfg.nranks));
+    let transport: Arc<dyn Transport> = if cfg.faults.has_link_faults() {
+        Arc::new(FaultyTransport::new(base, cfg.faults.clone()))
+    } else {
+        base
+    };
+
+    let opts = HealthOpts {
+        heartbeat_deadline: cfg.heartbeat_deadline,
+        poll: Duration::from_millis(10),
+    };
+    let cfg_arc = Arc::new(cfg.clone());
+    let run = run_elastic(transport, opts, move |rank, t, health| {
+        elastic_worker(rank, t, health, &cfg_arc)
+    });
+
+    let mut report = ElasticReport {
+        survivors: Vec::new(),
+        died: Vec::new(),
+        evicted: Vec::new(),
+        failed: Vec::new(),
+    };
+    for (rank, exit) in run.exits.into_iter().enumerate() {
+        match exit {
+            RankExit::Finished(o) => report.survivors.push(o),
+            RankExit::Died { cycle } => report.died.push((rank, cycle)),
+            RankExit::Evicted => report.evicted.push(rank),
+            RankExit::Failed(msg) => report.failed.push((rank, msg)),
+        }
+    }
+    Ok(report)
+}
+
+/// The per-rank body of the elastic loop (see module docs for the
+/// protocol; every protocol error means this rank was evicted).
+fn elastic_worker(
+    rank: usize,
+    transport: Arc<dyn Transport>,
+    health: Arc<Health>,
+    cfg: &ElasticConfig,
+) -> RankExit<ElasticOutcome> {
+    let kill_cycle = cfg.faults.kill_cycle(rank);
+    let mut group = Group::world(cfg.nranks);
+    let mut params = init_params(cfg.elems, cfg.seed);
+    let mut step: u64 = 0;
+    let mut attempt: u64 = 0;
+    let mut seq: u64 = 0;
+    let mut retries: u64 = 0;
+    let mut rollbacks: u64 = 0;
+    let steps = cfg.steps as u64;
+
+    while step < steps {
+        // Simulated crash: stop beating and exit. The monitor will
+        // declare this rank dead exactly as it would a real one.
+        if kill_cycle == Some(step as usize) {
+            return RankExit::Died { cycle: step as usize };
+        }
+        health.beat(rank);
+
+        // Cycle-start barrier: adopt the group's maximum attempt so a
+        // rank whose last collective failed and one whose succeeded
+        // re-enter the step aligned on the same era.
+        attempt = match health.sync_start(rank, &group, seq, attempt) {
+            Ok(a) => a,
+            Err(_) => return RankExit::Evicted,
+        };
+        seq += 1;
+        if attempt >= MAX_ATTEMPTS {
+            // A collective decision: every member adopted this attempt,
+            // so every member fails together. Self-declare dead so any
+            // straggler blocked on us unblocks immediately.
+            health.declare_dead(rank);
+            transport.mark_dead(rank);
+            return RankExit::Failed(format!(
+                "step {step}: retry budget exhausted after {attempt} attempts"
+            ));
+        }
+
+        // Dense view of the survivors, in a tag era unique to this
+        // (epoch, attempt) so stale traffic from aborted collectives
+        // can never cross-match.
+        let era = group.epoch * 1024 + attempt;
+        let sub = SubTransport::new(transport.clone(), group.members.clone(), era);
+        let dense = group.dense_rank(rank).expect("member of own group");
+
+        // The collective runs on a scratch buffer; `params` is only
+        // touched on Commit, so Retry/Shrink never poison the model.
+        let mut buf = grad_vec(rank, step, cfg.elems, cfg.seed);
+        let ok = if health.group_impaired(&group) {
+            // a member is already known dead: the step is doomed, skip
+            // straight to the vote (which will return Shrink)
+            false
+        } else {
+            collectives::try_allreduce_wire(
+                &sub,
+                dense,
+                &mut buf,
+                cfg.algo,
+                step * TAG_BLOCK,
+                cfg.wire,
+                Some(cfg.recv_timeout),
+            )
+            .is_ok()
+        };
+        health.beat(rank);
+
+        let verdict = match health.commit(rank, &group, seq, ok) {
+            Ok(v) => v,
+            Err(_) => return RankExit::Evicted,
+        };
+        seq += 1;
+
+        match verdict {
+            crate::runtime::health::Verdict::Commit => {
+                // buf holds the sum over the current members; apply the
+                // mean-gradient SGD step so shrinks stay scale-stable
+                let scale = cfg.lr / group.members.len() as f32;
+                for (p, g) in params.iter_mut().zip(&buf) {
+                    *p -= scale * g;
+                }
+                step += 1;
+                attempt = 0;
+                let at_interval =
+                    cfg.checkpoint_every > 0 && step % cfg.checkpoint_every as u64 == 0;
+                if at_interval || step == steps {
+                    if rank == group.leader() {
+                        let zeros = vec![0.0f32; cfg.elems];
+                        let ck = Checkpoint {
+                            step,
+                            params: params.clone(),
+                            adam_m: zeros.clone(),
+                            adam_v: zeros,
+                        };
+                        if let Err(e) = ck.save(&cfg.ckpt_path) {
+                            health.declare_dead(rank);
+                            transport.mark_dead(rank);
+                            return RankExit::Failed(format!("checkpoint save: {e}"));
+                        }
+                    }
+                    // fence: nobody races past a checkpoint that is
+                    // not yet durably on disk (a shrink during the
+                    // next step must find it)
+                    if health.sync_point(rank, &group, seq).is_err() {
+                        return RankExit::Evicted;
+                    }
+                    seq += 1;
+                }
+            }
+            crate::runtime::health::Verdict::Retry => {
+                attempt += 1;
+                retries += 1;
+            }
+            crate::runtime::health::Verdict::Shrink => {
+                group = match health.regroup(rank, &group) {
+                    Ok(g) => g,
+                    Err(_) => return RankExit::Evicted,
+                };
+                seq = 0;
+                attempt = 0;
+                rollbacks += 1;
+                match Checkpoint::load(&cfg.ckpt_path) {
+                    Ok(ck) => {
+                        step = ck.step;
+                        params = ck.params;
+                    }
+                    Err(e) => {
+                        health.declare_dead(rank);
+                        transport.mark_dead(rank);
+                        return RankExit::Failed(format!("checkpoint load: {e}"));
+                    }
+                }
+            }
+        }
+    }
+
+    RankExit::Finished(ElasticOutcome {
+        rank,
+        params,
+        steps_done: step,
+        retries,
+        rollbacks,
+        final_epoch: group.epoch,
+        members: group.members,
+    })
+}
+
+#[cfg(test)]
+mod elastic_tests {
+    use super::*;
+
+    fn tmp_ckpt(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "densefold_elastic_{name}_{}.ckpt",
+            std::process::id()
+        ))
+    }
+
+    #[test]
+    fn fault_free_run_finishes_and_agrees() {
+        let path = tmp_ckpt("clean");
+        let cfg = ElasticConfig::quick(3, 4, path.clone());
+        let report = run_elastic_session(&cfg).unwrap();
+        assert!(report.died.is_empty() && report.evicted.is_empty() && report.failed.is_empty());
+        report.assert_survivors_agree(4);
+        assert_eq!(report.final_members(), vec![0, 1, 2]);
+        assert_eq!(report.survivors[0].rollbacks, 0);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn fault_free_matches_single_rank_math() {
+        // p ranks averaging their gradients must match a by-hand SGD
+        // trace of the same closed-form gradients
+        let path = tmp_ckpt("math");
+        let cfg = ElasticConfig::quick(2, 3, path.clone());
+        let report = run_elastic_session(&cfg).unwrap();
+        report.assert_survivors_agree(3);
+        let mut expect = init_params(cfg.elems, cfg.seed);
+        for step in 0..3u64 {
+            let mut sum = vec![0.0f32; cfg.elems];
+            for r in 0..2 {
+                for (s, g) in sum.iter_mut().zip(grad_vec(r, step, cfg.elems, cfg.seed)) {
+                    *s += g;
+                }
+            }
+            for (p, g) in expect.iter_mut().zip(&sum) {
+                *p -= cfg.lr / 2.0 * g;
+            }
+        }
+        let got: Vec<u32> = report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> = expect.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want);
+        let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn single_rank_session_runs() {
+        let path = tmp_ckpt("single");
+        let cfg = ElasticConfig::quick(1, 3, path.clone());
+        let report = run_elastic_session(&cfg).unwrap();
+        report.assert_survivors_agree(3);
+        let _ = std::fs::remove_file(path);
+    }
 }

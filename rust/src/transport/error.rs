@@ -1,0 +1,195 @@
+//! Typed transport failures and payload integrity checksums.
+//!
+//! PR 5's transports block forever: a dead or stalled rank turns every
+//! condvar `recv` into a deadlock, and the only defense is a test-side
+//! watchdog.  This module is the error taxonomy for the bounded-time
+//! receive paths (`Transport::try_recv*`): a receive can now *fail*,
+//! with enough structure for the caller to pick between retrying the
+//! collective (transient drop/corruption) and shrinking the job (a
+//! rank declared dead).  The same taxonomy is what a future socket
+//! transport would surface, so the collectives only learn these
+//! semantics once.
+//!
+//! Checksums are FNV-1a over the payload bytes.  FNV is not
+//! cryptographic, but a single flipped bit always changes the digest
+//! (each step `h = (h ^ byte) * PRIME` is a bijection of the running
+//! state), which is exactly the fault model the injector produces.
+
+use std::fmt;
+use std::time::Duration;
+
+/// Why a bounded-time receive failed.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum TransportError {
+    /// No matching message arrived before the deadline.  The sender
+    /// may be slow, the message may have been dropped, or the sender
+    /// may be dead but not yet declared so by the health monitor.
+    Timeout {
+        /// Sender rank the receive was matching on.
+        from: usize,
+        /// Tag the receive was matching on.
+        tag: u64,
+        /// How long the receiver waited.
+        waited: Duration,
+    },
+    /// The sender rank was declared dead (see `Transport::mark_dead`)
+    /// and its queue for this (from, tag) is drained — no message will
+    /// ever arrive.
+    RankDead {
+        /// The dead sender rank.
+        rank: usize,
+    },
+    /// A message arrived but failed validation.
+    Corrupt(CorruptKind),
+}
+
+/// What exactly failed validation on a received message.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CorruptKind {
+    /// The payload bytes do not match the checksum the sender attached.
+    Checksum {
+        /// Digest the sender computed before transmission.
+        expected: u64,
+        /// Digest of the bytes that actually arrived.
+        got: u64,
+    },
+    /// The payload variant is not what the receiver's schedule expects
+    /// (e.g. an I32 control message where an F32 gradient should be).
+    WrongType {
+        /// Variant the receiver required.
+        expected: &'static str,
+        /// Variant that arrived.
+        got: &'static str,
+    },
+    /// The payload length does not match the receiver's buffer.
+    Length {
+        /// Element count the receiver's buffer requires.
+        expected: usize,
+        /// Element count that arrived.
+        got: usize,
+    },
+}
+
+impl fmt::Display for TransportError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            TransportError::Timeout { from, tag, waited } => write!(
+                f,
+                "recv timed out after {:.0} ms waiting on rank {from} tag {tag}",
+                waited.as_secs_f64() * 1e3
+            ),
+            TransportError::RankDead { rank } => {
+                write!(f, "rank {rank} is dead (no further messages will arrive)")
+            }
+            TransportError::Corrupt(kind) => write!(f, "corrupt message: {kind}"),
+        }
+    }
+}
+
+impl fmt::Display for CorruptKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CorruptKind::Checksum { expected, got } => {
+                write!(f, "checksum mismatch (expected {expected:#018x}, got {got:#018x})")
+            }
+            CorruptKind::WrongType { expected, got } => {
+                write!(f, "payload type mismatch (expected {expected}, got {got})")
+            }
+            CorruptKind::Length { expected, got } => {
+                write!(f, "payload length mismatch (expected {expected} elems, got {got})")
+            }
+        }
+    }
+}
+
+impl std::error::Error for TransportError {}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Streaming FNV-1a-64 digest.  Used for payload checksums on the
+/// fault-injection path and for checkpoint file integrity
+/// ([`crate::train::checkpoint`]); kept tiny and dependency-free.
+#[derive(Debug, Clone)]
+pub struct Fnv1a(u64);
+
+impl Default for Fnv1a {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fnv1a {
+    /// Start a fresh digest at the FNV offset basis.
+    pub fn new() -> Self {
+        Fnv1a(FNV_OFFSET)
+    }
+
+    /// Absorb a byte slice.
+    pub fn update(&mut self, bytes: &[u8]) {
+        let mut h = self.0;
+        for &b in bytes {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+        self.0 = h;
+    }
+
+    /// Current digest value.
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// One-shot FNV-1a-64 over a byte slice.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = Fnv1a::new();
+    h.update(bytes);
+    h.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_known_vectors() {
+        // reference values for the 64-bit FNV-1a test vectors
+        assert_eq!(fnv1a(b""), 0xcbf29ce484222325);
+        assert_eq!(fnv1a(b"a"), 0xaf63dc4c8601ec8c);
+        assert_eq!(fnv1a(b"foobar"), 0x85944171f73967e8);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let mut h = Fnv1a::new();
+        h.update(b"foo");
+        h.update(b"bar");
+        assert_eq!(h.finish(), fnv1a(b"foobar"));
+    }
+
+    #[test]
+    fn single_bit_flip_always_detected() {
+        let base = vec![0u8, 1, 2, 3, 250, 251, 252, 253];
+        let clean = fnv1a(&base);
+        for i in 0..base.len() {
+            for bit in 0..8 {
+                let mut flipped = base.clone();
+                flipped[i] ^= 1 << bit;
+                assert_ne!(fnv1a(&flipped), clean, "flip byte {i} bit {bit}");
+            }
+        }
+    }
+
+    #[test]
+    fn errors_display_readably() {
+        let e = TransportError::Timeout {
+            from: 2,
+            tag: 7,
+            waited: Duration::from_millis(150),
+        };
+        assert!(e.to_string().contains("rank 2"), "{e}");
+        assert!(e.to_string().contains("150 ms"), "{e}");
+        let e = TransportError::Corrupt(CorruptKind::WrongType { expected: "F32", got: "I32" });
+        assert!(e.to_string().contains("expected F32"), "{e}");
+    }
+}

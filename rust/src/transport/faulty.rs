@@ -1,0 +1,536 @@
+//! Deterministic fault injection under any [`Transport`].
+//!
+//! Chaos testing is only useful if a failing scenario can be replayed:
+//! every fault decision here derives from an explicit seed via one
+//! xorshift stream per ordered rank pair, so "drop 20% of messages on
+//! the 1→2 link" produces the *same* drops on every run.  The wrapper
+//! sits between the collectives and a real transport and injects three
+//! link-level fault kinds — drop (message vanishes), delay (sender
+//! stalls before the message is enqueued), corrupt (a payload bit is
+//! flipped, shipped with the pre-flip checksum so receivers can detect
+//! it) — plus a kill schedule (`rank r stops at cycle c`) that the
+//! elastic executor enforces at the rank-thread level.
+//!
+//! Every payload the wrapper forwards carries a checksum
+//! ([`Payload::checksum`]), including clean ones: detection must not
+//! depend on knowing in advance which messages were tampered with.
+//! The per-message digest is the injection overhead; it exists only
+//! when the wrapper is in the stack, so fault-free production runs pay
+//! nothing.
+//!
+//! Receive-side methods delegate to the inner transport untouched —
+//! faults are a property of the sending link, and keeping receives
+//! pass-through preserves the inner transport's pooling and
+//! bounded-wait behaviour.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+use super::wire::WireFormat;
+use super::{Payload, PoolStats, TrafficStats, Transport, TransportError};
+
+/// Fault probabilities and delay for a set of directed links.  `from`
+/// / `to` of `None` match every sender / receiver, so one rule can
+/// cover a single link, a rank's whole outbound row, or the full mesh.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFault {
+    /// Sender rank this rule applies to (`None` = every sender).
+    pub from: Option<usize>,
+    /// Receiver rank this rule applies to (`None` = every receiver).
+    pub to: Option<usize>,
+    /// Probability a matching message is silently dropped.
+    pub drop_p: f64,
+    /// Probability a matching message has one payload bit flipped
+    /// (shipped with the clean checksum, so receivers detect it).
+    pub corrupt_p: f64,
+    /// Fixed delay applied to every matching send, in microseconds
+    /// (models a slow link via sender back-pressure).
+    pub delay_us: u64,
+}
+
+impl LinkFault {
+    /// A no-op rule matching every link; chain the builder methods to
+    /// give it teeth.
+    pub fn on_all() -> Self {
+        Self { from: None, to: None, drop_p: 0.0, corrupt_p: 0.0, delay_us: 0 }
+    }
+
+    /// A no-op rule matching only the directed link `from → to`.
+    pub fn on(from: usize, to: usize) -> Self {
+        Self { from: Some(from), to: Some(to), ..Self::on_all() }
+    }
+
+    /// Set the drop probability.
+    pub fn drop_p(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "drop_p must be a probability");
+        self.drop_p = p;
+        self
+    }
+
+    /// Set the corruption probability.
+    pub fn corrupt_p(mut self, p: f64) -> Self {
+        assert!((0.0..=1.0).contains(&p), "corrupt_p must be a probability");
+        self.corrupt_p = p;
+        self
+    }
+
+    /// Set the per-message delay in microseconds.
+    pub fn delay_us(mut self, us: u64) -> Self {
+        self.delay_us = us;
+        self
+    }
+
+    fn matches(&self, from: usize, to: usize) -> bool {
+        self.from.map_or(true, |f| f == from) && self.to.map_or(true, |t| t == to)
+    }
+}
+
+/// "Rank `rank` crashes at the start of cycle `cycle`" — enforced by
+/// the elastic executor (the rank thread returns before heartbeating
+/// that cycle), not by the transport.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KillSpec {
+    /// The rank that dies.
+    pub rank: usize,
+    /// The exchange cycle at whose start it dies.
+    pub cycle: usize,
+}
+
+/// A complete, seedable chaos scenario: link-level fault rules plus a
+/// kill schedule.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    /// Seed for the per-link fault RNG streams.
+    pub seed: u64,
+    /// Link fault rules; every matching rule is applied to a send.
+    pub links: Vec<LinkFault>,
+    /// Rank kill schedule.
+    pub kills: Vec<KillSpec>,
+}
+
+impl FaultPlan {
+    /// The empty plan: no faults, no kills.
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// An empty plan with the given RNG seed.
+    pub fn seeded(seed: u64) -> Self {
+        Self { seed, ..Self::default() }
+    }
+
+    /// Add a link fault rule.
+    pub fn with_link(mut self, fault: LinkFault) -> Self {
+        self.links.push(fault);
+        self
+    }
+
+    /// Schedule `rank` to die at the start of `cycle`.
+    pub fn with_kill(mut self, rank: usize, cycle: usize) -> Self {
+        self.kills.push(KillSpec { rank, cycle });
+        self
+    }
+
+    /// The cycle at which `rank` is scheduled to die, if any (the
+    /// earliest, should a plan list several).
+    pub fn kill_cycle(&self, rank: usize) -> Option<usize> {
+        self.kills.iter().filter(|k| k.rank == rank).map(|k| k.cycle).min()
+    }
+
+    /// Whether any link-level fault rule exists (kills are enforced
+    /// elsewhere and don't require the transport wrapper).
+    pub fn has_link_faults(&self) -> bool {
+        !self.links.is_empty()
+    }
+}
+
+/// Counters of injected faults, snapshot via
+/// [`FaultyTransport::injected`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct InjectStats {
+    /// Messages silently dropped.
+    pub dropped: u64,
+    /// Messages delivered with a flipped payload bit.
+    pub corrupted: u64,
+    /// Sends that were delayed.
+    pub delayed: u64,
+}
+
+enum Decision {
+    Deliver,
+    Drop,
+    Corrupt,
+}
+
+/// A [`Transport`] wrapper that applies a [`FaultPlan`] to every send.
+pub struct FaultyTransport {
+    inner: Arc<dyn Transport>,
+    plan: FaultPlan,
+    /// One RNG stream per ordered rank pair (`from * nranks + to`),
+    /// so fault decisions on one link are independent of traffic on
+    /// every other link — and deterministic given the plan seed.
+    rngs: Vec<Mutex<Rng>>,
+    dropped: AtomicU64,
+    corrupted: AtomicU64,
+    delayed: AtomicU64,
+}
+
+impl FaultyTransport {
+    /// Wrap `inner`, injecting the faults described by `plan`.
+    pub fn new(inner: Arc<dyn Transport>, plan: FaultPlan) -> Self {
+        let n = inner.nranks();
+        let rngs = (0..n * n)
+            .map(|pair| {
+                let stream = (pair as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+                Mutex::new(Rng::new(plan.seed ^ stream))
+            })
+            .collect();
+        Self {
+            inner,
+            plan,
+            rngs,
+            dropped: AtomicU64::new(0),
+            corrupted: AtomicU64::new(0),
+            delayed: AtomicU64::new(0),
+        }
+    }
+
+    /// The fault plan this wrapper applies.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// Snapshot of how many faults have been injected so far.
+    pub fn injected(&self) -> InjectStats {
+        InjectStats {
+            dropped: self.dropped.load(Ordering::Relaxed),
+            corrupted: self.corrupted.load(Ordering::Relaxed),
+            delayed: self.delayed.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Decide this message's fate.  Every matching rule draws from the
+    /// pair's RNG stream whether or not an earlier rule already
+    /// doomed the message, so the stream advances identically no
+    /// matter how rules combine — determinism survives plan edits.
+    fn decide(&self, from: usize, to: usize) -> (Decision, u64) {
+        let (mut drop, mut corrupt, mut delay) = (false, false, 0u64);
+        let mut rng = self.rngs[from * self.inner.nranks() + to].lock().unwrap();
+        for rule in self.plan.links.iter().filter(|r| r.matches(from, to)) {
+            delay += rule.delay_us;
+            if rule.drop_p > 0.0 && rng.next_f64() < rule.drop_p {
+                drop = true;
+            }
+            if rule.corrupt_p > 0.0 && rng.next_f64() < rule.corrupt_p {
+                corrupt = true;
+            }
+        }
+        let decision = if drop {
+            Decision::Drop
+        } else if corrupt {
+            Decision::Corrupt
+        } else {
+            Decision::Deliver
+        };
+        (decision, delay)
+    }
+
+    fn transmit(&self, from: usize, to: usize, tag: u64, payload: Payload) {
+        let (decision, delay_us) = self.decide(from, to);
+        if delay_us > 0 {
+            self.delayed.fetch_add(1, Ordering::Relaxed);
+            std::thread::sleep(Duration::from_micros(delay_us));
+        }
+        match decision {
+            Decision::Drop => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+            }
+            Decision::Corrupt => {
+                // checksum the clean bytes, then flip a bit: the
+                // receiver's try_recv sees a digest mismatch
+                let clean = payload.checksum();
+                self.corrupted.fetch_add(1, Ordering::Relaxed);
+                self.inner.send_raw(from, to, tag, flip_one_bit(payload), Some(clean));
+            }
+            Decision::Deliver => {
+                let digest = payload.checksum();
+                self.inner.send_raw(from, to, tag, payload, Some(digest));
+            }
+        }
+    }
+}
+
+/// Flip the lowest bit of the first element (a no-op on an empty
+/// payload — its unchanged checksum then verifies, which is fine:
+/// corrupting zero bytes corrupts nothing).
+fn flip_one_bit(p: Payload) -> Payload {
+    match p {
+        Payload::F32(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x = f32::from_bits(x.to_bits() ^ 1);
+            }
+            Payload::F32(v)
+        }
+        Payload::I32(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x ^= 1;
+            }
+            Payload::I32(v)
+        }
+        Payload::U16(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x ^= 1;
+            }
+            Payload::U16(v)
+        }
+        Payload::U64(mut v) => {
+            if let Some(x) = v.first_mut() {
+                *x ^= 1;
+            }
+            Payload::U64(v)
+        }
+    }
+}
+
+impl Transport for FaultyTransport {
+    fn nranks(&self) -> usize {
+        self.inner.nranks()
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u64, data: Payload) {
+        self.transmit(from, to, tag, data);
+    }
+
+    fn send_raw(&self, from: usize, to: usize, tag: u64, data: Payload, _checksum: Option<u64>) {
+        // recompute rather than trust the caller's digest — this
+        // wrapper owns integrity for everything passing through it
+        self.transmit(from, to, tag, data);
+    }
+
+    fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
+        // allocates per send (no pool) — chaos runs are not the
+        // measured hot path, and the owned payload is what the fault
+        // machinery mutates
+        self.transmit(from, to, tag, Payload::F32(data.to_vec()));
+    }
+
+    fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
+        match w {
+            WireFormat::F32 => self.send_slice(from, to, tag, data),
+            _ => {
+                let mut buf = Vec::with_capacity(data.len());
+                w.encode_into(data, &mut buf);
+                self.transmit(from, to, tag, Payload::U16(buf));
+            }
+        }
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u64) -> Payload {
+        self.inner.recv(to, from, tag)
+    }
+
+    fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
+        self.inner.recv_into(to, from, tag, out)
+    }
+
+    fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
+        self.inner.recv_add_into(to, from, tag, acc)
+    }
+
+    fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
+        self.inner.recv_into_wire(to, from, tag, out, w)
+    }
+
+    fn recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+    ) {
+        self.inner.recv_add_into_wire(to, from, tag, acc, w)
+    }
+
+    fn try_recv(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Payload, TransportError> {
+        self.inner.try_recv(to, from, tag, timeout)
+    }
+
+    fn try_recv_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_into(to, from, tag, out, timeout)
+    }
+
+    fn try_recv_add_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_add_into(to, from, tag, acc, timeout)
+    }
+
+    fn try_recv_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_into_wire(to, from, tag, out, w, timeout)
+    }
+
+    fn try_recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_add_into_wire(to, from, tag, acc, w, timeout)
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        self.inner.mark_dead(rank);
+    }
+
+    fn is_dead(&self, rank: usize) -> bool {
+        self.inner.is_dead(rank)
+    }
+
+    fn stats(&self) -> TrafficStats {
+        self.inner.stats()
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.inner.pool_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::{CorruptKind, LocalTransport};
+
+    fn faulty(n: usize, plan: FaultPlan) -> FaultyTransport {
+        FaultyTransport::new(Arc::new(LocalTransport::new(n)), plan)
+    }
+
+    #[test]
+    fn clean_plan_delivers_verbatim_with_checksums() {
+        let t = faulty(2, FaultPlan::none());
+        t.send_slice(0, 1, 1, &[1.0, 2.0, 3.0]);
+        let mut out = [0.0f32; 3];
+        t.try_recv_into(1, 0, 1, &mut out, None).unwrap();
+        assert_eq!(out, [1.0, 2.0, 3.0]);
+        assert_eq!(t.injected(), InjectStats::default());
+    }
+
+    #[test]
+    fn certain_corruption_is_detected_by_checksum() {
+        let plan = FaultPlan::seeded(7).with_link(LinkFault::on(0, 1).corrupt_p(1.0));
+        let t = faulty(2, plan);
+        t.send_slice(0, 1, 9, &[4.0, 5.0]);
+        let mut out = [0.0f32; 2];
+        let err = t.try_recv_into(1, 0, 9, &mut out, None).unwrap_err();
+        assert!(
+            matches!(err, TransportError::Corrupt(CorruptKind::Checksum { .. })),
+            "{err}"
+        );
+        assert_eq!(t.injected().corrupted, 1);
+        // the fault rule is directional: 1 -> 0 is clean
+        t.send_slice(1, 0, 9, &[6.0]);
+        let mut one = [0.0f32];
+        t.try_recv_into(0, 1, 9, &mut one, None).unwrap();
+        assert_eq!(one, [6.0]);
+    }
+
+    #[test]
+    fn certain_drop_turns_into_timeout() {
+        let plan = FaultPlan::seeded(3).with_link(LinkFault::on(0, 1).drop_p(1.0));
+        let t = faulty(2, plan);
+        t.send_slice(0, 1, 2, &[1.0]);
+        let err = t.try_recv(1, 0, 2, Some(Duration::from_millis(20))).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }), "{err}");
+        assert_eq!(t.injected().dropped, 1);
+    }
+
+    #[test]
+    fn delay_counts_but_delivers() {
+        let plan = FaultPlan::seeded(1).with_link(LinkFault::on_all().delay_us(100));
+        let t = faulty(2, plan);
+        t.send(0, 1, 5, Payload::U64(vec![42]));
+        assert_eq!(t.try_recv(1, 0, 5, None).unwrap(), Payload::U64(vec![42]));
+        assert_eq!(t.injected().delayed, 1);
+    }
+
+    #[test]
+    fn same_seed_same_fault_sequence() {
+        let mk = || {
+            faulty(2, FaultPlan::seeded(99).with_link(LinkFault::on(0, 1).drop_p(0.5)))
+        };
+        let (a, b) = (mk(), mk());
+        for i in 0..200u64 {
+            a.send(0, 1, i, Payload::I32(vec![i as i32]));
+            b.send(0, 1, i, Payload::I32(vec![i as i32]));
+        }
+        assert_eq!(a.injected(), b.injected());
+        assert!(a.injected().dropped > 50, "{:?}", a.injected());
+        assert!(a.injected().dropped < 150, "{:?}", a.injected());
+        // different seed, different sequence (with overwhelming odds)
+        let c = faulty(2, FaultPlan::seeded(100).with_link(LinkFault::on(0, 1).drop_p(0.5)));
+        for i in 0..200u64 {
+            c.send(0, 1, i, Payload::I32(vec![i as i32]));
+        }
+        // both streams are Bernoulli(0.5); equality of all 200 draws
+        // would be a 2^-200 coincidence
+        let delivered = |t: &FaultyTransport| {
+            (0..200u64)
+                .map(|i| t.try_recv(1, 0, i, Some(Duration::from_millis(1))).is_ok())
+                .collect::<Vec<_>>()
+        };
+        assert_ne!(delivered(&a), delivered(&c));
+    }
+
+    #[test]
+    fn kill_schedule_accessors() {
+        let plan = FaultPlan::none().with_kill(2, 3).with_kill(2, 7).with_kill(0, 1);
+        assert_eq!(plan.kill_cycle(2), Some(3));
+        assert_eq!(plan.kill_cycle(0), Some(1));
+        assert_eq!(plan.kill_cycle(1), None);
+        assert!(!plan.has_link_faults());
+    }
+
+    #[test]
+    fn wire16_sends_pass_through_faults() {
+        let plan = FaultPlan::seeded(5).with_link(LinkFault::on(0, 1).corrupt_p(1.0));
+        let t = faulty(2, plan);
+        t.send_slice_wire(0, 1, 4, &[1.0; 8], WireFormat::Bf16);
+        let mut out = [0.0f32; 8];
+        let err = t
+            .try_recv_into_wire(1, 0, 4, &mut out, WireFormat::Bf16, None)
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Corrupt(_)), "{err}");
+    }
+}

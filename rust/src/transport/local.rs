@@ -13,16 +13,26 @@
 //! allocations — [`PoolStats`] makes that assertable.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
-use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
+use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport, TransportError};
 
 type Key = (usize, u64); // (from, tag)
 
+/// A queued message: the payload plus the optional integrity checksum
+/// the sender attached (`None` for plain sends — the zero-overhead
+/// fault-free path; only `try_recv*` verifies it).
+struct Msg {
+    payload: Payload,
+    checksum: Option<u64>,
+}
+
 struct Mailbox {
-    queues: Mutex<HashMap<Key, VecDeque<Payload>>>,
+    queues: Mutex<HashMap<Key, VecDeque<Msg>>>,
     signal: Condvar,
 }
 
@@ -41,6 +51,8 @@ pub struct LocalTransport {
     /// sharing the same [`PoolStats`] counters as the f32 pools.
     pools16: Vec<Mutex<Vec<Vec<u16>>>>,
     pool_counters: PoolCounters,
+    /// Ranks declared dead by [`Transport::mark_dead`].
+    dead: Vec<AtomicBool>,
 }
 
 impl LocalTransport {
@@ -53,6 +65,7 @@ impl LocalTransport {
             pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pool_counters: PoolCounters::default(),
+            dead: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
@@ -77,8 +90,55 @@ impl LocalTransport {
         release_to(&self.pools16[rank], &self.pool_counters, buf)
     }
 
-    fn recv_f32(&self, to: usize, from: usize, tag: u64) -> Vec<f32> {
-        self.recv(to, from, tag).into_f32()
+    /// Enqueue a message and wake the receiving rank's waiters.
+    fn push(&self, from: usize, to: usize, tag: u64, payload: Payload, checksum: Option<u64>) {
+        assert!(from < self.nranks() && to < self.nranks(), "rank out of range");
+        self.counters.record(payload.nbytes());
+        let mbox = &self.boxes[to];
+        let mut queues = mbox.queues.lock().unwrap();
+        queues.entry((from, tag)).or_default().push_back(Msg { payload, checksum });
+        mbox.signal.notify_all();
+    }
+
+    /// The one wait loop behind both `recv` (timeout `None`) and the
+    /// bounded `try_recv*` family.  Queued messages are drained before
+    /// a dead sender is reported, so nothing already delivered is
+    /// lost; with a deadline, the condvar wait is bounded by the
+    /// remaining time.
+    fn recv_msg(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Msg, TransportError> {
+        let deadline = timeout.map(|d| Instant::now() + d);
+        let mbox = &self.boxes[to];
+        let mut queues = mbox.queues.lock().unwrap();
+        loop {
+            if let Some(q) = queues.get_mut(&(from, tag)) {
+                if let Some(msg) = q.pop_front() {
+                    return Ok(msg);
+                }
+            }
+            if self.dead[from].load(Ordering::SeqCst) {
+                return Err(TransportError::RankDead { rank: from });
+            }
+            queues = match deadline {
+                None => mbox.signal.wait(queues).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(TransportError::Timeout {
+                            from,
+                            tag,
+                            waited: timeout.unwrap(),
+                        });
+                    }
+                    mbox.signal.wait_timeout(queues, dl - now).unwrap().0
+                }
+            };
+        }
     }
 }
 
@@ -88,25 +148,47 @@ impl Transport for LocalTransport {
     }
 
     fn send(&self, from: usize, to: usize, tag: u64, data: Payload) {
-        assert!(from < self.nranks() && to < self.nranks(), "rank out of range");
-        self.counters.record(data.nbytes());
-        let mbox = &self.boxes[to];
-        let mut queues = mbox.queues.lock().unwrap();
-        queues.entry((from, tag)).or_default().push_back(data);
-        mbox.signal.notify_all();
+        self.push(from, to, tag, data, None);
+    }
+
+    fn send_raw(&self, from: usize, to: usize, tag: u64, data: Payload, checksum: Option<u64>) {
+        self.push(from, to, tag, data, checksum);
     }
 
     fn recv(&self, to: usize, from: usize, tag: u64) -> Payload {
-        let mbox = &self.boxes[to];
-        let mut queues = mbox.queues.lock().unwrap();
-        loop {
-            if let Some(q) = queues.get_mut(&(from, tag)) {
-                if let Some(msg) = q.pop_front() {
-                    return msg;
-                }
-            }
-            queues = mbox.signal.wait(queues).unwrap();
+        // with no deadline the only possible failure is a dead sender;
+        // a panic here upgrades what used to be a silent deadlock
+        match self.recv_msg(to, from, tag, None) {
+            Ok(msg) => msg.payload,
+            Err(e) => panic!("recv(to={to}, from={from}, tag={tag}): {e}"),
         }
+    }
+
+    fn try_recv(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Payload, TransportError> {
+        let msg = self.recv_msg(to, from, tag, timeout)?;
+        msg.payload.verify_checksum(msg.checksum)
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::SeqCst);
+        // lock each mailbox before notifying: a receiver holds the
+        // lock from its queue-empty/dead-flag check until it enters
+        // the condvar wait, so taking the lock here means every waiter
+        // either saw the flag or is wake-able — no lost wakeup
+        for mbox in &self.boxes {
+            let _guard = mbox.queues.lock().unwrap();
+            mbox.signal.notify_all();
+        }
+    }
+
+    fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::SeqCst)
     }
 
     fn stats(&self) -> TrafficStats {
@@ -120,19 +202,51 @@ impl Transport for LocalTransport {
     }
 
     fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
-        let v = self.recv_f32(to, from, tag);
-        assert_eq!(v.len(), out.len(), "recv_into length mismatch");
-        out.copy_from_slice(&v);
-        self.release(to, v);
+        self.try_recv_into(to, from, tag, out, None)
+            .unwrap_or_else(|e| panic!("recv_into(to={to}, from={from}, tag={tag}): {e}"));
     }
 
     fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
-        let v = self.recv_f32(to, from, tag);
-        assert_eq!(v.len(), acc.len(), "recv_add_into length mismatch");
+        self.try_recv_add_into(to, from, tag, acc, None)
+            .unwrap_or_else(|e| panic!("recv_add_into(to={to}, from={from}, tag={tag}): {e}"));
+    }
+
+    fn try_recv_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        if let Err(e) = super::check_len(out.len(), v.len()) {
+            self.release(to, v);
+            return Err(e);
+        }
+        out.copy_from_slice(&v);
+        self.release(to, v);
+        Ok(())
+    }
+
+    fn try_recv_add_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        if let Err(e) = super::check_len(acc.len(), v.len()) {
+            self.release(to, v);
+            return Err(e);
+        }
         for (a, x) in acc.iter_mut().zip(&v) {
             *a += x;
         }
         self.release(to, v);
+        Ok(())
     }
 
     fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
@@ -147,14 +261,8 @@ impl Transport for LocalTransport {
     }
 
     fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
-        match w {
-            WireFormat::F32 => self.recv_into(to, from, tag, out),
-            _ => {
-                let v = self.recv(to, from, tag).into_u16();
-                w.decode_to(&v, out);
-                self.release16(to, v);
-            }
-        }
+        self.try_recv_into_wire(to, from, tag, out, w, None)
+            .unwrap_or_else(|e| panic!("recv_into_wire(to={to}, from={from}, tag={tag}): {e}"));
     }
 
     fn recv_add_into_wire(
@@ -165,12 +273,55 @@ impl Transport for LocalTransport {
         acc: &mut [f32],
         w: WireFormat,
     ) {
+        self.try_recv_add_into_wire(to, from, tag, acc, w, None).unwrap_or_else(|e| {
+            panic!("recv_add_into_wire(to={to}, from={from}, tag={tag}): {e}")
+        });
+    }
+
+    fn try_recv_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
         match w {
-            WireFormat::F32 => self.recv_add_into(to, from, tag, acc),
+            WireFormat::F32 => self.try_recv_into(to, from, tag, out, timeout),
             _ => {
-                let v = self.recv(to, from, tag).into_u16();
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                if let Err(e) = super::check_len(out.len(), v.len()) {
+                    self.release16(to, v);
+                    return Err(e);
+                }
+                w.decode_to(&v, out);
+                self.release16(to, v);
+                Ok(())
+            }
+        }
+    }
+
+    fn try_recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        match w {
+            WireFormat::F32 => self.try_recv_add_into(to, from, tag, acc, timeout),
+            _ => {
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                if let Err(e) = super::check_len(acc.len(), v.len()) {
+                    self.release16(to, v);
+                    return Err(e);
+                }
                 w.decode_add_to(&v, acc);
                 self.release16(to, v);
+                Ok(())
             }
         }
     }
@@ -357,5 +508,85 @@ mod tests {
         let t = LocalTransport::new(2);
         t.send_slice(0, 1, 9, &[5.0, 6.0]);
         assert_eq!(t.recv(1, 0, 9), Payload::F32(vec![5.0, 6.0]));
+    }
+
+    #[test]
+    fn try_recv_times_out_with_typed_error() {
+        let t = LocalTransport::new(2);
+        let err = t.try_recv(1, 0, 5, Some(Duration::from_millis(30))).unwrap_err();
+        assert!(
+            matches!(err, TransportError::Timeout { from: 0, tag: 5, .. }),
+            "{err}"
+        );
+        // a queued message beats the deadline
+        t.send(0, 1, 5, Payload::F32(vec![1.0]));
+        let got = t.try_recv(1, 0, 5, Some(Duration::from_millis(30))).unwrap();
+        assert_eq!(got, Payload::F32(vec![1.0]));
+    }
+
+    #[test]
+    fn dead_rank_drains_queue_then_errors() {
+        let t = LocalTransport::new(2);
+        t.send(0, 1, 3, Payload::I32(vec![9]));
+        t.mark_dead(0);
+        assert!(t.is_dead(0) && !t.is_dead(1));
+        // already-queued messages are still delivered...
+        assert_eq!(t.try_recv(1, 0, 3, None).unwrap(), Payload::I32(vec![9]));
+        // ...then the dead sender is reported, without blocking
+        let err = t.try_recv(1, 0, 3, None).unwrap_err();
+        assert_eq!(err, TransportError::RankDead { rank: 0 });
+    }
+
+    #[test]
+    fn mark_dead_wakes_blocked_receiver() {
+        let t = Arc::new(LocalTransport::new(2));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.try_recv(1, 0, 99, None));
+        std::thread::sleep(Duration::from_millis(20));
+        t.mark_dead(0);
+        assert_eq!(h.join().unwrap().unwrap_err(), TransportError::RankDead { rank: 0 });
+    }
+
+    #[test]
+    #[should_panic(expected = "dead")]
+    fn legacy_recv_panics_on_dead_sender() {
+        // the non-try path upgrades "deadlock forever" to a loud panic
+        let t = LocalTransport::new(2);
+        t.mark_dead(0);
+        t.recv(1, 0, 0);
+    }
+
+    #[test]
+    fn send_raw_checksum_verified_on_try_recv() {
+        use crate::transport::CorruptKind;
+        let t = LocalTransport::new(2);
+        let p = Payload::F32(vec![1.0, 2.0]);
+        let good = p.checksum();
+        t.send_raw(0, 1, 1, p.clone(), Some(good));
+        assert_eq!(t.try_recv(1, 0, 1, None).unwrap(), p);
+        // a stale checksum (how the fault injector models corruption)
+        // is caught before the payload reaches the caller
+        t.send_raw(0, 1, 2, Payload::F32(vec![1.0, 2.5]), Some(good));
+        let err = t.try_recv(1, 0, 2, None).unwrap_err();
+        assert!(
+            matches!(err, TransportError::Corrupt(CorruptKind::Checksum { .. })),
+            "{err}"
+        );
+        // legacy recv ignores checksums entirely (compatibility)
+        t.send_raw(0, 1, 3, Payload::F32(vec![7.0]), Some(123));
+        assert_eq!(t.recv(1, 0, 3), Payload::F32(vec![7.0]));
+    }
+
+    #[test]
+    fn try_slice_paths_time_out_cleanly() {
+        let t = LocalTransport::new(2);
+        let mut out = [0.0f32; 4];
+        let short = Some(Duration::from_millis(10));
+        let err = t.try_recv_into(1, 0, 0, &mut out, short).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        let err = t
+            .try_recv_add_into_wire(1, 0, 0, &mut out, WireFormat::Bf16, short)
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
     }
 }

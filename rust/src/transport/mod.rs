@@ -9,18 +9,35 @@
 //! [`LocalTransport`] (one mailbox per receiving rank) and
 //! [`ShmTransport`] (one mailbox per ordered rank *pair*, the data
 //! plane of the threaded rank executor).
+//!
+//! For fault tolerance the trait carries a second, *bounded-time*
+//! receive surface (`try_recv*`): every blocking receive has a variant
+//! that takes an optional deadline and returns a typed
+//! [`TransportError`] instead of blocking forever, and ranks can be
+//! declared dead ([`Transport::mark_dead`]) so receives matching on
+//! them fail fast.  [`FaultyTransport`] injects deterministic
+//! drop/delay/corrupt faults under any inner transport, and
+//! [`SubTransport`] presents a shrunk dense-rank view after the job
+//! loses ranks.
 #![warn(missing_docs)]
 
+pub mod error;
+pub mod faulty;
 pub mod local;
 pub(crate) mod pool;
 pub mod shm;
+pub mod sub;
 pub mod wire;
 
+pub use error::{CorruptKind, TransportError};
+pub use faulty::{FaultPlan, FaultyTransport, InjectStats, LinkFault};
 pub use local::LocalTransport;
 pub use shm::ShmTransport;
+pub use sub::SubTransport;
 pub use wire::WireFormat;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
 
 /// Typed message payload. Collectives move f32 data and occasionally
 /// i32 index/control data; a unified enum keeps tag-matching simple.
@@ -79,6 +96,103 @@ impl Payload {
             other => panic!("expected U64 payload, got {other:?}"),
         }
     }
+
+    /// Variant name, for error reporting.
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Payload::F32(_) => "F32",
+            Payload::I32(_) => "I32",
+            Payload::U16(_) => "U16",
+            Payload::U64(_) => "U64",
+        }
+    }
+
+    /// Unwrap an F32 payload, or report a typed mismatch.  This is the
+    /// receive-path variant of [`Payload::into_f32`]: one malformed
+    /// message becomes an error the collective can propagate, not a
+    /// process abort.  The panicking variants remain for internal
+    /// invariants (messages this process built itself).
+    pub fn try_into_f32(self) -> Result<Vec<f32>, TransportError> {
+        match self {
+            Payload::F32(v) => Ok(v),
+            other => Err(wrong_type("F32", other.kind())),
+        }
+    }
+
+    /// Unwrap an I32 payload, or report a typed mismatch.
+    pub fn try_into_i32(self) -> Result<Vec<i32>, TransportError> {
+        match self {
+            Payload::I32(v) => Ok(v),
+            other => Err(wrong_type("I32", other.kind())),
+        }
+    }
+
+    /// Unwrap a U16 payload, or report a typed mismatch.
+    pub fn try_into_u16(self) -> Result<Vec<u16>, TransportError> {
+        match self {
+            Payload::U16(v) => Ok(v),
+            other => Err(wrong_type("U16", other.kind())),
+        }
+    }
+
+    /// Unwrap a U64 payload, or report a typed mismatch.
+    pub fn try_into_u64(self) -> Result<Vec<u64>, TransportError> {
+        match self {
+            Payload::U64(v) => Ok(v),
+            other => Err(wrong_type("U64", other.kind())),
+        }
+    }
+
+    /// FNV-1a digest over the variant discriminant and the payload's
+    /// little-endian element bytes — what [`Transport::send_raw`]
+    /// senders attach and `try_recv` receivers verify.
+    pub fn checksum(&self) -> u64 {
+        let mut h = error::Fnv1a::new();
+        match self {
+            Payload::F32(v) => {
+                h.update(&[1]);
+                for x in v {
+                    h.update(&x.to_bits().to_le_bytes());
+                }
+            }
+            Payload::I32(v) => {
+                h.update(&[2]);
+                for x in v {
+                    h.update(&x.to_le_bytes());
+                }
+            }
+            Payload::U16(v) => {
+                h.update(&[3]);
+                for x in v {
+                    h.update(&x.to_le_bytes());
+                }
+            }
+            Payload::U64(v) => {
+                h.update(&[4]);
+                for x in v {
+                    h.update(&x.to_le_bytes());
+                }
+            }
+        }
+        h.finish()
+    }
+
+    /// Verify this payload against a checksum attached by the sender
+    /// (`None` means the sender attached none — always valid, the
+    /// zero-overhead fault-free path).
+    pub fn verify_checksum(self, expected: Option<u64>) -> Result<Payload, TransportError> {
+        if let Some(expected) = expected {
+            let got = self.checksum();
+            if got != expected {
+                return Err(TransportError::Corrupt(CorruptKind::Checksum { expected, got }));
+            }
+        }
+        Ok(self)
+    }
+}
+
+fn wrong_type(expected: &'static str, got: &'static str) -> TransportError {
+    TransportError::Corrupt(CorruptKind::WrongType { expected, got })
 }
 
 /// MPI-flavoured point-to-point API with tag matching.
@@ -183,6 +297,148 @@ pub trait Transport: Send + Sync {
     fn pool_stats(&self) -> PoolStats {
         PoolStats::default()
     }
+
+    // ---- bounded-time / fault-aware surface -------------------------
+    //
+    // Everything below has a conservative default so existing
+    // transports keep compiling: `send_raw` discards the checksum,
+    // `try_recv` ignores the deadline (blocks like `recv`), and
+    // `mark_dead` is a no-op.  The in-tree transports override all of
+    // it; the defaults are the compatibility path only.
+
+    /// [`Transport::send`] carrying an optional integrity checksum
+    /// alongside the payload (see [`Payload::checksum`]).  Plain sends
+    /// attach no checksum, so the fault-free hot path pays nothing;
+    /// [`FaultyTransport`] attaches one to everything it forwards so
+    /// receivers can detect its injected corruption.  The default
+    /// discards the checksum.
+    fn send_raw(&self, from: usize, to: usize, tag: u64, data: Payload, checksum: Option<u64>) {
+        let _ = checksum;
+        self.send(from, to, tag, data);
+    }
+
+    /// Bounded-time receive.  Blocks until a matching message arrives,
+    /// the deadline expires ([`TransportError::Timeout`]), or the
+    /// sender is declared dead with its queue drained
+    /// ([`TransportError::RankDead`]).  A message that arrives with a
+    /// mismatched checksum is consumed and reported as
+    /// [`TransportError::Corrupt`].  `timeout: None` waits forever
+    /// (equivalent to [`Transport::recv`] plus checksum verification).
+    ///
+    /// The default ignores the deadline and cannot fail — transports
+    /// that want real fault tolerance must override it.
+    fn try_recv(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Payload, TransportError> {
+        let _ = timeout;
+        Ok(self.recv(to, from, tag))
+    }
+
+    /// Bounded-time [`Transport::recv_into`]: typed errors instead of
+    /// length asserts, deadline instead of an unbounded block.
+    fn try_recv_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        check_len(out.len(), v.len())?;
+        out.copy_from_slice(&v);
+        Ok(())
+    }
+
+    /// Bounded-time [`Transport::recv_add_into`].  The checksum and
+    /// length are verified *before* anything is accumulated, so a
+    /// corrupt message never taints `acc`.
+    fn try_recv_add_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        check_len(acc.len(), v.len())?;
+        for (a, x) in acc.iter_mut().zip(&v) {
+            *a += x;
+        }
+        Ok(())
+    }
+
+    /// Bounded-time [`Transport::recv_into_wire`].
+    fn try_recv_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        match w {
+            WireFormat::F32 => self.try_recv_into(to, from, tag, out, timeout),
+            _ => {
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                check_len(out.len(), v.len())?;
+                w.decode_to(&v, out);
+                Ok(())
+            }
+        }
+    }
+
+    /// Bounded-time [`Transport::recv_add_into_wire`].
+    fn try_recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        match w {
+            WireFormat::F32 => self.try_recv_add_into(to, from, tag, acc, timeout),
+            _ => {
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                check_len(acc.len(), v.len())?;
+                w.decode_add_to(&v, acc);
+                Ok(())
+            }
+        }
+    }
+
+    /// Declare `rank` dead: wake every receive currently blocked on a
+    /// message from it, and make future receives matching on it return
+    /// [`TransportError::RankDead`] once its queued messages drain.
+    /// Called by the health monitor, never by rank threads.  The
+    /// default is a no-op (the transport then relies on timeouts
+    /// alone).
+    fn mark_dead(&self, rank: usize) {
+        let _ = rank;
+    }
+
+    /// Whether `rank` has been declared dead via
+    /// [`Transport::mark_dead`].
+    fn is_dead(&self, rank: usize) -> bool {
+        let _ = rank;
+        false
+    }
+}
+
+/// Shared length validation for the `try_recv*` family.
+fn check_len(expected: usize, got: usize) -> Result<(), TransportError> {
+    if expected != got {
+        return Err(TransportError::Corrupt(CorruptKind::Length { expected, got }));
+    }
+    Ok(())
 }
 
 /// Payload-buffer pool counters for pooled transports.
@@ -314,5 +570,60 @@ mod tests {
         let mut out2 = [0.0f32; 4];
         t.recv_into_wire(1, 0, 3, &mut out2, WireFormat::F32);
         assert_eq!(out2, data);
+    }
+
+    #[test]
+    fn try_downcasts_return_typed_errors() {
+        let err = Payload::I32(vec![1]).try_into_f32().unwrap_err();
+        assert_eq!(
+            err,
+            TransportError::Corrupt(CorruptKind::WrongType { expected: "F32", got: "I32" })
+        );
+        assert!(Payload::F32(vec![1.0]).try_into_f32().is_ok());
+        assert!(Payload::U16(vec![1]).try_into_u16().is_ok());
+        assert!(Payload::U64(vec![1]).try_into_i32().is_err());
+    }
+
+    #[test]
+    fn checksum_distinguishes_type_and_content() {
+        let a = Payload::F32(vec![1.0, 2.0]).checksum();
+        let b = Payload::F32(vec![1.0, 2.5]).checksum();
+        assert_ne!(a, b);
+        // same bytes, different variant => different digest
+        let f = Payload::F32(vec![0.0]).checksum();
+        let i = Payload::I32(vec![0]).checksum();
+        assert_ne!(f, i);
+        // verification accepts the matching digest, rejects a stale one
+        let p = Payload::F32(vec![3.0]);
+        let good = p.checksum();
+        let p = p.verify_checksum(Some(good)).unwrap();
+        let err = p.verify_checksum(Some(good ^ 1)).unwrap_err();
+        assert!(matches!(err, TransportError::Corrupt(CorruptKind::Checksum { .. })));
+    }
+
+    #[test]
+    fn default_try_surface_blocks_like_recv_and_validates() {
+        // MinimalTransport has no timeout support: the default
+        // try_recv ignores the deadline but still delivers, and the
+        // derived slice variants validate length/type
+        let t = MinimalTransport(LocalTransport::new(2));
+        t.send_slice(0, 1, 1, &[1.0, 2.0]);
+        let mut out = [0.0; 2];
+        t.try_recv_into(1, 0, 1, &mut out, Some(std::time::Duration::from_millis(5)))
+            .unwrap();
+        assert_eq!(out, [1.0, 2.0]);
+        t.send(0, 1, 2, Payload::I32(vec![7]));
+        let err = t.try_recv_add_into(1, 0, 2, &mut out, None).unwrap_err();
+        assert!(matches!(err, TransportError::Corrupt(CorruptKind::WrongType { .. })));
+        t.send_slice(0, 1, 3, &[1.0, 2.0, 3.0]);
+        let err = t.try_recv_into(1, 0, 3, &mut out, None).unwrap_err();
+        assert_eq!(
+            err,
+            TransportError::Corrupt(CorruptKind::Length { expected: 2, got: 3 })
+        );
+        // defaults report no rank as dead
+        assert!(!t.is_dead(0));
+        t.mark_dead(0);
+        assert!(!t.is_dead(0));
     }
 }

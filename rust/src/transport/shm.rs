@@ -18,16 +18,25 @@
 //! executor assert bit-identity between the two transports.
 
 use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
-use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport};
+use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport, TransportError};
+
+/// A queued message: payload plus the optional sender checksum (see
+/// the `Msg` twin in [`super::local`]).
+struct Msg {
+    payload: Payload,
+    checksum: Option<u64>,
+}
 
 /// One ordered rank pair's mailbox: tag-keyed FIFO queues plus the
 /// condvar the (single) receiver blocks on.
 struct PairChannel {
-    queues: Mutex<HashMap<u64, VecDeque<Payload>>>,
+    queues: Mutex<HashMap<u64, VecDeque<Msg>>>,
     signal: Condvar,
 }
 
@@ -50,6 +59,8 @@ pub struct ShmTransport {
     /// [`PoolStats`] counters as the f32 pools.
     pools16: Vec<Mutex<Vec<Vec<u16>>>>,
     pool_counters: PoolCounters,
+    /// Ranks declared dead by [`Transport::mark_dead`].
+    dead: Vec<AtomicBool>,
 }
 
 impl ShmTransport {
@@ -63,12 +74,60 @@ impl ShmTransport {
             pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pool_counters: PoolCounters::default(),
+            dead: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
         }
     }
 
     fn channel(&self, from: usize, to: usize) -> &PairChannel {
         assert!(from < self.nranks && to < self.nranks, "rank out of range");
         &self.channels[from * self.nranks + to]
+    }
+
+    fn push(&self, from: usize, to: usize, tag: u64, payload: Payload, checksum: Option<u64>) {
+        self.counters.record(payload.nbytes());
+        let ch = self.channel(from, to);
+        let mut queues = ch.queues.lock().unwrap();
+        queues.entry(tag).or_default().push_back(Msg { payload, checksum });
+        ch.signal.notify_all();
+    }
+
+    /// The one wait loop behind `recv` and the `try_recv*` family —
+    /// same drain-before-dead and bounded-wait semantics as
+    /// `LocalTransport`, per pair channel.
+    fn recv_msg(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Msg, TransportError> {
+        let deadline = timeout.map(|d| Instant::now() + d);
+        let ch = self.channel(from, to);
+        let mut queues = ch.queues.lock().unwrap();
+        loop {
+            if let Some(q) = queues.get_mut(&tag) {
+                if let Some(msg) = q.pop_front() {
+                    return Ok(msg);
+                }
+            }
+            if self.dead[from].load(Ordering::SeqCst) {
+                return Err(TransportError::RankDead { rank: from });
+            }
+            queues = match deadline {
+                None => ch.signal.wait(queues).unwrap(),
+                Some(dl) => {
+                    let now = Instant::now();
+                    if now >= dl {
+                        return Err(TransportError::Timeout {
+                            from,
+                            tag,
+                            waited: timeout.unwrap(),
+                        });
+                    }
+                    ch.signal.wait_timeout(queues, dl - now).unwrap().0
+                }
+            };
+        }
     }
 }
 
@@ -78,24 +137,45 @@ impl Transport for ShmTransport {
     }
 
     fn send(&self, from: usize, to: usize, tag: u64, data: Payload) {
-        self.counters.record(data.nbytes());
-        let ch = self.channel(from, to);
-        let mut queues = ch.queues.lock().unwrap();
-        queues.entry(tag).or_default().push_back(data);
-        ch.signal.notify_all();
+        self.push(from, to, tag, data, None);
+    }
+
+    fn send_raw(&self, from: usize, to: usize, tag: u64, data: Payload, checksum: Option<u64>) {
+        self.push(from, to, tag, data, checksum);
     }
 
     fn recv(&self, to: usize, from: usize, tag: u64) -> Payload {
-        let ch = self.channel(from, to);
-        let mut queues = ch.queues.lock().unwrap();
-        loop {
-            if let Some(q) = queues.get_mut(&tag) {
-                if let Some(msg) = q.pop_front() {
-                    return msg;
-                }
-            }
-            queues = ch.signal.wait(queues).unwrap();
+        match self.recv_msg(to, from, tag, None) {
+            Ok(msg) => msg.payload,
+            Err(e) => panic!("recv(to={to}, from={from}, tag={tag}): {e}"),
         }
+    }
+
+    fn try_recv(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Payload, TransportError> {
+        let msg = self.recv_msg(to, from, tag, timeout)?;
+        msg.payload.verify_checksum(msg.checksum)
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        self.dead[rank].store(true, Ordering::SeqCst);
+        // only receivers matching on `rank` as sender can be stuck on
+        // it; their channels are the `rank -> to` row.  Lock before
+        // notify so a receiver between flag-check and wait is not lost
+        for to in 0..self.nranks {
+            let ch = &self.channels[rank * self.nranks + to];
+            let _guard = ch.queues.lock().unwrap();
+            ch.signal.notify_all();
+        }
+    }
+
+    fn is_dead(&self, rank: usize) -> bool {
+        self.dead[rank].load(Ordering::SeqCst)
     }
 
     fn stats(&self) -> TrafficStats {
@@ -109,19 +189,51 @@ impl Transport for ShmTransport {
     }
 
     fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
-        let v = self.recv(to, from, tag).into_f32();
-        assert_eq!(v.len(), out.len(), "recv_into length mismatch");
-        out.copy_from_slice(&v);
-        release_to(&self.pools[to], &self.pool_counters, v);
+        self.try_recv_into(to, from, tag, out, None)
+            .unwrap_or_else(|e| panic!("recv_into(to={to}, from={from}, tag={tag}): {e}"));
     }
 
     fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
-        let v = self.recv(to, from, tag).into_f32();
-        assert_eq!(v.len(), acc.len(), "recv_add_into length mismatch");
+        self.try_recv_add_into(to, from, tag, acc, None)
+            .unwrap_or_else(|e| panic!("recv_add_into(to={to}, from={from}, tag={tag}): {e}"));
+    }
+
+    fn try_recv_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        if let Err(e) = super::check_len(out.len(), v.len()) {
+            release_to(&self.pools[to], &self.pool_counters, v);
+            return Err(e);
+        }
+        out.copy_from_slice(&v);
+        release_to(&self.pools[to], &self.pool_counters, v);
+        Ok(())
+    }
+
+    fn try_recv_add_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
+        if let Err(e) = super::check_len(acc.len(), v.len()) {
+            release_to(&self.pools[to], &self.pool_counters, v);
+            return Err(e);
+        }
         for (a, x) in acc.iter_mut().zip(&v) {
             *a += x;
         }
         release_to(&self.pools[to], &self.pool_counters, v);
+        Ok(())
     }
 
     fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
@@ -137,14 +249,8 @@ impl Transport for ShmTransport {
     }
 
     fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
-        match w {
-            WireFormat::F32 => self.recv_into(to, from, tag, out),
-            _ => {
-                let v = self.recv(to, from, tag).into_u16();
-                w.decode_to(&v, out);
-                release_to(&self.pools16[to], &self.pool_counters, v);
-            }
-        }
+        self.try_recv_into_wire(to, from, tag, out, w, None)
+            .unwrap_or_else(|e| panic!("recv_into_wire(to={to}, from={from}, tag={tag}): {e}"));
     }
 
     fn recv_add_into_wire(
@@ -155,12 +261,55 @@ impl Transport for ShmTransport {
         acc: &mut [f32],
         w: WireFormat,
     ) {
+        self.try_recv_add_into_wire(to, from, tag, acc, w, None).unwrap_or_else(|e| {
+            panic!("recv_add_into_wire(to={to}, from={from}, tag={tag}): {e}")
+        });
+    }
+
+    fn try_recv_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
         match w {
-            WireFormat::F32 => self.recv_add_into(to, from, tag, acc),
+            WireFormat::F32 => self.try_recv_into(to, from, tag, out, timeout),
             _ => {
-                let v = self.recv(to, from, tag).into_u16();
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                if let Err(e) = super::check_len(out.len(), v.len()) {
+                    release_to(&self.pools16[to], &self.pool_counters, v);
+                    return Err(e);
+                }
+                w.decode_to(&v, out);
+                release_to(&self.pools16[to], &self.pool_counters, v);
+                Ok(())
+            }
+        }
+    }
+
+    fn try_recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        match w {
+            WireFormat::F32 => self.try_recv_add_into(to, from, tag, acc, timeout),
+            _ => {
+                let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
+                if let Err(e) = super::check_len(acc.len(), v.len()) {
+                    release_to(&self.pools16[to], &self.pool_counters, v);
+                    return Err(e);
+                }
                 w.decode_add_to(&v, acc);
                 release_to(&self.pools16[to], &self.pool_counters, v);
+                Ok(())
             }
         }
     }
@@ -297,5 +446,39 @@ mod tests {
         let local = run(Arc::new(LocalTransport::new(p)));
         let shm = run(Arc::new(ShmTransport::new(p)));
         assert_eq!(local, shm);
+    }
+
+    #[test]
+    fn try_recv_timeout_and_dead_rank() {
+        let t = ShmTransport::new(2);
+        let err = t.try_recv(1, 0, 4, Some(Duration::from_millis(25))).unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { from: 0, tag: 4, .. }), "{err}");
+        t.send(0, 1, 4, Payload::F32(vec![2.0]));
+        t.mark_dead(0);
+        // drain-then-dead, exactly like LocalTransport
+        assert_eq!(t.try_recv(1, 0, 4, None).unwrap(), Payload::F32(vec![2.0]));
+        let err = t.try_recv(1, 0, 4, None).unwrap_err();
+        assert_eq!(err, TransportError::RankDead { rank: 0 });
+    }
+
+    #[test]
+    fn mark_dead_wakes_receiver_blocked_on_dead_pair() {
+        let t = Arc::new(ShmTransport::new(3));
+        let t2 = t.clone();
+        let h = std::thread::spawn(move || t2.try_recv(2, 1, 7, None));
+        std::thread::sleep(Duration::from_millis(20));
+        t.mark_dead(1);
+        assert_eq!(h.join().unwrap().unwrap_err(), TransportError::RankDead { rank: 1 });
+        // receives from live ranks are unaffected
+        t.send(0, 2, 8, Payload::I32(vec![1]));
+        assert_eq!(t.try_recv(2, 0, 8, None).unwrap(), Payload::I32(vec![1]));
+    }
+
+    #[test]
+    fn checksummed_send_raw_roundtrip() {
+        let t = ShmTransport::new(2);
+        let p = Payload::U16(vec![17, 18]);
+        t.send_raw(0, 1, 1, p.clone(), Some(p.checksum()));
+        assert_eq!(t.try_recv(1, 0, 1, None).unwrap(), p);
     }
 }

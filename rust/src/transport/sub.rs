@@ -1,0 +1,291 @@
+//! A shrunk, dense-rank view over a subset of a transport's ranks —
+//! the communicator the survivors re-form on after losing ranks
+//! (MPI's `MPI_Comm_split` shape, restricted to what elastic recovery
+//! needs).
+//!
+//! Two translations happen at this layer:
+//!
+//! * **Rank translation**: collectives run against dense ranks
+//!   `0..members.len()`; the view maps them onto the surviving
+//!   physical ranks, so ring/tree/recursive-doubling code needs no
+//!   notion of "holes" in the rank space.
+//! * **Tag translation**: every tag is shifted by `era *`
+//!   [`ERA_TAG_STRIDE`].  A collective that died halfway leaves stale
+//!   messages queued under its tags; when the survivors retry (same
+//!   epoch, next attempt) or shrink (next epoch), the new era puts all
+//!   new traffic in a disjoint tag space, so a stale partial sum can
+//!   never be mistaken for a fresh one.  This is the in-process
+//!   analogue of bumping an epoch number in a wire header.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::wire::WireFormat;
+use super::{Payload, PoolStats, TrafficStats, Transport, TransportError};
+
+/// Tag-space stride between eras.  A single era must hold every tag a
+/// training run uses (`step * TAG_BLOCK + algo tags`); 2^44 leaves
+/// room for 2^23 steps of 2^21 tags each, while 2^64 / 2^44 = 2^20
+/// eras is far beyond any realistic epoch × attempt count.
+pub const ERA_TAG_STRIDE: u64 = 1 << 44;
+
+/// A dense-rank view over `members` of an inner transport, with all
+/// traffic shifted into era `era`'s tag space.
+pub struct SubTransport {
+    inner: Arc<dyn Transport>,
+    members: Vec<usize>,
+    shift: u64,
+}
+
+impl SubTransport {
+    /// Build a view over `members` (sorted, unique physical ranks of
+    /// `inner`).  `era` must be unique per (epoch, attempt) so stale
+    /// traffic from an aborted collective can never cross-match.
+    pub fn new(inner: Arc<dyn Transport>, members: Vec<usize>, era: u64) -> Self {
+        assert!(!members.is_empty(), "a sub-transport needs at least one member");
+        assert!(
+            members.windows(2).all(|w| w[0] < w[1]),
+            "members must be sorted and unique: {members:?}"
+        );
+        assert!(
+            *members.last().unwrap() < inner.nranks(),
+            "member out of range for inner transport"
+        );
+        let shift = era
+            .checked_mul(ERA_TAG_STRIDE)
+            .expect("era overflows the tag space");
+        Self { inner, members, shift }
+    }
+
+    /// The surviving physical ranks, in dense-rank order.
+    pub fn members(&self) -> &[usize] {
+        &self.members
+    }
+
+    /// Dense rank of physical rank `phys`, if it is a member.
+    pub fn dense_rank_of(&self, phys: usize) -> Option<usize> {
+        self.members.binary_search(&phys).ok()
+    }
+
+    fn phys(&self, dense: usize) -> usize {
+        self.members[dense]
+    }
+
+    fn tag(&self, tag: u64) -> u64 {
+        assert!(tag < ERA_TAG_STRIDE, "tag {tag} exceeds one era's tag space");
+        self.shift + tag
+    }
+}
+
+impl Transport for SubTransport {
+    fn nranks(&self) -> usize {
+        self.members.len()
+    }
+
+    fn send(&self, from: usize, to: usize, tag: u64, data: Payload) {
+        self.inner.send(self.phys(from), self.phys(to), self.tag(tag), data);
+    }
+
+    fn send_raw(&self, from: usize, to: usize, tag: u64, data: Payload, checksum: Option<u64>) {
+        self.inner
+            .send_raw(self.phys(from), self.phys(to), self.tag(tag), data, checksum);
+    }
+
+    fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
+        self.inner.send_slice(self.phys(from), self.phys(to), self.tag(tag), data);
+    }
+
+    fn send_slice_wire(&self, from: usize, to: usize, tag: u64, data: &[f32], w: WireFormat) {
+        self.inner
+            .send_slice_wire(self.phys(from), self.phys(to), self.tag(tag), data, w);
+    }
+
+    fn recv(&self, to: usize, from: usize, tag: u64) -> Payload {
+        self.inner.recv(self.phys(to), self.phys(from), self.tag(tag))
+    }
+
+    fn recv_into(&self, to: usize, from: usize, tag: u64, out: &mut [f32]) {
+        self.inner.recv_into(self.phys(to), self.phys(from), self.tag(tag), out)
+    }
+
+    fn recv_add_into(&self, to: usize, from: usize, tag: u64, acc: &mut [f32]) {
+        self.inner.recv_add_into(self.phys(to), self.phys(from), self.tag(tag), acc)
+    }
+
+    fn recv_into_wire(&self, to: usize, from: usize, tag: u64, out: &mut [f32], w: WireFormat) {
+        self.inner
+            .recv_into_wire(self.phys(to), self.phys(from), self.tag(tag), out, w)
+    }
+
+    fn recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+    ) {
+        self.inner
+            .recv_add_into_wire(self.phys(to), self.phys(from), self.tag(tag), acc, w)
+    }
+
+    fn try_recv(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        timeout: Option<Duration>,
+    ) -> Result<Payload, TransportError> {
+        self.inner
+            .try_recv(self.phys(to), self.phys(from), self.tag(tag), timeout)
+    }
+
+    fn try_recv_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner
+            .try_recv_into(self.phys(to), self.phys(from), self.tag(tag), out, timeout)
+    }
+
+    fn try_recv_add_into(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner
+            .try_recv_add_into(self.phys(to), self.phys(from), self.tag(tag), acc, timeout)
+    }
+
+    fn try_recv_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        out: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_into_wire(
+            self.phys(to),
+            self.phys(from),
+            self.tag(tag),
+            out,
+            w,
+            timeout,
+        )
+    }
+
+    fn try_recv_add_into_wire(
+        &self,
+        to: usize,
+        from: usize,
+        tag: u64,
+        acc: &mut [f32],
+        w: WireFormat,
+        timeout: Option<Duration>,
+    ) -> Result<(), TransportError> {
+        self.inner.try_recv_add_into_wire(
+            self.phys(to),
+            self.phys(from),
+            self.tag(tag),
+            acc,
+            w,
+            timeout,
+        )
+    }
+
+    fn mark_dead(&self, rank: usize) {
+        self.inner.mark_dead(self.phys(rank));
+    }
+
+    fn is_dead(&self, rank: usize) -> bool {
+        self.inner.is_dead(self.phys(rank))
+    }
+
+    fn stats(&self) -> TrafficStats {
+        self.inner.stats()
+    }
+
+    fn pool_stats(&self) -> PoolStats {
+        self.inner.pool_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::{self, AllreduceAlgo};
+    use crate::transport::LocalTransport;
+
+    #[test]
+    fn rank_translation_roundtrip() {
+        let inner = Arc::new(LocalTransport::new(4));
+        let sub = SubTransport::new(inner.clone(), vec![0, 1, 3], 0);
+        assert_eq!(sub.nranks(), 3);
+        assert_eq!(sub.dense_rank_of(3), Some(2));
+        assert_eq!(sub.dense_rank_of(2), None);
+        // dense 2 = physical 3
+        sub.send(0, 2, 5, Payload::F32(vec![1.5]));
+        assert_eq!(inner.recv(3, 0, 5), Payload::F32(vec![1.5]));
+    }
+
+    #[test]
+    fn eras_do_not_cross_match() {
+        let inner = Arc::new(LocalTransport::new(2));
+        let era0 = SubTransport::new(inner.clone(), vec![0, 1], 0);
+        let era1 = SubTransport::new(inner.clone(), vec![0, 1], 1);
+        // a stale message from era 0 must be invisible to era 1
+        era0.send(0, 1, 7, Payload::I32(vec![0]));
+        let err = era1
+            .try_recv(1, 0, 7, Some(Duration::from_millis(20)))
+            .unwrap_err();
+        assert!(matches!(err, TransportError::Timeout { .. }));
+        era1.send(0, 1, 7, Payload::I32(vec![1]));
+        assert_eq!(era1.try_recv(1, 0, 7, None).unwrap(), Payload::I32(vec![1]));
+        assert_eq!(era0.try_recv(1, 0, 7, None).unwrap(), Payload::I32(vec![0]));
+    }
+
+    #[test]
+    fn collectives_run_over_shrunk_view() {
+        // survivors {0, 2, 3} of an original p=4 world run a full ring
+        // allreduce as a dense p'=3 communicator
+        let inner = Arc::new(LocalTransport::new(4));
+        let members = vec![0usize, 2, 3];
+        let handles: Vec<_> = members
+            .iter()
+            .copied()
+            .enumerate()
+            .map(|(dense, phys)| {
+                let inner = inner.clone();
+                let members = members.clone();
+                std::thread::spawn(move || {
+                    let sub = SubTransport::new(inner, members, 3);
+                    let mut data = vec![(phys + 1) as f32; 8];
+                    collectives::allreduce(&sub, dense, &mut data, AllreduceAlgo::Ring, 0);
+                    data
+                })
+            })
+            .collect();
+        let results: Vec<Vec<f32>> =
+            handles.into_iter().map(|h| h.join().unwrap()).collect();
+        // 1 + 3 + 4 = 8 from physical ranks 0, 2, 3
+        for r in &results {
+            assert!(r.iter().all(|&x| x == 8.0), "{r:?}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "sorted and unique")]
+    fn unsorted_members_rejected() {
+        let inner = Arc::new(LocalTransport::new(4));
+        SubTransport::new(inner, vec![2, 0], 0);
+    }
+}

@@ -65,6 +65,28 @@ pub fn run(cases: u64, property: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) 
     }
 }
 
+/// Run `f` on a watchdog thread; panic if it does not finish within
+/// `secs` — the no-deadlock harness for concurrency tests, where a
+/// hang must become a loud failure instead of a stuck CI job.
+///
+/// If the workload itself panics, that panic is propagated (via
+/// `join`) so the real assertion failure is what the test reports.
+pub fn with_deadline(secs: u64, label: &str, f: impl FnOnce() + Send + 'static) {
+    let (tx, rx) = std::sync::mpsc::channel();
+    let h = std::thread::spawn(move || {
+        f();
+        let _ = tx.send(());
+    });
+    match rx.recv_timeout(std::time::Duration::from_secs(secs)) {
+        Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+            panic!("{label}: deadlock/timeout after {secs}s")
+        }
+        // Ok, or Disconnected because the workload panicked before
+        // sending — join to propagate the real panic either way
+        _ => h.join().expect("workload panicked"),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -91,6 +113,21 @@ mod tests {
             .cloned()
             .unwrap_or_else(|| "<non-string>".into());
         assert!(msg.contains("seed"), "{msg}");
+    }
+
+    #[test]
+    fn with_deadline_runs_the_workload() {
+        let (tx, rx) = std::sync::mpsc::channel();
+        with_deadline(30, "trivial", move || tx.send(7).unwrap());
+        assert_eq!(rx.recv().unwrap(), 7);
+    }
+
+    #[test]
+    fn with_deadline_propagates_workload_panics() {
+        let result = std::panic::catch_unwind(|| {
+            with_deadline(30, "panicky", || panic!("inner failure"));
+        });
+        assert!(result.is_err());
     }
 
     #[test]

@@ -3,30 +3,9 @@
 //! × wire format, a randomized per-rank-delay stress test, and
 //! no-deadlock runs across rank counts.
 
-use std::sync::mpsc;
-use std::time::Duration;
-
 use densefold::coordinator::policy::DensifyPolicy;
 use densefold::runtime::executor::{self, ComputeModel, ExecutorConfig, LayerSpec};
-
-/// Run `f` on a watchdog thread; fail the test if it does not finish
-/// within `secs` (the no-deadlock harness — a hang becomes a loud
-/// failure instead of a stuck CI job).
-fn with_deadline(secs: u64, label: &str, f: impl FnOnce() + Send + 'static) {
-    let (tx, rx) = mpsc::channel();
-    let h = std::thread::spawn(move || {
-        f();
-        let _ = tx.send(());
-    });
-    match rx.recv_timeout(Duration::from_secs(secs)) {
-        Err(mpsc::RecvTimeoutError::Timeout) => {
-            panic!("{label}: deadlock/timeout after {secs}s")
-        }
-        // Ok, or Disconnected because the workload panicked before
-        // sending — join to propagate the real panic either way
-        _ => h.join().expect("workload panicked"),
-    }
-}
+use densefold::util::proptest::with_deadline;
 
 #[test]
 fn bit_identity_every_algo_and_wire_at_p4() {
