@@ -1,0 +1,86 @@
+//! Bench: the socket data plane vs its in-process rivals — the same
+//! pipelined-ring allreduce cycles over a [`SocketHub`] (real kernel
+//! sockets), a [`ShmTransport`] (lock-free in-process mailboxes), and
+//! a [`LocalTransport`] (plain channels), 16 KB to 8 MB at p=4
+//! (`BENCH_socket.json`, group shared with the multi-process
+//! `repro launch` rows, which are named `proc/...`).
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use densefold::collectives::{self, AllreduceAlgo, TAG_BLOCK};
+use densefold::transport::{
+    LocalTransport, ShmTransport, SocketHub, SocketMode, Transport,
+};
+use densefold::util::bench::Bench;
+
+const RANKS: usize = 4;
+const SIZES: [usize; 4] = [4_096, 65_536, 262_144, 2_097_152];
+const CYCLES: usize = 8;
+const WARMUP: usize = 2;
+
+fn input(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems).map(|i| ((rank * 31 + i * 7 + 3) % 17) as f32 - 8.0).collect()
+}
+
+/// Wall time per allreduce cycle (max over ranks — a cycle is as slow
+/// as its slowest rank), `CYCLES` samples after `WARMUP` discards.
+fn cycles_ns(t: &dyn Transport, elems: usize) -> Vec<f64> {
+    let p = t.nranks();
+    let per_rank: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                s.spawn(move || {
+                    let mut buf = input(rank, elems);
+                    let mut ns = Vec::with_capacity(CYCLES);
+                    for cycle in 0..WARMUP + CYCLES {
+                        let t0 = Instant::now();
+                        collectives::allreduce(
+                            t,
+                            rank,
+                            &mut buf,
+                            AllreduceAlgo::RingPipelined,
+                            cycle as u64 * TAG_BLOCK,
+                        );
+                        if cycle >= WARMUP {
+                            ns.push(t0.elapsed().as_nanos() as u64);
+                        }
+                    }
+                    ns
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    (0..CYCLES)
+        .map(|c| per_rank.iter().map(|r| r[c]).max().unwrap() as f64)
+        .collect()
+}
+
+fn main() {
+    let mut bench = Bench::new("socket");
+    let transports: Vec<(&str, Arc<dyn Transport>)> = vec![
+        ("local", Arc::new(LocalTransport::new(RANKS))),
+        ("shm", Arc::new(ShmTransport::new(RANKS))),
+        (
+            "hub",
+            Arc::new(SocketHub::new(RANKS, SocketMode::Unix).expect("socket rendezvous")),
+        ),
+    ];
+    for elems in SIZES {
+        let kb = elems * 4 / 1024;
+        for (label, t) in &transports {
+            let samples = cycles_ns(&**t, elems);
+            let r = bench.push_samples(&format!("{label}/pipelined/{kb}KB/p{RANKS}"), samples, 1);
+            println!(
+                "{label:>5}/pipelined {kb:>5} KB p{RANKS}: {:>12.0} ns/cycle",
+                r.mean_ns
+            );
+        }
+    }
+    std::fs::create_dir_all("results").ok();
+    bench
+        .write_csv(std::path::Path::new("results/bench_socket.csv"))
+        .expect("csv");
+    bench.emit_json().expect("json");
+}

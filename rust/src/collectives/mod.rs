@@ -56,6 +56,19 @@ impl AllreduceAlgo {
             _ => None,
         }
     }
+
+    /// Canonical name (round-trips through [`AllreduceAlgo::parse`]) —
+    /// used for reporting and for propagating configs to worker
+    /// processes over the environment.
+    pub fn name(self) -> &'static str {
+        match self {
+            Self::Ring => "ring",
+            Self::RingPipelined => "ring-pipelined",
+            Self::RecursiveDoubling => "recursive-doubling",
+            Self::ReduceBcast => "reduce-bcast",
+            Self::Naive => "naive",
+        }
+    }
 }
 
 /// Dispatching allreduce (sum). `data` is reduced in place; all ranks

@@ -105,6 +105,63 @@ impl Default for ExchangeConfig {
     }
 }
 
+/// Environment variable names used by [`ExchangeConfig::to_env`] /
+/// [`ExchangeConfig::from_env`] (the launcher's process-boundary
+/// config channel — see `runtime::launcher`).
+pub const EXCHANGE_ENV_KEYS: [&str; 6] = [
+    "DENSEFOLD_ALGO",
+    "DENSEFOLD_FUSION",
+    "DENSEFOLD_AVERAGE",
+    "DENSEFOLD_CACHE_PLANS",
+    "DENSEFOLD_POLICY",
+    "DENSEFOLD_WIRE",
+];
+
+impl ExchangeConfig {
+    /// Serialize the config as `(key, value)` environment pairs so a
+    /// launcher can propagate it to re-exec'ed worker processes.  Every
+    /// value round-trips through [`ExchangeConfig::from_env`].
+    pub fn to_env(&self) -> Vec<(&'static str, String)> {
+        let policy = match self.policy {
+            DensifyPolicy::Adaptive { dense_above } => format!("adaptive:{dense_above}"),
+            other => other.name().to_string(),
+        };
+        vec![
+            ("DENSEFOLD_ALGO", self.algo.name().to_string()),
+            ("DENSEFOLD_FUSION", self.fusion_threshold.to_string()),
+            ("DENSEFOLD_AVERAGE", (self.average as u8).to_string()),
+            ("DENSEFOLD_CACHE_PLANS", (self.cache_plans as u8).to_string()),
+            ("DENSEFOLD_POLICY", policy),
+            ("DENSEFOLD_WIRE", self.wire.name().to_string()),
+        ]
+    }
+
+    /// Rebuild a config from the process environment written by
+    /// [`ExchangeConfig::to_env`].  Unset or unparseable variables fall
+    /// back to the [`Default`] field value, so a worker spawned without
+    /// the full set still boots with sane settings.
+    pub fn from_env() -> Self {
+        let d = Self::default();
+        let var = |k: &str| std::env::var(k).ok();
+        Self {
+            algo: var("DENSEFOLD_ALGO")
+                .and_then(|s| AllreduceAlgo::parse(&s))
+                .unwrap_or(d.algo),
+            fusion_threshold: var("DENSEFOLD_FUSION")
+                .and_then(|s| s.parse().ok())
+                .unwrap_or(d.fusion_threshold),
+            average: var("DENSEFOLD_AVERAGE").map(|s| s != "0").unwrap_or(d.average),
+            cache_plans: var("DENSEFOLD_CACHE_PLANS").map(|s| s != "0").unwrap_or(d.cache_plans),
+            policy: var("DENSEFOLD_POLICY")
+                .and_then(|s| DensifyPolicy::parse(&s))
+                .unwrap_or(d.policy),
+            wire: var("DENSEFOLD_WIRE")
+                .and_then(|s| WireFormat::parse(&s))
+                .unwrap_or(d.wire),
+        }
+    }
+}
+
 /// Measured facts about one exchange cycle, the raw material for
 /// Fig. 3/5 style reporting.
 #[derive(Debug, Clone, Default)]

@@ -21,7 +21,7 @@ use std::time::Duration;
 
 use crate::collectives::AllreduceAlgo;
 use crate::train::{run_elastic_session, ElasticConfig, ElasticReport};
-use crate::transport::{FaultPlan, LinkFault, WireFormat};
+use crate::transport::{FaultPlan, LinkFault, TransportKind, WireFormat};
 use crate::util::csv::Table;
 
 /// Knobs for the chaos drill (`repro chaos` flags).
@@ -47,6 +47,8 @@ pub struct ChaosOpts {
     pub elems: usize,
     /// Seed for parameters, gradients, and fault streams (`--seed`).
     pub seed: u64,
+    /// Transport the elastic ranks exchange over (`--transport`).
+    pub transport: TransportKind,
 }
 
 impl Default for ChaosOpts {
@@ -62,6 +64,7 @@ impl Default for ChaosOpts {
             delay_us: 0,
             elems: 4096,
             seed: 42,
+            transport: TransportKind::Shm,
         }
     }
 }
@@ -106,6 +109,7 @@ fn elastic_config(opts: &ChaosOpts) -> ElasticConfig {
             opts.seed
         )),
         seed: opts.seed,
+        transport: opts.transport,
     }
 }
 

@@ -1,0 +1,672 @@
+//! Multi-process launch drill: `densefold repro launch` — the
+//! acceptance gate for the socket transport + launcher subsystem.
+//!
+//! The parent process runs three phases, each over a fresh fleet of
+//! worker *processes* (re-exec'ed via
+//! [`launcher::spawn_workers`](crate::runtime::launcher::spawn_workers),
+//! rendezvousing through a shared temp directory):
+//!
+//! 1. **Bit-identity gate** — every worker runs all 5 allreduce
+//!    algorithms × 3 wire formats over its socket endpoint and writes
+//!    an FNV-1a digest of the result bits per combination; the parent
+//!    recomputes every digest over an in-process [`LocalTransport`]
+//!    reference and demands equality.  Cross-process results must be
+//!    *bit-identical* to single-process results.
+//! 2. **Bench** — pipelined-ring allreduce cycles at 16 KB–8 MB; the
+//!    parent folds per-rank per-cycle wall times into
+//!    `BENCH_socket.json` rows named `proc/pipelined/<size>/p<p>`
+//!    (the in-process `socket` bench binary owns the `hub/`, `shm/`
+//!    and `local/` rows of the same group).
+//! 3. **Elastic drill** — a multi-process
+//!    [`elastic_worker`](crate::train::elastic_worker) run driven by
+//!    [`WireCoord`] control rounds, with one worker SIGKILLed
+//!    mid-run: the victim writes a marker file at its kill step and
+//!    parks; the parent sees the marker and delivers a real SIGKILL;
+//!    the kernel closes the victim's sockets; every survivor's reader
+//!    thread sees EOF and poisons the rank; and the survivors shrink,
+//!    roll back to the checkpoint, and finish.  The parent replays
+//!    the whole run from the closed-form gradients and demands the
+//!    survivors' final parameters match the oracle bit for bit.
+//!
+//! Every phase hard-asserts its contract so CI fails loudly.
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::collectives::{self, AllreduceAlgo, TAG_BLOCK};
+use crate::coordinator::ExchangeConfig;
+use crate::runtime::executor::RankExit;
+use crate::runtime::launcher::{self, ProcStatus, WorkerEnv};
+use crate::runtime::wire_coord::WireCoord;
+use crate::train::session::{self, ElasticConfig};
+use crate::transport::{
+    FaultPlan, Fnv1a, LocalTransport, SocketMode, SocketTransport, Transport, TransportKind,
+    WireFormat,
+};
+use crate::util::bench::Bench;
+use crate::util::csv::Table;
+
+/// Knobs for the launch drill (`repro launch` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct LaunchOpts {
+    /// Worker processes (`--ranks`).
+    pub ranks: usize,
+    /// Socket flavour (`--transport socket` = Unix-domain, `tcp` =
+    /// loopback TCP).
+    pub mode: SocketMode,
+    /// Gate/elastic gradient vector length (`--elems`).
+    pub elems: usize,
+    /// Elastic-phase training steps (`--cycles`).
+    pub steps: usize,
+    /// Rank to SIGKILL mid-run, or `None` (`--kill-rank`, 'none').
+    pub kill_rank: Option<usize>,
+    /// Step at which the victim dies (`--kill-cycle`).
+    pub kill_cycle: usize,
+    /// Checkpoint cadence in committed steps (`--ckpt-every`).
+    pub ckpt_every: usize,
+    /// Timed bench cycles per payload size (`--bench-cycles`).
+    pub bench_cycles: usize,
+    /// Seed for parameters and gradients (`--seed`).
+    pub seed: u64,
+}
+
+impl Default for LaunchOpts {
+    fn default() -> Self {
+        Self {
+            ranks: 4,
+            mode: SocketMode::Unix,
+            elems: 2048,
+            steps: 8,
+            kill_rank: Some(2),
+            kill_cycle: 3,
+            ckpt_every: 2,
+            bench_cycles: 6,
+            seed: 42,
+        }
+    }
+}
+
+/// How long a worker waits for the full-mesh rendezvous.
+const CONNECT_TIMEOUT: Duration = Duration::from_secs(10);
+/// Per-receive timeout inside worker collectives.
+const RECV_TIMEOUT: Duration = Duration::from_millis(500);
+/// Per-receive timeout inside `WireCoord` control rounds.
+const ROUND_TIMEOUT: Duration = Duration::from_secs(5);
+/// Parent-side cap on one phase's wall time.
+const PHASE_DEADLINE: Duration = Duration::from_secs(120);
+/// Learning rate of the elastic drill (mirrored by the oracle).
+const LR: f32 = 0.05;
+
+const ALGOS: [AllreduceAlgo; 5] = [
+    AllreduceAlgo::Ring,
+    AllreduceAlgo::RingPipelined,
+    AllreduceAlgo::RecursiveDoubling,
+    AllreduceAlgo::ReduceBcast,
+    AllreduceAlgo::Naive,
+];
+const WIRES: [WireFormat; 3] = [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16];
+/// Bench payload sizes in f32 elements (16 KB .. 8 MB).
+const BENCH_SIZES: [usize; 4] = [4_096, 65_536, 262_144, 2_097_152];
+
+/// The gate phase's per-rank input vector — deliberately the same
+/// closed form on both sides of the process boundary.
+fn gate_input(rank: usize, elems: usize) -> Vec<f32> {
+    (0..elems).map(|i| ((rank * 31 + i * 7 + 3) % 17) as f32 - 8.0).collect()
+}
+
+fn digest_f32(data: &[f32]) -> u64 {
+    let mut h = Fnv1a::new();
+    for x in data {
+        h.update(&x.to_bits().to_le_bytes());
+    }
+    h.finish()
+}
+
+/// Atomic write: `.tmp` then rename, so a reader never sees a torn
+/// file — rename visibility is the worker→parent commit point.
+fn write_atomic(path: &Path, contents: &str) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, contents).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
+    Ok(())
+}
+
+fn read_kv(path: &Path) -> Result<Vec<(String, String)>> {
+    let text =
+        std::fs::read_to_string(path).with_context(|| format!("read {}", path.display()))?;
+    Ok(text
+        .lines()
+        .filter_map(|l| l.split_once('=').map(|(k, v)| (k.to_string(), v.to_string())))
+        .collect())
+}
+
+fn lookup<'a>(kv: &'a [(String, String)], key: &str, path: &Path) -> Result<&'a str> {
+    kv.iter()
+        .find(|(k, _)| k == key)
+        .map(|(_, v)| v.as_str())
+        .with_context(|| format!("missing '{key}' in {}", path.display()))
+}
+
+/// Fresh rendezvous directory for one phase's fleet.
+fn rendezvous_dir(phase: &str) -> Result<PathBuf> {
+    let dir = std::env::temp_dir()
+        .join(format!("densefold_launch_{}_{phase}", std::process::id()));
+    // a stale dir from a crashed previous run would break rendezvous
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).with_context(|| format!("create {}", dir.display()))?;
+    Ok(dir)
+}
+
+fn connect(env: &WorkerEnv) -> Result<Arc<SocketTransport>> {
+    Ok(Arc::new(SocketTransport::connect(
+        &env.dir,
+        env.rank,
+        env.nranks,
+        env.mode,
+        CONNECT_TIMEOUT,
+    )?))
+}
+
+// ---------------------------------------------------------------------------
+// Worker bodies (run in the re-exec'ed child processes)
+// ---------------------------------------------------------------------------
+
+/// Entry point for a re-exec'ed worker process (dispatched from
+/// `main` the moment [`launcher::worker_env`] returns `Some`).
+/// Returns the process exit code.
+pub fn worker_main(env: &WorkerEnv) -> i32 {
+    let result = match env.role.as_str() {
+        "gate" => gate_worker(env),
+        "bench" => bench_worker(env),
+        "elastic" => return elastic_worker_proc(env),
+        other => Err(anyhow::anyhow!("unknown worker role '{other}'")),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("worker rank {} ({}): {e:#}", env.rank, env.role);
+            launcher::EXIT_FAILED
+        }
+    }
+}
+
+fn gate_worker(env: &WorkerEnv) -> Result<()> {
+    let elems = launcher::env_u64("DENSEFOLD_ELEMS", 2048) as usize;
+    let t = connect(env)?;
+    let mut lines = String::new();
+    for (ci, (algo, wire)) in combos().enumerate() {
+        let mut buf = gate_input(env.rank, elems);
+        collectives::try_allreduce_wire(
+            &*t,
+            env.rank,
+            &mut buf,
+            algo,
+            ci as u64 * TAG_BLOCK,
+            wire,
+            Some(RECV_TIMEOUT),
+        )
+        .map_err(|e| anyhow::anyhow!("{}/{}: {e}", algo.name(), wire.name()))?;
+        lines.push_str(&format!(
+            "{}/{}={:016x}\n",
+            algo.name(),
+            wire.name(),
+            digest_f32(&buf)
+        ));
+    }
+    write_atomic(&env.dir.join(format!("gate.r{}", env.rank)), &lines)
+}
+
+fn combos() -> impl Iterator<Item = (AllreduceAlgo, WireFormat)> {
+    ALGOS.into_iter().flat_map(|a| WIRES.into_iter().map(move |w| (a, w)))
+}
+
+fn bench_worker(env: &WorkerEnv) -> Result<()> {
+    let cycles = launcher::env_u64("DENSEFOLD_BENCH_CYCLES", 6) as usize;
+    let t = connect(env)?;
+    let mut lines = String::new();
+    let mut tag_cycle = 0u64;
+    for elems in BENCH_SIZES {
+        let mut buf = gate_input(env.rank, elems);
+        let mut ns: Vec<u64> = Vec::with_capacity(cycles);
+        for cycle in 0..cycles + 2 {
+            let t0 = Instant::now();
+            collectives::try_allreduce(
+                &*t,
+                env.rank,
+                &mut buf,
+                AllreduceAlgo::RingPipelined,
+                tag_cycle * TAG_BLOCK,
+                Some(RECV_TIMEOUT),
+            )
+            .map_err(|e| anyhow::anyhow!("bench {elems} elems cycle {cycle}: {e}"))?;
+            tag_cycle += 1;
+            if cycle >= 2 {
+                // first two cycles warm pools and page tables
+                ns.push(t0.elapsed().as_nanos() as u64);
+            }
+        }
+        let list: Vec<String> = ns.iter().map(|n| n.to_string()).collect();
+        lines.push_str(&format!("{elems}={}\n", list.join(",")));
+    }
+    write_atomic(&env.dir.join(format!("bench.r{}", env.rank)), &lines)
+}
+
+fn elastic_cfg_from_env(env: &WorkerEnv) -> ElasticConfig {
+    let exchange = ExchangeConfig::from_env();
+    let kill_rank = launcher::env_u64("DENSEFOLD_KILL_RANK", u64::MAX);
+    let kill_cycle = launcher::env_u64("DENSEFOLD_KILL_CYCLE", 0) as usize;
+    let mut faults = FaultPlan::none();
+    if kill_rank != u64::MAX {
+        faults = faults.with_kill(kill_rank as usize, kill_cycle);
+    }
+    ElasticConfig {
+        nranks: env.nranks,
+        steps: launcher::env_u64("DENSEFOLD_STEPS", 8) as usize,
+        elems: launcher::env_u64("DENSEFOLD_ELEMS", 2048) as usize,
+        lr: LR,
+        checkpoint_every: launcher::env_u64("DENSEFOLD_CKPT_EVERY", 2) as usize,
+        algo: exchange.algo,
+        wire: exchange.wire,
+        recv_timeout: Duration::from_millis(launcher::env_u64(
+            "DENSEFOLD_RECV_TIMEOUT_MS",
+            RECV_TIMEOUT.as_millis() as u64,
+        )),
+        heartbeat_deadline: Duration::from_secs(3600), // EOF detects deaths, not heartbeats
+        faults,
+        ckpt_path: PathBuf::from(launcher::env_str(
+            "DENSEFOLD_CKPT",
+            env.dir.join("elastic.ckpt").to_str().unwrap_or("elastic.ckpt"),
+        )),
+        seed: launcher::env_u64("DENSEFOLD_SEED", 42),
+        transport: TransportKind::Socket,
+    }
+}
+
+fn elastic_worker_proc(env: &WorkerEnv) -> i32 {
+    let cfg = elastic_cfg_from_env(env);
+    let t: Arc<dyn Transport> = match connect(env) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("worker rank {}: rendezvous failed: {e:#}", env.rank);
+            return launcher::EXIT_FAILED;
+        }
+    };
+    let round_timeout =
+        Duration::from_millis(launcher::env_u64("DENSEFOLD_ROUND_TIMEOUT_MS", 5000));
+    let coord = WireCoord::new(t.clone(), env.rank, round_timeout);
+    match session::elastic_worker(env.rank, t, &coord, &cfg) {
+        RankExit::Finished(o) => {
+            let members: Vec<String> = o.members.iter().map(|m| m.to_string()).collect();
+            let lines = format!(
+                "digest={:016x}\nsteps={}\nretries={}\nrollbacks={}\nepoch={}\nmembers={}\n",
+                digest_f32(&o.params),
+                o.steps_done,
+                o.retries,
+                o.rollbacks,
+                o.final_epoch,
+                members.join(";"),
+            );
+            match write_atomic(&env.dir.join(format!("out.r{}", env.rank)), &lines) {
+                Ok(()) => 0,
+                Err(e) => {
+                    eprintln!("worker rank {}: outcome write failed: {e:#}", env.rank);
+                    launcher::EXIT_FAILED
+                }
+            }
+        }
+        // The kill schedule fired: advertise readiness to die and
+        // park.  The parent delivers a *real* SIGKILL, so the kernel
+        // — not any cooperative code path — closes our sockets and
+        // the survivors see EOF, exactly like a production crash.
+        RankExit::Died { cycle } => {
+            if let Err(e) =
+                write_atomic(&env.dir.join(format!("kill.r{}", env.rank)), &format!("{cycle}\n"))
+            {
+                eprintln!("worker rank {}: kill marker failed: {e:#}", env.rank);
+                return launcher::EXIT_FAILED;
+            }
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        other => launcher::exit_code(&other),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Parent-side phases
+// ---------------------------------------------------------------------------
+
+fn common_env(opts: &LaunchOpts) -> Vec<(String, String)> {
+    let mut env = vec![
+        ("DENSEFOLD_ELEMS".to_string(), opts.elems.to_string()),
+        ("DENSEFOLD_SEED".to_string(), opts.seed.to_string()),
+        ("DENSEFOLD_BENCH_CYCLES".to_string(), opts.bench_cycles.to_string()),
+        ("DENSEFOLD_STEPS".to_string(), opts.steps.to_string()),
+        ("DENSEFOLD_CKPT_EVERY".to_string(), opts.ckpt_every.to_string()),
+    ];
+    for (k, v) in ExchangeConfig::default().to_env() {
+        env.push((k.to_string(), v));
+    }
+    env
+}
+
+fn run_fleet(
+    opts: &LaunchOpts,
+    role: &str,
+    dir: &Path,
+    extra: Vec<(String, String)>,
+) -> Result<Vec<launcher::ProcExit>> {
+    let mut workers = launcher::spawn_workers(role, opts.ranks, dir, opts.mode, &extra)?;
+    let exits = launcher::reap_all(&mut workers, PHASE_DEADLINE, |workers| {
+        // the elastic victim advertises its kill point via marker file
+        for w in workers.iter_mut() {
+            if dir.join(format!("kill.r{}", w.rank)).exists() {
+                w.kill()?;
+            }
+        }
+        Ok(())
+    })?;
+    Ok(exits)
+}
+
+fn gate_phase(opts: &LaunchOpts) -> Result<usize> {
+    let dir = rendezvous_dir("gate")?;
+    let exits = run_fleet(opts, "gate", &dir, common_env(opts))?;
+    for e in &exits {
+        ensure!(
+            e.status == ProcStatus::Finished,
+            "gate worker rank {} exited {:?}",
+            e.rank,
+            e.status
+        );
+    }
+
+    // in-process LocalTransport reference digests, same inputs
+    let reference = local_reference_digests(opts)?;
+    for rank in 0..opts.ranks {
+        let path = dir.join(format!("gate.r{rank}"));
+        let kv = read_kv(&path)?;
+        for (combo, want) in &reference {
+            let got = lookup(&kv, combo, &path)?;
+            ensure!(
+                got == want.as_str(),
+                "cross-process bits diverged: rank {rank} {combo}: {got} != reference {want}"
+            );
+        }
+        ensure!(kv.len() == reference.len(), "rank {rank} combo count mismatch");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(reference.len())
+}
+
+/// The in-process single-address-space reference: every gate combo
+/// run over [`LocalTransport`] threads with the identical inputs.
+/// Cross-process results must match these digests bit for bit.
+fn local_reference_digests(opts: &LaunchOpts) -> Result<Vec<(String, String)>> {
+    let t: Arc<LocalTransport> = Arc::new(LocalTransport::new(opts.ranks));
+    let per_rank: Vec<Vec<u64>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opts.ranks)
+            .map(|rank| {
+                let t = t.clone();
+                s.spawn(move || -> Result<Vec<u64>> {
+                    let mut digests = Vec::new();
+                    for (ci, (algo, wire)) in combos().enumerate() {
+                        let mut buf = gate_input(rank, opts.elems);
+                        collectives::try_allreduce_wire(
+                            &*t,
+                            rank,
+                            &mut buf,
+                            algo,
+                            ci as u64 * TAG_BLOCK,
+                            wire,
+                            Some(RECV_TIMEOUT),
+                        )
+                        .map_err(|e| {
+                            anyhow::anyhow!("reference {}/{}: {e}", algo.name(), wire.name())
+                        })?;
+                        digests.push(digest_f32(&buf));
+                    }
+                    Ok(digests)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("reference rank thread panicked"))
+            .collect::<Result<_>>()
+    })?;
+    // an allreduce leaves every rank with the same bits, so one digest
+    // per combo suffices — but check that premise rather than assume it
+    for (rank, d) in per_rank.iter().enumerate() {
+        ensure!(
+            d == &per_rank[0],
+            "LocalTransport reference digests diverged at rank {rank}"
+        );
+    }
+    Ok(combos()
+        .zip(&per_rank[0])
+        .map(|((algo, wire), d)| {
+            (format!("{}/{}", algo.name(), wire.name()), format!("{d:016x}"))
+        })
+        .collect())
+}
+
+fn bench_phase(opts: &LaunchOpts, bench: &mut Bench) -> Result<()> {
+    let dir = rendezvous_dir("bench")?;
+    let exits = run_fleet(opts, "bench", &dir, common_env(opts))?;
+    for e in &exits {
+        ensure!(
+            e.status == ProcStatus::Finished,
+            "bench worker rank {} exited {:?}",
+            e.rank,
+            e.status
+        );
+    }
+    // fold: a cycle is as slow as its slowest rank
+    for elems in BENCH_SIZES {
+        let mut per_rank: Vec<Vec<u64>> = Vec::with_capacity(opts.ranks);
+        for rank in 0..opts.ranks {
+            let path = dir.join(format!("bench.r{rank}"));
+            let kv = read_kv(&path)?;
+            let row = lookup(&kv, &elems.to_string(), &path)?;
+            per_rank.push(
+                row.split(',')
+                    .map(|s| s.parse::<u64>().context("bench sample"))
+                    .collect::<Result<_>>()?,
+            );
+        }
+        let cycles = per_rank.iter().map(Vec::len).min().unwrap_or(0);
+        ensure!(cycles > 0, "no bench samples for {elems} elems");
+        let samples: Vec<f64> = (0..cycles)
+            .map(|c| per_rank.iter().map(|r| r[c]).max().unwrap_or(0) as f64)
+            .collect();
+        let kb = elems * 4 / 1024;
+        bench.push_samples(&format!("proc/pipelined/{kb}KB/p{}", opts.ranks), samples, 1);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(())
+}
+
+/// One survivor's parsed outcome file.
+struct Outcome {
+    rank: usize,
+    digest: String,
+    steps: u64,
+    rollbacks: u64,
+    epoch: u64,
+    members: Vec<usize>,
+}
+
+fn elastic_phase(opts: &LaunchOpts) -> Result<Vec<Outcome>> {
+    let dir = rendezvous_dir("elastic")?;
+    let ckpt = dir.join("elastic.ckpt");
+    // the parent writes the step-0 baseline before any worker exists,
+    // so workers need no boot fence
+    let cfg = ElasticConfig {
+        elems: opts.elems,
+        seed: opts.seed,
+        ckpt_path: ckpt.clone(),
+        ..ElasticConfig::quick(opts.ranks, opts.steps, ckpt.clone())
+    };
+    session::write_baseline_checkpoint(&cfg)?;
+
+    let mut extra = common_env(opts);
+    extra.push(("DENSEFOLD_CKPT".to_string(), ckpt.display().to_string()));
+    if let Some(victim) = opts.kill_rank {
+        extra.push(("DENSEFOLD_KILL_RANK".to_string(), victim.to_string()));
+        extra.push(("DENSEFOLD_KILL_CYCLE".to_string(), opts.kill_cycle.to_string()));
+    }
+    let exits = run_fleet(opts, "elastic", &dir, extra)?;
+
+    let mut outcomes = Vec::new();
+    for e in &exits {
+        match (Some(e.rank) == opts.kill_rank, e.status) {
+            (true, ProcStatus::Died { signal }) => {
+                ensure!(signal == 9, "victim rank {} died by signal {signal}, want SIGKILL", e.rank)
+            }
+            (true, other) => bail!("victim rank {} exited {:?}, want SIGKILL death", e.rank, other),
+            (false, ProcStatus::Finished) => {
+                let path = dir.join(format!("out.r{}", e.rank));
+                let kv = read_kv(&path)?;
+                outcomes.push(Outcome {
+                    rank: e.rank,
+                    digest: lookup(&kv, "digest", &path)?.to_string(),
+                    steps: lookup(&kv, "steps", &path)?.parse()?,
+                    rollbacks: lookup(&kv, "rollbacks", &path)?.parse()?,
+                    epoch: lookup(&kv, "epoch", &path)?.parse()?,
+                    members: lookup(&kv, "members", &path)?
+                        .split(';')
+                        .map(|m| m.parse::<usize>().context("member"))
+                        .collect::<Result<_>>()?,
+                });
+            }
+            (false, other) => bail!("survivor rank {} exited {:?}", e.rank, other),
+        }
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+    Ok(outcomes)
+}
+
+/// Replay the elastic run from the closed-form gradients: full
+/// membership up to the rollback point, survivors from there on.
+/// This is what the survivors' final bits *must* equal.
+fn oracle_digest(opts: &LaunchOpts) -> String {
+    let survivors: Vec<usize> = (0..opts.ranks)
+        .filter(|r| Some(*r) != opts.kill_rank)
+        .collect();
+    // committed steps 0..kill_cycle ran at full membership but are
+    // rolled back to the last checkpoint at or before the kill step
+    let cut = match opts.kill_rank {
+        Some(_) if opts.ckpt_every > 0 => {
+            (opts.kill_cycle / opts.ckpt_every * opts.ckpt_every).min(opts.steps)
+        }
+        Some(_) => 0,
+        None => opts.steps,
+    };
+    let mut params = session::init_params(opts.elems, opts.seed);
+    let full: Vec<usize> = (0..opts.ranks).collect();
+    for step in 0..opts.steps as u64 {
+        let members = if (step as usize) < cut { &full } else { &survivors };
+        let scale = LR / members.len() as f32;
+        let mut sum = vec![0.0f32; opts.elems];
+        for &r in members {
+            for (s, g) in sum.iter_mut().zip(session::grad_vec(r, step, opts.elems, opts.seed)) {
+                *s += g;
+            }
+        }
+        for (p, g) in params.iter_mut().zip(&sum) {
+            *p -= scale * g;
+        }
+    }
+    format!("{:016x}", digest_f32(&params))
+}
+
+/// Run all three phases and hard-assert the contract; returns the
+/// bench record (group `socket`, destined for `BENCH_socket.json`)
+/// and the summary table.
+pub fn launch_drill(opts: &LaunchOpts) -> Result<(Bench, Table)> {
+    ensure!(opts.ranks >= 2, "need at least 2 worker processes");
+    if let Some(victim) = opts.kill_rank {
+        ensure!(victim < opts.ranks, "--kill-rank {victim} out of range");
+        ensure!(opts.kill_cycle < opts.steps, "--kill-cycle must fall inside the run");
+    }
+    println!(
+        "launch: p={} mode={} elems={} steps={} kill={:?}@{}",
+        opts.ranks,
+        opts.mode.name(),
+        opts.elems,
+        opts.steps,
+        opts.kill_rank,
+        opts.kill_cycle
+    );
+
+    let combos = gate_phase(opts)?;
+    println!(
+        "launch/gate: {combos} algo x wire combinations bit-identical to the \
+         LocalTransport reference across {} processes",
+        opts.ranks
+    );
+
+    let mut bench = Bench::new("socket");
+    bench_phase(opts, &mut bench)?;
+    println!("launch/bench: pipelined-ring sweep done ({:?} elems)", BENCH_SIZES);
+
+    let outcomes = elastic_phase(opts)?;
+    let want = oracle_digest(opts);
+    let survivors: Vec<usize> = (0..opts.ranks)
+        .filter(|r| Some(*r) != opts.kill_rank)
+        .collect();
+    ensure!(
+        outcomes.iter().map(|o| o.rank).collect::<Vec<_>>() == survivors,
+        "wrong survivor set"
+    );
+    for o in &outcomes {
+        ensure!(o.steps == opts.steps as u64, "rank {} stopped at step {}", o.rank, o.steps);
+        ensure!(o.members == survivors, "rank {} final membership {:?}", o.rank, o.members);
+        ensure!(
+            o.digest == want,
+            "rank {} final params {} diverged from the closed-form oracle {}",
+            o.rank,
+            o.digest,
+            want
+        );
+        if opts.kill_rank.is_some() {
+            ensure!(o.rollbacks >= 1, "rank {} never rolled back", o.rank);
+            ensure!(o.epoch >= 1, "rank {} never shrank", o.rank);
+        }
+    }
+    println!(
+        "launch/elastic: survivors {:?} shrank (epoch {}), rolled back \
+         ({} rollbacks), and finished bit-identical to the oracle",
+        survivors,
+        outcomes.first().map_or(0, |o| o.epoch),
+        outcomes.first().map_or(0, |o| o.rollbacks),
+    );
+
+    let mut table = Table::new(vec!["metric", "value"]);
+    table.push(vec!["worker processes".into(), opts.ranks.to_string()]);
+    table.push(vec!["socket mode".into(), opts.mode.name().into()]);
+    table.push(vec!["gate combos bit-identical".into(), combos.to_string()]);
+    table.push(vec![
+        "killed".into(),
+        match opts.kill_rank {
+            Some(r) => format!("rank {r} at step {} (SIGKILL)", opts.kill_cycle),
+            None => "none".into(),
+        },
+    ]);
+    table.push(vec!["final group".into(), format!("{survivors:?}")]);
+    table.push(vec![
+        "final epoch".into(),
+        outcomes.first().map_or(0, |o| o.epoch).to_string(),
+    ]);
+    table.push(vec![
+        "rollbacks".into(),
+        outcomes.first().map_or(0, |o| o.rollbacks).to_string(),
+    ]);
+    table.push(vec!["survivors match oracle".into(), "yes".into()]);
+    Ok((bench, table))
+}

@@ -17,10 +17,12 @@
 //! | §4 validation | [`validate::live_vs_model`] | **live** (p ≤ 4) |
 //! | threaded | [`threaded::threaded_bench`] | **live** (OS-thread ranks) |
 //! | chaos | [`chaos::chaos_recovery`] | **live** (fault injection + elastic recovery) |
+//! | launch | [`launch::launch_drill`] | **live** (worker processes over sockets) |
 
 pub mod ablation;
 pub mod accumulate;
 pub mod chaos;
+pub mod launch;
 pub mod quality;
 pub mod strong;
 pub mod threaded;

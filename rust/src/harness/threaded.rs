@@ -22,6 +22,7 @@ use crate::collectives::AllreduceAlgo;
 use crate::coordinator::ExchangeConfig;
 use crate::coordinator::policy::DensifyPolicy;
 use crate::runtime::executor::{self, ComputeModel, ExecutorConfig, LayerSpec, ThreadedRun};
+use crate::transport::TransportKind;
 use crate::util::bench::Bench;
 use crate::util::csv::Table;
 
@@ -40,11 +41,22 @@ pub struct ThreadedOpts {
     /// Backward compute per layer, microseconds of calibrated spin
     /// (`--compute-us`).
     pub compute_us: u64,
+    /// Transport the rank threads exchange over (`--transport`) —
+    /// `socket` runs the same workload over in-process socket
+    /// endpoints ([`SocketHub`](crate::transport::SocketHub)).
+    pub transport: TransportKind,
 }
 
 impl Default for ThreadedOpts {
     fn default() -> Self {
-        Self { ranks: 4, cycles: 8, layers: 4, layer_kb: 1024, compute_us: 400 }
+        Self {
+            ranks: 4,
+            cycles: 8,
+            layers: 4,
+            layer_kb: 1024,
+            compute_us: 400,
+            transport: TransportKind::Shm,
+        }
     }
 }
 
@@ -91,6 +103,9 @@ fn wall_samples_ns(run: &ThreadedRun) -> Vec<f64> {
 pub fn threaded_bench(opts: &ThreadedOpts) -> (Bench, Table) {
     let mut bench = Bench::new("threaded");
     let p = opts.ranks;
+    // fresh transport per measurement (matching run_threaded's
+    // fresh-ShmTransport-per-run behaviour)
+    let fresh = || opts.transport.create(p).expect("create transport");
 
     // 1. bit-identity gate (p capped at 4 to keep the sweep fast);
     // always-dense policy so the sweep crosses policy -> densify ->
@@ -105,8 +120,8 @@ pub fn threaded_bench(opts: &ThreadedOpts) -> (Bench, Table) {
     );
 
     // 2. overlap on/off on the multi-layer workload
-    let no_overlap = executor::run_threaded(&executor_config(opts, false));
-    let overlap = executor::run_threaded(&executor_config(opts, true));
+    let no_overlap = executor::run_on(fresh(), &executor_config(opts, false));
+    let overlap = executor::run_on(fresh(), &executor_config(opts, true));
     overlap.assert_ranks_agree();
     assert_eq!(
         overlap.grad_bits(),
@@ -135,7 +150,7 @@ pub fn threaded_bench(opts: &ThreadedOpts) -> (Bench, Table) {
                 max_jitter_us: 0,
                 jitter_seed: 17,
             };
-            let run = executor::run_threaded(&cfg);
+            let run = executor::run_on(fresh(), &cfg);
             bench.push_samples(&format!("live/{label}/{kb}KB/p{p}"), wall_samples_ns(&run), 1);
         }
     }
@@ -166,6 +181,7 @@ mod tests {
             layers: 1,
             layer_kb: 8,
             compute_us: 0,
+            ..ThreadedOpts::default()
         };
         let (bench, table) = threaded_bench(&opts);
         assert!(bench.results.iter().any(|r| r.name == "overlap/on/p2"));

@@ -17,15 +17,22 @@ use std::path::PathBuf;
 use densefold::collectives::AllreduceAlgo;
 use densefold::coordinator::policy::DensifyPolicy;
 use densefold::coordinator::ExchangeConfig;
-use densefold::transport::WireFormat;
+use densefold::transport::{SocketMode, TransportKind, WireFormat};
 use densefold::data::CorpusConfig;
 use densefold::harness;
+use densefold::runtime::launcher;
 use densefold::runtime::Manifest;
 use densefold::tensor::AccumStrategy;
 use densefold::train::{run_session, SessionConfig};
 use densefold::util::{human_bytes, human_time};
 
 fn main() {
+    // A process exec'd by the multi-process launcher is a worker, not
+    // a CLI: run the worker body for its role and exit with the
+    // launcher's code contract. Must run before any argument parsing.
+    if let Some(env) = launcher::worker_env() {
+        std::process::exit(harness::launch::worker_main(&env));
+    }
     let args: Vec<String> = std::env::args().skip(1).collect();
     if args.is_empty() {
         usage();
@@ -79,7 +86,7 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch
                          (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
@@ -91,6 +98,7 @@ commands:
           --layers N     dense layers in the workload    (default 4)
           --layer-kb N   per-layer gradient size in KB   (default 1024)
           --compute-us N backward spin per layer, µs     (default 400)
+          --transport shm|socket|local  rank transport   (default shm)
           chaos mode (fault injection + elastic recovery drill; kills
           a rank mid-run and asserts survivors shrink, roll back to
           the checkpoint, and finish bit-identical):
@@ -104,6 +112,21 @@ commands:
           --delay-us N   per-link delivery delay, µs     (default 0)
           --elems N      gradient vector length          (default 4096)
           --seed N       param/gradient/fault seed       (default 42)
+          --transport shm|socket|local  rank transport   (default shm)
+          launch mode (multi-process drill: forks worker processes
+          over real sockets, proves cross-process bit-identity vs the
+          single-process reference, benches the socket data plane into
+          BENCH_socket.json, then SIGKILLs a worker and asserts the
+          survivors shrink + roll back + finish bit-identical):
+          --ranks N      worker processes                (default 4)
+          --mode unix|tcp  socket flavour                (default unix)
+          --steps N      elastic training steps          (default 8)
+          --elems N      gradient vector length          (default 2048)
+          --kill-rank R  worker to SIGKILL, or 'none'    (default 2)
+          --kill-cycle N step at which it dies           (default 3)
+          --ckpt-every N checkpoint cadence              (default 2)
+          --cycles N     timed bench cycles per size     (default 6)
+          --seed N       param/gradient seed             (default 42)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -144,6 +167,11 @@ fn load_manifest(flags: &HashMap<String, String>) -> anyhow::Result<Manifest> {
 
 fn parse_strategy(s: &str) -> anyhow::Result<AccumStrategy> {
     AccumStrategy::parse(s).ok_or_else(|| anyhow::anyhow!("bad --strategy '{s}'"))
+}
+
+fn parse_transport(s: &str) -> anyhow::Result<TransportKind> {
+    TransportKind::parse(s)
+        .ok_or_else(|| anyhow::anyhow!("bad --transport '{s}' (local|shm|socket)"))
 }
 
 fn cmd_train(flags: &HashMap<String, String>) -> anyhow::Result<()> {
@@ -355,6 +383,7 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             delay_us: flag(flags, "delay-us", "0").parse()?,
             elems: flag(flags, "elems", "4096").parse()?,
             seed: flag(flags, "seed", "42").parse()?,
+            transport: parse_transport(flag(flags, "transport", "shm"))?,
         };
         let t = harness::chaos::chaos_recovery(&opts)?;
         harness::emit(&t, &out_dir, "chaos_recovery")?;
@@ -367,12 +396,41 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
             layers: flag(flags, "layers", "4").parse()?,
             layer_kb: flag(flags, "layer-kb", "1024").parse()?,
             compute_us: flag(flags, "compute-us", "400").parse()?,
+            transport: parse_transport(flag(flags, "transport", "shm"))?,
         };
         let (bench, t) = harness::threaded::threaded_bench(&opts);
         bench.emit_json()?;
         bench.write_csv(&out_dir.join("bench_threaded.csv"))?;
         println!("(bench json: BENCH_threaded.json)");
         harness::emit(&t, &out_dir, "threaded_overlap")?;
+        ran += 1;
+    }
+    if want("launch") {
+        let kill = flag(flags, "kill-rank", "2");
+        // `--transport socket` (the CI spelling) selects the default
+        // Unix-domain mode; `--mode tcp` switches to loopback TCP
+        let transport = flag(flags, "transport", "socket");
+        anyhow::ensure!(
+            transport == "socket",
+            "repro launch always runs over sockets (got --transport {transport})"
+        );
+        let opts = harness::launch::LaunchOpts {
+            ranks: flag(flags, "ranks", "4").parse()?,
+            mode: SocketMode::parse(flag(flags, "mode", "unix"))
+                .ok_or_else(|| anyhow::anyhow!("bad --mode (unix|tcp)"))?,
+            elems: flag(flags, "elems", "2048").parse()?,
+            steps: flag(flags, "steps", "8").parse()?,
+            kill_rank: if kill == "none" { None } else { Some(kill.parse()?) },
+            kill_cycle: flag(flags, "kill-cycle", "3").parse()?,
+            ckpt_every: flag(flags, "ckpt-every", "2").parse()?,
+            bench_cycles: flag(flags, "cycles", "6").parse()?,
+            seed: flag(flags, "seed", "42").parse()?,
+        };
+        let (bench, t) = harness::launch::launch_drill(&opts)?;
+        bench.emit_json()?;
+        bench.write_csv(&out_dir.join("bench_socket.csv"))?;
+        println!("(bench json: BENCH_socket.json)");
+        harness::emit(&t, &out_dir, "launch_drill")?;
         ran += 1;
     }
     anyhow::ensure!(ran > 0, "nothing to run: pass --all or --fig figN");

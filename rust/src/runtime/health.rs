@@ -371,6 +371,77 @@ impl Health {
     }
 }
 
+/// The coordination surface the elastic training loop drives —
+/// everything a worker needs to agree with its peers on retry
+/// attempts, step outcomes, checkpoint fences, and regrouping.
+///
+/// Two implementations exist:
+///
+/// * [`Health`] — in-process shared-memory rounds (threaded ranks),
+///   with the [`Monitor`] heartbeat thread as the failure detector;
+/// * [`WireCoord`](crate::runtime::wire_coord::WireCoord) —
+///   message-based leader rounds over a [`Transport`], for worker
+///   *processes* where no shared address space exists and peer death
+///   is detected by connection EOF instead of missed heartbeats.
+///
+/// `train::session::elastic_worker` is written against this trait, so
+/// the exact same step/retry/shrink/rollback loop runs threaded and
+/// multi-process.
+pub trait ElasticCoord: Send + Sync {
+    /// Record a liveness heartbeat for `rank` (no-op where the
+    /// failure detector is not heartbeat-based).
+    fn beat(&self, rank: usize);
+    /// Cycle-start barrier: propose `attempt`, adopt the group max.
+    fn sync_start(
+        &self,
+        rank: usize,
+        group: &Group,
+        seq: u64,
+        attempt: u64,
+    ) -> Result<u64, Evicted>;
+    /// Post-collective vote on the step outcome (see [`Verdict`]).
+    fn commit(&self, rank: usize, group: &Group, seq: u64, ok: bool) -> Result<Verdict, Evicted>;
+    /// Plain fence (checkpoint durability barrier).
+    fn sync_point(&self, rank: usize, group: &Group, seq: u64) -> Result<(), Evicted>;
+    /// Re-form the group from the live members at epoch + 1.
+    fn regroup(&self, rank: usize, group: &Group) -> Result<Group, Evicted>;
+    /// Whether any member of `group` is known dead (the step is
+    /// doomed; skip its collective and go straight to the vote).
+    fn group_impaired(&self, group: &Group) -> bool;
+    /// Declare `rank` dead to the coordination layer.
+    fn declare_dead(&self, rank: usize);
+}
+
+impl ElasticCoord for Health {
+    fn beat(&self, rank: usize) {
+        Health::beat(self, rank);
+    }
+    fn sync_start(
+        &self,
+        rank: usize,
+        group: &Group,
+        seq: u64,
+        attempt: u64,
+    ) -> Result<u64, Evicted> {
+        Health::sync_start(self, rank, group, seq, attempt)
+    }
+    fn commit(&self, rank: usize, group: &Group, seq: u64, ok: bool) -> Result<Verdict, Evicted> {
+        Health::commit(self, rank, group, seq, ok)
+    }
+    fn sync_point(&self, rank: usize, group: &Group, seq: u64) -> Result<(), Evicted> {
+        Health::sync_point(self, rank, group, seq)
+    }
+    fn regroup(&self, rank: usize, group: &Group) -> Result<Group, Evicted> {
+        Health::regroup(self, rank, group)
+    }
+    fn group_impaired(&self, group: &Group) -> bool {
+        Health::group_impaired(self, group)
+    }
+    fn declare_dead(&self, rank: usize) {
+        Health::declare_dead(self, rank)
+    }
+}
+
 /// Death log entry: which rank, and how long it had been silent when
 /// declared.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

@@ -1,0 +1,290 @@
+//! Multi-process launcher: fork N worker processes by re-exec'ing the
+//! current binary, hand each a rank over the environment, and reap
+//! them with exit codes mapped back onto [`RankExit`].
+//!
+//! The launcher side calls [`spawn_workers`]; a freshly exec'd process
+//! calls [`worker_env`] *first thing in `main`* — `Some(env)` means
+//! "you are a worker, run the worker body and `exit` with a
+//! [`RankExit`]-mapped code", `None` means "you are the user-facing
+//! CLI".  Rendezvous happens through a shared directory (see
+//! [`SocketTransport::connect`](crate::transport::SocketTransport)):
+//! each worker binds its socket there and dials every peer, so the
+//! launcher never proxies data.
+//!
+//! Exit-code contract (the process analogue of [`RankExit`]):
+//!
+//! | code             | meaning                                  |
+//! |------------------|------------------------------------------|
+//! | 0                | [`RankExit::Finished`]                   |
+//! | [`EXIT_EVICTED`] | [`RankExit::Evicted`]                    |
+//! | [`EXIT_FAILED`]  | [`RankExit::Failed`]                     |
+//! | killed by signal | [`RankExit::Died`] (e.g. SIGKILL chaos)  |
+//!
+//! Config crosses the process boundary as environment variables:
+//! [`WorkerEnv`] carries the identity set (`DENSEFOLD_ROLE`, rank,
+//! world size, rendezvous dir, socket mode) and
+//! [`ExchangeConfig::to_env`](crate::coordinator::ExchangeConfig)
+//! carries the exchange knobs; role-specific extras ride along as
+//! plain `(key, value)` pairs.
+#![warn(missing_docs)]
+
+use std::path::PathBuf;
+use std::process::{Child, Command};
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::executor::RankExit;
+use crate::transport::SocketMode;
+
+/// Worker exit code for [`RankExit::Evicted`].
+pub const EXIT_EVICTED: i32 = 3;
+/// Worker exit code for [`RankExit::Failed`].
+pub const EXIT_FAILED: i32 = 4;
+
+const ENV_ROLE: &str = "DENSEFOLD_ROLE";
+const ENV_RANK: &str = "DENSEFOLD_RANK";
+const ENV_NRANKS: &str = "DENSEFOLD_NRANKS";
+const ENV_RDV: &str = "DENSEFOLD_RDV";
+const ENV_SOCKMODE: &str = "DENSEFOLD_SOCKMODE";
+
+/// Identity a spawned worker process reads back from its environment.
+#[derive(Debug, Clone)]
+pub struct WorkerEnv {
+    /// Which worker body to run (launcher-defined, e.g. `"gate"`,
+    /// `"bench"`, `"elastic"`).
+    pub role: String,
+    /// This worker's physical rank.
+    pub rank: usize,
+    /// World size.
+    pub nranks: usize,
+    /// Rendezvous directory shared by all workers of the job.
+    pub dir: PathBuf,
+    /// Socket flavour to rendezvous over.
+    pub mode: SocketMode,
+}
+
+/// Detect whether this process was exec'd as a worker.  Returns
+/// `Some` iff the launcher's identity variables are all present and
+/// well-formed; the caller should then run the worker body for
+/// `role` and exit with the contract code.
+pub fn worker_env() -> Option<WorkerEnv> {
+    let role = std::env::var(ENV_ROLE).ok()?;
+    let rank = std::env::var(ENV_RANK).ok()?.parse().ok()?;
+    let nranks = std::env::var(ENV_NRANKS).ok()?.parse().ok()?;
+    let dir = PathBuf::from(std::env::var(ENV_RDV).ok()?);
+    let mode = SocketMode::parse(&std::env::var(ENV_SOCKMODE).ok()?)?;
+    Some(WorkerEnv { role, rank, nranks, dir, mode })
+}
+
+/// Read a role-specific `u64` extra from the environment, with a
+/// default for workers spawned without it.
+pub fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|s| s.parse().ok()).unwrap_or(default)
+}
+
+/// Read a role-specific string extra from the environment.
+pub fn env_str(key: &str, default: &str) -> String {
+    std::env::var(key).unwrap_or_else(|_| default.to_string())
+}
+
+/// One spawned worker: rank plus its OS child handle.
+pub struct Worker {
+    /// The worker's physical rank.
+    pub rank: usize,
+    child: Child,
+    killed: bool,
+}
+
+impl Worker {
+    /// SIGKILL the worker (idempotent).  This is the chaos hammer: the
+    /// kernel closes the worker's sockets, every peer sees EOF, and
+    /// the survivors' shrink-and-rollback path takes over.
+    pub fn kill(&mut self) -> Result<()> {
+        if !self.killed {
+            self.child.kill().with_context(|| format!("kill worker rank {}", self.rank))?;
+            self.killed = true;
+        }
+        Ok(())
+    }
+
+    /// Non-blocking exit poll: `Some` once the worker has exited.
+    pub fn try_wait(&mut self) -> Result<Option<ProcExit>> {
+        match self.child.try_wait().context("try_wait on worker")? {
+            Some(status) => Ok(Some(ProcExit::from_status(self.rank, status))),
+            None => Ok(None),
+        }
+    }
+
+    /// Block until the worker exits.
+    pub fn wait(&mut self) -> Result<ProcExit> {
+        let status = self.child.wait().context("wait on worker")?;
+        Ok(ProcExit::from_status(self.rank, status))
+    }
+}
+
+/// How a worker process ended — the cross-process [`RankExit`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ProcStatus {
+    /// Exited 0: ran to completion.
+    Finished,
+    /// Killed by this signal (SIGKILL = 9 under chaos).
+    Died {
+        /// Signal number that terminated the process.
+        signal: i32,
+    },
+    /// Exited [`EXIT_EVICTED`]: falsely declared dead, exited cleanly.
+    Evicted,
+    /// Exited [`EXIT_FAILED`] or any other nonzero code.
+    Failed {
+        /// The raw exit code.
+        code: i32,
+    },
+}
+
+/// A reaped worker: rank plus how it ended.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ProcExit {
+    /// The worker's physical rank.
+    pub rank: usize,
+    /// How the process ended.
+    pub status: ProcStatus,
+}
+
+impl ProcExit {
+    fn from_status(rank: usize, status: std::process::ExitStatus) -> Self {
+        use std::os::unix::process::ExitStatusExt;
+        let st = if let Some(sig) = status.signal() {
+            ProcStatus::Died { signal: sig }
+        } else {
+            match status.code().unwrap_or(EXIT_FAILED) {
+                0 => ProcStatus::Finished,
+                EXIT_EVICTED => ProcStatus::Evicted,
+                code => ProcStatus::Failed { code },
+            }
+        };
+        Self { rank, status: st }
+    }
+
+    /// Map onto the in-process [`RankExit`] vocabulary (the payload of
+    /// `Finished` lives in worker-written outcome files, not here).
+    pub fn to_rank_exit(self) -> RankExit<()> {
+        match self.status {
+            ProcStatus::Finished => RankExit::Finished(()),
+            ProcStatus::Died { .. } => RankExit::Died { cycle: 0 },
+            ProcStatus::Evicted => RankExit::Evicted,
+            ProcStatus::Failed { code } => RankExit::Failed(format!("exit code {code}")),
+        }
+    }
+}
+
+/// Map a worker-body [`RankExit`] to the process exit code a worker
+/// should terminate with (the inverse of [`ProcExit::from_status`];
+/// `Died` is unreachable here — real deaths never reach `exit`).
+pub fn exit_code<T>(exit: &RankExit<T>) -> i32 {
+    match exit {
+        RankExit::Finished(_) => 0,
+        RankExit::Evicted => EXIT_EVICTED,
+        RankExit::Failed(_) => EXIT_FAILED,
+        RankExit::Died { .. } => EXIT_FAILED,
+    }
+}
+
+/// Spawn `nranks` workers by re-exec'ing the current executable with
+/// the identity variables set.  `extra` is appended to every child's
+/// environment (role knobs, `ExchangeConfig::to_env()` pairs).  The
+/// rendezvous directory must already exist.
+pub fn spawn_workers(
+    role: &str,
+    nranks: usize,
+    dir: &std::path::Path,
+    mode: SocketMode,
+    extra: &[(String, String)],
+) -> Result<Vec<Worker>> {
+    let exe = std::env::current_exe().context("resolve current executable for re-exec")?;
+    let mut workers = Vec::with_capacity(nranks);
+    for rank in 0..nranks {
+        let mut cmd = Command::new(&exe);
+        cmd.env(ENV_ROLE, role)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_NRANKS, nranks.to_string())
+            .env(ENV_RDV, dir)
+            .env(ENV_SOCKMODE, mode.name());
+        for (k, v) in extra {
+            cmd.env(k, v);
+        }
+        let child = cmd.spawn().with_context(|| format!("spawn worker rank {rank}"))?;
+        workers.push(Worker { rank, child, killed: false });
+    }
+    Ok(workers)
+}
+
+/// Reap every worker, polling `on_poll` (kill schedules, marker-file
+/// watches) between sweeps.  Returns exits in rank order.  Bails if
+/// `deadline` passes with workers still running — a wedged job must
+/// not hang the harness; survivors are killed on the way out.
+pub fn reap_all(
+    workers: &mut [Worker],
+    deadline: Duration,
+    mut on_poll: impl FnMut(&mut [Worker]) -> Result<()>,
+) -> Result<Vec<ProcExit>> {
+    let start = std::time::Instant::now();
+    let mut exits: Vec<Option<ProcExit>> = workers.iter().map(|_| None).collect();
+    loop {
+        on_poll(workers)?;
+        for (i, w) in workers.iter_mut().enumerate() {
+            if exits[i].is_none() {
+                exits[i] = w.try_wait()?;
+            }
+        }
+        if exits.iter().all(|e| e.is_some()) {
+            return Ok(exits.into_iter().map(|e| e.unwrap()).collect());
+        }
+        if start.elapsed() > deadline {
+            for w in workers.iter_mut() {
+                let _ = w.kill();
+            }
+            bail!("launcher deadline ({deadline:?}) passed with workers still running");
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exit_codes_round_trip_through_proc_status() {
+        use std::os::unix::process::ExitStatusExt;
+        let cases = [
+            (0, ProcStatus::Finished),
+            (EXIT_EVICTED, ProcStatus::Evicted),
+            (EXIT_FAILED, ProcStatus::Failed { code: EXIT_FAILED }),
+            (7, ProcStatus::Failed { code: 7 }),
+        ];
+        for (code, want) in cases {
+            let st = std::process::ExitStatus::from_raw(code << 8);
+            assert_eq!(ProcExit::from_status(2, st).status, want, "code {code}");
+        }
+        // signal-terminated (SIGKILL = 9): wait(2) status low byte
+        let st = std::process::ExitStatus::from_raw(9);
+        assert_eq!(
+            ProcExit::from_status(1, st).status,
+            ProcStatus::Died { signal: 9 }
+        );
+    }
+
+    #[test]
+    fn exit_code_maps_rank_exit() {
+        assert_eq!(exit_code(&RankExit::Finished(())), 0);
+        assert_eq!(exit_code(&RankExit::<()>::Evicted), EXIT_EVICTED);
+        assert_eq!(exit_code(&RankExit::<()>::Failed("x".into())), EXIT_FAILED);
+    }
+
+    #[test]
+    fn worker_env_absent_outside_a_launch() {
+        // the test binary was not exec'd by a launcher
+        assert!(worker_env().is_none());
+    }
+}

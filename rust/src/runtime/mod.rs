@@ -17,13 +17,23 @@
 //! heartbeats, a monitor thread that declares silent ranks dead, and
 //! the keyed barrier rounds through which survivors agree to retry a
 //! step, commit it, or shrink the group and recover.
+//!
+//! [`wire_coord`] re-expresses those barrier rounds as leader-mediated
+//! control messages over a [`Transport`](crate::transport::Transport),
+//! and [`launcher`] forks/reaps the worker *processes* that use them —
+//! together they move the elastic runtime out of a single address
+//! space (socket transport, EOF-based failure detection).
 
 pub mod engine;
 pub mod executor;
 pub mod health;
+pub mod launcher;
 pub mod manifest;
+pub mod wire_coord;
 
 pub use engine::{Engine, EngineHandle, HostTensor};
 pub use executor::{ExecutorConfig, RankExit, ThreadedRun};
-pub use health::{Group, Health, HealthOpts, Monitor, Verdict};
+pub use health::{ElasticCoord, Group, Health, HealthOpts, Monitor, Verdict};
+pub use launcher::{ProcExit, ProcStatus, WorkerEnv};
 pub use manifest::{Manifest, ParamSpec, Preset};
+pub use wire_coord::WireCoord;

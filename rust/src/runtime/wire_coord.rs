@@ -1,0 +1,375 @@
+//! Message-based elastic coordination: [`Health`]'s barrier rounds
+//! re-expressed as leader-mediated control messages over a
+//! [`Transport`], for worker *processes* with no shared address space.
+//!
+//! [`WireCoord`] implements [`ElasticCoord`] so
+//! `train::session::elastic_worker` runs unchanged on top of it.  The
+//! protocol per round `(kind, epoch, seq)`:
+//!
+//! 1. every non-leader member sends its proposal (`U64` payload,
+//!    checksummed) to the group leader on the round's control tag;
+//! 2. the leader gathers proposals with a bounded-time receive,
+//!    computes the round outcome exactly once, and broadcasts it back;
+//! 3. members adopt the broadcast outcome.
+//!
+//! **Failure detection is EOF, not heartbeats.**  A process that dies
+//! (including by SIGKILL) has its sockets closed by the kernel; every
+//! peer's reader thread sees EOF and poisons the rank
+//! ([`Transport::mark_dead`] semantics), so a leader gathering from a
+//! dead member fails over with
+//! [`TransportError::RankDead`](crate::transport::TransportError) and
+//! the round completes over the survivors.  There is therefore no
+//! [`Monitor`](super::health::Monitor) in multi-process mode and
+//! [`ElasticCoord::beat`] is a no-op.
+//!
+//! **Leader death** is handled best-effort: members that observe the
+//! leader dead mid-round adopt the conservative outcome
+//! ([`Verdict::Shrink`] for commit votes, their own proposal for
+//! sync-start) and re-elect the lowest live rank at the next regroup.
+//! A leader dying *mid-broadcast* can strand a member on a stale
+//! epoch; such a member terminates via the round timeout ([`Evicted`])
+//! rather than corrupting the survivors' agreement.
+//!
+//! ## Control-tag layout
+//!
+//! Control traffic must never collide with data-plane tags.  Data tags
+//! are era-shifted by `SubTransport` (`era * 2^44`, eras staying far
+//! below 2^18), so bit 63 is free: control tags set
+//! [`CONTROL_BIT`] and pack `kind` (bits 58..61), `epoch` (bits
+//! 40..58) and `seq` (bits 0..40) beneath it.
+#![warn(missing_docs)]
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::runtime::health::{ElasticCoord, Evicted, Group, Verdict};
+use crate::transport::{Payload, Transport, TransportError};
+
+/// Bit 63: set on every control-plane tag, clear on every data tag.
+pub const CONTROL_BIT: u64 = 1 << 63;
+
+const KIND_START: u64 = 0;
+const KIND_COMMIT: u64 = 1;
+const KIND_SYNC: u64 = 2;
+const KIND_JOIN: u64 = 3;
+const KIND_MEMBERS: u64 = 4;
+
+/// Pack a round key into a control tag (see module docs for layout).
+fn ctl_tag(kind: u64, epoch: u64, seq: u64) -> u64 {
+    assert!(kind < 8, "control kind {kind} out of range");
+    assert!(epoch < 1 << 18, "epoch {epoch} overflows the control-tag layout");
+    assert!(seq < 1 << 40, "seq {seq} overflows the control-tag layout");
+    CONTROL_BIT | kind << 58 | epoch << 40 | seq
+}
+
+/// Leader-mediated [`ElasticCoord`] over any [`Transport`] (built for
+/// [`SocketTransport`](crate::transport::SocketTransport) endpoints,
+/// but transport-agnostic — the unit tests run it over
+/// [`LocalTransport`](crate::transport::LocalTransport) threads).
+pub struct WireCoord {
+    transport: Arc<dyn Transport>,
+    my_rank: usize,
+    round_timeout: Duration,
+}
+
+impl WireCoord {
+    /// A coordinator for `my_rank` over `transport`.  `round_timeout`
+    /// bounds every gather/broadcast receive; it must comfortably
+    /// exceed one step's compute + collective time (a generous few
+    /// seconds — rounds normally complete in microseconds, the
+    /// timeout only fires when a peer is wedged but its connection
+    /// still open).
+    pub fn new(transport: Arc<dyn Transport>, my_rank: usize, round_timeout: Duration) -> Self {
+        Self { transport, my_rank, round_timeout }
+    }
+
+    fn send_vals(&self, to: usize, tag: u64, vals: Vec<u64>) {
+        let p = Payload::U64(vals);
+        let sum = p.checksum();
+        self.transport.send_raw(self.my_rank, to, tag, p, Some(sum));
+    }
+
+    fn recv_vals(&self, from: usize, tag: u64) -> Result<Vec<u64>, TransportError> {
+        self.transport
+            .try_recv(self.my_rank, from, tag, Some(self.round_timeout))
+            .and_then(Payload::try_into_u64)
+    }
+
+    /// Non-leader members of `group`, in order.
+    fn followers<'g>(&self, group: &'g Group) -> impl Iterator<Item = usize> + 'g {
+        let leader = group.leader();
+        group.members.iter().copied().filter(move |&m| m != leader)
+    }
+}
+
+impl ElasticCoord for WireCoord {
+    /// No-op: process death is detected by connection EOF, not
+    /// missed heartbeats.
+    fn beat(&self, _rank: usize) {}
+
+    fn sync_start(
+        &self,
+        rank: usize,
+        group: &Group,
+        seq: u64,
+        attempt: u64,
+    ) -> Result<u64, Evicted> {
+        debug_assert_eq!(rank, self.my_rank);
+        let tag = ctl_tag(KIND_START, group.epoch, seq);
+        let leader = group.leader();
+        if rank == leader {
+            let mut max = attempt;
+            for m in self.followers(group) {
+                // A dead or wedged member is simply excluded from the
+                // max; its death surfaces as Shrink at the commit vote.
+                if let Ok(v) = self.recv_vals(m, tag) {
+                    max = max.max(v.first().copied().unwrap_or(0));
+                }
+            }
+            for m in self.followers(group) {
+                self.send_vals(m, tag, vec![max]);
+            }
+            Ok(max)
+        } else {
+            self.send_vals(leader, tag, vec![attempt]);
+            match self.recv_vals(leader, tag) {
+                Ok(v) => Ok(v.first().copied().unwrap_or(attempt)),
+                // Leader died: proceed on our own attempt — the step's
+                // collective fails / group_impaired trips, and the
+                // commit round (leader dead there too) yields Shrink.
+                Err(TransportError::RankDead { .. }) => Ok(attempt),
+                Err(_) => Err(Evicted { rank }),
+            }
+        }
+    }
+
+    fn commit(&self, rank: usize, group: &Group, seq: u64, ok: bool) -> Result<Verdict, Evicted> {
+        debug_assert_eq!(rank, self.my_rank);
+        let tag = ctl_tag(KIND_COMMIT, group.epoch, seq);
+        let leader = group.leader();
+        if rank == leader {
+            let mut any_dead = group.members.iter().any(|&m| self.transport.is_dead(m));
+            let mut any_fail = !ok;
+            for m in self.followers(group) {
+                match self.recv_vals(m, tag) {
+                    Ok(v) => any_fail |= v.first().copied().unwrap_or(0) == 0,
+                    Err(TransportError::RankDead { .. }) => any_dead = true,
+                    // Silent-but-connected member: treat as a failed
+                    // vote (Retry).  If it is actually dying, EOF
+                    // arrives by the retry's rounds and we Shrink.
+                    Err(_) => any_fail = true,
+                }
+            }
+            let code = if any_dead {
+                2
+            } else if any_fail {
+                1
+            } else {
+                0
+            };
+            for m in self.followers(group) {
+                self.send_vals(m, tag, vec![code]);
+            }
+            Ok(match code {
+                0 => Verdict::Commit,
+                1 => Verdict::Retry,
+                _ => Verdict::Shrink,
+            })
+        } else {
+            self.send_vals(leader, tag, vec![u64::from(ok)]);
+            match self.recv_vals(leader, tag) {
+                Ok(v) => Ok(match v.first().copied().unwrap_or(2) {
+                    0 => Verdict::Commit,
+                    1 => Verdict::Retry,
+                    _ => Verdict::Shrink,
+                }),
+                // Leader died mid-vote: the conservative shared
+                // outcome every surviving member independently
+                // reaches is Shrink.
+                Err(TransportError::RankDead { .. }) => Ok(Verdict::Shrink),
+                Err(_) => Err(Evicted { rank }),
+            }
+        }
+    }
+
+    fn sync_point(&self, rank: usize, group: &Group, seq: u64) -> Result<(), Evicted> {
+        debug_assert_eq!(rank, self.my_rank);
+        let tag = ctl_tag(KIND_SYNC, group.epoch, seq);
+        let leader = group.leader();
+        if rank == leader {
+            for m in self.followers(group) {
+                let _ = self.recv_vals(m, tag);
+            }
+            for m in self.followers(group) {
+                self.send_vals(m, tag, vec![0]);
+            }
+            Ok(())
+        } else {
+            self.send_vals(leader, tag, vec![0]);
+            match self.recv_vals(leader, tag) {
+                // Leader death makes the fence moot: the next round
+                // observes the death and shrinks.
+                Ok(_) | Err(TransportError::RankDead { .. }) => Ok(()),
+                Err(_) => Err(Evicted { rank }),
+            }
+        }
+    }
+
+    fn regroup(&self, rank: usize, group: &Group) -> Result<Group, Evicted> {
+        debug_assert_eq!(rank, self.my_rank);
+        let old_epoch = group.epoch;
+        let join_tag = ctl_tag(KIND_JOIN, old_epoch, 0);
+        let members_tag = ctl_tag(KIND_MEMBERS, old_epoch, 0);
+        let mut candidates: Vec<usize> = group
+            .members
+            .iter()
+            .copied()
+            .filter(|&m| m == rank || !self.transport.is_dead(m))
+            .collect();
+        loop {
+            let leader = candidates[0];
+            if rank == leader {
+                let mut joined = vec![rank];
+                for &m in candidates.iter().filter(|&&m| m != leader) {
+                    if self.recv_vals(m, join_tag).is_ok() {
+                        joined.push(m);
+                    }
+                }
+                joined.sort_unstable();
+                for &m in joined.iter().filter(|&&m| m != rank) {
+                    self.send_vals(m, members_tag, joined.iter().map(|&m| m as u64).collect());
+                }
+                return Ok(Group { epoch: old_epoch + 1, members: joined });
+            }
+            self.send_vals(leader, join_tag, vec![rank as u64]);
+            match self.recv_vals(leader, members_tag) {
+                Ok(v) => {
+                    return Ok(Group {
+                        epoch: old_epoch + 1,
+                        members: v.into_iter().map(|m| m as usize).collect(),
+                    })
+                }
+                // The prospective leader died too: drop it and re-elect.
+                Err(TransportError::RankDead { .. }) => {
+                    candidates.retain(|&m| m != leader && (m == rank || !self.transport.is_dead(m)));
+                }
+                Err(_) => return Err(Evicted { rank }),
+            }
+        }
+    }
+
+    fn group_impaired(&self, group: &Group) -> bool {
+        group.members.iter().any(|&m| self.transport.is_dead(m))
+    }
+
+    fn declare_dead(&self, rank: usize) {
+        self.transport.mark_dead(rank);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::transport::LocalTransport;
+
+    fn run_members(
+        t: &Arc<LocalTransport>,
+        members: &[usize],
+        f: impl Fn(usize, WireCoord) -> Result<u64, Evicted> + Send + Sync + Copy,
+    ) -> Vec<(usize, Result<u64, Evicted>)> {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = members
+                .iter()
+                .map(|&rank| {
+                    let coord = WireCoord::new(
+                        t.clone() as Arc<dyn Transport>,
+                        rank,
+                        Duration::from_millis(500),
+                    );
+                    s.spawn(move || (rank, f(rank, coord)))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    }
+
+    #[test]
+    fn control_tags_stay_out_of_the_data_plane() {
+        let t = ctl_tag(KIND_COMMIT, 3, 17);
+        assert!(t & CONTROL_BIT != 0);
+        // the largest data tag a deep-epoch SubTransport produces
+        let data = (200u64 * 1024 + 511) * (1 << 44) + (1 << 21);
+        assert_eq!(data & CONTROL_BIT, 0);
+        assert_ne!(ctl_tag(KIND_START, 3, 17), t);
+        assert_ne!(ctl_tag(KIND_COMMIT, 4, 17), t);
+        assert_ne!(ctl_tag(KIND_COMMIT, 3, 18), t);
+    }
+
+    #[test]
+    fn sync_start_adopts_max_attempt() {
+        let t = Arc::new(LocalTransport::new(3));
+        let g = Group::world(3);
+        for (_, got) in run_members(&t, &[0, 1, 2], |rank, coord| {
+            coord.sync_start(rank, &g, 0, rank as u64 * 2)
+        }) {
+            assert_eq!(got, Ok(4));
+        }
+    }
+
+    #[test]
+    fn commit_verdicts_match_health_semantics() {
+        // all ok → Commit
+        let t = Arc::new(LocalTransport::new(2));
+        let g = Group::world(2);
+        for (_, got) in run_members(&t, &[0, 1], |rank, coord| {
+            coord.commit(rank, &g, 0, true).map(|v| v as u64)
+        }) {
+            assert_eq!(got, Ok(Verdict::Commit as u64));
+        }
+        // one failed vote → Retry
+        for (_, got) in run_members(&t, &[0, 1], |rank, coord| {
+            coord.commit(rank, &g, 1, rank != 1).map(|v| v as u64)
+        }) {
+            assert_eq!(got, Ok(Verdict::Retry as u64));
+        }
+        // a dead member → Shrink (survivors still agree)
+        let t3 = Arc::new(LocalTransport::new(3));
+        t3.mark_dead(2);
+        let g3 = Group::world(3);
+        for (_, got) in run_members(&t3, &[0, 1], |rank, coord| {
+            coord.commit(rank, &g3, 0, true).map(|v| v as u64)
+        }) {
+            assert_eq!(got, Ok(Verdict::Shrink as u64));
+        }
+    }
+
+    #[test]
+    fn regroup_drops_the_dead_and_bumps_epoch() {
+        let t = Arc::new(LocalTransport::new(4));
+        t.mark_dead(2);
+        let g = Group::world(4);
+        for (_, got) in run_members(&t, &[0, 1, 3], |rank, coord| {
+            coord.regroup(rank, &g).map(|ng| {
+                assert_eq!(ng.members, vec![0, 1, 3]);
+                ng.epoch
+            })
+        }) {
+            assert_eq!(got, Ok(1));
+        }
+    }
+
+    #[test]
+    fn follower_adopts_shrink_when_leader_is_dead() {
+        let t = Arc::new(LocalTransport::new(2));
+        t.mark_dead(0);
+        let g = Group::world(2);
+        let coord =
+            WireCoord::new(t.clone() as Arc<dyn Transport>, 1, Duration::from_millis(200));
+        assert_eq!(coord.sync_start(1, &g, 0, 5), Ok(5));
+        assert_eq!(coord.commit(1, &g, 1, true), Ok(Verdict::Shrink));
+        assert_eq!(coord.sync_point(1, &g, 2), Ok(()));
+        let ng = coord.regroup(1, &g).unwrap();
+        assert_eq!(ng.members, vec![1]);
+        assert_eq!(ng.epoch, 1);
+    }
+}

@@ -19,7 +19,8 @@ pub use checkpoint::Checkpoint;
 pub use optimizer::Adam;
 pub use schedule::NoamSchedule;
 pub use session::{
-    run_elastic_session, run_session, run_session_with_engine, ElasticConfig, ElasticOutcome,
-    ElasticReport, SessionConfig, SessionResult,
+    elastic_worker, run_elastic_session, run_session, run_session_with_engine,
+    write_baseline_checkpoint, ElasticConfig, ElasticOutcome, ElasticReport, SessionConfig,
+    SessionResult,
 };
 pub use trainer::{StepStats, Trainer, TrainerConfig};

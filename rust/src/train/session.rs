@@ -22,13 +22,13 @@ use crate::collectives::{self, AllreduceAlgo, TAG_BLOCK};
 use crate::coordinator::ExchangeConfig;
 use crate::data::{bleu::bleu_smoothed, Corpus, CorpusConfig};
 use crate::runtime::executor::{run_elastic, RankExit};
-use crate::runtime::health::{Group, Health, HealthOpts};
+use crate::runtime::health::{ElasticCoord, Group, HealthOpts, Verdict};
 use crate::runtime::{Engine, Manifest};
 use crate::tensor::AccumStrategy;
 use crate::train::checkpoint::Checkpoint;
 use crate::train::trainer::{load_artifacts, StepStats, Trainer, TrainerConfig};
 use crate::transport::{
-    FaultPlan, FaultyTransport, LocalTransport, ShmTransport, SubTransport, Transport, WireFormat,
+    FaultPlan, FaultyTransport, LocalTransport, SubTransport, Transport, TransportKind, WireFormat,
 };
 use crate::util::rng::Rng;
 
@@ -251,11 +251,15 @@ pub struct ElasticConfig {
     /// Fault plan: link faults wrap the transport in a
     /// [`FaultyTransport`]; kill schedules make ranks exit mid-run.
     pub faults: FaultPlan,
-    /// Checkpoint file path (shared by all ranks — they run in one
-    /// process).
+    /// Checkpoint file path (shared by all ranks — one process, or
+    /// worker processes sharing a filesystem).
     pub ckpt_path: PathBuf,
     /// Seed for initial parameters and synthetic gradients.
     pub seed: u64,
+    /// Which transport the in-process session runs over (the
+    /// multi-process launcher builds its own socket endpoints and
+    /// calls [`elastic_worker`] directly).
+    pub transport: TransportKind,
 }
 
 impl ElasticConfig {
@@ -274,6 +278,7 @@ impl ElasticConfig {
             faults: FaultPlan::none(),
             ckpt_path,
             seed: 42,
+            transport: TransportKind::Shm,
         }
     }
 }
@@ -335,8 +340,10 @@ impl ElasticReport {
 
 /// Deterministic synthetic gradient for (physical rank, step): the
 /// closed form lets a rolled-back survivor regenerate exactly the
-/// gradient it contributed before the fault.
-fn grad_vec(rank: usize, step: u64, elems: usize, seed: u64) -> Vec<f32> {
+/// gradient it contributed before the fault — and lets an external
+/// oracle (the cross-process tests, the launcher's reference pass)
+/// replay the whole run without sharing any state with the workers.
+pub fn grad_vec(rank: usize, step: u64, elems: usize, seed: u64) -> Vec<f32> {
     (0..elems as u64)
         .map(|i| {
             let h = rank as u64 * 31 + step * 17 + i * 7 + seed * 13 + 3;
@@ -346,9 +353,25 @@ fn grad_vec(rank: usize, step: u64, elems: usize, seed: u64) -> Vec<f32> {
 }
 
 /// Deterministic initial parameters (identical on every rank).
-fn init_params(elems: usize, seed: u64) -> Vec<f32> {
+pub fn init_params(elems: usize, seed: u64) -> Vec<f32> {
     let mut rng = Rng::new(seed ^ 0xE1A5);
     (0..elems).map(|_| (rng.gen_range(0, 2001) as f32 - 1000.0) / 1000.0).collect()
+}
+
+/// Write the step-0 baseline checkpoint for `cfg` — the very first
+/// shrink always has something to roll back to.  [`run_elastic_session`]
+/// does this itself; a multi-process launcher calls it once *before*
+/// spawning workers (so no boot fence is needed).
+pub fn write_baseline_checkpoint(cfg: &ElasticConfig) -> anyhow::Result<()> {
+    let zeros = vec![0.0f32; cfg.elems];
+    Checkpoint {
+        step: 0,
+        params: init_params(cfg.elems, cfg.seed),
+        adam_m: zeros.clone(),
+        adam_v: zeros,
+    }
+    .save(&cfg.ckpt_path)?;
+    Ok(())
 }
 
 /// Run a fault-tolerant synthetic training session: one OS thread per
@@ -369,17 +392,9 @@ pub fn run_elastic_session(cfg: &ElasticConfig) -> anyhow::Result<ElasticReport>
 
     // Baseline checkpoint (step 0) before any worker starts: the very
     // first shrink always has something to roll back to.
-    let params0 = init_params(cfg.elems, cfg.seed);
-    let zeros = vec![0.0f32; cfg.elems];
-    Checkpoint {
-        step: 0,
-        params: params0,
-        adam_m: zeros.clone(),
-        adam_v: zeros,
-    }
-    .save(&cfg.ckpt_path)?;
+    write_baseline_checkpoint(cfg)?;
 
-    let base: Arc<dyn Transport> = Arc::new(ShmTransport::new(cfg.nranks));
+    let base: Arc<dyn Transport> = cfg.transport.create(cfg.nranks)?;
     let transport: Arc<dyn Transport> = if cfg.faults.has_link_faults() {
         Arc::new(FaultyTransport::new(base, cfg.faults.clone()))
     } else {
@@ -392,7 +407,7 @@ pub fn run_elastic_session(cfg: &ElasticConfig) -> anyhow::Result<ElasticReport>
     };
     let cfg_arc = Arc::new(cfg.clone());
     let run = run_elastic(transport, opts, move |rank, t, health| {
-        elastic_worker(rank, t, health, &cfg_arc)
+        elastic_worker(rank, t, &*health, &cfg_arc)
     });
 
     let mut report = ElasticReport {
@@ -414,10 +429,19 @@ pub fn run_elastic_session(cfg: &ElasticConfig) -> anyhow::Result<ElasticReport>
 
 /// The per-rank body of the elastic loop (see module docs for the
 /// protocol; every protocol error means this rank was evicted).
-fn elastic_worker(
+///
+/// Written against [`ElasticCoord`], so the identical
+/// step/retry/shrink/rollback loop runs over in-process [`Health`]
+/// rounds (threaded ranks, [`run_elastic_session`]) and over
+/// [`WireCoord`](crate::runtime::WireCoord) control messages (worker
+/// processes — the launcher builds a socket endpoint + `WireCoord`
+/// per process and calls this directly).
+///
+/// [`Health`]: crate::runtime::Health
+pub fn elastic_worker(
     rank: usize,
     transport: Arc<dyn Transport>,
-    health: Arc<Health>,
+    coord: &dyn ElasticCoord,
     cfg: &ElasticConfig,
 ) -> RankExit<ElasticOutcome> {
     let kill_cycle = cfg.faults.kill_cycle(rank);
@@ -436,12 +460,12 @@ fn elastic_worker(
         if kill_cycle == Some(step as usize) {
             return RankExit::Died { cycle: step as usize };
         }
-        health.beat(rank);
+        coord.beat(rank);
 
         // Cycle-start barrier: adopt the group's maximum attempt so a
         // rank whose last collective failed and one whose succeeded
         // re-enter the step aligned on the same era.
-        attempt = match health.sync_start(rank, &group, seq, attempt) {
+        attempt = match coord.sync_start(rank, &group, seq, attempt) {
             Ok(a) => a,
             Err(_) => return RankExit::Evicted,
         };
@@ -450,7 +474,7 @@ fn elastic_worker(
             // A collective decision: every member adopted this attempt,
             // so every member fails together. Self-declare dead so any
             // straggler blocked on us unblocks immediately.
-            health.declare_dead(rank);
+            coord.declare_dead(rank);
             transport.mark_dead(rank);
             return RankExit::Failed(format!(
                 "step {step}: retry budget exhausted after {attempt} attempts"
@@ -467,7 +491,7 @@ fn elastic_worker(
         // The collective runs on a scratch buffer; `params` is only
         // touched on Commit, so Retry/Shrink never poison the model.
         let mut buf = grad_vec(rank, step, cfg.elems, cfg.seed);
-        let ok = if health.group_impaired(&group) {
+        let ok = if coord.group_impaired(&group) {
             // a member is already known dead: the step is doomed, skip
             // straight to the vote (which will return Shrink)
             false
@@ -483,16 +507,16 @@ fn elastic_worker(
             )
             .is_ok()
         };
-        health.beat(rank);
+        coord.beat(rank);
 
-        let verdict = match health.commit(rank, &group, seq, ok) {
+        let verdict = match coord.commit(rank, &group, seq, ok) {
             Ok(v) => v,
             Err(_) => return RankExit::Evicted,
         };
         seq += 1;
 
         match verdict {
-            crate::runtime::health::Verdict::Commit => {
+            Verdict::Commit => {
                 // buf holds the sum over the current members; apply the
                 // mean-gradient SGD step so shrinks stay scale-stable
                 let scale = cfg.lr / group.members.len() as f32;
@@ -513,7 +537,7 @@ fn elastic_worker(
                             adam_v: zeros,
                         };
                         if let Err(e) = ck.save(&cfg.ckpt_path) {
-                            health.declare_dead(rank);
+                            coord.declare_dead(rank);
                             transport.mark_dead(rank);
                             return RankExit::Failed(format!("checkpoint save: {e}"));
                         }
@@ -521,18 +545,18 @@ fn elastic_worker(
                     // fence: nobody races past a checkpoint that is
                     // not yet durably on disk (a shrink during the
                     // next step must find it)
-                    if health.sync_point(rank, &group, seq).is_err() {
+                    if coord.sync_point(rank, &group, seq).is_err() {
                         return RankExit::Evicted;
                     }
                     seq += 1;
                 }
             }
-            crate::runtime::health::Verdict::Retry => {
+            Verdict::Retry => {
                 attempt += 1;
                 retries += 1;
             }
-            crate::runtime::health::Verdict::Shrink => {
-                group = match health.regroup(rank, &group) {
+            Verdict::Shrink => {
+                group = match coord.regroup(rank, &group) {
                     Ok(g) => g,
                     Err(_) => return RankExit::Evicted,
                 };
@@ -545,7 +569,7 @@ fn elastic_worker(
                         params = ck.params;
                     }
                     Err(e) => {
-                        health.declare_dead(rank);
+                        coord.declare_dead(rank);
                         transport.mark_dead(rank);
                         return RankExit::Failed(format!("checkpoint load: {e}"));
                     }

@@ -8,7 +8,12 @@
 //! ([`crate::sim::network`]).  Two in-process implementations:
 //! [`LocalTransport`] (one mailbox per receiving rank) and
 //! [`ShmTransport`] (one mailbox per ordered rank *pair*, the data
-//! plane of the threaded rank executor).
+//! plane of the threaded rank executor).  [`SocketTransport`] carries
+//! the same discipline across OS *processes* over Unix-domain or TCP
+//! sockets (one endpoint per process, built by
+//! [`crate::runtime::launcher`]), and [`SocketHub`] bundles all p
+//! endpoints behind one in-process handle so every harness can run
+//! over real sockets via `--transport socket`.
 //!
 //! For fault tolerance the trait carries a second, *bounded-time*
 //! receive surface (`try_recv*`): every blocking receive has a variant
@@ -26,13 +31,15 @@ pub mod faulty;
 pub mod local;
 pub(crate) mod pool;
 pub mod shm;
+pub mod socket;
 pub mod sub;
 pub mod wire;
 
-pub use error::{CorruptKind, TransportError};
+pub use error::{CorruptKind, Fnv1a, TransportError};
 pub use faulty::{FaultPlan, FaultyTransport, InjectStats, LinkFault};
 pub use local::LocalTransport;
 pub use shm::ShmTransport;
+pub use socket::{SocketHub, SocketMode, SocketTransport};
 pub use sub::SubTransport;
 pub use wire::WireFormat;
 
@@ -439,6 +446,55 @@ fn check_len(expected: usize, got: usize) -> Result<(), TransportError> {
         return Err(TransportError::Corrupt(CorruptKind::Length { expected, got }));
     }
     Ok(())
+}
+
+/// Which transport implementation carries a run — the `--transport`
+/// CLI axis.  Every harness is written against `Arc<dyn Transport>`,
+/// so selecting a different data plane is purely a construction-time
+/// decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// [`LocalTransport`]: one mailbox per receiving rank.
+    Local,
+    /// [`ShmTransport`]: one mailbox per ordered rank pair (default
+    /// for the threaded harnesses).
+    Shm,
+    /// [`SocketHub`]: every message crosses a real kernel socket
+    /// (Unix-domain), one endpoint per rank, in one process.
+    Socket,
+}
+
+impl TransportKind {
+    /// Parse a CLI name (`local`, `shm`, or `socket`).
+    pub fn parse(s: &str) -> Option<TransportKind> {
+        match s {
+            "local" => Some(TransportKind::Local),
+            "shm" => Some(TransportKind::Shm),
+            "socket" => Some(TransportKind::Socket),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (inverse of [`TransportKind::parse`]).
+    pub fn name(self) -> &'static str {
+        match self {
+            TransportKind::Local => "local",
+            TransportKind::Shm => "shm",
+            TransportKind::Socket => "socket",
+        }
+    }
+
+    /// Construct a transport of this kind connecting `nranks` ranks.
+    /// Only `Socket` can fail (rendezvous is real I/O).
+    pub fn create(self, nranks: usize) -> anyhow::Result<std::sync::Arc<dyn Transport>> {
+        Ok(match self {
+            TransportKind::Local => std::sync::Arc::new(LocalTransport::new(nranks)),
+            TransportKind::Shm => std::sync::Arc::new(ShmTransport::new(nranks)),
+            TransportKind::Socket => {
+                std::sync::Arc::new(SocketHub::new(nranks, SocketMode::Unix)?)
+            }
+        })
+    }
 }
 
 /// Payload-buffer pool counters for pooled transports.

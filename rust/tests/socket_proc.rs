@@ -1,0 +1,126 @@
+//! True multi-process socket tests (`harness = false`).
+//!
+//! This binary owns its `fn main()` for two reasons libtest cannot
+//! accommodate:
+//!
+//! 1. The cross-process scenarios re-exec **this binary** as launcher
+//!    workers (`std::env::current_exe()`), so `main` must dispatch on
+//!    [`launcher::worker_env`] before anything else — exactly like the
+//!    `densefold` CLI does.
+//! 2. The [`ExchangeConfig`] env round-trip mutates process-global
+//!    environment variables, which races against libtest's threaded
+//!    test runner.
+//!
+//! The drill itself ([`launch_drill`]) hard-asserts the PR's
+//! acceptance contract: every allreduce algorithm × wire format is
+//! bit-identical across 4 worker *processes* to the single-process
+//! `LocalTransport` reference, and a SIGKILLed worker drives the
+//! survivors through shrink + checkpoint rollback to a bit-exact
+//! closed-form finish.
+
+use densefold::collectives::AllreduceAlgo;
+use densefold::coordinator::policy::DensifyPolicy;
+use densefold::coordinator::{ExchangeConfig, EXCHANGE_ENV_KEYS};
+use densefold::harness::launch::{self, LaunchOpts};
+use densefold::runtime::launcher;
+use densefold::transport::{SocketMode, WireFormat};
+
+fn main() {
+    // Re-exec'ed as a worker? Run the worker body, not the scenarios.
+    if let Some(env) = launcher::worker_env() {
+        std::process::exit(launch::worker_main(&env));
+    }
+
+    exchange_config_round_trips_through_env();
+    println!("ok: exchange_config_round_trips_through_env");
+    launch_drill_crosses_the_process_boundary();
+    println!("ok: launch_drill_crosses_the_process_boundary");
+    sigkill_recovery_survives_a_tcp_mesh();
+    println!("ok: sigkill_recovery_survives_a_tcp_mesh");
+    println!("socket_proc: all scenarios passed");
+}
+
+fn assert_config_eq(got: &ExchangeConfig, want: &ExchangeConfig, what: &str) {
+    assert_eq!(got.algo, want.algo, "{what}: algo");
+    assert_eq!(got.fusion_threshold, want.fusion_threshold, "{what}: fusion_threshold");
+    assert_eq!(got.average, want.average, "{what}: average");
+    assert_eq!(got.cache_plans, want.cache_plans, "{what}: cache_plans");
+    assert_eq!(got.policy, want.policy, "{what}: policy");
+    assert_eq!(got.wire, want.wire, "{what}: wire");
+}
+
+fn exchange_config_round_trips_through_env() {
+    for key in EXCHANGE_ENV_KEYS {
+        std::env::remove_var(key);
+    }
+    // a clean environment yields the defaults
+    assert_config_eq(&ExchangeConfig::from_env(), &ExchangeConfig::default(), "clean env");
+
+    // every non-default field survives the env round trip
+    let cfg = ExchangeConfig {
+        algo: AllreduceAlgo::RecursiveDoubling,
+        fusion_threshold: 7 * 1024 * 1024,
+        average: false,
+        cache_plans: false,
+        policy: DensifyPolicy::Adaptive { dense_above: 0.25 },
+        wire: WireFormat::Bf16,
+    };
+    for (k, v) in cfg.to_env() {
+        std::env::set_var(k, v);
+    }
+    assert_config_eq(&ExchangeConfig::from_env(), &cfg, "round trip");
+
+    // garbage falls back per-field, not wholesale
+    std::env::set_var("DENSEFOLD_ALGO", "not-an-algorithm");
+    let got = ExchangeConfig::from_env();
+    assert_eq!(got.algo, ExchangeConfig::default().algo, "bad algo falls back");
+    assert_eq!(got.wire, cfg.wire, "good fields survive a bad neighbour");
+
+    // leave the environment clean: later scenarios spawn children
+    for key in EXCHANGE_ENV_KEYS {
+        std::env::remove_var(key);
+    }
+}
+
+fn launch_drill_crosses_the_process_boundary() {
+    let opts = LaunchOpts {
+        ranks: 4,
+        mode: SocketMode::Unix,
+        elems: 512,
+        steps: 6,
+        kill_rank: Some(2),
+        kill_cycle: 3,
+        ckpt_every: 2,
+        bench_cycles: 2,
+        seed: 42,
+    };
+    let (bench, table) = launch::launch_drill(&opts).expect("launch drill");
+    assert!(
+        bench.results.iter().any(|r| r.name.starts_with("proc/pipelined/")),
+        "bench rows missing"
+    );
+    assert!(bench.results.iter().all(|r| r.mean_ns > 0.0));
+    let md = table.to_markdown();
+    assert!(md.contains("rank 2 at step 3 (SIGKILL)"), "{md}");
+    assert!(md.contains("[0, 1, 3]"), "{md}");
+}
+
+fn sigkill_recovery_survives_a_tcp_mesh() {
+    // same contract over loopback TCP, smaller and kill-free gate
+    // weight: the framing/EOF machinery is what differs between modes
+    let opts = LaunchOpts {
+        ranks: 3,
+        mode: SocketMode::Tcp,
+        elems: 256,
+        steps: 4,
+        kill_rank: Some(1),
+        kill_cycle: 2,
+        ckpt_every: 2,
+        bench_cycles: 2,
+        seed: 7,
+    };
+    let (_bench, table) = launch::launch_drill(&opts).expect("tcp launch drill");
+    let md = table.to_markdown();
+    assert!(md.contains("rank 1 at step 2 (SIGKILL)"), "{md}");
+    assert!(md.contains("[0, 2]"), "{md}");
+}

@@ -15,14 +15,14 @@
 # BENCH_collectives.json. Compare ns_per_iter for the same result name
 # between two checkouts to see a perf delta.
 #
-# Usage: scripts/bench.sh [name…]   (default: all four groups)
+# Usage: scripts/bench.sh [name…]   (default: all groups)
 set -euo pipefail
 
 cd "$(dirname "$0")/.."
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-    benches=(collectives fusion accumulate train_step threaded)
+    benches=(collectives fusion accumulate train_step threaded socket)
 fi
 
 for b in "${benches[@]}"; do
