@@ -126,9 +126,15 @@ fn digest_f32(data: &[f32]) -> u64 {
 }
 
 /// Atomic write: `.tmp` then rename, so a reader never sees a torn
-/// file — rename visibility is the worker→parent commit point.
+/// file — rename visibility is the worker→parent commit point.  The
+/// tmp name appends to the full file name (`gate.r0` → `gate.r0.tmp`)
+/// rather than replacing the extension, so concurrent ranks writing
+/// into the shared rendezvous dir never collide on one tmp path.
 fn write_atomic(path: &Path, contents: &str) -> Result<()> {
-    let tmp = path.with_extension("tmp");
+    let file_name = path
+        .file_name()
+        .with_context(|| format!("no file name in {}", path.display()))?;
+    let tmp = path.with_file_name(format!("{}.tmp", file_name.to_string_lossy()));
     std::fs::write(&tmp, contents).with_context(|| format!("write {}", tmp.display()))?;
     std::fs::rename(&tmp, path).with_context(|| format!("rename to {}", path.display()))?;
     Ok(())

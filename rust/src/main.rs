@@ -408,10 +408,13 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
     if want("launch") {
         let kill = flag(flags, "kill-rank", "2");
         // `--transport socket` (the CI spelling) selects the default
-        // Unix-domain mode; `--mode tcp` switches to loopback TCP
+        // Unix-domain mode; `--mode tcp` switches to loopback TCP.
+        // Under `--all` the flag belongs to the threaded/chaos groups
+        // (which accept local/shm/socket), so only reject a non-socket
+        // value when launch is the one fig explicitly requested.
         let transport = flag(flags, "transport", "socket");
         anyhow::ensure!(
-            transport == "socket",
+            all || transport == "socket",
             "repro launch always runs over sockets (got --transport {transport})"
         );
         let opts = harness::launch::LaunchOpts {

@@ -752,6 +752,16 @@ impl SocketTransport {
             "a socket endpoint can only send as its own rank"
         );
         assert!(to < self.shared.nranks, "rank out of range");
+        // enforce the frame cap at the sender too: without this the
+        // receiver rejects the header as a corrupt stream and poisons
+        // this rank, making an oversized message indistinguishable
+        // from process death
+        assert!(
+            payload_elems(&payload) <= MAX_FRAME_ELEMS,
+            "payload of {} elements exceeds the per-frame cap of {} (tag {tag}, to rank {to})",
+            payload_elems(&payload),
+            MAX_FRAME_ELEMS
+        );
         self.shared.counters.record(payload.nbytes());
         if to == self.shared.my_rank {
             self.shared.push(from, tag, payload, checksum);
