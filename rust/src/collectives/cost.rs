@@ -8,7 +8,22 @@
 //! LocalTransport runs validate the *algorithms*, these models supply
 //! the *timing* at scales this machine cannot host.
 
-use crate::transport::WireFormat;
+use crate::transport::{Pressure, WireFormat};
+
+/// How much the cost model inflates the *memory* term of a candidate
+/// plan at a given pressure level.  The alpha–beta link model prices
+/// time; under memory pressure the policy engine multiplies each
+/// plan's resident-bytes term by this factor, so plans that buffer
+/// more (gather, uncompressed wire, unchunked rings) price themselves
+/// out and the adaptive policy degrades toward chunked/compressed
+/// dense plans before the budget fails hard.
+pub fn memory_pressure_factor(level: Pressure) -> f64 {
+    match level {
+        Pressure::Ok => 1.0,
+        Pressure::Soft => 4.0,
+        Pressure::Hard => 16.0,
+    }
+}
 
 /// Link parameters. Defaults approximate the paper's 100 Gb/s
 /// Intel Omni-Path fabric (α ≈ 1.5 µs MPI latency, β ≈ 12.5 GB/s).
@@ -132,6 +147,15 @@ pub fn best_allreduce_time(link: &LinkModel, p: u64, bytes: f64) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn pressure_factor_is_monotone() {
+        let ok = memory_pressure_factor(Pressure::Ok);
+        let soft = memory_pressure_factor(Pressure::Soft);
+        let hard = memory_pressure_factor(Pressure::Hard);
+        assert_eq!(ok, 1.0);
+        assert!(ok < soft && soft < hard, "{ok} < {soft} < {hard}");
+    }
 
     #[test]
     fn ring_bandwidth_term_flat_in_p() {

@@ -101,6 +101,28 @@ pub fn try_allreduce(
     tag_base: u64,
     timeout: Option<Duration>,
 ) -> Result<(), TransportError> {
+    try_allreduce_seg(t, rank, data, algo, tag_base, ring::DEFAULT_SEGMENT_ELEMS, timeout)
+}
+
+/// [`try_allreduce`] with an explicit pipelined-ring segment size.
+///
+/// `seg_elems` only affects [`AllreduceAlgo::RingPipelined`] (the other
+/// algorithms are unsegmented) and never affects results — the
+/// pipelined ring is bit-identical across segment sizes — but it caps
+/// the largest in-flight payload buffer, which is how the exchange
+/// degrades under memory pressure (see
+/// [`ring::segment_elems_under`]).  **All ranks must pass the same
+/// `seg_elems`**: sender and receiver walk the same segment schedule,
+/// so a mismatch fails typed with a length error mid-collective.
+pub fn try_allreduce_seg(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+    seg_elems: usize,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     let p = t.nranks();
     if p == 1 {
         return Ok(());
@@ -112,7 +134,7 @@ pub fn try_allreduce(
             rank,
             data,
             tag_base,
-            ring::DEFAULT_SEGMENT_ELEMS,
+            seg_elems,
             WireFormat::F32,
             timeout,
         ),
@@ -171,21 +193,39 @@ pub fn try_allreduce_wire(
     wire: WireFormat,
     timeout: Option<Duration>,
 ) -> Result<(), TransportError> {
+    try_allreduce_wire_seg(
+        t,
+        rank,
+        data,
+        algo,
+        tag_base,
+        wire,
+        ring::DEFAULT_SEGMENT_ELEMS,
+        timeout,
+    )
+}
+
+/// [`try_allreduce_wire`] with an explicit pipelined-ring segment size
+/// (see [`try_allreduce_seg`] for the lockstep requirement: every rank
+/// must pass the same `seg_elems`).
+#[allow(clippy::too_many_arguments)]
+pub fn try_allreduce_wire_seg(
+    t: &dyn Transport,
+    rank: usize,
+    data: &mut [f32],
+    algo: AllreduceAlgo,
+    tag_base: u64,
+    wire: WireFormat,
+    seg_elems: usize,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
     if wire == WireFormat::F32 {
-        return try_allreduce(t, rank, data, algo, tag_base, timeout);
+        return try_allreduce_seg(t, rank, data, algo, tag_base, seg_elems, timeout);
     }
     if t.nranks() == 1 {
         return Ok(());
     }
-    ring::try_allreduce_ring_pipelined_wire(
-        t,
-        rank,
-        data,
-        tag_base,
-        ring::DEFAULT_SEGMENT_ELEMS,
-        wire,
-        timeout,
-    )
+    ring::try_allreduce_ring_pipelined_wire(t, rank, data, tag_base, seg_elems, wire, timeout)
 }
 
 /// Tag-space layout: each collective invocation gets a disjoint block
@@ -341,6 +381,67 @@ mod tests {
                 assert!(r.is_err(), "{algo:?} rank {rank} should fail: {r:?}");
             }
         }
+    }
+
+    #[test]
+    fn seg_variants_bit_match_default_segment() {
+        // the degradation ladder shrinks seg_elems under pressure; the
+        // result must not depend on the segment size for any algo/wire
+        use crate::transport::WireFormat;
+        let reference = run_ranks(4, |rank, t| {
+            let mut data = rank_data(rank, 300);
+            allreduce(t.as_ref(), rank, &mut data, AllreduceAlgo::RingPipelined, 0);
+            data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        });
+        for seg in [1usize, 7, 64] {
+            let got = run_ranks(4, move |rank, t| {
+                let mut data = rank_data(rank, 300);
+                try_allreduce_seg(
+                    t.as_ref(),
+                    rank,
+                    &mut data,
+                    AllreduceAlgo::RingPipelined,
+                    0,
+                    seg,
+                    None,
+                )
+                .unwrap();
+                data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+            });
+            assert_eq!(got, reference, "seg={seg}");
+        }
+        // lossy wire: seg-invariant within the wire format
+        let w_ref = run_ranks(4, |rank, t| {
+            let mut data = rank_data(rank, 300);
+            try_allreduce_wire_seg(
+                t.as_ref(),
+                rank,
+                &mut data,
+                AllreduceAlgo::Ring,
+                0,
+                WireFormat::Bf16,
+                64,
+                None,
+            )
+            .unwrap();
+            data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        });
+        let w_small = run_ranks(4, |rank, t| {
+            let mut data = rank_data(rank, 300);
+            try_allreduce_wire_seg(
+                t.as_ref(),
+                rank,
+                &mut data,
+                AllreduceAlgo::Ring,
+                0,
+                WireFormat::Bf16,
+                5,
+                None,
+            )
+            .unwrap();
+            data.iter().map(|x| x.to_bits()).collect::<Vec<_>>()
+        });
+        assert_eq!(w_ref, w_small);
     }
 
     #[test]

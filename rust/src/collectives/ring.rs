@@ -50,6 +50,28 @@ pub fn chunk_ranges(len: usize, p: usize) -> Vec<std::ops::Range<usize>> {
 /// per-message latency.
 pub const DEFAULT_SEGMENT_ELEMS: usize = 16 * 1024;
 
+/// The segment size the pipelined ring should run at under a given
+/// memory-pressure level: the segment caps the largest in-flight
+/// payload buffer, so shrinking it is the ring's rung on the
+/// degradation ladder — smaller buffers, more messages, identical
+/// bits (results are segment-size invariant).
+///
+/// **Lockstep requirement:** sender and receiver walk the same segment
+/// schedule, so every rank must derive its segment from the *same*
+/// pressure reading.  Callers must not read their local budget
+/// independently — rank 0 decides and broadcasts (the coordinator's
+/// negotiate step), or the group derives it from shared state like the
+/// elastic attempt counter.  A mismatch fails typed
+/// (`Corrupt(Length)`), it does not hang.
+pub fn segment_elems_under(level: crate::transport::Pressure) -> usize {
+    use crate::transport::Pressure;
+    match level {
+        Pressure::Ok => DEFAULT_SEGMENT_ELEMS,
+        Pressure::Soft => DEFAULT_SEGMENT_ELEMS / 4,
+        Pressure::Hard => DEFAULT_SEGMENT_ELEMS / 16,
+    }
+}
+
 /// Split `range` into consecutive segments of at most `seg_elems`
 /// elements (the last may be shorter). `seg_elems` is clamped to at
 /// least 1; an empty range yields no segments.
@@ -254,6 +276,17 @@ pub fn try_allreduce_ring_pipelined_wire(
 mod tests {
     use super::*;
     use crate::collectives::testutil::*;
+
+    #[test]
+    fn segment_shrinks_monotonically_with_pressure() {
+        use crate::transport::Pressure;
+        let ok = segment_elems_under(Pressure::Ok);
+        let soft = segment_elems_under(Pressure::Soft);
+        let hard = segment_elems_under(Pressure::Hard);
+        assert_eq!(ok, DEFAULT_SEGMENT_ELEMS);
+        assert!(ok > soft && soft > hard, "{ok} > {soft} > {hard}");
+        assert!(hard >= 1);
+    }
 
     #[test]
     fn chunk_ranges_cover_exactly() {

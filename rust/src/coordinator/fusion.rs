@@ -86,14 +86,21 @@ impl FusionArena {
     /// Make the arena's layout match the plan identified by `key`:
     /// `n_entries` regions sized by `region_elems(entry_idx)`.  No-op
     /// when `key` matches the current layout.
+    ///
+    /// Returns the number of *bytes the backing buffer grew by* (0 on
+    /// the steady-state no-op path and whenever an old layout already
+    /// covers the new one), so the caller can charge the growth
+    /// against its [`crate::transport::MemoryBudget`] — the arena
+    /// itself is payload memory, exactly like a pooled transport
+    /// buffer, and uncounted it would hide the paper's failure mode.
     pub fn ensure(
         &mut self,
         key: u64,
         n_entries: usize,
         region_elems: impl Fn(usize) -> usize,
-    ) {
+    ) -> u64 {
         if self.key == Some(key) {
-            return;
+            return 0;
         }
         self.regions.clear();
         let mut off = 0;
@@ -102,11 +109,18 @@ impl FusionArena {
             self.regions.push((off, n));
             off += n;
         }
+        let grown = (off.saturating_sub(self.data.len()) * 4) as u64;
         if self.data.len() < off {
             self.data.resize(off, 0.0);
         }
         self.key = Some(key);
         self.relayouts += 1;
+        grown
+    }
+
+    /// Bytes currently held by the backing buffer.
+    pub fn held_bytes(&self) -> u64 {
+        (self.data.len() * 4) as u64
     }
 
     /// The mutable backing region for one plan entry (the collective

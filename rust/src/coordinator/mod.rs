@@ -33,10 +33,11 @@ pub mod timeline;
 
 use std::sync::{Arc, Mutex};
 
-use crate::collectives::{self, tree, AllreduceAlgo, ALGO_PHASE_TAGS, TAG_BLOCK};
+use crate::collectives::{self, ring, tree, AllreduceAlgo, ALGO_PHASE_TAGS, TAG_BLOCK};
 use crate::tensor::{DenseTensor, Grad, IndexedSlices};
+use crate::transport::budget::DEFAULT_CHARGE_WAIT;
 use crate::transport::pool::{acquire_from, release_to, PoolCounters};
-use crate::transport::{Payload, PoolStats, Transport, WireFormat};
+use crate::transport::{MemoryBudget, Payload, PoolStats, Pressure, Transport, WireFormat};
 use cache::ResponseCache;
 use fusion::FusionArena;
 use plan::{build_plan, name_id, CollectiveOp, Plan, TensorReport};
@@ -180,6 +181,13 @@ pub struct ExchangeReport {
     /// Sparse submissions the densification policy converted to dense
     /// this cycle.
     pub n_policy_densified: usize,
+    /// Pipelined-ring segment size (elements) the group agreed on for
+    /// this cycle — shrinks under memory pressure.
+    pub seg_elems: usize,
+    /// Memory-pressure level the group agreed on for this cycle (rank
+    /// 0's budget reading, broadcast alongside the plan so every rank
+    /// degrades identically).
+    pub pressure: Pressure,
 }
 
 /// Per-rank handle on the exchange engine.
@@ -199,10 +207,35 @@ pub struct GradExchange {
     /// pools — `crate::transport::pool`.
     dense_pool: Mutex<Vec<Vec<f32>>>,
     dense_pool_counters: PoolCounters,
+    /// Memory budget charged by the densify pool and the fusion arena.
+    /// Pass the transport's budget to [`GradExchange::with_budget`] so
+    /// one ceiling covers all of the process's payload memory.
+    budget: Arc<MemoryBudget>,
+    /// Segment size (elements) and pressure level agreed at the last
+    /// negotiation — rank 0 reads its budget and broadcasts both with
+    /// the plan, so the values are identical on every rank by
+    /// construction (the pipelined ring requires lockstep segments).
+    agreed_seg: usize,
+    agreed_level: Pressure,
 }
 
 impl GradExchange {
     pub fn new(transport: Arc<dyn Transport>, rank: usize, config: ExchangeConfig) -> Self {
+        Self::with_budget(transport, rank, config, Arc::new(MemoryBudget::unlimited()))
+    }
+
+    /// Like [`GradExchange::new`] but charging the engine's payload
+    /// memory (densify pool, fusion arena) against `budget`.  Use the
+    /// same [`MemoryBudget`] the transport was built with
+    /// ([`crate::transport::TransportKind::create_with_budget`]) so a
+    /// single per-process ceiling covers pools, in-flight frames, and
+    /// accumulation buffers together.
+    pub fn with_budget(
+        transport: Arc<dyn Transport>,
+        rank: usize,
+        config: ExchangeConfig,
+        budget: Arc<MemoryBudget>,
+    ) -> Self {
         Self {
             transport,
             rank,
@@ -214,7 +247,15 @@ impl GradExchange {
             policy: PolicyEngine::new(config.policy),
             dense_pool: Mutex::new(Vec::new()),
             dense_pool_counters: PoolCounters::default(),
+            budget,
+            agreed_seg: ring::DEFAULT_SEGMENT_ELEMS,
+            agreed_level: Pressure::Ok,
         }
+    }
+
+    /// The memory budget this engine charges (unlimited by default).
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
     }
 
     /// Buffer-return API (the ROADMAP open item): hand a previous
@@ -225,10 +266,14 @@ impl GradExchange {
     /// warm; sparse outputs are simply dropped.  Purely an
     /// optimization — callers that never return buffers keep the old
     /// allocate-per-cycle behaviour.
+    /// With a *limited* budget the returned buffers are what releases
+    /// (or re-pools) their charge — a caller that never returns
+    /// densified outputs keeps them charged for as long as it holds
+    /// them, which is exactly what they cost.
     pub fn return_grads(&mut self, grads: Vec<NamedGrad>) {
         for g in grads {
             if let Grad::Dense(t) = g.grad {
-                release_to(&self.dense_pool, &self.dense_pool_counters, t.data);
+                release_to(&self.dense_pool, &self.dense_pool_counters, &self.budget, t.data);
             }
         }
     }
@@ -248,7 +293,8 @@ impl GradExchange {
     fn densify_pooled(&mut self, s: &IndexedSlices) -> DenseTensor {
         let elems = s.nrows * s.row_width;
         // acquire_from returns a cleared buffer; resize zero-fills
-        let mut buf = acquire_from(&self.dense_pool, &self.dense_pool_counters, elems);
+        let mut buf =
+            acquire_from(&self.dense_pool, &self.dense_pool_counters, &self.budget, elems);
         buf.resize(elems, 0.0);
         let mut dense = DenseTensor::from_vec(vec![s.nrows, s.row_width], buf);
         s.add_into(&mut dense);
@@ -309,8 +355,18 @@ impl GradExchange {
                         if self.config.policy.is_adaptive() {
                             policy_watch.push(i);
                         }
-                        let decision =
-                            self.policy.decide(id, s.nrows, s.row_width, p, self.config.wire);
+                        // `agreed_level` is the *previous* cycle's
+                        // broadcast pressure reading (init Ok), so the
+                        // pressure bias is itself in lockstep — a rank
+                        // reading its own budget here could diverge.
+                        let decision = self.policy.decide_under(
+                            id,
+                            s.nrows,
+                            s.row_width,
+                            p,
+                            self.config.wire,
+                            self.agreed_level,
+                        );
                         match decision {
                             Decision::Dense => {
                                 report.n_policy_densified += 1;
@@ -345,6 +401,8 @@ impl GradExchange {
         // Keys both the response cache and the fusion arena layout.
         let fingerprint = cache::fingerprint_public(&reports);
         let plan = self.negotiate(&reports, tag0);
+        report.seg_elems = self.agreed_seg;
+        report.pressure = self.agreed_level;
         report.negotiate_us = self.timeline.now_us() - neg_start;
         self.timeline.record_synthetic(
             "negotiation",
@@ -374,7 +432,7 @@ impl GradExchange {
         // Lay out the persistent arena for this plan shape. Keyed by
         // the readiness fingerprint: on the steady-state cache-hit
         // path this is a no-op and the cycle allocates no buffers.
-        self.arena.ensure(fingerprint, plan.entries.len(), |e| {
+        let arena_grown = self.arena.ensure(fingerprint, plan.entries.len(), |e| {
             let entry = &plan.entries[e];
             match entry.op {
                 CollectiveOp::Allreduce => entry
@@ -388,6 +446,16 @@ impl GradExchange {
                 CollectiveOp::Allgather => 0,
             }
         });
+        if arena_grown > 0 {
+            // Arena growth is plan-determined and identical on every
+            // rank, so a budget that cannot host the layout even after
+            // the bounded wait is a configuration error (the model
+            // simply does not fit): fail fast with the typed message
+            // rather than deadlock the exchange.
+            if let Err(e) = self.budget.charge(arena_grown, DEFAULT_CHARGE_WAIT) {
+                panic!("fusion arena layout exceeds the memory budget: {e}");
+            }
+        }
         for (entry_idx, entry) in plan.entries.iter().enumerate() {
             let tag = tag0 + DATA_BASE + entry_idx as u64 * ENTRY_TAGS;
             match entry.op {
@@ -427,10 +495,16 @@ impl GradExchange {
                     let rank = self.rank;
                     let t_ref = t.as_ref();
                     let average = self.config.average;
+                    let seg = self.agreed_seg;
                     {
                         let region = self.arena.region_mut(entry_idx);
                         self.timeline.record(&label, Phase::Allreduce, bytes, || {
-                            collectives::allreduce_wire(t_ref, rank, region, algo, tag, wire);
+                            collectives::try_allreduce_wire_seg(
+                                t_ref, rank, region, algo, tag, wire, seg, None,
+                            )
+                            .unwrap_or_else(|e| {
+                                panic!("allreduce(rank={rank}, {algo:?}, seg={seg}): {e}")
+                            });
                             if average {
                                 let inv = 1.0 / p as f32;
                                 for x in region.iter_mut() {
@@ -499,16 +573,39 @@ impl GradExchange {
         (out, report)
     }
 
+    /// Rank 0's pressure reading and the segment size it implies.
+    /// Only the leader consults its budget — the reading rides the
+    /// plan broadcast, keeping the degradation lockstep across ranks
+    /// (in-process ranks share one budget, so any rank would read the
+    /// same value; across processes only the broadcast keeps them
+    /// agreed).
+    fn leader_degradation(&self) -> (usize, Pressure) {
+        let level = self.budget.level();
+        if level != Pressure::Ok {
+            self.budget.note_degradation();
+        }
+        (ring::segment_elems_under(level), level)
+    }
+
     /// Readiness report to rank 0, agreement check, plan broadcast.
     /// With `cache_plans`, steady-state cycles take the fast path: a
     /// one-u64 fingerprint agreement instead of the full report+plan
     /// (a representation flip changes the fingerprint, so the hazard
     /// check is preserved — mismatch is a hard error on rank 0).
+    ///
+    /// Both broadcast paths also carry rank 0's `(segment, pressure)`
+    /// degradation reading, which every rank adopts for the execution
+    /// phase — the pipelined ring's segment count must agree across
+    /// ranks, so a rank privately shrinking its segment under local
+    /// pressure would fail the exchange with a length mismatch.
     fn negotiate(&mut self, reports: &[TensorReport], tag0: u64) -> Plan {
         let t = self.transport.clone();
         let t = t.as_ref();
         let p = t.nranks();
         if p == 1 {
+            let (seg, level) = self.leader_degradation();
+            self.agreed_seg = seg;
+            self.agreed_level = level;
             if let Some(plan) = self.config.cache_plans.then(|| self.cache.get(reports)).flatten() {
                 return plan;
             }
@@ -520,7 +617,7 @@ impl GradExchange {
         }
         if self.config.cache_plans {
             if let Some(plan) = self.cache.get(reports) {
-                // fast path: fingerprint agreement only
+                // fast path: fingerprint agreement + degradation word
                 let fp = cache::fingerprint_public(reports);
                 if self.rank == 0 {
                     for other in 1..p {
@@ -531,12 +628,23 @@ impl GradExchange {
                             "rank {other} diverged from the cached plan fingerprint"
                         );
                     }
-                    tree::broadcast_payload(t, 0, 0, Some(Payload::U64(vec![fp])), tag0 + CTL_PLAN);
+                    let (seg, level) = self.leader_degradation();
+                    tree::broadcast_payload(
+                        t,
+                        0,
+                        0,
+                        Some(Payload::U64(vec![fp, seg as u64, level.as_u64()])),
+                        tag0 + CTL_PLAN,
+                    );
+                    self.agreed_seg = seg;
+                    self.agreed_level = level;
                 } else {
                     t.send(self.rank, 0, tag0 + CTL_READY, Payload::U64(vec![fp]));
                     let confirm =
                         tree::broadcast_payload(t, self.rank, 0, None, tag0 + CTL_PLAN).into_u64();
-                    assert_eq!(confirm, vec![fp], "cache fingerprint mismatch from leader");
+                    assert_eq!(confirm[0], fp, "cache fingerprint mismatch from leader");
+                    self.agreed_seg = confirm[1] as usize;
+                    self.agreed_level = Pressure::from_u64(confirm[2]);
                 }
                 return plan;
             }
@@ -570,13 +678,13 @@ impl GradExchange {
                 }
             }
             let plan = build_plan(reports, self.config.fusion_threshold);
-            tree::broadcast_payload(
-                t,
-                0,
-                0,
-                Some(Payload::U64(plan.encode())),
-                tag0 + CTL_PLAN,
-            );
+            let (seg, level) = self.leader_degradation();
+            // degradation word precedes the plan encoding
+            let mut encoded = vec![seg as u64, level.as_u64()];
+            encoded.extend(plan.encode());
+            tree::broadcast_payload(t, 0, 0, Some(Payload::U64(encoded)), tag0 + CTL_PLAN);
+            self.agreed_seg = seg;
+            self.agreed_level = level;
             if self.config.cache_plans {
                 self.cache.put(reports, plan.clone());
             }
@@ -585,7 +693,9 @@ impl GradExchange {
             t.send(self.rank, 0, tag0 + CTL_READY, Payload::U64(msg));
             let encoded =
                 tree::broadcast_payload(t, self.rank, 0, None, tag0 + CTL_PLAN).into_u64();
-            let plan = Plan::decode(&encoded);
+            self.agreed_seg = encoded[0] as usize;
+            self.agreed_level = Pressure::from_u64(encoded[1]);
+            let plan = Plan::decode(&encoded[2..]);
             if self.config.cache_plans {
                 self.cache.put(reports, plan.clone());
             }
@@ -809,7 +919,8 @@ mod tests {
         };
 
         let engines = run_cycles(engines, 3); // negotiate + warm the pools
-        let warm_allocated = t.pool_stats().allocated;
+        let warm = t.pool_stats();
+        let warm_allocated = warm.allocated;
         let warm_relayouts: Vec<u64> =
             engines.iter().map(|e| e.arena_relayouts()).collect();
 
@@ -823,6 +934,20 @@ mod tests {
             steady.recycled > warm_allocated,
             "recycling must carry the steady state: {steady:?}"
         );
+        // byte accounting (this PR): the warm pool's byte peak is the
+        // steady-state peak — flat bytes are the memory-side twin of
+        // the flat `allocated` count — and nothing is evicted when the
+        // budget is unlimited and every buffer is under the retain
+        // watermark.
+        assert_eq!(
+            steady.bytes_peak, warm.bytes_peak,
+            "steady-state cycles must not grow the pooled-byte peak: {steady:?}"
+        );
+        assert!(
+            steady.bytes_held > 0 && steady.bytes_held <= steady.bytes_peak,
+            "pooled bytes must be tracked: {steady:?}"
+        );
+        assert_eq!(steady.evicted, 0, "nothing to evict without pressure: {steady:?}");
         for (e, before) in engines.iter().zip(warm_relayouts) {
             assert_eq!(e.arena_relayouts(), before, "arena relaid out on a cache hit");
             assert_eq!(e.arena_relayouts(), 1, "one layout at first negotiation");
@@ -834,6 +959,79 @@ mod tests {
             assert!(d.recycled >= 10, "densify pool must recycle in steady state: {d:?}");
         }
         assert!(engines[0].cache_hit_rate() > 0.9);
+    }
+
+    #[test]
+    fn soft_pressure_degrades_segments_but_not_bits() {
+        // A budget pinned at Soft (soft watermark 0) makes rank 0
+        // broadcast a shrunken pipelined-ring segment and the pools
+        // drain on release; the exchanged values must still match the
+        // unbudgeted run bit for bit — segment size only re-slices the
+        // pipelined ring's messages, never the per-element reduction
+        // order.
+        use crate::transport::LocalTransport;
+        use std::sync::Arc;
+
+        let p = 4;
+        let run = |budget: Arc<MemoryBudget>| {
+            let t = Arc::new(LocalTransport::with_budget(p, budget.clone()));
+            let handles: Vec<_> = (0..p)
+                .map(|rank| {
+                    let t = t.clone();
+                    let budget = budget.clone();
+                    std::thread::spawn(move || {
+                        let cfg = ExchangeConfig {
+                            fusion_threshold: 1024,
+                            policy: DensifyPolicy::AlwaysDense,
+                            ..Default::default()
+                        };
+                        let mut ex = GradExchange::with_budget(t, rank, cfg, budget);
+                        let mut outs = Vec::new();
+                        for step in 0..3 {
+                            let grads = vec![
+                                dense_grad("w1", vec![(rank + step) as f32; 4096]),
+                                NamedGrad {
+                                    name: "emb".into(),
+                                    grad: Grad::Sparse(IndexedSlices::new(
+                                        64,
+                                        4,
+                                        vec![rank as i32; 8],
+                                        vec![0.5; 32],
+                                    )),
+                                },
+                            ];
+                            let (out, report) = ex.exchange(grads);
+                            let values: Vec<Vec<f32>> = out
+                                .iter()
+                                .map(|g| match &g.grad {
+                                    Grad::Dense(t) => t.data.clone(),
+                                    Grad::Sparse(_) => panic!("AlwaysDense output is dense"),
+                                })
+                                .collect();
+                            outs.push((values, report.seg_elems, report.pressure));
+                        }
+                        outs
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect::<Vec<_>>()
+        };
+
+        let reference = run(Arc::new(MemoryBudget::unlimited()));
+        let soft_budget = Arc::new(MemoryBudget::with_soft(1 << 30, 0));
+        let degraded = run(soft_budget.clone());
+
+        for (r, d) in reference.iter().zip(&degraded) {
+            for ((rv, rseg, rlvl), (dv, dseg, dlvl)) in r.iter().zip(d) {
+                assert_eq!(rv, dv, "degraded exchange must stay bit-identical");
+                assert_eq!(*rseg, ring::DEFAULT_SEGMENT_ELEMS);
+                assert_eq!(*rlvl, Pressure::Ok);
+                assert_eq!(*dseg, ring::segment_elems_under(Pressure::Soft));
+                assert_eq!(*dlvl, Pressure::Soft);
+            }
+        }
+        let stats = soft_budget.stats();
+        assert!(stats.degradations > 0, "pressure must be recorded: {stats:?}");
     }
 
     #[test]

@@ -28,12 +28,12 @@
 //! history means [`Decision::Gather`], the TF-faithful default.
 
 use crate::collectives::cost::{
-    ring_allgather_time, ring_pipelined_allreduce_time_wire, LinkModel,
+    memory_pressure_factor, ring_allgather_time, ring_pipelined_allreduce_time_wire, LinkModel,
 };
 use crate::collectives::ring::DEFAULT_SEGMENT_ELEMS;
 use crate::tensor::occupancy::OccupancyTracker;
 use crate::tensor::Grad;
-use crate::transport::WireFormat;
+use crate::transport::{Pressure, WireFormat};
 
 /// EWMA smoothing factor for the occupancy history: heavy enough that
 /// one odd batch cannot flip the representation, light enough to
@@ -176,16 +176,49 @@ impl PolicyEngine {
         p: usize,
         wire: WireFormat,
     ) -> Decision {
+        self.decide_under(id, nrows, row_width, p, wire, Pressure::Ok)
+    }
+
+    /// [`PolicyEngine::decide`] at a given memory-pressure level.
+    ///
+    /// Pressure biases the *adaptive* policies toward the dense path,
+    /// whose working set is fixed (`nrows·row_width` plus one pipeline
+    /// segment) regardless of p: the cost model multiplies the gather
+    /// plan's time by [`memory_pressure_factor`] (pricing its
+    /// p-scaling resident buffers), and the adaptive threshold drops
+    /// by the same factor.  The fixed policies are a user's explicit
+    /// representation choice and are never overridden.  **Lockstep:**
+    /// `level` must be identical on every rank — the coordinator
+    /// broadcasts rank 0's reading with the plan, exactly like the
+    /// segment size; feeding local readings diverges the plans.
+    pub fn decide_under(
+        &self,
+        id: u64,
+        nrows: usize,
+        row_width: usize,
+        p: usize,
+        wire: WireFormat,
+        level: Pressure,
+    ) -> Decision {
+        let pressured = level != Pressure::Ok;
         match self.policy {
             DensifyPolicy::AlwaysGather => Decision::Gather,
             DensifyPolicy::AlwaysDense => Decision::Dense,
-            DensifyPolicy::Adaptive { dense_above } => match self.tracker.stats(id) {
-                Some(s) if s.occupancy >= dense_above => Decision::Dense,
-                _ => Decision::Gather,
-            },
+            DensifyPolicy::Adaptive { dense_above } => {
+                let threshold = dense_above / memory_pressure_factor(level);
+                match self.tracker.stats(id) {
+                    Some(s) if s.occupancy >= threshold => Decision::Dense,
+                    // no history yet: under pressure prefer the
+                    // fixed-size dense plan over an unbounded gather
+                    None if pressured => Decision::Dense,
+                    _ => Decision::Gather,
+                }
+            }
             DensifyPolicy::CostModel => {
                 let Some(s) = self.tracker.stats(id) else {
-                    return Decision::Gather; // deterministic cold start
+                    // deterministic cold start: TF-faithful gather,
+                    // unless memory is already scarce
+                    return if pressured { Decision::Dense } else { Decision::Gather };
                 };
                 let dense_bytes = (nrows * row_width * 4) as f64;
                 let seg_bytes = (DEFAULT_SEGMENT_ELEMS * 4) as f64;
@@ -198,7 +231,8 @@ impl PolicyEngine {
                 );
                 // the gather ships f32 values + i32 indices, uncompressed
                 let per_rank = s.rows_per_rank * (row_width as f64 * 4.0 + 4.0);
-                let gather_t = ring_allgather_time(&self.link, p as u64, per_rank);
+                let gather_t = ring_allgather_time(&self.link, p as u64, per_rank)
+                    * memory_pressure_factor(level);
                 if reduce_t <= gather_t {
                     Decision::Dense
                 } else {
@@ -320,6 +354,44 @@ mod tests {
     fn gathered_wide(nrows: usize, d: usize, idx: Vec<i32>) -> Grad {
         let n = idx.len();
         Grad::Sparse(IndexedSlices::new(nrows, d, idx, vec![1.0; n * d]))
+    }
+
+    #[test]
+    fn pressure_biases_adaptive_policies_toward_dense() {
+        // borderline-sparse stream: gather at Ok, dense once pressured
+        let mut e = PolicyEngine::new(DensifyPolicy::Adaptive { dense_above: 0.5 });
+        for _ in 0..6 {
+            e.observe(1, &gathered(100, (0..20).collect()), 2); // occ 0.2
+        }
+        assert_eq!(e.decide(1, 100, 2, 2, WireFormat::F32), Decision::Gather);
+        assert_eq!(
+            e.decide_under(1, 100, 2, 2, WireFormat::F32, Pressure::Soft),
+            Decision::Dense,
+            "0.2 >= 0.5/4"
+        );
+
+        // cost model: a gather that wins on time loses once its
+        // p-scaling buffers are priced at Soft pressure
+        let mut c = PolicyEngine::new(DensifyPolicy::CostModel);
+        c.observe(1, &gathered_wide(2048, 16, (0..280).collect()), 1);
+        assert_eq!(c.decide(1, 2048, 16, 4, WireFormat::F32), Decision::Gather);
+        assert_eq!(
+            c.decide_under(1, 2048, 16, 4, WireFormat::F32, Pressure::Soft),
+            Decision::Dense
+        );
+
+        // cold start under pressure prefers the bounded dense plan
+        let cold = PolicyEngine::new(DensifyPolicy::CostModel);
+        assert_eq!(
+            cold.decide_under(9, 64, 4, 4, WireFormat::F32, Pressure::Hard),
+            Decision::Dense
+        );
+        // explicit fixed policies are never overridden
+        let g = PolicyEngine::new(DensifyPolicy::AlwaysGather);
+        assert_eq!(
+            g.decide_under(9, 64, 4, 4, WireFormat::F32, Pressure::Hard),
+            Decision::Gather
+        );
     }
 
     #[test]

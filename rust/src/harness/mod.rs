@@ -18,9 +18,11 @@
 //! | threaded | [`threaded::threaded_bench`] | **live** (OS-thread ranks) |
 //! | chaos | [`chaos::chaos_recovery`] | **live** (fault injection + elastic recovery) |
 //! | launch | [`launch::launch_drill`] | **live** (worker processes over sockets) |
+//! | budget | [`budget::budget_drill`] | **live** (memory budget + graceful degradation) |
 
 pub mod ablation;
 pub mod accumulate;
+pub mod budget;
 pub mod chaos;
 pub mod launch;
 pub mod quality;

@@ -86,7 +86,7 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch|budget
                          (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
@@ -127,6 +127,18 @@ commands:
           --ckpt-every N checkpoint cadence              (default 2)
           --cycles N     timed bench cycles per size     (default 6)
           --seed N       param/gradient seed             (default 42)
+          budget mode (memory-budget drill: measures the exchange's
+          peak working set unbudgeted, reruns the full algo x wire
+          grid on local/shm/socket under a fraction of it, and asserts
+          bit-identity, peak <= limit, evictions and degradations;
+          plus a 100/50/25% throughput ladder and the elastic OOM
+          retry/shrink scenario; writes BENCH_budget.json):
+          --ranks N      ranks per pass                  (default 4)
+          --budget-frac F  budgeted limit as a fraction of the
+                         measured peak                   (default 0.25)
+          --cycles N     grid cycles per algo x wire     (default 3)
+          --elems N      base tensor length (outlier 8x) (default 16384)
+          --seed N       gradient seed                   (default 42)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -434,6 +446,21 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         bench.write_csv(&out_dir.join("bench_socket.csv"))?;
         println!("(bench json: BENCH_socket.json)");
         harness::emit(&t, &out_dir, "launch_drill")?;
+        ran += 1;
+    }
+    if want("budget") {
+        let opts = harness::budget::BudgetOpts {
+            ranks: flag(flags, "ranks", "4").parse()?,
+            budget_frac: flag(flags, "budget-frac", "0.25").parse()?,
+            cycles: flag(flags, "cycles", "3").parse()?,
+            elems: flag(flags, "elems", "16384").parse()?,
+            seed: flag(flags, "seed", "42").parse()?,
+        };
+        let (bench, t) = harness::budget::budget_drill(&opts)?;
+        bench.emit_json()?;
+        bench.write_csv(&out_dir.join("bench_budget.csv"))?;
+        println!("(bench json: BENCH_budget.json)");
+        harness::emit(&t, &out_dir, "memory_budget")?;
         ran += 1;
     }
     anyhow::ensure!(ran > 0, "nothing to run: pass --all or --fig figN");

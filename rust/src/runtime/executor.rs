@@ -391,13 +391,25 @@ fn maybe_jitter(max_us: u64, rng: &mut Rng) {
 
 /// Sequential mode: all backward compute, then the same per-layer
 /// exchange cycles in submission order.  One thread per rank.
+/// Build a rank's exchange engine, adopting the transport's
+/// [`MemoryBudget`](crate::transport::MemoryBudget) when it carries
+/// one — the engine's densify pool and fusion arena then charge the
+/// same per-process ceiling as the transport's payload pools, so a
+/// budgeted executor run accounts for *all* payload memory.
+fn engine_on(transport: Arc<dyn Transport>, rank: usize, cfg: &ExecutorConfig) -> GradExchange {
+    match transport.memory_budget() {
+        Some(b) => GradExchange::with_budget(transport, rank, cfg.exchange, b),
+        None => GradExchange::new(transport, rank, cfg.exchange),
+    }
+}
+
 fn run_rank_sequential(
     rank: usize,
     transport: Arc<dyn Transport>,
     cfg: &ExecutorConfig,
     barrier: &Barrier,
 ) -> RankOutcome {
-    let mut ex = GradExchange::new(transport, rank, cfg.exchange);
+    let mut ex = engine_on(transport, rank, cfg);
     let mut outcome = RankOutcome::default();
     let mut scratch = Vec::new();
     let mut rng = jitter_rng(cfg, rank);
@@ -443,7 +455,7 @@ fn run_rank_overlapped(
     cfg: &ExecutorConfig,
     barrier: &Barrier,
 ) -> RankOutcome {
-    let mut ex = GradExchange::new(transport, rank, cfg.exchange);
+    let mut ex = engine_on(transport, rank, cfg);
     let (grad_tx, grad_rx) = mpsc::channel::<Msg>();
     let (done_tx, done_rx) = mpsc::channel::<(Vec<NamedGrad>, u64)>();
     let bg = thread::Builder::new()

@@ -30,6 +30,21 @@
 //! positive under extreme scheduling delay) gets [`Evicted`] from the
 //! next round it touches and exits cleanly rather than corrupting the
 //! survivors' agreement.
+//!
+//! ## Lock ordering vs. memory backpressure
+//!
+//! The health table's mutex/condvar is disjoint from both the
+//! transport mailbox locks and the
+//! [`MemoryBudget`](crate::transport::MemoryBudget) mutex — no code
+//! path holds a health lock while waiting on a budget charge or vice
+//! versa, and budget waits are themselves bounded
+//! ([`DEFAULT_CHARGE_WAIT`](crate::transport::budget::DEFAULT_CHARGE_WAIT),
+//! failing typed afterwards).  Consequence: memory backpressure can
+//! stall a send long enough for the *monitor* to declare the stalled
+//! rank dead, but it can never deadlock a health round — the stalled
+//! rank either resumes (budget freed), fails typed (budget exhausted
+//! past the deadline, surfacing as a failed step vote), or is evicted
+//! by the monitor; every outcome terminates.
 #![warn(missing_docs)]
 
 use std::collections::{BTreeMap, BTreeSet, HashMap};

@@ -223,6 +223,24 @@ pub fn run_session_with_engine(
 /// far beyond anything a sub-certain fault rate produces.
 const MAX_ATTEMPTS: u64 = 512;
 
+/// Injected budget exhaustion ([`FaultPlan::with_oom`]) that survives
+/// this many degraded retries of one step is unrecoverable: the rank
+/// self-declares dead so the survivors shrink around it, exactly like
+/// a crash.  Kept small — each failed attempt already shrank the
+/// segment 4x, so by the fourth the plan is as degraded as it gets.
+const OOM_DEATH_ATTEMPTS: u64 = 4;
+
+/// Pipelined-ring segment size for a retry attempt: each failed
+/// attempt quarters the segment (floor one element), trading pipeline
+/// overlap for a smaller in-flight footprint.  The group-adopted
+/// attempt counter from `sync_start` is the lockstep source the ring
+/// requires — every member derives the same segment without any extra
+/// agreement traffic.  Segment size never changes the per-element
+/// reduction order, so degraded retries stay bit-identical.
+fn degraded_segment(attempt: u64) -> usize {
+    (collectives::ring::DEFAULT_SEGMENT_ELEMS >> (2 * attempt.min(16))).max(1)
+}
+
 /// Configuration for [`run_elastic_session`].
 #[derive(Debug, Clone)]
 pub struct ElasticConfig {
@@ -249,7 +267,9 @@ pub struct ElasticConfig {
     /// Must comfortably exceed `recv_timeout` plus one step's work.
     pub heartbeat_deadline: Duration,
     /// Fault plan: link faults wrap the transport in a
-    /// [`FaultyTransport`]; kill schedules make ranks exit mid-run.
+    /// [`FaultyTransport`]; kill schedules make ranks exit mid-run;
+    /// OOM schedules make a rank's step allocation fail so the group
+    /// retries with a degraded plan (and shrinks if it never clears).
     pub faults: FaultPlan,
     /// Checkpoint file path (shared by all ranks — one process, or
     /// worker processes sharing a filesystem).
@@ -481,6 +501,22 @@ pub fn elastic_worker(
             ));
         }
 
+        // Injected budget exhaustion: this rank's scratch acquire
+        // "fails" while the schedule still covers the attempt.  The
+        // step is skipped and voted down — the group retries it with a
+        // degraded (smaller-segment) plan, the graceful-degradation
+        // ladder for memory faults.
+        let oom = cfg.faults.oom_attempts(rank, step as usize) as u64 > attempt;
+        if oom && attempt >= OOM_DEATH_ATTEMPTS {
+            // Pressure that degradation cannot relieve: leave the
+            // group like a crash so the survivors shrink around us.
+            coord.declare_dead(rank);
+            transport.mark_dead(rank);
+            return RankExit::Failed(format!(
+                "step {step}: memory budget exhausted after {attempt} degraded retries"
+            ));
+        }
+
         // Dense view of the survivors, in a tag era unique to this
         // (epoch, attempt) so stale traffic from aborted collectives
         // can never cross-match.
@@ -491,18 +527,20 @@ pub fn elastic_worker(
         // The collective runs on a scratch buffer; `params` is only
         // touched on Commit, so Retry/Shrink never poison the model.
         let mut buf = grad_vec(rank, step, cfg.elems, cfg.seed);
-        let ok = if coord.group_impaired(&group) {
-            // a member is already known dead: the step is doomed, skip
-            // straight to the vote (which will return Shrink)
+        let ok = if oom || coord.group_impaired(&group) {
+            // allocation failed (nothing was sent), or a member is
+            // already known dead: the step is doomed, skip straight to
+            // the vote
             false
         } else {
-            collectives::try_allreduce_wire(
+            collectives::try_allreduce_wire_seg(
                 &sub,
                 dense,
                 &mut buf,
                 cfg.algo,
                 step * TAG_BLOCK,
                 cfg.wire,
+                degraded_segment(attempt),
                 Some(cfg.recv_timeout),
             )
             .is_ok()
@@ -645,5 +683,72 @@ mod elastic_tests {
         let report = run_elastic_session(&cfg).unwrap();
         report.assert_survivors_agree(3);
         let _ = std::fs::remove_file(path);
+    }
+
+    #[test]
+    fn injected_oom_retries_degraded_and_stays_bit_exact() {
+        // rank 1's step-2 allocation fails twice: the group votes two
+        // retries (each with a 4x-smaller ring segment), then commits.
+        // Degradation must be invisible in the bits — the run ends
+        // with exactly the fault-free parameters.
+        let path = tmp_ckpt("oom_retry");
+        let mut cfg = ElasticConfig::quick(3, 4, path.clone());
+        cfg.algo = AllreduceAlgo::RingPipelined; // exercise the segment ladder
+        cfg.faults = FaultPlan::none().with_oom(1, 2, 2);
+        let report = run_elastic_session(&cfg).unwrap();
+        assert!(report.died.is_empty() && report.failed.is_empty(), "{report:?}");
+        report.assert_survivors_agree(4);
+        assert_eq!(report.final_members(), vec![0, 1, 2]);
+        for s in &report.survivors {
+            assert!(s.retries >= 2, "rank {} saw {} retries", s.rank, s.retries);
+            assert_eq!(s.rollbacks, 0, "retries must not roll back");
+        }
+
+        let ref_path = tmp_ckpt("oom_retry_ref");
+        let mut clean = cfg.clone();
+        clean.ckpt_path = ref_path.clone();
+        clean.faults = FaultPlan::none();
+        let clean_report = run_elastic_session(&clean).unwrap();
+        let got: Vec<u32> =
+            report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        let want: Vec<u32> =
+            clean_report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "degraded retries changed the training bits");
+        let _ = std::fs::remove_file(path);
+        let _ = std::fs::remove_file(ref_path);
+    }
+
+    #[test]
+    fn persistent_oom_shrinks_the_group_replayably() {
+        // rank 2's step-1 allocation never clears: after the degraded
+        // retries are exhausted it self-declares dead, the survivors
+        // shrink to [0, 1], roll back, and finish — and an identical
+        // rerun produces identical bits (the schedule is declarative).
+        let run_once = |tag: &str| {
+            let path = tmp_ckpt(tag);
+            let mut cfg = ElasticConfig::quick(3, 4, path.clone());
+            cfg.faults = FaultPlan::none().with_oom(2, 1, 64);
+            let report = run_elastic_session(&cfg).unwrap();
+            let _ = std::fs::remove_file(path);
+            report
+        };
+        let report = run_once("oom_shrink_a");
+        report.assert_survivors_agree(4);
+        assert_eq!(report.final_members(), vec![0, 1]);
+        assert_eq!(report.failed.len(), 1, "{report:?}");
+        assert_eq!(report.failed[0].0, 2);
+        assert!(
+            report.failed[0].1.contains("memory budget exhausted"),
+            "{}",
+            report.failed[0].1
+        );
+        for s in &report.survivors {
+            assert!(s.rollbacks >= 1, "shrink must roll back (rank {})", s.rank);
+        }
+
+        let replay = run_once("oom_shrink_b");
+        let a: Vec<u32> = report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        let b: Vec<u32> = replay.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(a, b, "OOM schedule must replay bit-exactly");
     }
 }

@@ -1,0 +1,396 @@
+//! Per-process memory budget for exchange-owned payload memory.
+//!
+//! The paper's villain is out-of-memory death during accumulation:
+//! assumed-sparse gather buffers grow with the worker count until the
+//! node dies.  Densify-then-allreduce fixes the asymptotics, but
+//! through PR 7 our own exchange still had no ceiling — every
+//! free-list in [`super::pool`] grew monotonically and nothing counted
+//! bytes.  This module is that ceiling: a byte-accurate
+//! [`MemoryBudget`] charged by every allocator of exchange-owned
+//! memory (transport payload pools, the coordinator's densify pool,
+//! the fusion arena), with watermark-based pressure levels the rest of
+//! the stack reacts to *before* allocation fails:
+//!
+//! * [`Pressure::Ok`] — below the soft watermark; full-speed plans.
+//! * [`Pressure::Soft`] — above the soft watermark: the pipelined
+//!   ring shrinks its segment size
+//!   ([`crate::collectives::ring::segment_elems_under`]), the cost
+//!   model inflates memory-hungry gather plans
+//!   ([`crate::collectives::cost::memory_pressure_factor`]), and pools
+//!   stop retaining returned buffers (self-draining).
+//! * [`Pressure::Hard`] — at the limit: new charges block on a
+//!   *bounded* wait and then fail typed
+//!   ([`TransportError::Budget`]), never deadlock.
+//!
+//! # Why backpressure cannot deadlock
+//!
+//! A charge waits on this budget's own condvar and on nothing else:
+//! callers charge **before** taking any mailbox or pool lock (the pool
+//! drops its free-list lock before a bounded charge wait), so a
+//! waiting sender never holds a lock a releasing receiver needs.
+//! Every wait is deadline-bounded ([`MemoryBudget::charge`]), so even
+//! the pathological schedule — all ranks blocked charging while all
+//! budget sits in undrained mailboxes — resolves into a typed
+//! [`TransportError::Budget`] within the deadline instead of a hang,
+//! well inside the health monitor's heartbeat deadline and the test
+//! watchdogs.  Lock order is always pool → budget-mutex, and
+//! `release` never blocks.
+//!
+//! Accounting is by buffer capacity: a buffer is charged once when
+//! allocated, stays charged while in flight *or* idle in a pool, and
+//! is released only when actually dropped (eviction, oversized
+//! release, cap overflow).  `peak_bytes() <= limit()` therefore holds
+//! by construction for every completed run — the drill and the
+//! proptests assert it as a hard invariant.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::TransportError;
+
+/// How close the process is to its memory budget.  Encoded into the
+/// coordinator's plan broadcast (see [`Pressure::as_u64`]) so every
+/// rank degrades in lockstep — pressure read locally at send time
+/// would diverge between ranks and break the pipelined ring's
+/// segment-count agreement.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub enum Pressure {
+    /// Held bytes below the soft watermark: no degradation.
+    #[default]
+    Ok,
+    /// Held bytes at or above the soft watermark but below the limit:
+    /// degrade (smaller segments, memory-penalized plans, draining
+    /// pools) instead of allocating toward the wall.
+    Soft,
+    /// Held bytes at the limit: further charges fail typed after a
+    /// bounded wait.
+    Hard,
+}
+
+impl Pressure {
+    /// Stable wire encoding for plan broadcasts.
+    pub fn as_u64(self) -> u64 {
+        match self {
+            Pressure::Ok => 0,
+            Pressure::Soft => 1,
+            Pressure::Hard => 2,
+        }
+    }
+
+    /// Decode [`Pressure::as_u64`]; unknown values clamp to `Hard`
+    /// (the conservative reading of a garbled level).
+    pub fn from_u64(v: u64) -> Self {
+        match v {
+            0 => Pressure::Ok,
+            1 => Pressure::Soft,
+            _ => Pressure::Hard,
+        }
+    }
+
+    /// Short name for reports (`ok` / `soft` / `hard`).
+    pub fn name(self) -> &'static str {
+        match self {
+            Pressure::Ok => "ok",
+            Pressure::Soft => "soft",
+            Pressure::Hard => "hard",
+        }
+    }
+}
+
+/// Snapshot of a budget's accounting, for reports and bench records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BudgetStats {
+    /// Budget ceiling in bytes (`u64::MAX` = unlimited).
+    pub limit: u64,
+    /// Bytes currently charged.
+    pub held: u64,
+    /// High-water mark of `held` over the budget's lifetime.
+    pub peak: u64,
+    /// Charges that had to wait for room at least once.
+    pub stalls: u64,
+    /// Charges that failed typed after the bounded wait.
+    pub denials: u64,
+    /// Degradation events noted by the layers above (segment shrinks,
+    /// pressure-forced plan changes).
+    pub degradations: u64,
+}
+
+/// Byte-accurate, watermark-based memory budget shared by every
+/// payload-allocating layer of one process.  See the module docs for
+/// the charge/release ownership rules and the no-deadlock argument.
+pub struct MemoryBudget {
+    /// Hard ceiling in bytes; `u64::MAX` means unlimited (accounting
+    /// still runs, so an unlimited budget measures the peak a real one
+    /// should be sized from).
+    limit: u64,
+    /// Soft watermark: at or above this, [`MemoryBudget::level`]
+    /// reports [`Pressure::Soft`].
+    soft: u64,
+    held: Mutex<u64>,
+    freed: Condvar,
+    peak: AtomicU64,
+    stalls: AtomicU64,
+    denials: AtomicU64,
+    degradations: AtomicU64,
+}
+
+/// Bounded wait for the infallible allocation paths (`send_slice` and
+/// friends cannot return an error): long enough to ride out transient
+/// pressure, short enough that a true exhaustion panics with the typed
+/// error well inside the watchdog and heartbeat deadlines.
+pub const DEFAULT_CHARGE_WAIT: Duration = Duration::from_millis(500);
+
+impl MemoryBudget {
+    /// An unlimited budget: charges always succeed, but held/peak
+    /// accounting still runs.  This is the default everywhere, so
+    /// budget threading changes nothing until a limit is set.
+    pub fn unlimited() -> Self {
+        Self::limited(u64::MAX)
+    }
+
+    /// A budget with the given byte ceiling and a soft watermark at
+    /// half of it.
+    pub fn limited(limit: u64) -> Self {
+        Self::with_soft(limit, limit / 2)
+    }
+
+    /// A budget with an explicit soft watermark (clamped to `limit`).
+    pub fn with_soft(limit: u64, soft: u64) -> Self {
+        MemoryBudget {
+            limit,
+            soft: soft.min(limit),
+            held: Mutex::new(0),
+            freed: Condvar::new(),
+            peak: AtomicU64::new(0),
+            stalls: AtomicU64::new(0),
+            denials: AtomicU64::new(0),
+            degradations: AtomicU64::new(0),
+        }
+    }
+
+    /// The byte ceiling (`u64::MAX` = unlimited).
+    pub fn limit(&self) -> u64 {
+        self.limit
+    }
+
+    /// Whether a finite ceiling is set.
+    pub fn is_limited(&self) -> bool {
+        self.limit != u64::MAX
+    }
+
+    /// Bytes currently charged.
+    pub fn held(&self) -> u64 {
+        *self.held.lock().unwrap()
+    }
+
+    /// High-water mark of charged bytes.  `peak_bytes() <= limit()`
+    /// holds for every budget whose charges all went through
+    /// [`MemoryBudget::try_charge`] / [`MemoryBudget::charge`].
+    pub fn peak_bytes(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    /// Current pressure level from the held-bytes watermarks.
+    pub fn level(&self) -> Pressure {
+        let held = *self.held.lock().unwrap();
+        if held >= self.limit {
+            Pressure::Hard
+        } else if held >= self.soft {
+            Pressure::Soft
+        } else {
+            Pressure::Ok
+        }
+    }
+
+    /// Charge `bytes` if it fits under the limit; never waits.
+    pub fn try_charge(&self, bytes: u64) -> bool {
+        let mut held = self.held.lock().unwrap();
+        if held.saturating_add(bytes) > self.limit {
+            return false;
+        }
+        *held += bytes;
+        self.peak.fetch_max(*held, Ordering::Relaxed);
+        true
+    }
+
+    /// Charge `bytes`, waiting up to `timeout` for room.  Fails typed
+    /// with [`TransportError::Budget`] at the deadline — the bounded
+    /// wait is what makes backpressure deadlock-free (module docs).
+    ///
+    /// Callers must hold no pool or mailbox lock across this call.
+    pub fn charge(&self, bytes: u64, timeout: Duration) -> Result<(), TransportError> {
+        let deadline = Instant::now() + timeout;
+        let mut held = self.held.lock().unwrap();
+        let mut stalled = false;
+        loop {
+            if held.saturating_add(bytes) <= self.limit {
+                *held += bytes;
+                self.peak.fetch_max(*held, Ordering::Relaxed);
+                return Ok(());
+            }
+            if !stalled {
+                stalled = true;
+                self.stalls.fetch_add(1, Ordering::Relaxed);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                self.denials.fetch_add(1, Ordering::Relaxed);
+                return Err(TransportError::Budget {
+                    requested: bytes,
+                    held: *held,
+                    limit: self.limit,
+                    waited: timeout,
+                });
+            }
+            held = self.freed.wait_timeout(held, deadline - now).unwrap().0;
+        }
+    }
+
+    /// Charge `bytes` unconditionally (allocator rounding adjustments
+    /// only: the rare case where a `Vec` lands with more capacity than
+    /// requested, which must stay on the books so release is
+    /// symmetric).
+    pub(crate) fn charge_excess(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut held = self.held.lock().unwrap();
+        *held = held.saturating_add(bytes);
+        self.peak.fetch_max(*held, Ordering::Relaxed);
+    }
+
+    /// Return `bytes` to the budget and wake waiting chargers.  Never
+    /// blocks beyond the internal mutex.
+    pub fn release(&self, bytes: u64) {
+        if bytes == 0 {
+            return;
+        }
+        let mut held = self.held.lock().unwrap();
+        *held = held.saturating_sub(bytes);
+        drop(held);
+        self.freed.notify_all();
+    }
+
+    /// Record one degradation event (segment shrink, pressure-forced
+    /// plan change, pool drain) for observability.
+    pub fn note_degradation(&self) {
+        self.degradations.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Snapshot the accounting counters.
+    pub fn stats(&self) -> BudgetStats {
+        BudgetStats {
+            limit: self.limit,
+            held: self.held(),
+            peak: self.peak_bytes(),
+            stalls: self.stalls.load(Ordering::Relaxed),
+            denials: self.denials.load(Ordering::Relaxed),
+            degradations: self.degradations.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for MemoryBudget {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+impl std::fmt::Debug for MemoryBudget {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("MemoryBudget")
+            .field("limit", &self.limit)
+            .field("soft", &self.soft)
+            .field("stats", &self.stats())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn unlimited_tracks_peak_without_refusing() {
+        let b = MemoryBudget::unlimited();
+        assert!(!b.is_limited());
+        assert!(b.try_charge(1 << 40));
+        assert!(b.try_charge(1 << 40));
+        assert_eq!(b.level(), Pressure::Ok);
+        assert_eq!(b.peak_bytes(), 2 << 40);
+        b.release(1 << 40);
+        assert_eq!(b.held(), 1 << 40);
+        assert_eq!(b.peak_bytes(), 2 << 40, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn watermarks_drive_pressure_levels() {
+        let b = MemoryBudget::limited(1000);
+        assert_eq!(b.level(), Pressure::Ok);
+        assert!(b.try_charge(499));
+        assert_eq!(b.level(), Pressure::Ok);
+        assert!(b.try_charge(1)); // held = 500 = soft
+        assert_eq!(b.level(), Pressure::Soft);
+        assert!(b.try_charge(500)); // held = 1000 = limit
+        assert_eq!(b.level(), Pressure::Hard);
+        assert!(!b.try_charge(1), "over-limit charge must refuse");
+        b.release(501);
+        assert_eq!(b.level(), Pressure::Ok);
+    }
+
+    #[test]
+    fn charge_times_out_typed_and_counts_denial() {
+        let b = MemoryBudget::limited(100);
+        assert!(b.try_charge(100));
+        let err = b.charge(1, Duration::from_millis(20)).unwrap_err();
+        match err {
+            TransportError::Budget { requested, held, limit, .. } => {
+                assert_eq!((requested, held, limit), (1, 100, 100));
+            }
+            other => panic!("expected Budget, got {other}"),
+        }
+        let s = b.stats();
+        assert_eq!(s.denials, 1);
+        assert_eq!(s.stalls, 1);
+        assert_eq!(s.peak, 100);
+        assert!(s.peak <= s.limit, "hard invariant");
+    }
+
+    #[test]
+    fn charge_wakes_when_room_is_released() {
+        let b = Arc::new(MemoryBudget::limited(100));
+        assert!(b.try_charge(100));
+        let waiter = {
+            let b = b.clone();
+            std::thread::spawn(move || b.charge(50, Duration::from_secs(5)))
+        };
+        std::thread::sleep(Duration::from_millis(30));
+        b.release(60);
+        waiter.join().unwrap().expect("release must unblock the charge");
+        assert_eq!(b.held(), 90);
+        assert!(b.peak_bytes() <= b.limit());
+    }
+
+    #[test]
+    fn pressure_roundtrips_through_u64() {
+        for p in [Pressure::Ok, Pressure::Soft, Pressure::Hard] {
+            assert_eq!(Pressure::from_u64(p.as_u64()), p);
+        }
+        assert_eq!(Pressure::from_u64(99), Pressure::Hard, "garbage clamps hard");
+        assert!(Pressure::Ok < Pressure::Soft && Pressure::Soft < Pressure::Hard);
+    }
+
+    #[test]
+    fn degradations_and_stats_snapshot() {
+        let b = MemoryBudget::limited(64);
+        b.note_degradation();
+        b.note_degradation();
+        assert!(b.try_charge(10));
+        let s = b.stats();
+        assert_eq!(s.degradations, 2);
+        assert_eq!(s.held, 10);
+        assert_eq!(s.limit, 64);
+    }
+}

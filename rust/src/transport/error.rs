@@ -41,6 +41,22 @@ pub enum TransportError {
     },
     /// A message arrived but failed validation.
     Corrupt(CorruptKind),
+    /// A memory-budget charge did not fit under the process limit
+    /// within its bounded wait (see [`crate::transport::MemoryBudget`]).
+    /// This is how backpressure fails *typed* instead of deadlocking
+    /// the condvar mailboxes: every budget wait has a deadline, and the
+    /// elastic runtime treats this like any other recoverable fault —
+    /// retry with a degraded plan, then shrink.
+    Budget {
+        /// Bytes the charge asked for.
+        requested: u64,
+        /// Bytes already charged when the wait expired.
+        held: u64,
+        /// The budget's byte ceiling.
+        limit: u64,
+        /// How long the charge waited for room.
+        waited: Duration,
+    },
 }
 
 /// What exactly failed validation on a received message.
@@ -82,6 +98,12 @@ impl fmt::Display for TransportError {
                 write!(f, "rank {rank} is dead (no further messages will arrive)")
             }
             TransportError::Corrupt(kind) => write!(f, "corrupt message: {kind}"),
+            TransportError::Budget { requested, held, limit, waited } => write!(
+                f,
+                "memory budget exhausted: {requested} B requested with {held}/{limit} B \
+                 held (waited {:.0} ms)",
+                waited.as_secs_f64() * 1e3
+            ),
         }
     }
 }
@@ -191,5 +213,14 @@ mod tests {
         assert!(e.to_string().contains("150 ms"), "{e}");
         let e = TransportError::Corrupt(CorruptKind::WrongType { expected: "F32", got: "I32" });
         assert!(e.to_string().contains("expected F32"), "{e}");
+        let e = TransportError::Budget {
+            requested: 4096,
+            held: 900,
+            limit: 1000,
+            waited: Duration::from_millis(500),
+        };
+        assert!(e.to_string().contains("4096 B"), "{e}");
+        assert!(e.to_string().contains("900/1000"), "{e}");
+        assert!(e.to_string().contains("500 ms"), "{e}");
     }
 }

@@ -99,6 +99,27 @@ pub struct KillSpec {
     pub cycle: usize,
 }
 
+/// "Rank `rank`'s budget charge fails at exchange step `step` for its
+/// first `attempts` attempts" — deterministic allocation-failure
+/// injection, the memory twin of [`KillSpec`].  Like kills, OOM
+/// schedules are enforced by the elastic executor (the worker treats
+/// the step's budget acquire as exhausted and votes to retry with a
+/// degraded plan), not by the transport: they are declarative, draw
+/// nothing from the per-link RNG streams, and therefore never perturb
+/// a seeded drop/corrupt sequence when added to an existing plan.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OomSpec {
+    /// The rank whose allocation fails.
+    pub rank: usize,
+    /// The exchange step (cycle) at which it fails.
+    pub step: usize,
+    /// How many consecutive attempts of that step fail before the
+    /// pressure "clears" (degradation freed enough memory).  With
+    /// `attempts` at or above the executor's retry limit the step
+    /// never succeeds and the group must shrink around the rank.
+    pub attempts: usize,
+}
+
 /// A complete, seedable chaos scenario: link-level fault rules plus a
 /// kill schedule.
 #[derive(Debug, Clone, Default)]
@@ -109,6 +130,8 @@ pub struct FaultPlan {
     pub links: Vec<LinkFault>,
     /// Rank kill schedule.
     pub kills: Vec<KillSpec>,
+    /// Allocation-failure (budget exhaustion) schedule.
+    pub ooms: Vec<OomSpec>,
 }
 
 impl FaultPlan {
@@ -134,10 +157,29 @@ impl FaultPlan {
         self
     }
 
+    /// Schedule `rank`'s budget charge to fail at `step` for the first
+    /// `attempts` attempts.
+    pub fn with_oom(mut self, rank: usize, step: usize, attempts: usize) -> Self {
+        self.ooms.push(OomSpec { rank, step, attempts });
+        self
+    }
+
     /// The cycle at which `rank` is scheduled to die, if any (the
     /// earliest, should a plan list several).
     pub fn kill_cycle(&self, rank: usize) -> Option<usize> {
         self.kills.iter().filter(|k| k.rank == rank).map(|k| k.cycle).min()
+    }
+
+    /// How many attempts of `step` fail with injected budget
+    /// exhaustion on `rank` (the largest schedule, should several
+    /// overlap); 0 means the step allocates normally.
+    pub fn oom_attempts(&self, rank: usize, step: usize) -> usize {
+        self.ooms
+            .iter()
+            .filter(|o| o.rank == rank && o.step == step)
+            .map(|o| o.attempts)
+            .max()
+            .unwrap_or(0)
     }
 
     /// Whether any link-level fault rule exists (kills are enforced
@@ -426,6 +468,10 @@ impl Transport for FaultyTransport {
     fn pool_stats(&self) -> PoolStats {
         self.inner.pool_stats()
     }
+
+    fn memory_budget(&self) -> Option<Arc<super::MemoryBudget>> {
+        self.inner.memory_budget()
+    }
 }
 
 #[cfg(test)]
@@ -520,6 +566,40 @@ mod tests {
         assert_eq!(plan.kill_cycle(0), Some(1));
         assert_eq!(plan.kill_cycle(1), None);
         assert!(!plan.has_link_faults());
+    }
+
+    #[test]
+    fn oom_schedule_accessors() {
+        let plan = FaultPlan::none()
+            .with_oom(1, 4, 2)
+            .with_oom(1, 4, 1) // overlapping schedules: the largest wins
+            .with_oom(0, 2, 1);
+        assert_eq!(plan.oom_attempts(1, 4), 2);
+        assert_eq!(plan.oom_attempts(0, 2), 1);
+        assert_eq!(plan.oom_attempts(1, 2), 0);
+        assert_eq!(plan.oom_attempts(2, 4), 0);
+        assert!(!plan.has_link_faults(), "OOM schedules are not link faults");
+    }
+
+    #[test]
+    fn oom_schedule_does_not_perturb_link_fault_streams() {
+        // OomSpec is declarative — adding one to a seeded plan must
+        // leave every drop/corrupt decision bit-identical, or chaos
+        // scenarios would stop being replayable across plan edits.
+        let base = FaultPlan::seeded(99).with_link(LinkFault::on(0, 1).drop_p(0.5));
+        let with_oom = base.clone().with_oom(1, 3, 2);
+        let (a, b) = (faulty(2, base), faulty(2, with_oom));
+        for i in 0..200u64 {
+            a.send(0, 1, i, Payload::I32(vec![i as i32]));
+            b.send(0, 1, i, Payload::I32(vec![i as i32]));
+        }
+        assert_eq!(a.injected(), b.injected());
+        let delivered = |t: &FaultyTransport| {
+            (0..200u64)
+                .map(|i| t.try_recv(1, 0, i, Some(Duration::from_millis(1))).is_ok())
+                .collect::<Vec<_>>()
+        };
+        assert_eq!(delivered(&a), delivered(&b));
     }
 
     #[test]

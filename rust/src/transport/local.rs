@@ -14,9 +14,10 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::budget::MemoryBudget;
 use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
 use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport, TransportError};
@@ -51,13 +52,25 @@ pub struct LocalTransport {
     /// sharing the same [`PoolStats`] counters as the f32 pools.
     pools16: Vec<Mutex<Vec<Vec<u16>>>>,
     pool_counters: PoolCounters,
+    /// Per-process memory budget charged by every pooled payload
+    /// allocation (see [`MemoryBudget`]); unlimited by default.
+    budget: Arc<MemoryBudget>,
     /// Ranks declared dead by [`Transport::mark_dead`].
     dead: Vec<AtomicBool>,
 }
 
 impl LocalTransport {
-    /// Create a transport connecting `nranks` in-process ranks.
+    /// Create a transport connecting `nranks` in-process ranks with an
+    /// unlimited memory budget (peak bytes are still tracked).
     pub fn new(nranks: usize) -> Self {
+        Self::with_budget(nranks, Arc::new(MemoryBudget::unlimited()))
+    }
+
+    /// Create a transport whose payload pools charge `budget` for every
+    /// buffer they allocate or retain.  The budget is shared — hand the
+    /// same `Arc` to the fusion arena and densify pool for a
+    /// process-accurate total.
+    pub fn with_budget(nranks: usize, budget: Arc<MemoryBudget>) -> Self {
         assert!(nranks > 0);
         Self {
             boxes: (0..nranks).map(|_| Mailbox::new()).collect(),
@@ -65,29 +78,35 @@ impl LocalTransport {
             pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pool_counters: PoolCounters::default(),
+            budget,
             dead: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
         }
+    }
+
+    /// The memory budget this transport charges.
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
     }
 
     /// Take a cleared buffer with capacity for `len` elements from
     /// `rank`'s f32 pool (see [`acquire_from`] for the discipline).
     fn acquire(&self, rank: usize, len: usize) -> Vec<f32> {
-        acquire_from(&self.pools[rank], &self.pool_counters, len)
+        acquire_from(&self.pools[rank], &self.pool_counters, &self.budget, len)
     }
 
     /// Return a delivered payload buffer to `rank`'s f32 pool.
     fn release(&self, rank: usize, buf: Vec<f32>) {
-        release_to(&self.pools[rank], &self.pool_counters, buf)
+        release_to(&self.pools[rank], &self.pool_counters, &self.budget, buf)
     }
 
     /// Take a cleared u16 wire buffer from `rank`'s 16-bit pool.
     fn acquire16(&self, rank: usize, len: usize) -> Vec<u16> {
-        acquire_from(&self.pools16[rank], &self.pool_counters, len)
+        acquire_from(&self.pools16[rank], &self.pool_counters, &self.budget, len)
     }
 
     /// Return a delivered 16-bit wire buffer to `rank`'s pool.
     fn release16(&self, rank: usize, buf: Vec<u16>) {
-        release_to(&self.pools16[rank], &self.pool_counters, buf)
+        release_to(&self.pools16[rank], &self.pool_counters, &self.budget, buf)
     }
 
     /// Enqueue a message and wake the receiving rank's waiters.
@@ -329,6 +348,10 @@ impl Transport for LocalTransport {
     fn pool_stats(&self) -> PoolStats {
         self.pool_counters.snapshot()
     }
+
+    fn memory_budget(&self) -> Option<Arc<MemoryBudget>> {
+        Some(self.budget.clone())
+    }
 }
 
 #[cfg(test)]
@@ -488,6 +511,22 @@ mod tests {
         let steady = t.pool_stats();
         assert_eq!(steady.allocated, warm, "wire16 steady state must not allocate: {steady:?}");
         assert!(steady.recycled > warm);
+    }
+
+    #[test]
+    fn budget_tracks_in_flight_and_pooled_bytes() {
+        let budget = Arc::new(MemoryBudget::limited(1 << 20));
+        let t = LocalTransport::with_budget(2, budget.clone());
+        t.send_slice(0, 1, 0, &[0.0; 256]);
+        // in flight: charged at the sender's acquire
+        assert_eq!(budget.held(), 256 * 4);
+        let mut out = [0.0; 256];
+        t.recv_into(1, 0, 0, &mut out);
+        // delivered and returned to the receiver's pool — still charged,
+        // because the pool retains the bytes for reuse
+        assert_eq!(budget.held(), 256 * 4);
+        assert!(budget.peak_bytes() >= 256 * 4);
+        assert_eq!(t.pool_stats().bytes_held, 256 * 4);
     }
 
     #[test]

@@ -26,6 +26,7 @@
 //! loses ranks.
 #![warn(missing_docs)]
 
+pub mod budget;
 pub mod error;
 pub mod faulty;
 pub mod local;
@@ -35,8 +36,9 @@ pub mod socket;
 pub mod sub;
 pub mod wire;
 
+pub use budget::{BudgetStats, MemoryBudget, Pressure};
 pub use error::{CorruptKind, Fnv1a, TransportError};
-pub use faulty::{FaultPlan, FaultyTransport, InjectStats, LinkFault};
+pub use faulty::{FaultPlan, FaultyTransport, InjectStats, LinkFault, OomSpec};
 pub use local::LocalTransport;
 pub use shm::ShmTransport;
 pub use socket::{SocketHub, SocketMode, SocketTransport};
@@ -44,6 +46,7 @@ pub use sub::SubTransport;
 pub use wire::WireFormat;
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
 use std::time::Duration;
 
 /// Typed message payload. Collectives move f32 data and occasionally
@@ -305,6 +308,17 @@ pub trait Transport: Send + Sync {
         PoolStats::default()
     }
 
+    /// The [`MemoryBudget`] this transport charges its payload memory
+    /// against, if it has one.  Budget-aware layers above the
+    /// transport (e.g. the gradient-exchange engine's densify pool and
+    /// fusion arena) charge the *same* budget so one per-process
+    /// ceiling covers everything; wrappers delegate to their inner
+    /// transport.  `None` (the default) means the transport does no
+    /// accounting — callers should treat that as unlimited.
+    fn memory_budget(&self) -> Option<Arc<MemoryBudget>> {
+        None
+    }
+
     // ---- bounded-time / fault-aware surface -------------------------
     //
     // Everything below has a conservative default so existing
@@ -487,12 +501,27 @@ impl TransportKind {
     /// Construct a transport of this kind connecting `nranks` ranks.
     /// Only `Socket` can fail (rendezvous is real I/O).
     pub fn create(self, nranks: usize) -> anyhow::Result<std::sync::Arc<dyn Transport>> {
+        self.create_with_budget(nranks, std::sync::Arc::new(MemoryBudget::unlimited()))
+    }
+
+    /// [`TransportKind::create`] charging all payload-pool memory
+    /// against `budget` — the per-process [`MemoryBudget`] every
+    /// budgeted drill threads through its transport stack.
+    pub fn create_with_budget(
+        self,
+        nranks: usize,
+        budget: std::sync::Arc<MemoryBudget>,
+    ) -> anyhow::Result<std::sync::Arc<dyn Transport>> {
         Ok(match self {
-            TransportKind::Local => std::sync::Arc::new(LocalTransport::new(nranks)),
-            TransportKind::Shm => std::sync::Arc::new(ShmTransport::new(nranks)),
-            TransportKind::Socket => {
-                std::sync::Arc::new(SocketHub::new(nranks, SocketMode::Unix)?)
+            TransportKind::Local => {
+                std::sync::Arc::new(LocalTransport::with_budget(nranks, budget))
             }
+            TransportKind::Shm => std::sync::Arc::new(ShmTransport::with_budget(nranks, budget)),
+            TransportKind::Socket => std::sync::Arc::new(SocketHub::new_with_budget(
+                nranks,
+                SocketMode::Unix,
+                budget,
+            )?),
         })
     }
 }
@@ -512,6 +541,16 @@ pub struct PoolStats {
     pub allocated: u64,
     /// Buffers returned to a pool after delivery.
     pub returned: u64,
+    /// Bytes currently sitting idle on the free lists (buffer handles
+    /// alone hide the failure mode the memory budget exists for: one
+    /// retained outlier buffer is one handle but megabytes).
+    pub bytes_held: u64,
+    /// High-water mark of `bytes_held` over the transport's lifetime.
+    pub bytes_peak: u64,
+    /// Buffers dropped instead of pooled: cap overflow, oversized
+    /// release above the retention watermark, budget-pressure drains,
+    /// and allocation-path evictions for budget room.
+    pub evicted: u64,
 }
 
 /// Aggregate traffic counters, cheap enough to keep always-on.

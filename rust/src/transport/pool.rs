@@ -1,22 +1,63 @@
 //! Free-list payload-buffer pools shared by the in-process transports.
 //!
-//! [`LocalTransport`](super::LocalTransport) and
-//! [`ShmTransport`](super::ShmTransport) implement the same pooled
-//! slice API (`send_slice` / `recv_into` / `recv_add_into` and the
-//! 16-bit wire variants).  Both keep one free list of reusable payload
-//! buffers per rank and per element type; this module holds the single
-//! acquire/release implementation so the best-fit discipline and the
-//! shared [`PoolStats`](super::PoolStats) counters cannot drift apart
-//! between transports.
+//! [`LocalTransport`](super::LocalTransport),
+//! [`ShmTransport`](super::ShmTransport) and the socket endpoints
+//! implement the same pooled slice API (`send_slice` / `recv_into` /
+//! `recv_add_into` and the 16-bit wire variants).  Each keeps free
+//! lists of reusable payload buffers per rank and per element type;
+//! this module holds the single acquire/release implementation so the
+//! best-fit discipline, the byte accounting, and the shared
+//! [`PoolStats`](super::PoolStats) counters cannot drift apart between
+//! transports.
+//!
+//! # Budget integration
+//!
+//! Every pool is charged against one per-process
+//! [`MemoryBudget`](super::MemoryBudget).  A buffer is charged once
+//! when freshly allocated ([`acquire_from`]'s miss path), stays
+//! charged while in flight *or* idle on a free list, and is released
+//! only when the buffer is actually dropped.  Three things drop
+//! buffers:
+//!
+//! * **eviction for room** — an allocating `acquire_from` that does
+//!   not fit under the budget evicts the largest idle buffers from its
+//!   own pool before waiting;
+//! * **oversized release** — [`release_to`] drops buffers above the
+//!   retention watermark instead of pooling them, so one outlier
+//!   tensor can no longer pin an outlier-sized buffer on every rank
+//!   pair forever (the unbounded-retention bug best-fit reuse alone
+//!   never heals);
+//! * **pressure drain** — under [`Pressure::Soft`](super::Pressure) or
+//!   worse, `release_to` stops retaining anything, so every completed
+//!   receive returns bytes to the budget and wakes blocked chargers.
+//!
+//! The charge wait is deadline-bounded and taken with **no pool lock
+//! held** (lock order is pool → budget, and the pool lock is dropped
+//! before any wait), which together with the budget's own no-deadlock
+//! argument (see [`super::budget`]) keeps backpressure from ever
+//! deadlocking the condvar mailboxes.
+//!
+//! Only buffers born in [`acquire_from`] may be handed to
+//! [`release_to`] — the transports' existing discipline.  (The chaos
+//! wrapper's plain `send` path allocates outside the pools; its
+//! buffers are never released here, so accounting stays consistent.)
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
-use super::PoolStats;
+use super::budget::DEFAULT_CHARGE_WAIT;
+use super::{MemoryBudget, PoolStats, Pressure};
 
 /// Per-rank cap on pooled buffers; beyond this, returned buffers are
 /// dropped (bounds worst-case held memory at cap × largest payload).
 pub(crate) const POOL_CAP: usize = 64;
+
+/// Largest buffer [`release_to`] will retain on a free list under an
+/// unlimited budget: big enough for every steady-state payload the
+/// exchange produces (fusion-region chunks, ring segments), small
+/// enough that a multi-megabyte outlier is dropped instead of pinned.
+/// Finite budgets tighten this to a quarter of the limit.
+pub(crate) const DEFAULT_RETAIN_BYTES: u64 = 4 * 1024 * 1024;
 
 /// Always-on pool counters backing [`PoolStats`] snapshots.  One set
 /// of counters serves every pool of a transport (f32 and u16 alike),
@@ -26,6 +67,9 @@ pub(crate) struct PoolCounters {
     recycled: AtomicU64,
     allocated: AtomicU64,
     returned: AtomicU64,
+    bytes_held: AtomicU64,
+    bytes_peak: AtomicU64,
+    evicted: AtomicU64,
 }
 
 impl PoolCounters {
@@ -35,7 +79,36 @@ impl PoolCounters {
             recycled: self.recycled.load(Ordering::Relaxed),
             allocated: self.allocated.load(Ordering::Relaxed),
             returned: self.returned.load(Ordering::Relaxed),
+            bytes_held: self.bytes_held.load(Ordering::Relaxed),
+            bytes_peak: self.bytes_peak.load(Ordering::Relaxed),
+            evicted: self.evicted.load(Ordering::Relaxed),
         }
+    }
+
+    fn held_add(&self, bytes: u64) {
+        let now = self.bytes_held.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        self.bytes_peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn held_sub(&self, bytes: u64) {
+        // fetch_update to saturate: an uncharged chaos-path buffer
+        // that slipped into a pool must not wrap the gauge
+        let _ = self.bytes_held.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| {
+            Some(v.saturating_sub(bytes))
+        });
+    }
+}
+
+fn cap_bytes<T>(buf: &Vec<T>) -> u64 {
+    (buf.capacity() * std::mem::size_of::<T>().max(1)) as u64
+}
+
+/// The watermark above which [`release_to`] drops instead of pools.
+fn retain_watermark(budget: &MemoryBudget) -> u64 {
+    if budget.is_limited() {
+        DEFAULT_RETAIN_BYTES.min(budget.limit() / 4)
+    } else {
+        DEFAULT_RETAIN_BYTES
     }
 }
 
@@ -46,46 +119,98 @@ impl PoolCounters {
 /// f32 payload pools and the u16 wire pools of every transport, so the
 /// discipline and the shared [`PoolStats`] counters cannot drift
 /// apart.
+///
+/// A pool miss charges the fresh allocation against `budget`: first
+/// with a lock-free refusal, then by evicting the largest idle buffers
+/// of this pool, and finally — pool lock dropped — by a
+/// deadline-bounded wait for other threads to release.  A wait that
+/// expires panics with the typed [`TransportError::Budget`]
+/// (`super::TransportError`) message: the infallible slice API cannot
+/// return errors, and a budget sized below the exchange's working set
+/// is a configuration bug, not a recoverable condition.  Recoverable
+/// budget pressure is handled *before* this point by degradation
+/// (smaller segments, draining pools).
 pub(crate) fn acquire_from<T>(
     pool: &Mutex<Vec<Vec<T>>>,
     counters: &PoolCounters,
+    budget: &MemoryBudget,
     len: usize,
 ) -> Vec<T> {
-    let mut pool = pool.lock().unwrap();
-    let fit = pool
+    let esz = std::mem::size_of::<T>().max(1);
+    let mut pool_g = pool.lock().unwrap();
+    let fit = pool_g
         .iter()
         .enumerate()
         .filter(|(_, b)| b.capacity() >= len)
         .min_by_key(|(_, b)| b.capacity())
         .map(|(i, _)| i);
-    match fit {
-        Some(i) => {
-            let mut buf = pool.swap_remove(i);
-            drop(pool);
-            counters.recycled.fetch_add(1, Ordering::Relaxed);
-            buf.clear();
-            buf
-        }
-        None => {
-            drop(pool);
-            counters.allocated.fetch_add(1, Ordering::Relaxed);
-            Vec::with_capacity(len)
+    if let Some(i) = fit {
+        let mut buf = pool_g.swap_remove(i);
+        drop(pool_g);
+        counters.held_sub(cap_bytes(&buf));
+        counters.recycled.fetch_add(1, Ordering::Relaxed);
+        buf.clear();
+        return buf;
+    }
+    // Miss: a fresh allocation must fit under the budget.  Make room
+    // by evicting this pool's idle buffers, largest first.
+    let need = (len * esz) as u64;
+    let mut charged = budget.try_charge(need);
+    while !charged {
+        let largest = pool_g
+            .iter()
+            .enumerate()
+            .max_by_key(|(_, b)| b.capacity())
+            .map(|(i, _)| i);
+        let Some(i) = largest else { break };
+        let victim = pool_g.swap_remove(i);
+        let vb = cap_bytes(&victim);
+        counters.held_sub(vb);
+        counters.evicted.fetch_add(1, Ordering::Relaxed);
+        budget.release(vb);
+        charged = budget.try_charge(need);
+    }
+    drop(pool_g);
+    if !charged {
+        // bounded backpressure with no locks held (see module docs)
+        if let Err(e) = budget.charge(need, DEFAULT_CHARGE_WAIT) {
+            panic!("pool acquire of {len} elems: {e}");
         }
     }
+    counters.allocated.fetch_add(1, Ordering::Relaxed);
+    let buf: Vec<T> = Vec::with_capacity(len);
+    // keep the books symmetric if the allocator rounded capacity up
+    budget.charge_excess(cap_bytes(&buf).saturating_sub(need));
+    buf
 }
 
-/// Return a delivered buffer to its free-list pool (dropped beyond
-/// [`POOL_CAP`]).
+/// Return a delivered buffer to its free-list pool.  Dropped — with
+/// its bytes released to `budget` — beyond [`POOL_CAP`], above the
+/// retention watermark (the oversized-outlier fix), or whenever the
+/// budget is under pressure (self-draining backpressure; counted as a
+/// degradation event).
 pub(crate) fn release_to<T>(
     pool: &Mutex<Vec<Vec<T>>>,
     counters: &PoolCounters,
+    budget: &MemoryBudget,
     buf: Vec<T>,
 ) {
-    let mut pool = pool.lock().unwrap();
-    if pool.len() < POOL_CAP {
-        pool.push(buf);
-        drop(pool);
-        counters.returned.fetch_add(1, Ordering::Relaxed);
+    let bytes = cap_bytes(&buf);
+    let drain = budget.is_limited() && budget.level() != Pressure::Ok;
+    if !drain && bytes <= retain_watermark(budget) {
+        let mut pool_g = pool.lock().unwrap();
+        if pool_g.len() < POOL_CAP {
+            pool_g.push(buf);
+            drop(pool_g);
+            counters.returned.fetch_add(1, Ordering::Relaxed);
+            counters.held_add(bytes);
+            return;
+        }
+    }
+    counters.evicted.fetch_add(1, Ordering::Relaxed);
+    budget.release(bytes);
+    if drain {
+        budget.note_degradation();
     }
 }
 
@@ -93,32 +218,133 @@ pub(crate) fn release_to<T>(
 mod tests {
     use super::*;
 
+    fn unlimited() -> MemoryBudget {
+        MemoryBudget::unlimited()
+    }
+
     #[test]
     fn acquire_allocates_then_recycles_best_fit() {
         let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
         let counters = PoolCounters::default();
-        let small = acquire_from(&pool, &counters, 4);
-        let large = acquire_from(&pool, &counters, 1024);
+        let budget = unlimited();
+        let small = acquire_from(&pool, &counters, &budget, 4);
+        let large = acquire_from(&pool, &counters, &budget, 1024);
         assert_eq!(counters.snapshot().allocated, 2);
-        release_to(&pool, &counters, large);
-        release_to(&pool, &counters, small);
+        assert_eq!(budget.held(), (4 + 1024) * 4, "fresh allocations are charged");
+        release_to(&pool, &counters, &budget, large);
+        release_to(&pool, &counters, &budget, small);
         // a small request must take the small buffer, not the large one
-        let got = acquire_from(&pool, &counters, 4);
+        let got = acquire_from(&pool, &counters, &budget, 4);
         assert!(got.capacity() < 1024, "best fit must not steal the large buffer");
         let s = counters.snapshot();
         assert_eq!(s.recycled, 1);
         assert_eq!(s.returned, 2);
         assert_eq!(s.allocated, 2);
+        assert_eq!(s.evicted, 0);
+        assert_eq!(budget.held(), (4 + 1024) * 4, "pooled + in-flight stay charged");
     }
 
     #[test]
     fn release_drops_beyond_cap() {
         let pool: Mutex<Vec<Vec<u16>>> = Mutex::new(Vec::new());
         let counters = PoolCounters::default();
+        let budget = unlimited();
         for _ in 0..POOL_CAP + 5 {
-            release_to(&pool, &counters, Vec::with_capacity(1));
+            release_to(&pool, &counters, &budget, Vec::with_capacity(1));
         }
         assert_eq!(pool.lock().unwrap().len(), POOL_CAP);
-        assert_eq!(counters.snapshot().returned, POOL_CAP as u64);
+        let s = counters.snapshot();
+        assert_eq!(s.returned, POOL_CAP as u64);
+        assert_eq!(s.evicted, 5, "cap overflow drops are counted");
+    }
+
+    #[test]
+    fn bytes_gauge_tracks_idle_pool_contents() {
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let budget = unlimited();
+        let a = acquire_from(&pool, &counters, &budget, 100);
+        let b = acquire_from(&pool, &counters, &budget, 200);
+        assert_eq!(counters.snapshot().bytes_held, 0, "in-flight is not idle");
+        release_to(&pool, &counters, &budget, a);
+        release_to(&pool, &counters, &budget, b);
+        let s = counters.snapshot();
+        assert_eq!(s.bytes_held, (100 + 200) * 4);
+        assert_eq!(s.bytes_peak, (100 + 200) * 4);
+        let _again = acquire_from(&pool, &counters, &budget, 150);
+        let s = counters.snapshot();
+        assert_eq!(s.bytes_held, 100 * 4, "recycle takes the 200-cap buffer out");
+        assert_eq!(s.bytes_peak, (100 + 200) * 4, "peak is a high-water mark");
+    }
+
+    #[test]
+    fn oversized_release_is_dropped_not_pinned() {
+        // the unbounded-retention regression: one 8 MB outlier used to
+        // stay pooled forever because best-fit never evicts
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let budget = unlimited();
+        let outlier_elems = (2 * DEFAULT_RETAIN_BYTES as usize) / 4; // 8 MiB of f32
+        let outlier = acquire_from(&pool, &counters, &budget, outlier_elems);
+        release_to(&pool, &counters, &budget, outlier);
+        let s = counters.snapshot();
+        assert_eq!(s.evicted, 1, "outlier must be dropped, not pooled");
+        assert_eq!(s.returned, 0);
+        assert_eq!(s.bytes_held, 0);
+        assert!(pool.lock().unwrap().is_empty());
+        assert_eq!(budget.held(), 0, "dropped bytes go back to the budget");
+        // a normal-sized buffer is still retained
+        let normal = acquire_from(&pool, &counters, &budget, 1024);
+        release_to(&pool, &counters, &budget, normal);
+        assert_eq!(counters.snapshot().returned, 1);
+    }
+
+    #[test]
+    fn allocation_evicts_idle_buffers_for_room() {
+        // budget fits exactly 2048 f32 elems; with a 1024-elem buffer
+        // idle in the pool, a 2048-elem request must evict it for room
+        // rather than refuse (soft == limit so the release stays pooled)
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let budget = MemoryBudget::with_soft(2048 * 4, 2048 * 4);
+        let a = acquire_from(&pool, &counters, &budget, 1024);
+        release_to(&pool, &counters, &budget, a);
+        assert_eq!(counters.snapshot().returned, 1);
+        let big = acquire_from(&pool, &counters, &budget, 2048);
+        assert_eq!(big.capacity(), 2048);
+        let s = counters.snapshot();
+        assert_eq!(s.evicted, 1, "{s:?}");
+        assert_eq!(s.bytes_held, 0);
+        assert_eq!(budget.held(), 2048 * 4);
+        assert!(budget.peak_bytes() <= budget.limit(), "hard invariant");
+    }
+
+    #[test]
+    fn pressure_drains_releases_and_counts_degradations() {
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let budget = MemoryBudget::limited(1000 * 4);
+        let buf = acquire_from(&pool, &counters, &budget, 600); // > soft (500 elems)
+        assert_eq!(budget.level(), Pressure::Soft);
+        release_to(&pool, &counters, &budget, buf);
+        let s = counters.snapshot();
+        assert_eq!(s.returned, 0, "under pressure the pool must not retain");
+        assert_eq!(s.evicted, 1);
+        assert_eq!(budget.held(), 0);
+        assert!(budget.stats().degradations >= 1);
+    }
+
+    #[test]
+    fn exhausted_budget_panics_typed_after_bounded_wait() {
+        let pool: Mutex<Vec<Vec<f32>>> = Mutex::new(Vec::new());
+        let counters = PoolCounters::default();
+        let budget = MemoryBudget::limited(16);
+        budget.try_charge(16);
+        let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            let _ = acquire_from(&pool, &counters, &budget, 64);
+        }));
+        let msg = *caught.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("memory budget exhausted"), "{msg}");
+        assert!(budget.peak_bytes() <= budget.limit());
     }
 }

@@ -19,9 +19,10 @@
 
 use std::collections::{HashMap, VecDeque};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Condvar, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
+use super::budget::MemoryBudget;
 use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
 use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport, TransportError};
@@ -59,13 +60,23 @@ pub struct ShmTransport {
     /// [`PoolStats`] counters as the f32 pools.
     pools16: Vec<Mutex<Vec<Vec<u16>>>>,
     pool_counters: PoolCounters,
+    /// Per-process memory budget charged by every pooled payload
+    /// allocation (see [`MemoryBudget`]); unlimited by default.
+    budget: Arc<MemoryBudget>,
     /// Ranks declared dead by [`Transport::mark_dead`].
     dead: Vec<AtomicBool>,
 }
 
 impl ShmTransport {
-    /// Create a transport connecting `nranks` in-process ranks.
+    /// Create a transport connecting `nranks` in-process ranks with an
+    /// unlimited memory budget (peak bytes are still tracked).
     pub fn new(nranks: usize) -> Self {
+        Self::with_budget(nranks, Arc::new(MemoryBudget::unlimited()))
+    }
+
+    /// Create a transport whose payload pools charge `budget` for every
+    /// buffer they allocate or retain.
+    pub fn with_budget(nranks: usize, budget: Arc<MemoryBudget>) -> Self {
         assert!(nranks > 0);
         Self {
             nranks,
@@ -74,8 +85,14 @@ impl ShmTransport {
             pools: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pools16: (0..nranks).map(|_| Mutex::new(Vec::new())).collect(),
             pool_counters: PoolCounters::default(),
+            budget,
             dead: (0..nranks).map(|_| AtomicBool::new(false)).collect(),
         }
+    }
+
+    /// The memory budget this transport charges.
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.budget
     }
 
     fn channel(&self, from: usize, to: usize) -> &PairChannel {
@@ -183,7 +200,7 @@ impl Transport for ShmTransport {
     }
 
     fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
-        let mut buf = acquire_from(&self.pools[from], &self.pool_counters, data.len());
+        let mut buf = acquire_from(&self.pools[from], &self.pool_counters, &self.budget, data.len());
         buf.extend_from_slice(data);
         self.send(from, to, tag, Payload::F32(buf));
     }
@@ -208,11 +225,11 @@ impl Transport for ShmTransport {
     ) -> Result<(), TransportError> {
         let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
         if let Err(e) = super::check_len(out.len(), v.len()) {
-            release_to(&self.pools[to], &self.pool_counters, v);
+            release_to(&self.pools[to], &self.pool_counters, &self.budget, v);
             return Err(e);
         }
         out.copy_from_slice(&v);
-        release_to(&self.pools[to], &self.pool_counters, v);
+        release_to(&self.pools[to], &self.pool_counters, &self.budget, v);
         Ok(())
     }
 
@@ -226,13 +243,13 @@ impl Transport for ShmTransport {
     ) -> Result<(), TransportError> {
         let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
         if let Err(e) = super::check_len(acc.len(), v.len()) {
-            release_to(&self.pools[to], &self.pool_counters, v);
+            release_to(&self.pools[to], &self.pool_counters, &self.budget, v);
             return Err(e);
         }
         for (a, x) in acc.iter_mut().zip(&v) {
             *a += x;
         }
-        release_to(&self.pools[to], &self.pool_counters, v);
+        release_to(&self.pools[to], &self.pool_counters, &self.budget, v);
         Ok(())
     }
 
@@ -240,8 +257,12 @@ impl Transport for ShmTransport {
         match w {
             WireFormat::F32 => self.send_slice(from, to, tag, data),
             _ => {
-                let mut buf =
-                    acquire_from(&self.pools16[from], &self.pool_counters, data.len());
+                let mut buf = acquire_from(
+                    &self.pools16[from],
+                    &self.pool_counters,
+                    &self.budget,
+                    data.len(),
+                );
                 w.encode_into(data, &mut buf);
                 self.send(from, to, tag, Payload::U16(buf));
             }
@@ -280,11 +301,11 @@ impl Transport for ShmTransport {
             _ => {
                 let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
                 if let Err(e) = super::check_len(out.len(), v.len()) {
-                    release_to(&self.pools16[to], &self.pool_counters, v);
+                    release_to(&self.pools16[to], &self.pool_counters, &self.budget, v);
                     return Err(e);
                 }
                 w.decode_to(&v, out);
-                release_to(&self.pools16[to], &self.pool_counters, v);
+                release_to(&self.pools16[to], &self.pool_counters, &self.budget, v);
                 Ok(())
             }
         }
@@ -304,11 +325,11 @@ impl Transport for ShmTransport {
             _ => {
                 let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
                 if let Err(e) = super::check_len(acc.len(), v.len()) {
-                    release_to(&self.pools16[to], &self.pool_counters, v);
+                    release_to(&self.pools16[to], &self.pool_counters, &self.budget, v);
                     return Err(e);
                 }
                 w.decode_add_to(&v, acc);
-                release_to(&self.pools16[to], &self.pool_counters, v);
+                release_to(&self.pools16[to], &self.pool_counters, &self.budget, v);
                 Ok(())
             }
         }
@@ -316,6 +337,10 @@ impl Transport for ShmTransport {
 
     fn pool_stats(&self) -> PoolStats {
         self.pool_counters.snapshot()
+    }
+
+    fn memory_budget(&self) -> Option<Arc<MemoryBudget>> {
+        Some(self.budget.clone())
     }
 }
 

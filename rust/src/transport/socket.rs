@@ -51,6 +51,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
+use super::budget::MemoryBudget;
 use super::pool::{acquire_from, release_to, PoolCounters};
 use super::wire::WireFormat;
 use super::{Payload, PoolStats, TrafficCounters, TrafficStats, Transport, TransportError};
@@ -243,6 +244,10 @@ struct Shared {
     pool_f32: Mutex<Vec<Vec<f32>>>,
     pool_u16: Mutex<Vec<Vec<u16>>>,
     pool_counters: PoolCounters,
+    /// Memory budget charged by both pools.  A [`SocketHub`] shares
+    /// one budget across its endpoints (per-process semantics); a
+    /// multi-process endpoint owns its own.
+    budget: Arc<MemoryBudget>,
 }
 
 impl Shared {
@@ -309,7 +314,7 @@ impl Shared {
         match kind {
             1 => {
                 let n = bytes.len() / 4;
-                let mut v = acquire_from(&self.pool_f32, &self.pool_counters, n);
+                let mut v = acquire_from(&self.pool_f32, &self.pool_counters, &self.budget, n);
                 for c in bytes.chunks_exact(4) {
                     v.push(f32::from_bits(u32::from_le_bytes(c.try_into().unwrap())));
                 }
@@ -323,7 +328,7 @@ impl Shared {
             ),
             3 => {
                 let n = bytes.len() / 2;
-                let mut v = acquire_from(&self.pool_u16, &self.pool_counters, n);
+                let mut v = acquire_from(&self.pool_u16, &self.pool_counters, &self.budget, n);
                 for c in bytes.chunks_exact(2) {
                     v.push(u16::from_le_bytes(c.try_into().unwrap()));
                 }
@@ -413,8 +418,12 @@ fn writer_loop(mut stream: Stream, outbox: Arc<Outbox>, shared: Arc<Shared>, pee
         // moment it is serialized (the receive side of ShmTransport's
         // buffer circulation, moved to the sender)
         match payload {
-            Payload::F32(v) => release_to(&shared.pool_f32, &shared.pool_counters, v),
-            Payload::U16(v) => release_to(&shared.pool_u16, &shared.pool_counters, v),
+            Payload::F32(v) => {
+                release_to(&shared.pool_f32, &shared.pool_counters, &shared.budget, v)
+            }
+            Payload::U16(v) => {
+                release_to(&shared.pool_u16, &shared.pool_counters, &shared.budget, v)
+            }
             _ => {}
         }
         let ok = stream
@@ -617,6 +626,26 @@ impl SocketTransport {
         mode: SocketMode,
         timeout: Duration,
     ) -> Result<SocketTransport> {
+        Self::connect_with_budget(
+            dir,
+            my_rank,
+            nranks,
+            mode,
+            timeout,
+            Arc::new(MemoryBudget::unlimited()),
+        )
+    }
+
+    /// [`SocketTransport::connect`] with an explicit per-process
+    /// [`MemoryBudget`] charged by this endpoint's payload pools.
+    pub fn connect_with_budget(
+        dir: &Path,
+        my_rank: usize,
+        nranks: usize,
+        mode: SocketMode,
+        timeout: Duration,
+        budget: Arc<MemoryBudget>,
+    ) -> Result<SocketTransport> {
         assert!(nranks > 0 && my_rank < nranks, "rank out of range");
         let deadline = Instant::now() + timeout;
 
@@ -709,6 +738,7 @@ impl SocketTransport {
             pool_f32: Mutex::new(Vec::new()),
             pool_u16: Mutex::new(Vec::new()),
             pool_counters: PoolCounters::default(),
+            budget,
         });
         let mut threads = Vec::new();
         let mut outboxes: Vec<Option<Arc<Outbox>>> = (0..nranks).map(|_| None).collect();
@@ -744,6 +774,11 @@ impl SocketTransport {
     /// The rank this endpoint holds.
     pub fn my_rank(&self) -> usize {
         self.shared.my_rank
+    }
+
+    /// The memory budget this endpoint's pools charge.
+    pub fn budget(&self) -> &Arc<MemoryBudget> {
+        &self.shared.budget
     }
 
     fn route(&self, from: usize, to: usize, tag: u64, payload: Payload, checksum: Option<u64>) {
@@ -840,7 +875,12 @@ impl Transport for SocketTransport {
     }
 
     fn send_slice(&self, from: usize, to: usize, tag: u64, data: &[f32]) {
-        let mut buf = acquire_from(&self.shared.pool_f32, &self.shared.pool_counters, data.len());
+        let mut buf = acquire_from(
+            &self.shared.pool_f32,
+            &self.shared.pool_counters,
+            &self.shared.budget,
+            data.len(),
+        );
         buf.extend_from_slice(data);
         self.send(from, to, tag, Payload::F32(buf));
     }
@@ -865,11 +905,11 @@ impl Transport for SocketTransport {
     ) -> Result<(), TransportError> {
         let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
         if let Err(e) = super::check_len(out.len(), v.len()) {
-            release_to(&self.shared.pool_f32, &self.shared.pool_counters, v);
+            release_to(&self.shared.pool_f32, &self.shared.pool_counters, &self.shared.budget, v);
             return Err(e);
         }
         out.copy_from_slice(&v);
-        release_to(&self.shared.pool_f32, &self.shared.pool_counters, v);
+        release_to(&self.shared.pool_f32, &self.shared.pool_counters, &self.shared.budget, v);
         Ok(())
     }
 
@@ -883,13 +923,13 @@ impl Transport for SocketTransport {
     ) -> Result<(), TransportError> {
         let v = self.try_recv(to, from, tag, timeout)?.try_into_f32()?;
         if let Err(e) = super::check_len(acc.len(), v.len()) {
-            release_to(&self.shared.pool_f32, &self.shared.pool_counters, v);
+            release_to(&self.shared.pool_f32, &self.shared.pool_counters, &self.shared.budget, v);
             return Err(e);
         }
         for (a, x) in acc.iter_mut().zip(&v) {
             *a += x;
         }
-        release_to(&self.shared.pool_f32, &self.shared.pool_counters, v);
+        release_to(&self.shared.pool_f32, &self.shared.pool_counters, &self.shared.budget, v);
         Ok(())
     }
 
@@ -897,8 +937,12 @@ impl Transport for SocketTransport {
         match w {
             WireFormat::F32 => self.send_slice(from, to, tag, data),
             _ => {
-                let mut buf =
-                    acquire_from(&self.shared.pool_u16, &self.shared.pool_counters, data.len());
+                let mut buf = acquire_from(
+                    &self.shared.pool_u16,
+                    &self.shared.pool_counters,
+                    &self.shared.budget,
+                    data.len(),
+                );
                 w.encode_into(data, &mut buf);
                 self.send(from, to, tag, Payload::U16(buf));
             }
@@ -930,11 +974,11 @@ impl Transport for SocketTransport {
             _ => {
                 let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
                 if let Err(e) = super::check_len(out.len(), v.len()) {
-                    release_to(&self.shared.pool_u16, &self.shared.pool_counters, v);
+                    release_to(&self.shared.pool_u16, &self.shared.pool_counters, &self.shared.budget, v);
                     return Err(e);
                 }
                 w.decode_to(&v, out);
-                release_to(&self.shared.pool_u16, &self.shared.pool_counters, v);
+                release_to(&self.shared.pool_u16, &self.shared.pool_counters, &self.shared.budget, v);
                 Ok(())
             }
         }
@@ -954,11 +998,11 @@ impl Transport for SocketTransport {
             _ => {
                 let v = self.try_recv(to, from, tag, timeout)?.try_into_u16()?;
                 if let Err(e) = super::check_len(acc.len(), v.len()) {
-                    release_to(&self.shared.pool_u16, &self.shared.pool_counters, v);
+                    release_to(&self.shared.pool_u16, &self.shared.pool_counters, &self.shared.budget, v);
                     return Err(e);
                 }
                 w.decode_add_to(&v, acc);
-                release_to(&self.shared.pool_u16, &self.shared.pool_counters, v);
+                release_to(&self.shared.pool_u16, &self.shared.pool_counters, &self.shared.budget, v);
                 Ok(())
             }
         }
@@ -966,6 +1010,10 @@ impl Transport for SocketTransport {
 
     fn pool_stats(&self) -> PoolStats {
         self.shared.pool_counters.snapshot()
+    }
+
+    fn memory_budget(&self) -> Option<Arc<MemoryBudget>> {
+        Some(self.shared.budget.clone())
     }
 }
 
@@ -998,6 +1046,17 @@ impl SocketHub {
     /// Build a p-rank mesh in a fresh rendezvous directory under the
     /// system temp dir (removed when the hub drops).
     pub fn new(nranks: usize, mode: SocketMode) -> Result<SocketHub> {
+        Self::new_with_budget(nranks, mode, Arc::new(MemoryBudget::unlimited()))
+    }
+
+    /// [`SocketHub::new`] with one shared [`MemoryBudget`] charged by
+    /// every endpoint's pools — the hub models p ranks in one process,
+    /// so one process-wide budget is the faithful accounting.
+    pub fn new_with_budget(
+        nranks: usize,
+        mode: SocketMode,
+        budget: Arc<MemoryBudget>,
+    ) -> Result<SocketHub> {
         let dir = std::env::temp_dir().join(format!(
             "densefold_sock_{}_{}",
             std::process::id(),
@@ -1008,8 +1067,16 @@ impl SocketHub {
         let handles: Vec<_> = (0..nranks)
             .map(|r| {
                 let dir = dir.clone();
+                let budget = budget.clone();
                 std::thread::spawn(move || {
-                    SocketTransport::connect(&dir, r, nranks, mode, Duration::from_secs(10))
+                    SocketTransport::connect_with_budget(
+                        &dir,
+                        r,
+                        nranks,
+                        mode,
+                        Duration::from_secs(10),
+                        budget,
+                    )
                 })
             })
             .collect();
@@ -1154,8 +1221,17 @@ impl Transport for SocketHub {
             agg.recycled += s.recycled;
             agg.allocated += s.allocated;
             agg.returned += s.returned;
+            agg.bytes_held += s.bytes_held;
+            // summed peaks are an upper bound on the true simultaneous
+            // peak; the shared budget's peak_bytes() is the exact one
+            agg.bytes_peak += s.bytes_peak;
+            agg.evicted += s.evicted;
         }
         agg
+    }
+
+    fn memory_budget(&self) -> Option<Arc<MemoryBudget>> {
+        self.endpoints.first().and_then(|e| e.memory_budget())
     }
 }
 

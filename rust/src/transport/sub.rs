@@ -217,6 +217,10 @@ impl Transport for SubTransport {
     fn pool_stats(&self) -> PoolStats {
         self.inner.pool_stats()
     }
+
+    fn memory_budget(&self) -> Option<Arc<super::MemoryBudget>> {
+        self.inner.memory_budget()
+    }
 }
 
 #[cfg(test)]

@@ -1,0 +1,200 @@
+//! Integration tests for the memory-budget subsystem: the full
+//! algo × wire grid under a tiny budget across all three transports,
+//! a randomized budget/size property, and the elastic OOM
+//! retry-then-shrink contract — every test under [`with_deadline`]
+//! because the core claim is that backpressure degrades and fails
+//! typed instead of hanging.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use densefold::collectives::{self, ring, AllreduceAlgo, TAG_BLOCK};
+use densefold::harness::budget::{budget_drill, BudgetOpts};
+use densefold::train::{run_elastic_session, ElasticConfig};
+use densefold::transport::{
+    FaultPlan, MemoryBudget, Transport, TransportKind, WireFormat,
+};
+use densefold::util::json::Json;
+use densefold::util::proptest::{run, with_deadline};
+
+const KINDS: [TransportKind; 3] =
+    [TransportKind::Local, TransportKind::Shm, TransportKind::Socket];
+
+const ALGOS: [AllreduceAlgo; 5] = [
+    AllreduceAlgo::Ring,
+    AllreduceAlgo::RingPipelined,
+    AllreduceAlgo::RecursiveDoubling,
+    AllreduceAlgo::ReduceBcast,
+    AllreduceAlgo::Naive,
+];
+
+const WIRES: [WireFormat; 3] = [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16];
+
+/// Run one allreduce on `p` threads over `t`; returns per-rank bits.
+fn allreduce_bits(
+    t: &Arc<dyn Transport>,
+    p: usize,
+    data: &[Vec<f32>],
+    algo: AllreduceAlgo,
+    wire: WireFormat,
+    seg: usize,
+    tag_block: u64,
+) -> Vec<Vec<u32>> {
+    let handles: Vec<_> = (0..p)
+        .map(|rank| {
+            let t = t.clone();
+            let mut mine = data[rank].clone();
+            std::thread::spawn(move || {
+                collectives::try_allreduce_wire_seg(
+                    t.as_ref(),
+                    rank,
+                    &mut mine,
+                    algo,
+                    tag_block * TAG_BLOCK,
+                    wire,
+                    seg,
+                    Some(Duration::from_secs(30)),
+                )
+                .unwrap_or_else(|e| panic!("rank {rank} ({algo:?}, {wire:?}): {e}"));
+                mine.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+            })
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join().expect("rank panicked")).collect()
+}
+
+#[test]
+fn budget_drill_contract_holds_at_small_scale() {
+    // the `repro budget` acceptance path, shrunk: grid bit-identity +
+    // peak <= limit + evictions + degradations on local/shm/socket,
+    // the throughput ladder, and both elastic OOM scenarios
+    with_deadline(300, "budget drill", || {
+        let opts = BudgetOpts { ranks: 2, cycles: 2, elems: 256, ..BudgetOpts::default() };
+        let (bench, table) = budget_drill(&opts).unwrap();
+        // the bench record parses in the trajectory format and carries
+        // every family the CI smoke job validates
+        let parsed = Json::parse(&bench.to_json()).unwrap();
+        assert_eq!(parsed.get("group").unwrap().as_str(), Some("budget"));
+        for family in [
+            "grid/peak_bytes/local",
+            "grid/limit_bytes/shm",
+            "grid/evictions/socket",
+            "grid/degradations/local",
+            "throughput/100pct/p2",
+            "throughput/25pct/p2",
+        ] {
+            assert!(
+                bench.results.iter().any(|r| r.name == family),
+                "missing bench family {family}"
+            );
+        }
+        let md = table.to_markdown();
+        assert!(md.contains("oom persistent final group"), "{md}");
+        assert!(md.contains("bit-identical"), "{md}");
+    });
+}
+
+#[test]
+fn prop_budgeted_allreduce_bounded_and_bit_identical() {
+    // random tensor sizes x random budgets x p in {2,4,8}, all three
+    // transports: the budgeted run must bit-match the unbudgeted
+    // reference (even with a different, degraded segment size), never
+    // exceed its limit, and complete inside the collective timeouts
+    run(6, |g| {
+        let p = *g.choose(&[2usize, 4, 8]);
+        let len = g.usize_in(16, 2500);
+        let algo = *g.choose(&ALGOS);
+        let wire = *g.choose(&WIRES);
+        // reference runs the default segment; the budgeted pass gets a
+        // random (possibly degenerate) one — results must not move
+        let seg = match g.usize_in(0, 3) {
+            0 => 1,
+            1 => g.usize_in(1, 64),
+            _ => len + g.usize_in(1, 64),
+        };
+        // floor: worst-case instantaneous in-flight payload (naive
+        // keeps ~2(p-1) full tensors alive); random headroom above it
+        let floor = (2 * p * len * 4) as u64;
+        let limit = floor + g.usize_in(0, floor as usize) as u64;
+        let soft = g.usize_in(0, limit as usize) as u64;
+        let data: Vec<Vec<f32>> = (0..p).map(|_| g.vec_f32(len, -8.0, 8.0)).collect();
+
+        for kind in KINDS {
+            let reference = {
+                let b = Arc::new(MemoryBudget::unlimited());
+                let t = kind.create_with_budget(p, b).unwrap();
+                allreduce_bits(&t, p, &data, algo, wire, ring::DEFAULT_SEGMENT_ELEMS, 0)
+            };
+            let budget = Arc::new(MemoryBudget::with_soft(limit, soft));
+            let t = kind.create_with_budget(p, budget.clone()).unwrap();
+            let budgeted = allreduce_bits(&t, p, &data, algo, wire, seg, 1);
+            assert!(
+                reference == budgeted,
+                "{} p={p} len={len} seg={seg} {algo:?} {wire:?}: budget changed bits",
+                kind.name()
+            );
+            assert!(
+                budget.peak_bytes() <= limit,
+                "{} p={p} len={len}: peak {} > limit {limit}",
+                kind.name(),
+                budget.peak_bytes()
+            );
+        }
+    });
+}
+
+fn oom_cfg(tag: &str) -> ElasticConfig {
+    ElasticConfig {
+        nranks: 3,
+        steps: 4,
+        elems: 512,
+        lr: 0.05,
+        checkpoint_every: 2,
+        algo: AllreduceAlgo::RingPipelined,
+        wire: WireFormat::F32,
+        recv_timeout: Duration::from_millis(150),
+        heartbeat_deadline: Duration::from_millis(800),
+        faults: FaultPlan::none().with_oom(2, 1, 64),
+        ckpt_path: std::env::temp_dir().join(format!(
+            "densefold_budget_it_{}_{tag}.ckpt",
+            std::process::id()
+        )),
+        seed: 7,
+        transport: TransportKind::Shm,
+    }
+}
+
+#[test]
+fn persistent_oom_shrinks_typed_and_replays_bit_exact() {
+    // the acceptance scenario end to end over shm: a persistent
+    // allocation-failure schedule on rank 2 drives degraded retries,
+    // then a typed budget failure and a shrink — and the whole run is
+    // replayable bit for bit
+    with_deadline(120, "oom shrink replay", || {
+        let run_once = |tag: &str| {
+            let cfg = oom_cfg(tag);
+            let report = run_elastic_session(&cfg).unwrap();
+            let _ = std::fs::remove_file(&cfg.ckpt_path);
+            report
+        };
+        let a = run_once("a");
+        assert_eq!(a.failed.len(), 1, "{:?}", a.failed);
+        assert_eq!(a.failed[0].0, 2);
+        assert!(
+            a.failed[0].1.contains("memory budget exhausted"),
+            "exit must carry the typed budget message: {}",
+            a.failed[0].1
+        );
+        assert_eq!(a.final_members(), vec![0, 1]);
+        a.assert_survivors_agree(4);
+        assert!(a.survivors.iter().all(|s| s.rollbacks >= 1));
+        let b = run_once("b");
+        assert_eq!(b.final_members(), vec![0, 1]);
+        for (x, y) in a.survivors.iter().zip(b.survivors.iter()) {
+            assert_eq!(x.rank, y.rank);
+            let xb: Vec<u32> = x.params.iter().map(|v| v.to_bits()).collect();
+            let yb: Vec<u32> = y.params.iter().map(|v| v.to_bits()).collect();
+            assert!(xb == yb, "replay diverged on rank {}", x.rank);
+        }
+    });
+}

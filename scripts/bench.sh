@@ -22,10 +22,18 @@ cd "$(dirname "$0")/.."
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-    benches=(collectives fusion accumulate train_step threaded socket)
+    benches=(collectives fusion accumulate train_step threaded socket budget)
 fi
 
 for b in "${benches[@]}"; do
+    # `budget` has no bench binary: its numbers (grid walls, the
+    # 100/50/25% throughput ladder) come from the repro drill, which
+    # also hard-asserts the memory contract while measuring
+    if [ "$b" = budget ]; then
+        echo "== cargo run --release --bin densefold -- repro budget =="
+        cargo run --release --bin densefold -- repro budget
+        continue
+    fi
     echo "== cargo run --release --bin $b =="
     cargo run --release --bin "$b"
 done
