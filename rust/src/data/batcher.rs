@@ -76,12 +76,32 @@ impl Batcher {
 
     /// Produce the next fixed-shape batch.
     pub fn next_batch(&mut self) -> Batch {
+        let indices: Vec<usize> = (0..self.b).map(|_| self.next_pair()).collect();
+        let _ = &mut self.rng; // reserved for future length-bucketing
+        self.frame(&indices)
+    }
+
+    /// The batch for *global* micro-batch index `micro`, independent of
+    /// this batcher's rank/cursor state: row `i` takes shuffled pair
+    /// `micro*b + i`.  Two runs that enumerate the same global micro
+    /// indices see byte-identical batches regardless of how the micros
+    /// are split across ranks vs. accumulation steps — the foundation
+    /// of the accumulation-equivalence tests in `rust/tests/train.rs`.
+    pub fn batch_at(&self, micro: usize) -> Batch {
+        let indices: Vec<usize> = (0..self.b)
+            .map(|i| self.shuffle[(micro * self.b + i) % self.shuffle.len()])
+            .collect();
+        self.frame(&indices)
+    }
+
+    /// Frame the given corpus pairs into the fixed (B, Ss, St) shape.
+    fn frame(&self, indices: &[usize]) -> Batch {
         let (b, ss, st) = (self.b, self.ss, self.st);
+        debug_assert_eq!(indices.len(), b);
         let mut src = vec![PAD_ID; b * ss];
         let mut tgt_in = vec![PAD_ID; b * st];
         let mut tgt_out = vec![PAD_ID; b * st];
-        for row in 0..b {
-            let idx = self.next_pair();
+        for (row, &idx) in indices.iter().enumerate() {
             let pair = &self.corpus.pairs[idx];
             // source: tokens + EOS, truncated to ss
             let n_src = pair.src.len().min(ss - 1);
@@ -98,7 +118,6 @@ impl Batcher {
             }
             tgt_out[row * st + n_tgt] = EOS_ID;
         }
-        let _ = &mut self.rng; // reserved for future length-bucketing
         Batch { b, ss, st, src, tgt_in, tgt_out }
     }
 }
@@ -187,6 +206,73 @@ mod tests {
         let mut a = Batcher::new(c.clone(), (4, 8, 8), 0, 1, 3);
         let mut b = Batcher::new(c, (4, 8, 8), 0, 1, 3);
         assert_eq!(a.next_batch(), b.next_batch());
+    }
+
+    #[test]
+    fn batch_at_is_rank_and_cursor_independent() {
+        let c = corpus();
+        let mut moving = Batcher::new(c.clone(), (2, 8, 8), 1, 4, 7);
+        let fresh = Batcher::new(c, (2, 8, 8), 3, 4, 7);
+        moving.next_batch(); // advance the cursor; batch_at must not care
+        moving.next_batch();
+        for micro in [0usize, 1, 5, 40] {
+            assert_eq!(moving.batch_at(micro), fresh.batch_at(micro));
+        }
+    }
+
+    #[test]
+    fn batch_at_enumerates_distinct_micros() {
+        let b = Batcher::new(corpus(), (2, 8, 8), 0, 1, 7);
+        assert_ne!(b.batch_at(0), b.batch_at(1));
+    }
+
+    #[test]
+    fn padding_only_after_content() {
+        // each row is (content…, EOS, PAD…): no PAD before the EOS,
+        // nothing but PAD after it — in src and tgt_out alike
+        let b = Batcher::new(corpus(), (4, 8, 8), 0, 1, 5);
+        let batch = b.batch_at(3);
+        for row in 0..4 {
+            for (name, seq) in [
+                ("src", &batch.src[row * 8..(row + 1) * 8]),
+                ("tgt_out", &batch.tgt_out[row * 8..(row + 1) * 8]),
+            ] {
+                let eos = seq.iter().position(|&t| t == EOS_ID).unwrap();
+                assert!(
+                    seq[..eos].iter().all(|&t| t != PAD_ID),
+                    "{name} row {row}: PAD before EOS"
+                );
+                assert!(
+                    seq[eos + 1..].iter().all(|&t| t == PAD_ID),
+                    "{name} row {row}: content after EOS"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn token_counts_match_corpus_lengths() {
+        // with ss/st large enough that nothing truncates, the non-pad
+        // counts are exactly (len + 1 EOS) per src row and (len + 1)
+        // labels per tgt row (tgt_in adds BOS instead of EOS)
+        let c = corpus(); // max_len 6 < 8 - 1, so no truncation
+        let b = Batcher::new(c.clone(), (2, 8, 8), 0, 1, 9);
+        let batch = b.batch_at(0);
+        let mut want = 0usize;
+        for i in 0..2 {
+            let pair = &c.pairs[{
+                // replicate batch_at's row selection
+                let mut rng = Rng::new(9);
+                let mut shuffle: Vec<usize> = (0..c.pairs.len()).collect();
+                for k in (1..shuffle.len()).rev() {
+                    let j = rng.gen_range(0, k + 1);
+                    shuffle.swap(k, j);
+                }
+                shuffle[i]
+            }];
+            want += (pair.src.len() + 1) + (pair.tgt.len() + 1);
+        }
+        assert_eq!(batch.real_tokens(), want);
     }
 
     #[test]

@@ -144,6 +144,55 @@ mod tests {
         assert!(bleu_smoothed(&good, &refs) > bleu_smoothed(&bad, &refs));
     }
 
+    // -- golden values, hand-computed from the BLEU definition --
+
+    #[test]
+    fn golden_all_precisions_one_brevity_penalized() {
+        // hyp [3,4,5,6] vs ref [3,4,5,6,7]: every n-gram of the
+        // hypothesis appears in the reference, so p1..p4 = 1 and the
+        // score is pure brevity penalty: exp(1 - 5/4) = e^-0.25.
+        let hyps = vec![vec![3, 4, 5, 6]];
+        let refs = vec![vec![3, 4, 5, 6, 7]];
+        let want = 100.0 * (-0.25f64).exp();
+        assert!((bleu(&hyps, &refs) - want).abs() < 1e-9, "want {want}");
+    }
+
+    #[test]
+    fn golden_smoothed_mixed_precisions() {
+        // hyp [3,4,5,6] vs ref [3,4,5,7], equal lengths (BP = 1):
+        //   p1 = 3/4            (unsmoothed: 3,4,5 match; 6 doesn't)
+        //   p2 = (2+1)/(3+1)    ([3,4],[4,5] match; [5,6] doesn't)
+        //   p3 = (1+1)/(2+1)    ([3,4,5] matches; [4,5,6] doesn't)
+        //   p4 = (0+1)/(1+1)    (no 4-gram match)
+        // BLEU+1 = 100 * (3/4 * 3/4 * 2/3 * 1/2)^(1/4) = 100*(3/16)^0.25
+        let hyps = vec![vec![3, 4, 5, 6]];
+        let refs = vec![vec![3, 4, 5, 7]];
+        let want = 100.0 * (3.0f64 / 16.0).powf(0.25);
+        assert!(
+            (bleu_smoothed(&hyps, &refs) - want).abs() < 1e-9,
+            "want {want}, got {}",
+            bleu_smoothed(&hyps, &refs)
+        );
+    }
+
+    #[test]
+    fn golden_smoothed_with_clipping() {
+        // hyp [3,3,3,4] vs ref [3,4,5,6], equal lengths (BP = 1):
+        //   p1 = 2/4            (token 3 clips to 1 match + token 4)
+        //   p2 = (1+1)/(3+1)    (only [3,4] matches)
+        //   p3 = (0+1)/(2+1)
+        //   p4 = (0+1)/(1+1)
+        // BLEU+1 = 100 * (1/2 * 1/2 * 1/3 * 1/2)^(1/4) = 100*(1/24)^0.25
+        let hyps = vec![vec![3, 3, 3, 4]];
+        let refs = vec![vec![3, 4, 5, 6]];
+        let want = 100.0 * (1.0f64 / 24.0).powf(0.25);
+        assert!(
+            (bleu_smoothed(&hyps, &refs) - want).abs() < 1e-9,
+            "want {want}, got {}",
+            bleu_smoothed(&hyps, &refs)
+        );
+    }
+
     #[test]
     fn order_sensitivity() {
         let refs = vec![vec![3, 4, 5, 6, 7, 8]];

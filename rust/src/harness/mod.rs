@@ -19,6 +19,7 @@
 //! | chaos | [`chaos::chaos_recovery`] | **live** (fault injection + elastic recovery) |
 //! | launch | [`launch::launch_drill`] | **live** (worker processes over sockets) |
 //! | budget | [`budget::budget_drill`] | **live** (memory budget + graceful degradation) |
+//! | train | [`train::train_bench`] | **live** (end-to-end native training + determinism gates) |
 
 pub mod ablation;
 pub mod accumulate;
@@ -28,6 +29,7 @@ pub mod launch;
 pub mod quality;
 pub mod strong;
 pub mod threaded;
+pub mod train;
 pub mod validate;
 pub mod weak;
 

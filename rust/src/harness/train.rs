@@ -1,0 +1,367 @@
+//! End-to-end repro-train driver (`densefold repro train`): the native
+//! model on the threaded executor, with the determinism gates run
+//! inline.
+//!
+//! One invocation does four things:
+//!
+//! 1. **Main run** — [`run_native_session`] at the requested
+//!    `--ranks/--steps/--accum/--wire/--policy/--transport`, measuring
+//!    tokens/sec, the per-step exchange-vs-compute split, the per-step
+//!    global loss, and an end-of-run greedy-decode BLEU.
+//! 2. **Accumulation-equivalence gate** — `(p=k, accum=1)` vs
+//!    `(p=1, accum=k)` under the f32 wire and the `Naive` allreduce
+//!    (the one algorithm whose cross-rank summation order — root sum
+//!    in dense-rank order — equals the local micro-order accumulation;
+//!    ring variants rotate the per-segment order).  Loss trajectory
+//!    and final parameters are hard-asserted **bit-identical**.
+//! 3. **Transport-invariance gate** — the main configuration re-run on
+//!    `local`, `shm`, and `socket`; all three must produce
+//!    bit-identical trajectories and parameters.
+//! 4. Emission — bench records destined for `BENCH_train.json`, a
+//!    summary table, and the per-step loss table destined for
+//!    `results/train_loss.csv`.
+//!
+//! The gates panic on violation so CI fails loudly, exactly like the
+//! budget drill's contract assertions.
+
+use crate::collectives::AllreduceAlgo;
+use crate::coordinator::policy::DensifyPolicy;
+use crate::coordinator::ExchangeConfig;
+use crate::data::CorpusConfig;
+use crate::tensor::AccumStrategy;
+use crate::train::native::{run_native_session, NativeSessionResult, NativeTrainConfig};
+use crate::transport::{TransportKind, WireFormat};
+use crate::util::bench::Bench;
+use crate::util::csv::Table;
+use crate::util::{human_bytes, human_time};
+
+/// Knobs for the repro-train driver (`repro train` flags).
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOpts {
+    /// Data-parallel ranks (`--ranks`).
+    pub ranks: usize,
+    /// Optimizer steps (`--steps`).
+    pub steps: usize,
+    /// Micro-batches accumulated per step (`--accum`).
+    pub accum: usize,
+    /// Dense-path wire format (`--wire`).
+    pub wire: WireFormat,
+    /// Densification policy (`--policy`).
+    pub policy: DensifyPolicy,
+    /// Transport for the main run (`--transport`).
+    pub transport: TransportKind,
+    /// Tied-gradient accumulation strategy (`--strategy`).
+    pub strategy: AccumStrategy,
+    /// Corpus vocabulary = model embedding rows (`--vocab`).
+    pub vocab: usize,
+    /// Model hidden width (`--d-model`).
+    pub d_model: usize,
+    /// Micro-batch rows (`--batch`).
+    pub batch_rows: usize,
+    /// Adam learning rate (`--lr`).
+    pub lr: f32,
+    /// Seed for corpus/params/batch order (`--seed`).
+    pub seed: u64,
+    /// Held-out pairs for the final BLEU (`--eval`).
+    pub eval_pairs: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self {
+            ranks: 2,
+            steps: 8,
+            accum: 2,
+            wire: WireFormat::F32,
+            policy: DensifyPolicy::AlwaysGather,
+            transport: TransportKind::Shm,
+            strategy: AccumStrategy::SparseAsDense,
+            vocab: 64,
+            d_model: 16,
+            batch_rows: 4,
+            lr: 0.01,
+            seed: 17,
+            eval_pairs: 16,
+        }
+    }
+}
+
+/// The [`NativeTrainConfig`] an opts set describes (gates clone and
+/// override fields from this).
+fn base_config(o: &TrainOpts) -> NativeTrainConfig {
+    NativeTrainConfig {
+        nranks: o.ranks,
+        steps: o.steps,
+        accum: o.accum,
+        d_model: o.d_model,
+        batch: (o.batch_rows, 8, 8),
+        lr: o.lr,
+        seed: o.seed,
+        strategy: o.strategy,
+        exchange: ExchangeConfig {
+            policy: o.policy,
+            wire: o.wire,
+            ..ExchangeConfig::default()
+        },
+        transport: o.transport,
+        corpus: CorpusConfig {
+            vocab: o.vocab,
+            n_pairs: 256.max(o.eval_pairs * 4),
+            ..Default::default()
+        },
+        budget_bytes: None,
+        eval_pairs: 0,
+        trace_grads: false,
+    }
+}
+
+fn curve_bits(r: &NativeSessionResult) -> Vec<u32> {
+    r.loss_curve.iter().map(|x| x.to_bits()).collect()
+}
+
+fn param_bits(r: &NativeSessionResult) -> Vec<u32> {
+    r.per_rank[0].params.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Gate 1: `(p=k, accum=1)` and `(p=1, accum=k)` must produce
+/// bit-identical loss trajectories and final parameters.  Runs under
+/// f32 wire + `Naive` allreduce — see the module docs for why those
+/// are the summation-order-preserving choices.  Returns `k`.
+fn accum_equivalence_gate(o: &TrainOpts) -> anyhow::Result<usize> {
+    let k = o.ranks.max(2);
+    let mk = |nranks: usize, accum: usize| {
+        let mut c = base_config(o);
+        c.nranks = nranks;
+        c.accum = accum;
+        c.exchange.algo = AllreduceAlgo::Naive;
+        c.exchange.wire = WireFormat::F32;
+        c
+    };
+    let wide = run_native_session(&mk(k, 1))?;
+    let deep = run_native_session(&mk(1, k))?;
+    wide.assert_ranks_agree();
+    assert!(
+        curve_bits(&wide) == curve_bits(&deep),
+        "accumulation equivalence violated: loss trajectory of p={k}/accum=1 \
+         differs from p=1/accum={k}\n  wide: {:?}\n  deep: {:?}",
+        wide.loss_curve,
+        deep.loss_curve
+    );
+    assert!(
+        param_bits(&wide) == param_bits(&deep),
+        "accumulation equivalence violated: final params of p={k}/accum=1 \
+         differ from p=1/accum={k}"
+    );
+    Ok(k)
+}
+
+/// Gate 2: the main configuration must be bit-identical across
+/// `local`, `shm`, and `socket` transports.
+fn transport_invariance_gate(o: &TrainOpts) -> anyhow::Result<()> {
+    let run = |kind: TransportKind| -> anyhow::Result<NativeSessionResult> {
+        let mut c = base_config(o);
+        c.transport = kind;
+        let r = run_native_session(&c)?;
+        r.assert_ranks_agree();
+        Ok(r)
+    };
+    let reference = run(TransportKind::Local)?;
+    for kind in [TransportKind::Shm, TransportKind::Socket] {
+        let other = run(kind)?;
+        assert!(
+            curve_bits(&reference) == curve_bits(&other),
+            "transport invariance violated: {} loss trajectory differs from local",
+            kind.name()
+        );
+        assert!(
+            param_bits(&reference) == param_bits(&other),
+            "transport invariance violated: {} final params differ from local",
+            kind.name()
+        );
+    }
+    Ok(())
+}
+
+/// Run the repro-train driver: main measured session + both
+/// determinism gates.  Returns the bench record (group `train`,
+/// destined for `BENCH_train.json`), the summary table, and the
+/// per-step loss table (destined for `results/train_loss.csv`).
+/// Gate violations panic so CI fails loudly.
+pub fn train_bench(o: &TrainOpts) -> anyhow::Result<(Bench, Table, Table)> {
+    anyhow::ensure!(o.ranks >= 1 && o.steps >= 1 && o.accum >= 1, "bad --ranks/--steps/--accum");
+    println!(
+        "train: p={} steps={} accum={} strategy={} wire={} transport={} \
+         (vocab={} d_model={} b={})",
+        o.ranks,
+        o.steps,
+        o.accum,
+        o.strategy.name(),
+        o.wire.name(),
+        o.transport.name(),
+        o.vocab,
+        o.d_model,
+        o.batch_rows,
+    );
+
+    // 1. main measured run
+    let mut cfg = base_config(o);
+    cfg.eval_pairs = o.eval_pairs;
+    let result = run_native_session(&cfg)?;
+    result.assert_ranks_agree();
+
+    let mut bench = Bench::new("train");
+    let p = o.ranks;
+    bench.push_samples(
+        &format!("train/tokens_per_sec/p{p}"),
+        vec![result.tokens_per_sec()],
+        1,
+    );
+    // per-step wall split, rank 0 (semantic values ride ns_per_iter,
+    // the repo's bench-json idiom)
+    let r0 = &result.per_rank[0];
+    bench.push_samples(
+        &format!("train/exchange_us/p{p}"),
+        r0.steps.iter().map(|s| s.exchange_us as f64).collect(),
+        1,
+    );
+    bench.push_samples(
+        &format!("train/compute_us/p{p}"),
+        r0.steps.iter().map(|s| s.compute_us as f64).collect(),
+        1,
+    );
+    bench.push_samples(
+        "train/loss",
+        result.loss_curve.iter().map(|l| *l as f64).collect(),
+        1,
+    );
+    bench.push_samples(
+        "train/peak_accum_bytes",
+        vec![result.peak_accum_bytes() as f64],
+        1,
+    );
+    if let Some(b) = result.bleu {
+        bench.push_samples("train/bleu", vec![b], 1);
+    }
+
+    // 2+3. determinism gates (panic on violation)
+    let k = accum_equivalence_gate(o)?;
+    transport_invariance_gate(o)?;
+    bench.push_samples("train/gate/accum_equivalence", vec![1.0], 1);
+    bench.push_samples("train/gate/transport_invariance", vec![1.0], 1);
+    println!(
+        "train: gates passed — (p={k},accum=1)==(p=1,accum={k}) bit-identical; \
+         local/shm/socket bit-identical"
+    );
+
+    // summary table
+    let exchange_us = result.mean_exchange_us();
+    let compute_us = result.mean_compute_us();
+    let share = 100.0 * exchange_us / (exchange_us + compute_us).max(1e-9);
+    let mut table = Table::new(vec!["metric", "value"]);
+    table.push(vec![
+        "config".into(),
+        format!(
+            "p={} steps={} accum={} strategy={} wire={} policy={} transport={}",
+            o.ranks,
+            o.steps,
+            o.accum,
+            o.strategy.name(),
+            o.wire.name(),
+            o.policy.name(),
+            o.transport.name(),
+        ),
+    ]);
+    table.push(vec!["tokens/sec".into(), format!("{:.0}", result.tokens_per_sec())]);
+    table.push(vec![
+        "exchange / compute per step".into(),
+        format!(
+            "{} / {} ({share:.0}% exchange)",
+            human_time(exchange_us / 1e6),
+            human_time(compute_us / 1e6),
+        ),
+    ]);
+    table.push(vec![
+        "peak accum bytes".into(),
+        human_bytes(result.peak_accum_bytes()),
+    ]);
+    table.push(vec![
+        "loss".into(),
+        format!(
+            "{:.4} -> {:.4}",
+            result.loss_curve.first().copied().unwrap_or(f32::NAN),
+            result.loss_curve.last().copied().unwrap_or(f32::NAN),
+        ),
+    ]);
+    if let Some(b) = result.bleu {
+        table.push(vec!["BLEU (held-out)".into(), format!("{b:.1}")]);
+    }
+    // no commas in cells: Table::to_csv does not quote
+    table.push(vec![
+        format!("accum equivalence (p={k} a=1)==(p=1 a={k})"),
+        "yes".into(),
+    ]);
+    table.push(vec!["transport invariance local/shm/socket".into(), "yes".into()]);
+
+    // per-step loss table -> results/train_loss.csv
+    let mut loss_table = Table::new(vec!["step", "loss", "exchange_us", "compute_us", "tokens"]);
+    for (i, loss) in result.loss_curve.iter().enumerate() {
+        let step_tokens: u64 =
+            result.per_rank.iter().map(|r| r.steps[i].tokens as u64).sum();
+        loss_table.push(vec![
+            (i + 1).to_string(),
+            format!("{loss:.6}"),
+            format!("{}", r0.steps[i].exchange_us),
+            format!("{}", r0.steps[i].compute_us),
+            step_tokens.to_string(),
+        ]);
+    }
+
+    println!(
+        "train: {:.0} tokens/sec, loss {:.4} -> {:.4}{}",
+        result.tokens_per_sec(),
+        result.loss_curve.first().copied().unwrap_or(f32::NAN),
+        result.loss_curve.last().copied().unwrap_or(f32::NAN),
+        result
+            .bleu
+            .map(|b| format!(", BLEU {b:.1}"))
+            .unwrap_or_default(),
+    );
+    Ok((bench, table, loss_table))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> TrainOpts {
+        TrainOpts {
+            ranks: 2,
+            steps: 2,
+            accum: 2,
+            vocab: 32,
+            d_model: 8,
+            batch_rows: 2,
+            eval_pairs: 0,
+            ..TrainOpts::default()
+        }
+    }
+
+    #[test]
+    fn gates_pass_at_smoke_scale() {
+        let (bench, table, loss) = train_bench(&tiny()).unwrap();
+        assert!(bench.results.iter().any(|r| r.name == "train/gate/accum_equivalence"));
+        assert!(bench.results.iter().any(|r| r.name == "train/gate/transport_invariance"));
+        assert!(table.to_markdown().contains("yes"));
+        // one loss row per step
+        assert_eq!(loss.rows.len(), 2);
+    }
+
+    #[test]
+    fn bf16_wire_trains_and_gates_hold() {
+        // the gates always re-run under f32/Naive internally, so a
+        // lossy main wire must not break them
+        let o = TrainOpts { wire: WireFormat::Bf16, ..tiny() };
+        let (bench, _, _) = train_bench(&o).unwrap();
+        assert!(bench.results.iter().any(|r| r.name == "train/loss"));
+    }
+}

@@ -86,7 +86,7 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch|budget
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch|budget|train
                          (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
@@ -139,6 +139,26 @@ commands:
           --cycles N     grid cycles per algo x wire     (default 3)
           --elems N      base tensor length (outlier 8x) (default 16384)
           --seed N       gradient seed                   (default 42)
+          train mode (end-to-end native training on the threaded
+          executor: accumulates --accum micro-batch gradients locally
+          in pooled buffers, exchanges once per step through the
+          policy/densify/fused-collective path, and hard-asserts the
+          determinism gates — (p=k,accum=1)==(p=1,accum=k) and
+          local/shm/socket bit-identity; writes BENCH_train.json and
+          results/train_loss.csv):
+          --ranks N      executor rank threads           (default 2)
+          --steps N      optimizer steps                 (default 8)
+          --accum N      micro-batches per step          (default 2)
+          --wire f32|fp16|bf16  dense-path wire          (default f32)
+          --policy always-gather|always-dense|adaptive[:T]|cost-model
+          --transport shm|socket|local                   (default shm)
+          --strategy tf-default|sparse-as-dense|any-dense
+          --vocab N      corpus/model vocabulary         (default 64)
+          --d-model N    model hidden width              (default 16)
+          --batch N      micro-batch rows                (default 4)
+          --lr F         Adam learning rate              (default 0.01)
+          --eval N       held-out pairs for BLEU         (default 16)
+          --seed N       corpus/param/batch seed         (default 17)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -446,6 +466,32 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         bench.write_csv(&out_dir.join("bench_socket.csv"))?;
         println!("(bench json: BENCH_socket.json)");
         harness::emit(&t, &out_dir, "launch_drill")?;
+        ran += 1;
+    }
+    if want("train") {
+        let opts = harness::train::TrainOpts {
+            ranks: flag(flags, "ranks", "2").parse()?,
+            steps: flag(flags, "steps", "8").parse()?,
+            accum: flag(flags, "accum", "2").parse()?,
+            wire: WireFormat::parse(flag(flags, "wire", "f32"))
+                .ok_or_else(|| anyhow::anyhow!("bad --wire (f32|fp16|bf16)"))?,
+            policy: DensifyPolicy::parse(flag(flags, "policy", "always-gather"))
+                .ok_or_else(|| anyhow::anyhow!("bad --policy"))?,
+            transport: parse_transport(flag(flags, "transport", "shm"))?,
+            strategy: parse_strategy(flag(flags, "strategy", "sparse-as-dense"))?,
+            vocab: flag(flags, "vocab", "64").parse()?,
+            d_model: flag(flags, "d-model", "16").parse()?,
+            batch_rows: flag(flags, "batch", "4").parse()?,
+            lr: flag(flags, "lr", "0.01").parse()?,
+            seed: flag(flags, "seed", "17").parse()?,
+            eval_pairs: flag(flags, "eval", "16").parse()?,
+        };
+        let (bench, t, loss) = harness::train::train_bench(&opts)?;
+        bench.emit_json()?;
+        bench.write_csv(&out_dir.join("bench_train.csv"))?;
+        println!("(bench json: BENCH_train.json)");
+        harness::emit(&t, &out_dir, "train_summary")?;
+        harness::emit(&loss, &out_dir, "train_loss")?;
         ran += 1;
     }
     if want("budget") {

@@ -4,6 +4,8 @@
 //! (IndexedSlices) under which accumulation strategy — the metadata
 //! TF keeps in its graph and Horovod interrogates.
 
+pub mod native;
+
 use crate::runtime::{ParamSpec, Preset};
 
 /// How the gradient for a named output tensor maps onto parameters.

@@ -1,0 +1,464 @@
+//! A native (pure-Rust) NMT-shaped model for engine-free end-to-end
+//! training: tied-embedding log-bilinear translation.
+//!
+//! The PJRT trainer ([`crate::train::trainer`]) runs the real
+//! transformer artifacts, but needs the unvendored `xla` crate.  This
+//! module is the workload for the `repro train` path: small enough to
+//! run in tests, yet producing exactly the gradient *structure* the
+//! paper is about — sparse `IndexedSlices` embedding rows from the
+//! source/target lookups plus a dense tied projection into the same
+//! variable, the mixed-representation accumulation that TF's
+//! Algorithm 1 mishandles (see [`crate::tensor::accumulate`]).
+//!
+//! Model: source tokens are embedded and mean-pooled into a context
+//! `c`; each target position forms `h = c + E[tgt_in]`, mixes it
+//! through a square matrix `z = W·h`, and scores the vocabulary with
+//! the **tied** embedding, `logits = E·z`.  Loss is mean softmax
+//! cross-entropy over non-pad target positions.
+//!
+//! Every loop is sequential scalar f32, so forward/backward is a pure
+//! deterministic function of `(params, batch)` — the property all the
+//! bit-identity suites in `rust/tests/train.rs` build on.
+
+use crate::data::{Batch, PAD_ID};
+use crate::runtime::ParamSpec;
+use crate::tensor::{DenseTensor, Grad, IndexedSlices};
+use crate::util::rng::Rng;
+
+/// Gradient-output names, shared with the registry mapping
+/// ([`crate::model::ParamRegistry::grad_kind`]): the tied dense
+/// projection contribution, the sparse target-row and source-row
+/// contributions (all three accumulate into `embedding`), and the
+/// dense mixer gradient.
+pub const G_PROJ: &str = "g_proj";
+/// Sparse target-row embedding contribution (see [`G_PROJ`]).
+pub const G_EMB_TGT: &str = "g_emb_tgt_rows";
+/// Sparse source-row embedding contribution (see [`G_PROJ`]).
+pub const G_EMB_SRC: &str = "g_emb_src_rows";
+/// Dense mixer gradient name.
+pub const G_MIXER: &str = "g_mixer";
+
+/// The tied-embedding log-bilinear model: shapes only; parameters live
+/// in a caller-owned flat buffer (see [`NativeModel::param_specs`]).
+#[derive(Debug, Clone, Copy)]
+pub struct NativeModel {
+    /// Vocabulary size (embedding rows).
+    pub vocab: usize,
+    /// Embedding / hidden width.
+    pub d_model: usize,
+}
+
+/// Per-micro-batch gradients, un-normalized loss, and token counts —
+/// one forward/backward over one [`Batch`].
+#[derive(Debug, Clone)]
+pub struct MicroGrads {
+    /// Σ over non-pad target positions of −log p(label).
+    pub loss_sum: f32,
+    /// Non-pad target positions (the loss denominator).
+    pub n_pos: usize,
+    /// Tied dense projection contribution into `embedding` `[V, D]`.
+    pub g_proj: DenseTensor,
+    /// Sparse target-row contributions into `embedding` (one slice per
+    /// non-pad target position, in position order).
+    pub g_emb_tgt: IndexedSlices,
+    /// Sparse source-row contributions into `embedding` (one slice per
+    /// non-pad source token, in row-major batch order).
+    pub g_emb_src: IndexedSlices,
+    /// Dense mixer gradient `[D, D]`.
+    pub g_mixer: DenseTensor,
+}
+
+impl MicroGrads {
+    /// Mean loss per target position.
+    pub fn mean_loss(&self) -> f32 {
+        self.loss_sum / self.n_pos.max(1) as f32
+    }
+
+    /// The three embedding contributions in the canonical accumulation
+    /// order (projection, target rows, source rows) — the input to
+    /// [`crate::tensor::accumulate`].
+    pub fn tied_contributions(self) -> (Vec<Grad>, DenseTensor) {
+        (
+            vec![
+                Grad::Dense(self.g_proj),
+                Grad::Sparse(self.g_emb_tgt),
+                Grad::Sparse(self.g_emb_src),
+            ],
+            self.g_mixer,
+        )
+    }
+}
+
+impl NativeModel {
+    /// A model over `vocab` × `d_model`.  `vocab` must cover the
+    /// corpus ids (PAD/BOS/EOS + content ids).
+    pub fn new(vocab: usize, d_model: usize) -> Self {
+        assert!(vocab > 3, "vocab must cover PAD/BOS/EOS + content ids");
+        assert!(d_model >= 1);
+        Self { vocab, d_model }
+    }
+
+    /// Flat parameter count: embedding `[V, D]` + mixer `[D, D]`.
+    pub fn n_params(&self) -> usize {
+        self.vocab * self.d_model + self.d_model * self.d_model
+    }
+
+    /// Offset of the embedding block in the flat buffer.
+    pub fn emb_offset(&self) -> usize {
+        0
+    }
+
+    /// Offset of the mixer block in the flat buffer.
+    pub fn mixer_offset(&self) -> usize {
+        self.vocab * self.d_model
+    }
+
+    /// Manifest-style specs for the two parameters ("embedding",
+    /// "mixer"), matching the flat layout.
+    pub fn param_specs(&self) -> Vec<ParamSpec> {
+        vec![
+            ParamSpec {
+                name: "embedding".into(),
+                shape: vec![self.vocab, self.d_model],
+                numel: self.vocab * self.d_model,
+                offset: self.emb_offset(),
+            },
+            ParamSpec {
+                name: "mixer".into(),
+                shape: vec![self.d_model, self.d_model],
+                numel: self.d_model * self.d_model,
+                offset: self.mixer_offset(),
+            },
+        ]
+    }
+
+    /// Deterministic initial parameters (identical on every rank for a
+    /// given seed): small uniform values scaled by 1/√D.
+    pub fn init_params(&self, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed ^ 0x4E4D_5431);
+        let scale = 0.5 / (self.d_model as f32).sqrt();
+        (0..self.n_params())
+            .map(|_| (rng.gen_range(0, 2001) as f32 - 1000.0) / 1000.0 * scale)
+            .collect()
+    }
+
+    /// One forward/backward over `batch`.  Gradients are of the *mean*
+    /// per-position loss of this micro-batch (the 1/n_pos scale is
+    /// folded into the logit gradient), so accumulating `k` micros and
+    /// scaling by `1/k` yields the usual mean-of-means update.
+    pub fn forward_backward(&self, params: &[f32], batch: &Batch) -> MicroGrads {
+        let (v, d) = (self.vocab, self.d_model);
+        assert_eq!(params.len(), self.n_params(), "flat param buffer mismatch");
+        let emb = &params[..v * d];
+        let mix = &params[v * d..];
+
+        let n_pos = batch.tgt_out.iter().filter(|&&t| t != PAD_ID).count();
+        let inv_pos = 1.0 / n_pos.max(1) as f32;
+
+        let mut g_proj = vec![0.0f32; v * d];
+        let mut g_mix = vec![0.0f32; d * d];
+        let mut tgt_idx: Vec<i32> = Vec::new();
+        let mut tgt_val: Vec<f32> = Vec::new();
+        let mut src_idx: Vec<i32> = Vec::new();
+        let mut src_val: Vec<f32> = Vec::new();
+
+        let mut c = vec![0.0f32; d];
+        let mut dc = vec![0.0f32; d];
+        let mut h = vec![0.0f32; d];
+        let mut z = vec![0.0f32; d];
+        let mut dz = vec![0.0f32; d];
+        let mut dh = vec![0.0f32; d];
+        let mut logits = vec![0.0f32; v];
+        let mut loss_sum = 0.0f32;
+
+        for row in 0..batch.b {
+            let src_row = &batch.src[row * batch.ss..(row + 1) * batch.ss];
+            let src_tokens: Vec<usize> = src_row
+                .iter()
+                .filter(|&&t| t != PAD_ID)
+                .map(|&t| t as usize)
+                .collect();
+            if src_tokens.is_empty() {
+                continue; // cannot happen with batcher framing (EOS present)
+            }
+            let inv_src = 1.0 / src_tokens.len() as f32;
+            // context: mean of source embeddings
+            c.iter_mut().for_each(|x| *x = 0.0);
+            for &t in &src_tokens {
+                for k in 0..d {
+                    c[k] += emb[t * d + k];
+                }
+            }
+            c.iter_mut().for_each(|x| *x *= inv_src);
+            dc.iter_mut().for_each(|x| *x = 0.0);
+
+            for j in 0..batch.st {
+                let label = batch.tgt_out[row * batch.st + j];
+                if label == PAD_ID {
+                    continue;
+                }
+                let label = label as usize;
+                let t_in = batch.tgt_in[row * batch.st + j] as usize;
+                // h = c + E[t_in]
+                for k in 0..d {
+                    h[k] = c[k] + emb[t_in * d + k];
+                }
+                // z = W · h
+                for a in 0..d {
+                    let wrow = &mix[a * d..(a + 1) * d];
+                    let mut acc = 0.0f32;
+                    for (wk, hk) in wrow.iter().zip(&h) {
+                        acc += wk * hk;
+                    }
+                    z[a] = acc;
+                }
+                // logits = E · z  (tied projection)
+                for t in 0..v {
+                    let erow = &emb[t * d..(t + 1) * d];
+                    let mut acc = 0.0f32;
+                    for (ek, zk) in erow.iter().zip(&z) {
+                        acc += ek * zk;
+                    }
+                    logits[t] = acc;
+                }
+                // softmax cross-entropy
+                let m = logits.iter().copied().fold(f32::NEG_INFINITY, f32::max);
+                let mut sum = 0.0f32;
+                for l in logits.iter_mut() {
+                    *l = (*l - m).exp();
+                    sum += *l;
+                }
+                // logits now holds exp(l - m); p_label = logits[label]/sum,
+                // so -ln p_label = ln(sum) - ln(logits[label])
+                loss_sum += sum.ln() - logits[label].ln();
+                let inv_sum = 1.0 / sum;
+                // backward through the tied projection:
+                //   dlogits[t] = (p_t - [t==label]) * inv_pos
+                //   g_proj[t]  += dlogits[t] * z ;  dz += dlogits[t] * E[t]
+                dz.iter_mut().for_each(|x| *x = 0.0);
+                for t in 0..v {
+                    let p_t = logits[t] * inv_sum;
+                    let dl = (p_t - if t == label { 1.0 } else { 0.0 }) * inv_pos;
+                    let erow = &emb[t * d..(t + 1) * d];
+                    let grow = &mut g_proj[t * d..(t + 1) * d];
+                    for k in 0..d {
+                        grow[k] += dl * z[k];
+                        dz[k] += dl * erow[k];
+                    }
+                }
+                // dh = Wᵀ · dz ;  g_mix += dz ⊗ h
+                dh.iter_mut().for_each(|x| *x = 0.0);
+                for a in 0..d {
+                    let wrow = &mix[a * d..(a + 1) * d];
+                    let grow = &mut g_mix[a * d..(a + 1) * d];
+                    let dza = dz[a];
+                    for k in 0..d {
+                        dh[k] += dza * wrow[k];
+                        grow[k] += dza * h[k];
+                    }
+                }
+                // target-row slice: ∂h/∂E[t_in] = I
+                tgt_idx.push(t_in as i32);
+                tgt_val.extend_from_slice(&dh);
+                // context path: ∂h/∂c = I
+                for k in 0..d {
+                    dc[k] += dh[k];
+                }
+            }
+            // source-row slices: c = mean ⇒ each token row gets dc/n_src
+            for &t in &src_tokens {
+                src_idx.push(t as i32);
+                for k in 0..d {
+                    src_val.push(dc[k] * inv_src);
+                }
+            }
+        }
+
+        MicroGrads {
+            loss_sum,
+            n_pos,
+            g_proj: DenseTensor::from_vec(vec![v, d], g_proj),
+            g_emb_tgt: IndexedSlices::new(v, d, tgt_idx, tgt_val),
+            g_emb_src: IndexedSlices::new(v, d, src_idx, src_val),
+            g_mixer: DenseTensor::from_vec(vec![d, d], g_mix),
+        }
+    }
+
+    /// Greedy decode: argmax next-token loop from BOS until EOS or
+    /// `max_len`.  Ties break to the lowest token id, so decoding is
+    /// deterministic — the BLEU eval in the train harness depends on
+    /// that.
+    pub fn greedy_decode(&self, params: &[f32], src: &[i32], max_len: usize) -> Vec<i32> {
+        use crate::data::{BOS_ID, EOS_ID};
+        let (v, d) = (self.vocab, self.d_model);
+        let emb = &params[..v * d];
+        let mix = &params[v * d..];
+        let src_tokens: Vec<usize> =
+            src.iter().filter(|&&t| t != PAD_ID).map(|&t| t as usize).collect();
+        if src_tokens.is_empty() {
+            return Vec::new();
+        }
+        let inv_src = 1.0 / src_tokens.len() as f32;
+        let mut c = vec![0.0f32; d];
+        for &t in &src_tokens {
+            for k in 0..d {
+                c[k] += emb[t * d + k];
+            }
+        }
+        c.iter_mut().for_each(|x| *x *= inv_src);
+
+        let mut out = Vec::new();
+        let mut prev = BOS_ID as usize;
+        for _ in 0..max_len {
+            let mut best = 0usize;
+            let mut best_score = f32::NEG_INFINITY;
+            for t in 0..v {
+                let erow = &emb[t * d..(t + 1) * d];
+                // z = W (c + E[prev]);  score_t = E[t] · z
+                let mut score = 0.0f32;
+                for a in 0..d {
+                    let wrow = &mix[a * d..(a + 1) * d];
+                    let mut za = 0.0f32;
+                    for k in 0..d {
+                        za += wrow[k] * (c[k] + emb[prev * d + k]);
+                    }
+                    score += erow[a] * za;
+                }
+                if score > best_score {
+                    best_score = score;
+                    best = t;
+                }
+            }
+            if best == EOS_ID as usize {
+                break;
+            }
+            out.push(best as i32);
+            prev = best;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{Batcher, Corpus, CorpusConfig};
+
+    fn setup() -> (NativeModel, Vec<f32>, Batch) {
+        let model = NativeModel::new(32, 8);
+        let params = model.init_params(7);
+        let corpus = Corpus::generate(&CorpusConfig {
+            vocab: 32,
+            n_pairs: 64,
+            min_len: 3,
+            max_len: 6,
+            ..Default::default()
+        });
+        let batcher = Batcher::new(corpus, (2, 8, 8), 0, 1, 11);
+        let batch = batcher.batch_at(0);
+        (model, params, batch)
+    }
+
+    #[test]
+    fn forward_backward_is_deterministic() {
+        let (model, params, batch) = setup();
+        let a = model.forward_backward(&params, &batch);
+        let b = model.forward_backward(&params, &batch);
+        assert_eq!(a.loss_sum.to_bits(), b.loss_sum.to_bits());
+        let da: Vec<u32> = a.g_proj.data.iter().map(|x| x.to_bits()).collect();
+        let db: Vec<u32> = b.g_proj.data.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(da, db);
+    }
+
+    #[test]
+    fn loss_is_positive_and_finite() {
+        let (model, params, batch) = setup();
+        let g = model.forward_backward(&params, &batch);
+        assert!(g.n_pos > 0);
+        assert!(g.mean_loss() > 0.0 && g.mean_loss().is_finite());
+    }
+
+    #[test]
+    fn gradient_matches_finite_difference() {
+        // central difference on a handful of coordinates across both
+        // parameter blocks; the analytic gradient must agree
+        let (model, mut params, batch) = setup();
+        let base = model.forward_backward(&params, &batch);
+        let mut dense = vec![0.0f32; model.n_params()];
+        // densify: proj + tgt rows + src rows into the embedding block,
+        // mixer into its block
+        for (i, x) in base.g_proj.data.iter().enumerate() {
+            dense[i] += x;
+        }
+        let d = model.d_model;
+        for (s, &row) in base.g_emb_tgt.indices.iter().enumerate() {
+            for k in 0..d {
+                dense[row as usize * d + k] += base.g_emb_tgt.values[s * d + k];
+            }
+        }
+        for (s, &row) in base.g_emb_src.indices.iter().enumerate() {
+            for k in 0..d {
+                dense[row as usize * d + k] += base.g_emb_src.values[s * d + k];
+            }
+        }
+        for (i, x) in base.g_mixer.data.iter().enumerate() {
+            dense[model.mixer_offset() + i] += x;
+        }
+        let probe = [0usize, 5, model.vocab * d / 2, model.mixer_offset(), model.n_params() - 1];
+        let eps = 1e-2f32;
+        for &i in &probe {
+            let orig = params[i];
+            params[i] = orig + eps;
+            let up = model.forward_backward(&params, &batch).mean_loss();
+            params[i] = orig - eps;
+            let down = model.forward_backward(&params, &batch).mean_loss();
+            params[i] = orig;
+            let fd = (up - down) / (2.0 * eps);
+            assert!(
+                (fd - dense[i]).abs() < 2e-2 * (1.0 + fd.abs()),
+                "param {i}: finite-diff {fd} vs analytic {}",
+                dense[i]
+            );
+        }
+    }
+
+    #[test]
+    fn training_on_one_batch_reduces_its_loss() {
+        // plain SGD on a single repeated batch must memorize it
+        let (model, mut params, batch) = setup();
+        let l0 = model.forward_backward(&params, &batch).mean_loss();
+        for _ in 0..20 {
+            let g = model.forward_backward(&params, &batch);
+            let d = model.d_model;
+            let lr = 0.5f32;
+            for (i, x) in g.g_proj.data.iter().enumerate() {
+                params[i] -= lr * x;
+            }
+            for (s, &row) in g.g_emb_tgt.indices.iter().enumerate() {
+                for k in 0..d {
+                    params[row as usize * d + k] -= lr * g.g_emb_tgt.values[s * d + k];
+                }
+            }
+            for (s, &row) in g.g_emb_src.indices.iter().enumerate() {
+                for k in 0..d {
+                    params[row as usize * d + k] -= lr * g.g_emb_src.values[s * d + k];
+                }
+            }
+            for (i, x) in g.g_mixer.data.iter().enumerate() {
+                params[model.mixer_offset() + i] -= lr * x;
+            }
+        }
+        let l1 = model.forward_backward(&params, &batch).mean_loss();
+        assert!(l1 < l0, "loss must drop on a memorizable batch: {l0} -> {l1}");
+    }
+
+    #[test]
+    fn greedy_decode_terminates_and_stays_in_vocab() {
+        let (model, params, batch) = setup();
+        let hyp = model.greedy_decode(&params, &batch.src[..batch.ss], 12);
+        assert!(hyp.len() <= 12);
+        for &t in &hyp {
+            assert!((t as usize) < model.vocab);
+        }
+    }
+}

@@ -12,7 +12,16 @@
 //! shared and execution serializes — which is also what one physical
 //! core would do, and the cluster simulator supplies the parallel
 //! timing model.
+//!
+//! The XLA-backed half of this module (client creation, HLO compile,
+//! literal marshalling) is gated behind the `pjrt` cargo feature: the
+//! `xla` crate is not vendored in this tree, so the default build
+//! keeps the request/handle plumbing (and every caller type-checks)
+//! while [`Engine::start`] fails with a descriptive error.  The
+//! native trainer ([`crate::train::native`]) is the engine-free
+//! training path.
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -98,6 +107,7 @@ pub struct Engine {
 
 impl Engine {
     /// Spawn the engine thread with a CPU PJRT client.
+    #[cfg(feature = "pjrt")]
     pub fn start() -> anyhow::Result<Self> {
         let (tx, rx) = mpsc::channel::<Request>();
         let (ready_tx, ready_rx) = mpsc::channel();
@@ -107,6 +117,18 @@ impl Engine {
         // surface client-creation errors synchronously
         ready_rx.recv()??;
         Ok(Self { tx, thread: Some(thread) })
+    }
+
+    /// Built without the `pjrt` feature: there is no XLA client to
+    /// spawn, so starting the engine is a descriptive runtime error
+    /// rather than a compile failure for every downstream caller.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn start() -> anyhow::Result<Self> {
+        anyhow::bail!(
+            "PJRT engine unavailable: densefold was built without the `pjrt` \
+             cargo feature (the `xla` crate is not vendored). Use the native \
+             trainer (`repro train`) or rebuild with --features pjrt."
+        )
     }
 
     pub fn handle(&self) -> EngineHandle {
@@ -123,6 +145,7 @@ impl Drop for Engine {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<anyhow::Result<()>>) {
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => {
@@ -183,6 +206,7 @@ fn engine_main(rx: mpsc::Receiver<Request>, ready: mpsc::Sender<anyhow::Result<(
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn to_literal(t: HostTensor) -> anyhow::Result<xla::Literal> {
     match t {
         HostTensor::F32 { shape, data } => {
@@ -198,6 +222,7 @@ fn to_literal(t: HostTensor) -> anyhow::Result<xla::Literal> {
     }
 }
 
+#[cfg(feature = "pjrt")]
 fn from_literal(lit: xla::Literal) -> anyhow::Result<HostTensor> {
     let shape = lit
         .array_shape()
@@ -220,10 +245,12 @@ fn from_literal(lit: xla::Literal) -> anyhow::Result<HostTensor> {
 mod tests {
     use super::*;
 
+    #[cfg(feature = "pjrt")]
     fn artifacts_dir() -> PathBuf {
         PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn densify_artifact_end_to_end() {
         // Runs the *Pallas kernel* through the whole stack: HLO text ->
@@ -271,11 +298,19 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn missing_executable_is_error() {
         let engine = Engine::start().unwrap();
         let h = engine.handle();
         assert!(h.execute("nope", vec![]).is_err());
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn start_without_pjrt_is_descriptive_error() {
+        let err = Engine::start().err().expect("must not start").to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 
     #[test]

@@ -506,6 +506,41 @@ fn run_rank_overlapped(
     outcome
 }
 
+/// A boxed per-rank worker body for [`run_worker_threads`]: it gets
+/// the shared start barrier and returns its result.
+pub type WorkerFn<T> = Box<dyn FnOnce(&Barrier) -> T + Send + 'static>;
+
+/// Spawn one named OS thread per worker (`rank-N`, index = rank), hand
+/// each the shared [`Barrier`] (sized to the worker count) so they can
+/// align their step starts, and join in rank order.
+///
+/// This is the generic spawn/join skeleton under every non-elastic
+/// multi-rank run: [`run_on`] drives the synthetic workload through
+/// the same shape, and the training sessions
+/// ([`crate::train::session`], [`crate::train::native`]) put real
+/// trainers on it instead of rolling their own thread loops.  A
+/// panicking worker surfaces as `Err` in its slot rather than tearing
+/// down the caller — training sessions turn that into a rank-labelled
+/// error.
+pub fn run_worker_threads<T: Send + 'static>(
+    workers: Vec<WorkerFn<T>>,
+) -> Vec<thread::Result<T>> {
+    assert!(!workers.is_empty(), "need at least one worker");
+    let barrier = Arc::new(Barrier::new(workers.len()));
+    let handles: Vec<_> = workers
+        .into_iter()
+        .enumerate()
+        .map(|(rank, w)| {
+            let barrier = barrier.clone();
+            thread::Builder::new()
+                .name(format!("rank-{rank}"))
+                .spawn(move || w(&barrier))
+                .expect("spawn rank thread")
+        })
+        .collect();
+    handles.into_iter().map(|h| h.join()).collect()
+}
+
 /// How one rank thread of an elastic run ended (see [`run_elastic`]).
 #[derive(Debug)]
 pub enum RankExit<T> {
@@ -710,6 +745,39 @@ mod tests {
         ComputeModel::Fma { elems: 64, passes: 3 }.run(&mut scratch);
         assert_eq!(scratch.len(), 64);
         assert!(scratch[0] > 1.0, "fma passes must have moved the values");
+    }
+
+    #[test]
+    fn run_worker_threads_joins_in_rank_order() {
+        let workers: Vec<WorkerFn<usize>> = (0..4)
+            .map(|rank| {
+                Box::new(move |b: &Barrier| {
+                    b.wait(); // all four must reach the barrier
+                    rank * 2
+                }) as WorkerFn<usize>
+            })
+            .collect();
+        let results: Vec<usize> = run_worker_threads(workers)
+            .into_iter()
+            .map(|r| r.expect("no panic"))
+            .collect();
+        assert_eq!(results, vec![0, 2, 4, 6]);
+    }
+
+    #[test]
+    fn run_worker_threads_surfaces_panics_per_slot() {
+        let workers: Vec<WorkerFn<()>> = (0..2)
+            .map(|rank| {
+                Box::new(move |_: &Barrier| {
+                    if rank == 1 {
+                        panic!("worker 1 exploded");
+                    }
+                }) as WorkerFn<()>
+            })
+            .collect();
+        let results = run_worker_threads(workers);
+        assert!(results[0].is_ok());
+        assert!(results[1].is_err(), "panic must land in its own slot");
     }
 
     #[test]

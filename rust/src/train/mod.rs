@@ -10,12 +10,17 @@
 //! the paper analyses.
 
 pub mod checkpoint;
+pub mod native;
 pub mod optimizer;
 pub mod schedule;
 pub mod session;
 pub mod trainer;
 
 pub use checkpoint::Checkpoint;
+pub use native::{
+    native_elastic_oracle, run_native_elastic_session, run_native_session, NativeElasticConfig,
+    NativeSessionResult, NativeTrainConfig,
+};
 pub use optimizer::Adam;
 pub use schedule::NoamSchedule;
 pub use session::{

@@ -1,0 +1,979 @@
+//! Engine-free end-to-end training: the native model on the executor.
+//!
+//! This is the `repro train` path — the layer that finally runs the
+//! paper's *workload* (NMT training steps) through every subsystem the
+//! earlier PRs built, with no PJRT/XLA dependency:
+//!
+//! ```text
+//! run_native_session
+//!   └─ runtime::executor::run_worker_threads      (one thread per rank)
+//!        rank r, step s:  barrier ──────────────── aligned step starts
+//!          for j in 0..accum:                      gradient accumulation
+//!            batch   = batcher.batch_at(m)         m = s·(k·p) + j·p + r
+//!            micro   = model.forward_backward()    tied-embedding grads
+//!            tensor::accumulate(micro, strategy)   Alg.1 / Listing 1 / Alg.2
+//!            acc    += micro                       pooled f32 buffers
+//!          GradExchange::exchange(acc)             policy→densify→fused
+//!          Adam(params, sum / (p·k))               one combined scale
+//!          pool.release(outs)                      buffer recycling
+//! ```
+//!
+//! This is the Ott et al. (*Scaling NMT*, 1806.00187) recipe on top of
+//! the paper's core: large effective batches via local gradient
+//! accumulation (`--accum`), reduced-precision comms via the 16-bit
+//! wire (`--wire fp16|bf16`), one exchange per effective batch.
+//!
+//! ## Determinism contract (what `rust/tests/train.rs` asserts)
+//!
+//! Micro-batch `m = step·(accum·p) + j·p + rank` is a *global* index:
+//! p=k/accum=1 enumerates exactly the micros of p=1/accum=k, and both
+//! sum them in ascending-`m` order — locally (fresh zeroed accumulator
+//! `+=` each finished micro gradient, micro order) or across ranks
+//! (the `Naive` allreduce's rank-order root sum).  With the f32 wire
+//! the two summation sequences are the same f32 additions, so loss
+//! trajectories and final parameters are **bit-identical** across the
+//! split — and across local/shm/socket transports, which all run the
+//! same deterministic collectives.  The exchange runs with
+//! `average = false`; the trainer applies the single combined
+//! `1/(p·accum)` scale (dividing by p then by k would round
+//! differently).
+//!
+//! The second half is the **native elastic session**: the
+//! checkpoint/shrink protocol of [`super::session::elastic_worker`]
+//! driving real model gradients (SGD), with a closed-form oracle
+//! ([`native_elastic_oracle`]) that replays kill-a-rank runs exactly.
+
+use std::path::PathBuf;
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use crate::collectives::{self, AllreduceAlgo, TAG_BLOCK};
+use crate::coordinator::{ExchangeConfig, ExchangeReport, GradExchange, NamedGrad};
+use crate::data::{bleu::bleu_smoothed, Batch, Batcher, Corpus, CorpusConfig};
+use crate::model::native::NativeModel;
+use crate::runtime::executor::{run_elastic, run_worker_threads, RankExit, WorkerFn};
+use crate::runtime::health::{ElasticCoord, Group, HealthOpts, Verdict};
+use crate::tensor::{accumulate, AccumStrategy, DenseTensor, Grad, IndexedSlices};
+use crate::train::checkpoint::Checkpoint;
+use crate::train::optimizer::{Adam, AdamConfig};
+use crate::train::session::{
+    degraded_segment, ElasticOutcome, ElasticReport, MAX_ATTEMPTS, OOM_DEATH_ATTEMPTS,
+};
+use crate::transport::pool::PooledBuffers;
+use crate::transport::{
+    FaultPlan, FaultyTransport, MemoryBudget, PoolStats, SubTransport, Transport, TransportKind,
+    WireFormat,
+};
+
+/// Salt mixed into the session seed for the batcher's shared shuffle,
+/// so corpus generation and batch order draw from distinct streams.
+const BATCH_SEED_SALT: u64 = 0xBA7C;
+
+/// Configuration of a native training session ([`run_native_session`]).
+#[derive(Debug, Clone)]
+pub struct NativeTrainConfig {
+    /// Data-parallel ranks (one executor worker thread each).
+    pub nranks: usize,
+    /// Optimizer steps (one exchange per step).
+    pub steps: usize,
+    /// Micro-batches accumulated locally per step (k ≥ 1); the
+    /// effective batch is `nranks · accum · batch.0` rows.
+    pub accum: usize,
+    /// Hidden width of the native model (vocab comes from `corpus`).
+    pub d_model: usize,
+    /// Batch shape `(b, ss, st)`.
+    pub batch: (usize, usize, usize),
+    /// Adam learning rate (applied to the `1/(p·accum)`-scaled sum).
+    pub lr: f32,
+    /// Seed for parameters and batch order (corpus has its own seed).
+    pub seed: u64,
+    /// Local tied-gradient accumulation strategy (the paper's axis).
+    pub strategy: AccumStrategy,
+    /// Exchange engine configuration.  `average` is overridden to
+    /// `false` — see the module docs' determinism contract.
+    pub exchange: ExchangeConfig,
+    /// Transport the ranks exchange over.
+    pub transport: TransportKind,
+    /// Synthetic corpus (its `vocab` sizes the model's embedding).
+    pub corpus: CorpusConfig,
+    /// Per-process memory budget; transports, exchange arenas, *and*
+    /// the accumulator pools all charge it when set.
+    pub budget_bytes: Option<u64>,
+    /// Held-out pairs for an end-of-run greedy-decode BLEU (0 = skip).
+    pub eval_pairs: usize,
+    /// Record per-step pre/post-exchange flat gradients (before the
+    /// `1/(p·accum)` scale) — the wire-error proptest's raw material.
+    pub trace_grads: bool,
+}
+
+impl Default for NativeTrainConfig {
+    fn default() -> Self {
+        Self {
+            nranks: 2,
+            steps: 8,
+            accum: 1,
+            d_model: 16,
+            batch: (4, 8, 8),
+            lr: 0.01,
+            seed: 17,
+            strategy: AccumStrategy::SparseAsDense,
+            exchange: ExchangeConfig::default(),
+            transport: TransportKind::Shm,
+            corpus: CorpusConfig { vocab: 64, n_pairs: 256, ..Default::default() },
+            budget_bytes: None,
+            eval_pairs: 0,
+            trace_grads: false,
+        }
+    }
+}
+
+/// Pre/post-exchange flat gradients for one step (params-shaped,
+/// recorded before the `1/(p·accum)` scale) — lets the proptests
+/// compute exact f64 cross-rank sums and bound the wire error.
+#[derive(Debug, Clone)]
+pub struct GradTrace {
+    /// This rank's locally accumulated gradient, densified.
+    pub pre: Vec<f32>,
+    /// The exchanged (summed) gradient, densified.
+    pub post: Vec<f32>,
+}
+
+/// One rank's record of one optimizer step.
+#[derive(Debug, Clone)]
+pub struct NativeStepTrace {
+    /// Per-micro un-normalized loss sums, local micro order.
+    pub micro_loss: Vec<f32>,
+    /// Per-micro non-pad label counts, local micro order.
+    pub micro_pos: Vec<usize>,
+    /// Real (non-pad) tokens this rank pushed through this step.
+    pub tokens: usize,
+    /// Forward/backward + accumulate + optimizer wall time, µs.
+    pub compute_us: u64,
+    /// `GradExchange::exchange` wall time, µs.
+    pub exchange_us: u64,
+    /// The exchange engine's own report for this step's cycle.
+    pub report: ExchangeReport,
+}
+
+/// Everything one rank brings back from a native session.
+#[derive(Debug, Clone)]
+pub struct NativeRankResult {
+    /// Physical rank.
+    pub rank: usize,
+    /// Per-step records.
+    pub steps: Vec<NativeStepTrace>,
+    /// Final parameter replica (bit-identical across ranks).
+    pub params: Vec<f32>,
+    /// Accumulator-pool counters (recycling evidence: `allocated`
+    /// stays flat across steady-state steps).
+    pub pool_stats: PoolStats,
+    /// Per-step gradient traces (empty unless `trace_grads`).
+    pub grad_trace: Vec<GradTrace>,
+}
+
+/// Everything a native session produces.
+#[derive(Debug)]
+pub struct NativeSessionResult {
+    /// Per-rank outcomes, index = rank.
+    pub per_rank: Vec<NativeRankResult>,
+    /// Global per-step mean loss, summed in ascending global-micro
+    /// order (bit-identical across the p/accum split — module docs).
+    pub loss_curve: Vec<f32>,
+    /// Wall time of the training loop, seconds.
+    pub wall_secs: f64,
+    /// Smoothed BLEU of rank 0's replica on the held-out pairs.
+    pub bleu: Option<f64>,
+    /// Ranks and accumulation factor of the run (for reporting).
+    pub nranks: usize,
+    /// Micro-batches per step per rank.
+    pub accum: usize,
+}
+
+impl NativeSessionResult {
+    /// Total real tokens processed across ranks and steps.
+    pub fn total_tokens(&self) -> u64 {
+        self.per_rank
+            .iter()
+            .flat_map(|r| r.steps.iter().map(|s| s.tokens as u64))
+            .sum()
+    }
+
+    /// End-to-end training throughput.
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.total_tokens() as f64 / self.wall_secs.max(1e-9)
+    }
+
+    /// Mean per-step exchange time across ranks, µs.
+    pub fn mean_exchange_us(&self) -> f64 {
+        mean(self.per_rank.iter().flat_map(|r| r.steps.iter().map(|s| s.exchange_us as f64)))
+    }
+
+    /// Mean per-step compute (forward/backward + optimizer) time, µs.
+    pub fn mean_compute_us(&self) -> f64 {
+        mean(self.per_rank.iter().flat_map(|r| r.steps.iter().map(|s| s.compute_us as f64)))
+    }
+
+    /// Peak exchange-side accumulation bytes across ranks/steps.
+    pub fn peak_accum_bytes(&self) -> u64 {
+        self.per_rank
+            .iter()
+            .flat_map(|r| r.steps.iter().map(|s| s.report.peak_accum_bytes))
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Assert every rank ended with bit-identical parameters — the
+    /// data-parallel lockstep invariant, end to end through the model.
+    pub fn assert_ranks_agree(&self) {
+        let first: Vec<u32> = self.per_rank[0].params.iter().map(|x| x.to_bits()).collect();
+        for r in &self.per_rank[1..] {
+            let bits: Vec<u32> = r.params.iter().map(|x| x.to_bits()).collect();
+            assert_eq!(bits, first, "rank {} params diverged from rank 0", r.rank);
+        }
+    }
+}
+
+fn mean(it: impl Iterator<Item = f64>) -> f64 {
+    let v: Vec<f64> = it.collect();
+    if v.is_empty() {
+        0.0
+    } else {
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+}
+
+/// Global per-step loss: sum the per-micro loss sums in ascending
+/// global-micro order (`m = step·(accum·p) + j·p + rank`, so iterate
+/// `mm = j·p + rank` ascending), divide by the total label count once.
+/// The identical f32 addition sequence is produced by p=k/accum=1
+/// (rank order) and p=1/accum=k (micro order).
+fn global_loss_curve(per_rank: &[NativeRankResult], accum: usize) -> Vec<f32> {
+    let nranks = per_rank.len();
+    let steps = per_rank[0].steps.len();
+    (0..steps)
+        .map(|s| {
+            let mut loss = 0.0f32;
+            let mut pos = 0usize;
+            for mm in 0..accum * nranks {
+                let (rank, j) = (mm % nranks, mm / nranks);
+                loss += per_rank[rank].steps[s].micro_loss[j];
+                pos += per_rank[rank].steps[s].micro_pos[j];
+            }
+            loss / pos.max(1) as f32
+        })
+        .collect()
+}
+
+/// Run a native end-to-end training session: one executor worker
+/// thread per rank over the configured transport, `accum` micro-batch
+/// gradients accumulated locally in pooled buffers, one exchange per
+/// step through the policy→densify→fused-collective path, Adam on the
+/// combined-scaled sum.  See the module docs for the determinism
+/// contract the result carries.
+pub fn run_native_session(cfg: &NativeTrainConfig) -> anyhow::Result<NativeSessionResult> {
+    anyhow::ensure!(cfg.nranks >= 1, "need at least one rank");
+    anyhow::ensure!(cfg.steps >= 1, "need at least one step");
+    anyhow::ensure!(cfg.accum >= 1, "need at least one micro-batch per step");
+
+    let corpus = Corpus::generate(&cfg.corpus);
+    let (train_corpus, test_corpus) = if cfg.eval_pairs > 0 {
+        corpus.split(cfg.eval_pairs)
+    } else {
+        (corpus.clone(), corpus)
+    };
+
+    let budget = match cfg.budget_bytes {
+        Some(b) => Arc::new(MemoryBudget::limited(b)),
+        None => Arc::new(MemoryBudget::unlimited()),
+    };
+    let transport = cfg.transport.create_with_budget(cfg.nranks, budget)?;
+
+    let t0 = Instant::now();
+    let cfg_arc = Arc::new(cfg.clone());
+    let corpus_arc = Arc::new(train_corpus);
+    let workers: Vec<WorkerFn<NativeRankResult>> = (0..cfg.nranks)
+        .map(|rank| {
+            let transport = transport.clone();
+            let cfg = cfg_arc.clone();
+            let corpus = corpus_arc.clone();
+            Box::new(move |barrier: &Barrier| native_worker(rank, transport, &cfg, &corpus, barrier))
+                as WorkerFn<NativeRankResult>
+        })
+        .collect();
+    let mut per_rank = Vec::with_capacity(cfg.nranks);
+    for (rank, joined) in run_worker_threads(workers).into_iter().enumerate() {
+        per_rank.push(joined.map_err(|_| anyhow::anyhow!("rank {rank} thread panicked"))?);
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+
+    let loss_curve = global_loss_curve(&per_rank, cfg.accum);
+    let bleu = if cfg.eval_pairs > 0 {
+        let model = NativeModel::new(cfg.corpus.vocab, cfg.d_model);
+        let params = &per_rank[0].params;
+        let max_len = cfg.batch.2 * 2;
+        let hyps: Vec<Vec<i32>> = test_corpus
+            .pairs
+            .iter()
+            .map(|p| model.greedy_decode(params, &p.src, max_len))
+            .collect();
+        let refs: Vec<Vec<i32>> = test_corpus.pairs.iter().map(|p| p.tgt.clone()).collect();
+        Some(bleu_smoothed(&hyps, &refs))
+    } else {
+        None
+    };
+
+    Ok(NativeSessionResult {
+        per_rank,
+        loss_curve,
+        wall_secs,
+        bleu,
+        nranks: cfg.nranks,
+        accum: cfg.accum,
+    })
+}
+
+/// Densify a flat params-shaped image of (embedding grad, mixer grad)
+/// for tracing.
+fn flat_image(model: &NativeModel, emb: &Grad, mix: &[f32]) -> Vec<f32> {
+    let (v, d) = (model.vocab, model.d_model);
+    let mut flat = vec![0.0f32; model.n_params()];
+    match emb {
+        Grad::Dense(t) => flat[..v * d].copy_from_slice(&t.data),
+        Grad::Sparse(s) => {
+            let dense = s.to_dense();
+            flat[..v * d].copy_from_slice(&dense.data);
+        }
+    }
+    flat[v * d..].copy_from_slice(mix);
+    flat
+}
+
+/// One rank's session body (executor worker).
+fn native_worker(
+    rank: usize,
+    transport: Arc<dyn Transport>,
+    cfg: &NativeTrainConfig,
+    corpus: &Corpus,
+    barrier: &Barrier,
+) -> NativeRankResult {
+    let model = NativeModel::new(corpus.vocab, cfg.d_model);
+    let (v, d) = (model.vocab, model.d_model);
+    let mut params = model.init_params(cfg.seed);
+    let mut opt = Adam::new(model.n_params(), AdamConfig::default());
+    let batcher =
+        Batcher::new(corpus.clone(), cfg.batch, rank, cfg.nranks, cfg.seed ^ BATCH_SEED_SALT);
+
+    // Accumulators live in a pooled free list charged against the same
+    // budget as the transport payloads and the exchange arena.
+    let budget =
+        transport.memory_budget().unwrap_or_else(|| Arc::new(MemoryBudget::unlimited()));
+    let pool = PooledBuffers::new(budget.clone());
+    let mut exchange_cfg = cfg.exchange;
+    exchange_cfg.average = false; // single combined scale below
+    let mut ex = GradExchange::with_budget(transport, rank, exchange_cfg, budget);
+
+    let accum = cfg.accum;
+    let nranks = cfg.nranks;
+    // ONE combined scale: ÷p then ÷k rounds differently from ÷(p·k),
+    // and the accumulation-equivalence contract needs the single form.
+    let scale = 1.0 / (nranks * accum) as f32;
+
+    let mut steps_out = Vec::with_capacity(cfg.steps);
+    let mut grad_trace = Vec::new();
+    for step in 0..cfg.steps {
+        barrier.wait(); // executor-aligned step start
+        let c0 = Instant::now();
+
+        // mixer accumulator: always dense, pooled, zeroed
+        let mut acc_mix = pool.acquire(d * d);
+        acc_mix.resize(d * d, 0.0);
+        // embedding accumulator: pooled dense buffer (strategies that
+        // densify) or concatenated slices (TfDefault keeps gather form)
+        let mut acc_emb: Option<Vec<f32>> = None;
+        let mut acc_idx: Vec<i32> = Vec::new();
+        let mut acc_val: Vec<f32> = Vec::new();
+
+        let mut micro_loss = Vec::with_capacity(accum);
+        let mut micro_pos = Vec::with_capacity(accum);
+        let mut tokens = 0usize;
+        for j in 0..accum {
+            // global micro index: ascending-m order IS rank order at
+            // accum=1 and micro order at p=1 (module docs)
+            let m = step * (accum * nranks) + j * nranks + rank;
+            let batch = batcher.batch_at(m);
+            tokens += batch.real_tokens();
+            let micro = model.forward_backward(&params, &batch);
+            micro_loss.push(micro.loss_sum);
+            micro_pos.push(micro.n_pos);
+            let (tied, mixer) = micro.tied_contributions();
+            // local tied accumulation — the paper's strategy axis
+            let (tied_acc, _peak) = accumulate(tied, cfg.strategy);
+            match tied_acc {
+                Grad::Dense(t) => {
+                    let acc = acc_emb.get_or_insert_with(|| {
+                        let mut b = pool.acquire(v * d);
+                        b.resize(v * d, 0.0);
+                        b
+                    });
+                    // fresh zeroed acc += finished micro gradient:
+                    // exactly the Naive allreduce's summation sequence
+                    for (a, g) in acc.iter_mut().zip(&t.data) {
+                        *a += g;
+                    }
+                }
+                Grad::Sparse(s) => {
+                    // gather form accumulates by concatenation (exact)
+                    acc_idx.extend_from_slice(&s.indices);
+                    acc_val.extend_from_slice(&s.values);
+                }
+            }
+            for (a, g) in acc_mix.iter_mut().zip(&mixer.data) {
+                *a += g;
+            }
+        }
+
+        let emb_grad = match acc_emb.take() {
+            Some(buf) => Grad::Dense(DenseTensor::from_vec(vec![v, d], buf)),
+            None => Grad::Sparse(IndexedSlices::new(
+                v,
+                d,
+                std::mem::take(&mut acc_idx),
+                std::mem::take(&mut acc_val),
+            )),
+        };
+        let pre = cfg.trace_grads.then(|| flat_image(&model, &emb_grad, &acc_mix));
+        let mix_grad = DenseTensor::from_vec(vec![d, d], acc_mix);
+        let mut compute_us = c0.elapsed().as_micros() as u64;
+
+        // one exchange per effective batch
+        let e0 = Instant::now();
+        let (mut outs, report) = ex.exchange(vec![
+            NamedGrad { name: "embedding".into(), grad: emb_grad },
+            NamedGrad { name: "mixer".into(), grad: Grad::Dense(mix_grad) },
+        ]);
+        let exchange_us = e0.elapsed().as_micros() as u64;
+
+        let a0 = Instant::now();
+        let mix_out = outs.pop().expect("mixer out");
+        let emb_out = outs.pop().expect("embedding out");
+        let post = cfg.trace_grads.then(|| {
+            let mix_data = match &mix_out.grad {
+                Grad::Dense(t) => t.data.clone(),
+                Grad::Sparse(_) => unreachable!("mixer is dense"),
+            };
+            flat_image(&model, &emb_out.grad, &mix_data)
+        });
+        if let (Some(pre), Some(post)) = (pre, post) {
+            grad_trace.push(GradTrace { pre, post });
+        }
+
+        opt.begin_step();
+        let emb_scaled = match emb_out.grad {
+            Grad::Dense(mut t) => {
+                t.scale(scale);
+                Grad::Dense(t)
+            }
+            Grad::Sparse(mut s) => {
+                s.scale(scale);
+                Grad::Sparse(s)
+            }
+        };
+        opt.apply(&mut params, model.emb_offset(), v * d, &emb_scaled, cfg.lr);
+        let mut mix_t = match mix_out.grad {
+            Grad::Dense(t) => t,
+            Grad::Sparse(_) => unreachable!("mixer is dense"),
+        };
+        mix_t.scale(scale);
+        opt.apply_dense(&mut params, model.mixer_offset(), &mix_t.data, cfg.lr);
+        compute_us += a0.elapsed().as_micros() as u64;
+
+        // recycle the dense backing buffers (accumulators round-trip
+        // through the exchange arena and come back here)
+        if let Grad::Dense(t) = emb_scaled {
+            pool.release(t.data);
+        }
+        pool.release(mix_t.data);
+
+        steps_out.push(NativeStepTrace {
+            micro_loss,
+            micro_pos,
+            tokens,
+            compute_us,
+            exchange_us,
+            report,
+        });
+    }
+
+    NativeRankResult { rank, steps: steps_out, params, pool_stats: pool.stats(), grad_trace }
+}
+
+// ---------------------------------------------------------------------------
+// Native elastic session: the shrink/rollback protocol on real gradients
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`run_native_elastic_session`] — the elastic
+/// protocol of [`super::session`] with the native model's gradients
+/// (plain SGD, so the closed-form oracle stays replayable).
+#[derive(Debug, Clone)]
+pub struct NativeElasticConfig {
+    /// Initial world size.
+    pub nranks: usize,
+    /// Optimizer steps survivors must complete.
+    pub steps: usize,
+    /// Hidden width (vocab comes from `corpus`).
+    pub d_model: usize,
+    /// Batch shape `(b, ss, st)`.
+    pub batch: (usize, usize, usize),
+    /// Synthetic corpus.
+    pub corpus: CorpusConfig,
+    /// SGD learning rate (applied to the mean gradient over members).
+    pub lr: f32,
+    /// Checkpoint every N committed steps (step-0 baseline always).
+    pub checkpoint_every: usize,
+    /// Allreduce algorithm.  `Naive` root-sums in dense-rank order —
+    /// the order [`native_elastic_oracle`] replays.
+    pub algo: AllreduceAlgo,
+    /// Wire format for the gradient allreduce.
+    pub wire: WireFormat,
+    /// Per-receive timeout inside collectives.
+    pub recv_timeout: Duration,
+    /// Monitor deadline for declaring a silent rank dead.
+    pub heartbeat_deadline: Duration,
+    /// Fault plan (kill schedules, link faults).
+    pub faults: FaultPlan,
+    /// Shared checkpoint path.
+    pub ckpt_path: PathBuf,
+    /// Seed for parameters and batch order.
+    pub seed: u64,
+    /// Transport kind.
+    pub transport: TransportKind,
+}
+
+impl NativeElasticConfig {
+    /// Small fast defaults for tests.
+    pub fn quick(nranks: usize, steps: usize, ckpt_path: PathBuf) -> Self {
+        Self {
+            nranks,
+            steps,
+            d_model: 8,
+            batch: (2, 8, 8),
+            corpus: CorpusConfig { vocab: 32, n_pairs: 128, ..Default::default() },
+            lr: 0.1,
+            checkpoint_every: 2,
+            algo: AllreduceAlgo::Naive,
+            wire: WireFormat::F32,
+            recv_timeout: Duration::from_millis(150),
+            heartbeat_deadline: Duration::from_millis(500),
+            faults: FaultPlan::none(),
+            ckpt_path,
+            seed: 42,
+            transport: TransportKind::Shm,
+        }
+    }
+
+    fn model(&self) -> NativeModel {
+        NativeModel::new(self.corpus.vocab, self.d_model)
+    }
+}
+
+/// The flat params-shaped gradient of one micro-batch: proj, target
+/// rows, source rows scattered into the embedding block (fixed order),
+/// mixer copied into its block.  Shared verbatim by the workers and
+/// the oracle, so both produce identical bits.
+fn native_flat_grad(model: &NativeModel, params: &[f32], batch: &Batch) -> Vec<f32> {
+    let d = model.d_model;
+    let micro = model.forward_backward(params, batch);
+    let mut flat = vec![0.0f32; model.n_params()];
+    for (i, x) in micro.g_proj.data.iter().enumerate() {
+        flat[i] += x;
+    }
+    for (s, &row) in micro.g_emb_tgt.indices.iter().enumerate() {
+        let base = row as usize * d;
+        for k in 0..d {
+            flat[base + k] += micro.g_emb_tgt.values[s * d + k];
+        }
+    }
+    for (s, &row) in micro.g_emb_src.indices.iter().enumerate() {
+        let base = row as usize * d;
+        for k in 0..d {
+            flat[base + k] += micro.g_emb_src.values[s * d + k];
+        }
+    }
+    flat[model.mixer_offset()..].copy_from_slice(&micro.g_mixer.data);
+    flat
+}
+
+/// Write the step-0 baseline checkpoint (model-sized) for `cfg`.
+pub fn write_native_baseline_checkpoint(cfg: &NativeElasticConfig) -> anyhow::Result<()> {
+    let model = cfg.model();
+    let zeros = vec![0.0f32; model.n_params()];
+    Checkpoint {
+        step: 0,
+        params: model.init_params(cfg.seed),
+        adam_m: zeros.clone(),
+        adam_v: zeros,
+    }
+    .save(&cfg.ckpt_path)?;
+    Ok(())
+}
+
+/// Run the native elastic session: real model gradients under the
+/// checkpoint/shrink recovery protocol.  Survivors finish all steps
+/// with bit-identical parameters; a killed rank's run is replayed
+/// exactly by [`native_elastic_oracle`].
+pub fn run_native_elastic_session(cfg: &NativeElasticConfig) -> anyhow::Result<ElasticReport> {
+    anyhow::ensure!(cfg.nranks >= 1, "need at least one rank");
+    anyhow::ensure!(cfg.steps >= 1, "need at least one step");
+    write_native_baseline_checkpoint(cfg)?;
+
+    let base: Arc<dyn Transport> = cfg.transport.create(cfg.nranks)?;
+    let transport: Arc<dyn Transport> = if cfg.faults.has_link_faults() {
+        Arc::new(FaultyTransport::new(base, cfg.faults.clone()))
+    } else {
+        base
+    };
+    let opts = HealthOpts {
+        heartbeat_deadline: cfg.heartbeat_deadline,
+        poll: Duration::from_millis(10),
+    };
+    let corpus = Arc::new(Corpus::generate(&cfg.corpus));
+    let cfg_arc = Arc::new(cfg.clone());
+    let run = run_elastic(transport, opts, move |rank, t, health| {
+        native_elastic_worker(rank, t, &*health, &cfg_arc, &corpus)
+    });
+
+    let mut report = ElasticReport {
+        survivors: Vec::new(),
+        died: Vec::new(),
+        evicted: Vec::new(),
+        failed: Vec::new(),
+    };
+    for (rank, exit) in run.exits.into_iter().enumerate() {
+        match exit {
+            RankExit::Finished(o) => report.survivors.push(o),
+            RankExit::Died { cycle } => report.died.push((rank, cycle)),
+            RankExit::Evicted => report.evicted.push(rank),
+            RankExit::Failed(msg) => report.failed.push((rank, msg)),
+        }
+    }
+    Ok(report)
+}
+
+/// Per-rank body of the native elastic loop — the protocol of
+/// [`super::session::elastic_worker`] with the synthetic closed-form
+/// gradient replaced by [`native_flat_grad`] on the group-sharded
+/// batch `step · |members| + dense_rank`.
+pub fn native_elastic_worker(
+    rank: usize,
+    transport: Arc<dyn Transport>,
+    coord: &dyn ElasticCoord,
+    cfg: &NativeElasticConfig,
+    corpus: &Corpus,
+) -> RankExit<ElasticOutcome> {
+    let model = cfg.model();
+    let batcher = Batcher::new(corpus.clone(), cfg.batch, 0, 1, cfg.seed ^ BATCH_SEED_SALT);
+    let kill_cycle = cfg.faults.kill_cycle(rank);
+    let mut group = Group::world(cfg.nranks);
+    let mut params = model.init_params(cfg.seed);
+    let mut step: u64 = 0;
+    let mut attempt: u64 = 0;
+    let mut seq: u64 = 0;
+    let mut retries: u64 = 0;
+    let mut rollbacks: u64 = 0;
+    let steps = cfg.steps as u64;
+
+    while step < steps {
+        if kill_cycle == Some(step as usize) {
+            return RankExit::Died { cycle: step as usize };
+        }
+        coord.beat(rank);
+
+        attempt = match coord.sync_start(rank, &group, seq, attempt) {
+            Ok(a) => a,
+            Err(_) => return RankExit::Evicted,
+        };
+        seq += 1;
+        if attempt >= MAX_ATTEMPTS {
+            coord.declare_dead(rank);
+            transport.mark_dead(rank);
+            return RankExit::Failed(format!(
+                "step {step}: retry budget exhausted after {attempt} attempts"
+            ));
+        }
+        let oom = cfg.faults.oom_attempts(rank, step as usize) as u64 > attempt;
+        if oom && attempt >= OOM_DEATH_ATTEMPTS {
+            coord.declare_dead(rank);
+            transport.mark_dead(rank);
+            return RankExit::Failed(format!(
+                "step {step}: memory budget exhausted after {attempt} degraded retries"
+            ));
+        }
+
+        let era = group.epoch * 1024 + attempt;
+        let sub = SubTransport::new(transport.clone(), group.members.clone(), era);
+        let dense = group.dense_rank(rank).expect("member of own group");
+
+        // group-sharded batch: dense rank dr of q members takes micro
+        // step·q + dr — the formula the oracle replays
+        let batch = batcher.batch_at(step as usize * group.members.len() + dense);
+        let mut buf = native_flat_grad(&model, &params, &batch);
+        let ok = if oom || coord.group_impaired(&group) {
+            false
+        } else {
+            collectives::try_allreduce_wire_seg(
+                &sub,
+                dense,
+                &mut buf,
+                cfg.algo,
+                step * TAG_BLOCK,
+                cfg.wire,
+                degraded_segment(attempt),
+                Some(cfg.recv_timeout),
+            )
+            .is_ok()
+        };
+        coord.beat(rank);
+
+        let verdict = match coord.commit(rank, &group, seq, ok) {
+            Ok(v) => v,
+            Err(_) => return RankExit::Evicted,
+        };
+        seq += 1;
+
+        match verdict {
+            Verdict::Commit => {
+                let scale = cfg.lr / group.members.len() as f32;
+                for (p, g) in params.iter_mut().zip(&buf) {
+                    *p -= scale * g;
+                }
+                step += 1;
+                attempt = 0;
+                let at_interval =
+                    cfg.checkpoint_every > 0 && step % cfg.checkpoint_every as u64 == 0;
+                if at_interval || step == steps {
+                    if rank == group.leader() {
+                        let zeros = vec![0.0f32; model.n_params()];
+                        let ck = Checkpoint {
+                            step,
+                            params: params.clone(),
+                            adam_m: zeros.clone(),
+                            adam_v: zeros,
+                        };
+                        if let Err(e) = ck.save(&cfg.ckpt_path) {
+                            coord.declare_dead(rank);
+                            transport.mark_dead(rank);
+                            return RankExit::Failed(format!("checkpoint save: {e}"));
+                        }
+                    }
+                    if coord.sync_point(rank, &group, seq).is_err() {
+                        return RankExit::Evicted;
+                    }
+                    seq += 1;
+                }
+            }
+            Verdict::Retry => {
+                attempt += 1;
+                retries += 1;
+            }
+            Verdict::Shrink => {
+                group = match coord.regroup(rank, &group) {
+                    Ok(g) => g,
+                    Err(_) => return RankExit::Evicted,
+                };
+                seq = 0;
+                attempt = 0;
+                rollbacks += 1;
+                match Checkpoint::load(&cfg.ckpt_path) {
+                    Ok(ck) => {
+                        step = ck.step;
+                        params = ck.params;
+                    }
+                    Err(e) => {
+                        coord.declare_dead(rank);
+                        transport.mark_dead(rank);
+                        return RankExit::Failed(format!("checkpoint load: {e}"));
+                    }
+                }
+            }
+        }
+    }
+
+    RankExit::Finished(ElasticOutcome {
+        rank,
+        params,
+        steps_done: step,
+        retries,
+        rollbacks,
+        final_epoch: group.epoch,
+        members: group.members,
+    })
+}
+
+/// Closed-form replay of a native elastic run with one scheduled kill:
+/// `kill_rank` dies at the start of step `kill_step`, the survivors
+/// shrink and roll back to the last checkpoint
+/// `C = ⌊kill_step / checkpoint_every⌋ · checkpoint_every`, so the
+/// final parameters are: steps `0..C` with the full group, then steps
+/// `C..steps` with the survivors — each step a dense-rank-order
+/// (`Naive`) sum of [`native_flat_grad`] over the group-sharded
+/// batches, applied at `lr/|members|`.  Pass `kill_step >= steps` (or
+/// no kill) to replay a fault-free run.
+pub fn native_elastic_oracle(
+    cfg: &NativeElasticConfig,
+    kill: Option<(usize, usize)>,
+) -> Vec<f32> {
+    let model = cfg.model();
+    let corpus = Corpus::generate(&cfg.corpus);
+    let batcher = Batcher::new(corpus, cfg.batch, 0, 1, cfg.seed ^ BATCH_SEED_SALT);
+    let mut params = model.init_params(cfg.seed);
+
+    let replay = |params: &mut Vec<f32>, members: &[usize], from: usize, to: usize| {
+        let q = members.len();
+        let scale = cfg.lr / q as f32;
+        for step in from..to {
+            // dense-rank-order sum: exactly the Naive allreduce's root
+            // accumulation sequence
+            let mut sum: Option<Vec<f32>> = None;
+            for dense in 0..q {
+                let batch = batcher.batch_at(step * q + dense);
+                let g = native_flat_grad(&model, params, &batch);
+                match &mut sum {
+                    None => sum = Some(g),
+                    Some(acc) => {
+                        for (a, x) in acc.iter_mut().zip(&g) {
+                            *a += x;
+                        }
+                    }
+                }
+            }
+            let sum = sum.expect("at least one member");
+            for (p, g) in params.iter_mut().zip(&sum) {
+                *p -= scale * g;
+            }
+        }
+    };
+
+    match kill {
+        Some((kill_rank, kill_step)) if kill_step < cfg.steps => {
+            let c = if cfg.checkpoint_every > 0 {
+                (kill_step / cfg.checkpoint_every) * cfg.checkpoint_every
+            } else {
+                0
+            };
+            let full: Vec<usize> = (0..cfg.nranks).collect();
+            let survivors: Vec<usize> =
+                (0..cfg.nranks).filter(|&r| r != kill_rank).collect();
+            replay(&mut params, &full, 0, c);
+            replay(&mut params, &survivors, c, cfg.steps);
+        }
+        _ => {
+            let full: Vec<usize> = (0..cfg.nranks).collect();
+            replay(&mut params, &full, 0, cfg.steps);
+        }
+    }
+    params
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn session_runs_and_ranks_agree() {
+        let cfg = NativeTrainConfig {
+            nranks: 2,
+            steps: 3,
+            d_model: 8,
+            corpus: CorpusConfig { vocab: 32, n_pairs: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_native_session(&cfg).unwrap();
+        r.assert_ranks_agree();
+        assert_eq!(r.loss_curve.len(), 3);
+        assert!(r.loss_curve.iter().all(|l| l.is_finite() && *l > 0.0));
+        assert!(r.total_tokens() > 0);
+    }
+
+    #[test]
+    fn accumulation_pools_recycle() {
+        let cfg = NativeTrainConfig {
+            nranks: 1,
+            steps: 5,
+            accum: 2,
+            d_model: 8,
+            corpus: CorpusConfig { vocab: 32, n_pairs: 64, ..Default::default() },
+            transport: TransportKind::Local,
+            ..Default::default()
+        };
+        let r = run_native_session(&cfg).unwrap();
+        let s = r.per_rank[0].pool_stats;
+        // warm-up allocates; steady state recycles
+        assert!(s.allocated > 0);
+        assert!(s.recycled > 0, "accumulators must recycle: {s:?}");
+    }
+
+    #[test]
+    fn accumulator_buffers_charge_the_budget() {
+        let cfg = NativeTrainConfig {
+            nranks: 1,
+            steps: 2,
+            d_model: 8,
+            corpus: CorpusConfig { vocab: 32, n_pairs: 64, ..Default::default() },
+            transport: TransportKind::Local,
+            budget_bytes: Some(8 * 1024 * 1024),
+            ..Default::default()
+        };
+        let r = run_native_session(&cfg).unwrap();
+        assert!(
+            r.per_rank[0].pool_stats.bytes_peak > 0,
+            "pooled accumulators must be accounted"
+        );
+    }
+
+    #[test]
+    fn bleu_eval_is_produced() {
+        let cfg = NativeTrainConfig {
+            nranks: 1,
+            steps: 2,
+            d_model: 8,
+            corpus: CorpusConfig { vocab: 32, n_pairs: 64, ..Default::default() },
+            transport: TransportKind::Local,
+            eval_pairs: 4,
+            ..Default::default()
+        };
+        let r = run_native_session(&cfg).unwrap();
+        let b = r.bleu.expect("bleu requested");
+        assert!((0.0..=100.0).contains(&b));
+    }
+
+    #[test]
+    fn tf_default_strategy_runs_sparse() {
+        let cfg = NativeTrainConfig {
+            nranks: 2,
+            steps: 2,
+            d_model: 8,
+            strategy: AccumStrategy::TfDefault,
+            corpus: CorpusConfig { vocab: 32, n_pairs: 64, ..Default::default() },
+            ..Default::default()
+        };
+        let r = run_native_session(&cfg).unwrap();
+        r.assert_ranks_agree();
+        // gather path: the exchange must have run allgathers
+        assert!(r.per_rank[0].steps[0].report.n_allgather_ops > 0);
+    }
+
+    #[test]
+    fn native_elastic_fault_free_matches_oracle() {
+        let path = std::env::temp_dir()
+            .join(format!("densefold_native_elastic_clean_{}.ckpt", std::process::id()));
+        let cfg = NativeElasticConfig::quick(2, 3, path.clone());
+        let report = run_native_elastic_session(&cfg).unwrap();
+        report.assert_survivors_agree(3);
+        let want: Vec<u32> =
+            native_elastic_oracle(&cfg, None).iter().map(|x| x.to_bits()).collect();
+        let got: Vec<u32> =
+            report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+        assert_eq!(got, want, "fault-free run must match the closed-form replay");
+        let _ = std::fs::remove_file(path);
+    }
+}

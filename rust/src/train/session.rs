@@ -1,8 +1,11 @@
-//! Multi-rank training session helper: spawns rank threads over a
-//! shared transport + engine, runs N steps, collects per-step stats,
-//! optionally evaluates BLEU at the end.  This is the harness the
-//! examples, the live-calibration path, and the integration tests all
-//! drive.
+//! Multi-rank training session helper: runs rank trainers on the
+//! executor's worker-thread skeleton
+//! ([`run_worker_threads`](crate::runtime::executor::run_worker_threads))
+//! over a shared transport + engine, runs N steps with barrier-aligned
+//! step starts, collects per-step stats, optionally evaluates BLEU at
+//! the end.  This is the harness the examples, the live-calibration
+//! path, and the integration tests all drive; the engine-free native
+//! sibling is [`crate::train::native`].
 //!
 //! The second half of this module is the **elastic session**
 //! ([`run_elastic_session`]): a synthetic data-parallel training loop
@@ -21,7 +24,7 @@ use std::time::Duration;
 use crate::collectives::{self, AllreduceAlgo, TAG_BLOCK};
 use crate::coordinator::ExchangeConfig;
 use crate::data::{bleu::bleu_smoothed, Corpus, CorpusConfig};
-use crate::runtime::executor::{run_elastic, RankExit};
+use crate::runtime::executor::{run_elastic, run_worker_threads, RankExit, WorkerFn};
 use crate::runtime::health::{ElasticCoord, Group, HealthOpts, Verdict};
 use crate::runtime::{Engine, Manifest};
 use crate::tensor::AccumStrategy;
@@ -118,11 +121,13 @@ pub fn run_session(cfg: &SessionConfig, manifest: &Manifest) -> anyhow::Result<S
 
 /// Run a live multi-rank training session on an existing engine.
 ///
-/// Rank 0's trainer stays on the caller thread (so its timeline can be
-/// inspected); other ranks run on spawned threads.  All ranks share
-/// the PJRT engine (execution serializes — see `runtime::engine`).
-/// Artifact loading is idempotent, so repeated sessions on one engine
-/// compile each HLO once.
+/// Every rank runs as an executor worker thread
+/// ([`run_worker_threads`]) with barrier-aligned step starts; rank 0's
+/// trainer is handed back out of its thread so the end-of-run BLEU
+/// decode can use its replica.  All ranks share the PJRT engine
+/// (execution serializes — see `runtime::engine`).  Artifact loading
+/// is idempotent, so repeated sessions on one engine compile each HLO
+/// once.
 pub fn run_session_with_engine(
     cfg: &SessionConfig,
     manifest: &Manifest,
@@ -176,29 +181,31 @@ pub fn run_session_with_engine(
 
     let steps = cfg.steps;
     let t0 = std::time::Instant::now();
-    let mut rank0 = trainers.remove(0);
-    let handles: Vec<_> = trainers
+    type RankDone = anyhow::Result<(usize, Vec<StepStats>, Trainer)>;
+    let workers: Vec<WorkerFn<RankDone>> = trainers
         .into_iter()
         .map(|mut tr| {
-            std::thread::spawn(move || -> anyhow::Result<(usize, Vec<StepStats>)> {
+            Box::new(move |barrier: &std::sync::Barrier| -> RankDone {
                 let mut stats = Vec::with_capacity(steps);
                 for _ in 0..steps {
+                    barrier.wait(); // barrier-aligned step starts
                     stats.push(tr.train_step()?);
                 }
-                Ok((tr.rank, stats))
-            })
+                Ok((tr.rank, stats, tr))
+            }) as WorkerFn<RankDone>
         })
         .collect();
-    let mut rank0_stats = Vec::with_capacity(steps);
-    for _ in 0..steps {
-        rank0_stats.push(rank0.train_step()?);
-    }
     let mut all = vec![Vec::new(); cfg.nranks];
-    all[0] = rank0_stats;
-    for h in handles {
-        let (rank, stats) = h.join().map_err(|_| anyhow::anyhow!("rank thread panicked"))??;
+    let mut rank0 = None;
+    for (slot, joined) in run_worker_threads(workers).into_iter().enumerate() {
+        let (rank, stats, tr) =
+            joined.map_err(|_| anyhow::anyhow!("rank {slot} thread panicked"))??;
+        if rank == 0 {
+            rank0 = Some(tr);
+        }
         all[rank] = stats;
     }
+    let rank0 = rank0.expect("rank 0 finished");
     let wall_secs = t0.elapsed().as_secs_f64();
 
     let bleu_score = if want_eval {
@@ -221,14 +228,14 @@ pub fn run_session_with_engine(
 /// member, so hitting the cap is a collective decision.  The era
 /// formula (`epoch * 1024 + attempt`) needs attempt < 1024; 512 is
 /// far beyond anything a sub-certain fault rate produces.
-const MAX_ATTEMPTS: u64 = 512;
+pub(crate) const MAX_ATTEMPTS: u64 = 512;
 
 /// Injected budget exhaustion ([`FaultPlan::with_oom`]) that survives
 /// this many degraded retries of one step is unrecoverable: the rank
 /// self-declares dead so the survivors shrink around it, exactly like
 /// a crash.  Kept small — each failed attempt already shrank the
 /// segment 4x, so by the fourth the plan is as degraded as it gets.
-const OOM_DEATH_ATTEMPTS: u64 = 4;
+pub(crate) const OOM_DEATH_ATTEMPTS: u64 = 4;
 
 /// Pipelined-ring segment size for a retry attempt: each failed
 /// attempt quarters the segment (floor one element), trading pipeline
@@ -237,7 +244,7 @@ const OOM_DEATH_ATTEMPTS: u64 = 4;
 /// requires — every member derives the same segment without any extra
 /// agreement traffic.  Segment size never changes the per-element
 /// reduction order, so degraded retries stay bit-identical.
-fn degraded_segment(attempt: u64) -> usize {
+pub(crate) fn degraded_segment(attempt: u64) -> usize {
     (collectives::ring::DEFAULT_SEGMENT_ELEMS >> (2 * attempt.min(16))).max(1)
 }
 

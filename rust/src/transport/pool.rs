@@ -214,12 +214,62 @@ pub(crate) fn release_to<T>(
     }
 }
 
+/// A self-contained f32 free-list pool over one [`MemoryBudget`] —
+/// the (mutex free list, counters, budget) triple every pooled
+/// subsystem re-assembles, packaged once.  The native trainer's
+/// gradient accumulators use this so their working set is charged
+/// against the same per-process ceiling as the transport payloads and
+/// the fusion arena (see [`super::budget`]).
+pub struct PooledBuffers {
+    pool: Mutex<Vec<Vec<f32>>>,
+    counters: PoolCounters,
+    budget: std::sync::Arc<MemoryBudget>,
+}
+
+impl PooledBuffers {
+    /// A pool charging `budget` (pass the transport's own budget so
+    /// one ceiling covers payloads + accumulators together).
+    pub fn new(budget: std::sync::Arc<MemoryBudget>) -> Self {
+        Self { pool: Mutex::new(Vec::new()), counters: PoolCounters::default(), budget }
+    }
+
+    /// Take a cleared buffer with capacity for `len` f32 elements
+    /// (recycled best-fit, or freshly charged — see [`acquire_from`]).
+    pub fn acquire(&self, len: usize) -> Vec<f32> {
+        acquire_from(&self.pool, &self.counters, &self.budget, len)
+    }
+
+    /// Return a buffer for recycling (dropped + released under
+    /// pressure or above the retention watermark — see [`release_to`]).
+    pub fn release(&self, buf: Vec<f32>) {
+        release_to(&self.pool, &self.counters, &self.budget, buf)
+    }
+
+    /// Counter snapshot (allocated/recycled/returned/bytes held…).
+    pub fn stats(&self) -> super::PoolStats {
+        self.counters.snapshot()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     fn unlimited() -> MemoryBudget {
         MemoryBudget::unlimited()
+    }
+
+    #[test]
+    fn pooled_buffers_recycle_and_charge() {
+        let budget = std::sync::Arc::new(MemoryBudget::unlimited());
+        let pool = PooledBuffers::new(budget.clone());
+        let a = pool.acquire(256);
+        assert_eq!(budget.held(), 256 * 4, "fresh acquire is charged");
+        pool.release(a);
+        let b = pool.acquire(100);
+        assert_eq!(pool.stats().recycled, 1, "best-fit reuse");
+        pool.release(b);
+        assert_eq!(pool.stats().allocated, 1);
     }
 
     #[test]

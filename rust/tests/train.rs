@@ -1,0 +1,310 @@
+//! End-to-end training determinism suite (ISSUE 9 tentpole gate).
+//!
+//! Three bit-exactness pillars, each asserted with `f32::to_bits`:
+//!
+//! 1. **Accumulation equivalence** — `p = k, accum = 1` and
+//!    `p = 1, accum = k` produce identical loss curves and identical
+//!    final parameters under the `Naive` allreduce + f32 wire, because
+//!    both orderings sum the same micro-gradients in the same ascending
+//!    global-micro order (see `train::native` module docs).
+//! 2. **Transport invariance** — the same configuration run over
+//!    `Local`, `Shm`, and `Socket` transports yields bit-identical
+//!    trajectories: transports move bytes, they never reassociate sums.
+//! 3. **Elastic replay** — kill a rank mid-run; the survivors'
+//!    bit-exact final parameters match a closed-form single-threaded
+//!    oracle (full group to the rollback checkpoint, survivors after).
+//!
+//! A randomized sweep bounds the 16-bit wire error per element against
+//! exact f64 cross-rank sums, and every long-running test rides
+//! [`with_deadline`] so a deadlock is a loud CI failure, not a hang.
+
+use densefold::collectives::AllreduceAlgo;
+use densefold::coordinator::ExchangeConfig;
+use densefold::data::CorpusConfig;
+use densefold::tensor::AccumStrategy;
+use densefold::train::{
+    native_elastic_oracle, run_native_elastic_session, run_native_session, NativeElasticConfig,
+    NativeSessionResult, NativeTrainConfig,
+};
+use densefold::transport::{FaultPlan, TransportKind, WireFormat};
+use densefold::util::proptest::{run, with_deadline, Gen};
+
+/// Small, fast session config: `p` ranks, `accum` micros per step.
+fn tiny(nranks: usize, accum: usize, steps: usize) -> NativeTrainConfig {
+    NativeTrainConfig {
+        nranks,
+        steps,
+        accum,
+        d_model: 8,
+        batch: (2, 8, 8),
+        lr: 0.01,
+        seed: 17,
+        strategy: AccumStrategy::SparseAsDense,
+        exchange: ExchangeConfig::default(),
+        transport: TransportKind::Shm,
+        corpus: CorpusConfig { vocab: 32, n_pairs: 128, ..Default::default() },
+        budget_bytes: None,
+        eval_pairs: 0,
+        trace_grads: false,
+    }
+}
+
+fn curve_bits(r: &NativeSessionResult) -> Vec<u32> {
+    r.loss_curve.iter().map(|x| x.to_bits()).collect()
+}
+
+fn param_bits(r: &NativeSessionResult) -> Vec<u32> {
+    r.per_rank[0].params.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Per-test checkpoint path: integration tests share one process and
+/// run on parallel threads, so the name must carry the test name.
+fn ckpt(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!(
+        "densefold_train_it_{name}_{}.ckpt",
+        std::process::id()
+    ))
+}
+
+// ---------------------------------------------------------------------
+// Pillar 1: accumulation equivalence
+// ---------------------------------------------------------------------
+
+/// `p = k, accum = 1` must be bit-identical to `p = 1, accum = k`:
+/// same micro set, same ascending-global-micro summation order.  The
+/// gate pins `Naive` (root sums in dense-rank order — the order local
+/// accumulation replays) and the lossless f32 wire; ring variants
+/// rotate per-segment reduction order and are *expected* to differ.
+#[test]
+fn accumulation_equivalence_is_bit_exact() {
+    with_deadline(120, "accumulation equivalence", || {
+        for k in [2usize, 4] {
+            let mk = |nranks: usize, accum: usize| {
+                let mut c = tiny(nranks, accum, 4);
+                c.exchange.algo = AllreduceAlgo::Naive;
+                c.exchange.wire = WireFormat::F32;
+                run_native_session(&c).unwrap()
+            };
+            let wide = mk(k, 1); // k ranks, one micro each
+            let deep = mk(1, k); // one rank, k micros
+            wide.assert_ranks_agree();
+            assert_eq!(
+                curve_bits(&wide),
+                curve_bits(&deep),
+                "loss curve diverged between p={k}/accum=1 and p=1/accum={k}"
+            );
+            assert_eq!(
+                param_bits(&wide),
+                param_bits(&deep),
+                "final params diverged between p={k}/accum=1 and p=1/accum={k}"
+            );
+        }
+    });
+}
+
+/// The same equivalence on the paper's pathological `TfDefault` path:
+/// local accumulation *concatenates* IndexedSlices in micro order,
+/// which equals the allgather's rank-order concatenation — both sides
+/// densify identically inside the optimizer.
+#[test]
+fn accumulation_equivalence_holds_on_tf_default_sparse_path() {
+    with_deadline(120, "tf-default equivalence", || {
+        let mk = |nranks: usize, accum: usize| {
+            let mut c = tiny(nranks, accum, 3);
+            c.strategy = AccumStrategy::TfDefault;
+            c.exchange.algo = AllreduceAlgo::Naive;
+            c.exchange.wire = WireFormat::F32;
+            run_native_session(&c).unwrap()
+        };
+        let wide = mk(2, 1);
+        let deep = mk(1, 2);
+        assert_eq!(curve_bits(&wide), curve_bits(&deep), "tf-default loss curve diverged");
+        assert_eq!(param_bits(&wide), param_bits(&deep), "tf-default params diverged");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Pillar 2: transport invariance
+// ---------------------------------------------------------------------
+
+/// The loss trajectory and final parameters at p = 4 are bit-identical
+/// whether ranks exchange over in-process mailboxes (`Local`), the
+/// shared-memory pairwise transport (`Shm`), or real Unix-domain
+/// sockets (`Socket`).  Default exchange config (pipelined ring) —
+/// invariance needs the same *algorithm*, not a particular one.
+#[test]
+fn loss_trajectory_is_transport_invariant_at_p4() {
+    with_deadline(180, "transport invariance", || {
+        let mk = |t: TransportKind| {
+            let mut c = tiny(4, 2, 4);
+            c.transport = t;
+            run_native_session(&c).unwrap()
+        };
+        let reference = mk(TransportKind::Local);
+        reference.assert_ranks_agree();
+        for t in [TransportKind::Shm, TransportKind::Socket] {
+            let other = mk(t);
+            other.assert_ranks_agree();
+            assert_eq!(
+                curve_bits(&reference),
+                curve_bits(&other),
+                "loss curve over {t:?} diverged from Local"
+            );
+            assert_eq!(
+                param_bits(&reference),
+                param_bits(&other),
+                "params over {t:?} diverged from Local"
+            );
+        }
+    });
+}
+
+/// Acceptance sweep: `repro train`'s engine runs at p ∈ {1, 2, 4} and
+/// every rank agrees, with a finite positive loss at every step.
+#[test]
+fn session_runs_at_all_acceptance_world_sizes() {
+    with_deadline(180, "world-size sweep", || {
+        for p in [1usize, 2, 4] {
+            let r = run_native_session(&tiny(p, 2, 3)).unwrap();
+            r.assert_ranks_agree();
+            assert_eq!(r.loss_curve.len(), 3, "p={p}");
+            assert!(
+                r.loss_curve.iter().all(|l| l.is_finite() && *l > 0.0),
+                "p={p}: bad loss curve {:?}",
+                r.loss_curve
+            );
+            assert!(r.total_tokens() > 0, "p={p}: no tokens");
+        }
+    });
+}
+
+/// Re-running the identical config replays the identical bits — the
+/// whole pipeline (corpus, batcher, model, exchange, Adam) is a pure
+/// function of the config.
+#[test]
+fn identical_configs_replay_identical_bits() {
+    with_deadline(120, "replay determinism", || {
+        let a = run_native_session(&tiny(2, 2, 3)).unwrap();
+        let b = run_native_session(&tiny(2, 2, 3)).unwrap();
+        assert_eq!(curve_bits(&a), curve_bits(&b), "replay loss curve diverged");
+        assert_eq!(param_bits(&a), param_bits(&b), "replay params diverged");
+    });
+}
+
+// ---------------------------------------------------------------------
+// Pillar 3: elastic replay against the closed-form oracle
+// ---------------------------------------------------------------------
+
+/// Kill rank 1 at cycle 3 of a 3-rank, 6-step run.  The survivors
+/// shrink, roll back to the step-2 checkpoint, and finish — and their
+/// bit-exact final parameters match the single-threaded oracle that
+/// replays steps 0..2 with the full group and 2..6 with {0, 2}.
+#[test]
+fn elastic_kill_matches_closed_form_oracle() {
+    let path = ckpt("kill");
+    let mut cfg = NativeElasticConfig::quick(3, 6, path.clone());
+    cfg.faults = FaultPlan::none().with_kill(1, 3);
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let run_cfg = cfg.clone();
+    with_deadline(120, "elastic kill vs oracle", move || {
+        let report = run_native_elastic_session(&run_cfg).expect("session failed");
+        tx.send(report).unwrap();
+    });
+    let report = rx.recv().unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    assert_eq!(report.died, vec![(1, 3)], "kill schedule not honored");
+    assert!(report.failed.is_empty(), "hard failures: {:?}", report.failed);
+    assert!(report.evicted.is_empty(), "false evictions: {:?}", report.evicted);
+    report.assert_survivors_agree(6);
+    assert_eq!(report.final_members(), vec![0, 2]);
+
+    let oracle = native_elastic_oracle(&cfg, Some((1, 3)));
+    let got: Vec<u32> = report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+    let want: Vec<u32> = oracle.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got, want, "survivor params diverged from the oracle replay");
+}
+
+/// Fault-free elastic run over sockets matches the full-group oracle —
+/// the elastic path's determinism doesn't depend on the transport.
+#[test]
+fn elastic_fault_free_over_sockets_matches_oracle() {
+    let path = ckpt("socket_ff");
+    let mut cfg = NativeElasticConfig::quick(2, 4, path.clone());
+    cfg.transport = TransportKind::Socket;
+
+    let (tx, rx) = std::sync::mpsc::channel();
+    let run_cfg = cfg.clone();
+    with_deadline(120, "elastic socket fault-free", move || {
+        let report = run_native_elastic_session(&run_cfg).expect("session failed");
+        tx.send(report).unwrap();
+    });
+    let report = rx.recv().unwrap();
+    let _ = std::fs::remove_file(&path);
+
+    report.assert_survivors_agree(4);
+    let oracle = native_elastic_oracle(&cfg, None);
+    let got: Vec<u32> = report.survivors[0].params.iter().map(|x| x.to_bits()).collect();
+    let want: Vec<u32> = oracle.iter().map(|x| x.to_bits()).collect();
+    assert_eq!(got, want, "fault-free socket run diverged from the oracle");
+}
+
+// ---------------------------------------------------------------------
+// Randomized: 16-bit wire error envelope + convergence
+// ---------------------------------------------------------------------
+
+/// Random (model size × accum × wire ∈ {fp16, bf16}) sessions: every
+/// exchanged gradient element stays within the documented wire-error
+/// envelope — `(p + 1) · unit_roundoff · Σ_r |g_r|` plus an absolute
+/// floor — of the exact f64 cross-rank sum, per step.  And the model
+/// still *learns*: the loss curve ends below where it started.
+#[test]
+fn prop_sixteen_bit_wire_error_stays_in_envelope_and_training_converges() {
+    with_deadline(300, "wire-error envelope sweep", || {
+        run(6, |g: &mut Gen| {
+            let p = *g.choose(&[1usize, 2]);
+            let accum = g.usize_in(1, 3);
+            let steps = 6;
+            let mut cfg = tiny(p, accum, steps);
+            cfg.d_model = *g.choose(&[4usize, 8]);
+            cfg.corpus.vocab = *g.choose(&[16usize, 32]);
+            cfg.lr = 0.03;
+            cfg.trace_grads = true;
+            cfg.exchange.wire = *g.choose(&[WireFormat::Fp16, WireFormat::Bf16]);
+            let wire = cfg.exchange.wire;
+
+            let r = run_native_session(&cfg).unwrap();
+            r.assert_ranks_agree();
+
+            let u = wire.unit_roundoff();
+            for (step, trace) in r.per_rank[0].grad_trace.iter().enumerate() {
+                for j in 0..trace.pre.len() {
+                    let exact: f64 =
+                        r.per_rank.iter().map(|rk| rk.grad_trace[step].pre[j] as f64).sum();
+                    let sum_abs: f64 = r
+                        .per_rank
+                        .iter()
+                        .map(|rk| (rk.grad_trace[step].pre[j] as f64).abs())
+                        .sum();
+                    let got = trace.post[j] as f64;
+                    let tol = (p as f64 + 1.0) * u * sum_abs + 1e-3;
+                    assert!(
+                        (got - exact).abs() <= tol,
+                        "step {step} elem {j}: |{got} - {exact}| > {tol} \
+                         ({wire:?}, p={p}, accum={accum}, d={})",
+                        cfg.d_model
+                    );
+                }
+            }
+
+            let first = r.loss_curve[0];
+            let last = *r.loss_curve.last().unwrap();
+            assert!(
+                last < first,
+                "loss did not decrease under {wire:?} (p={p}, accum={accum}): {:?}",
+                r.loss_curve
+            );
+        });
+    });
+}
