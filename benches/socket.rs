@@ -4,11 +4,17 @@
 //! a [`LocalTransport`] (plain channels), 16 KB to 8 MB at p=4
 //! (`BENCH_socket.json`, group shared with the multi-process
 //! `repro launch` rows, which are named `proc/...`).
+//!
+//! Besides the allreduce-cycle rows it emits raw `ptp/<lane>/<bytes>B`
+//! ping-pong samples per transport — the exact input shape
+//! [`calibrate::fits_from_ptp_rows`] consumes, so `BENCH_socket.json`
+//! doubles as α-β calibration input.
 
 use std::sync::Arc;
 use std::time::Instant;
 
 use densefold::collectives::{self, AllreduceAlgo, TAG_BLOCK};
+use densefold::sim::calibrate;
 use densefold::transport::{
     LocalTransport, ShmTransport, SocketHub, SocketMode, Transport,
 };
@@ -78,6 +84,45 @@ fn main() {
             );
         }
     }
+    // raw ping-pong rows: one row per (lane, size) carrying the
+    // per-round samples, named so the alpha-beta fitter can re-read
+    // them straight out of BENCH_socket.json
+    let ptp_lanes: Vec<(&str, Arc<dyn Transport>)> = vec![
+        ("local", Arc::new(LocalTransport::new(2))),
+        ("shm", Arc::new(ShmTransport::new(2))),
+        (
+            "hub",
+            Arc::new(SocketHub::new(2, SocketMode::Unix).expect("socket rendezvous")),
+        ),
+    ];
+    for (lane, t) in &ptp_lanes {
+        let samples = calibrate::measure_ptp(
+            &**t,
+            &calibrate::CALIB_SIZES_ELEMS,
+            calibrate::CALIB_REPS,
+        );
+        let mut by_size: Vec<(u64, Vec<f64>)> = Vec::new();
+        for (bytes, ns) in &samples {
+            let b = *bytes as u64;
+            match by_size.iter_mut().find(|(k, _)| *k == b) {
+                Some((_, v)) => v.push(*ns),
+                None => by_size.push((b, vec![*ns])),
+            }
+        }
+        for (bytes, ns) in by_size {
+            bench.push_samples(&format!("ptp/{lane}/{bytes}B"), ns, 1);
+        }
+        match calibrate::fit_alpha_beta(&samples) {
+            Some(fit) => println!(
+                "{lane:>5}/ptp fit: alpha {:>8.2} us, {:>6.2} GB/s, r2 {:.3}",
+                fit.link.alpha * 1e6,
+                1e-9 / fit.link.inv_beta,
+                fit.r2
+            ),
+            None => println!("{lane:>5}/ptp fit: degenerate"),
+        }
+    }
+
     std::fs::create_dir_all("results").ok();
     bench
         .write_csv(std::path::Path::new("results/bench_socket.csv"))

@@ -4,9 +4,34 @@
 //! like Zenith (4 PPN): the NIC carries one rank's worth of traffic
 //! per node instead of `ppn`'s — the ablation bench and the simulator
 //! quantify the effect.
+//!
+//! Two generations live here:
+//!
+//! * [`allreduce_hierarchical`] — the original naive composition
+//!   (intra reduce-to-leader, leader ring, intra broadcast) over a
+//!   uniform `ppn` layout.  Kept as the simple reference.
+//! * [`allreduce_two_level`] — the real subsystem: a
+//!   [`Topology`]-driven schedule (uneven node groups supported) of
+//!   intra-node ring **reduce-scatter**, a **wire-compressed segmented
+//!   pipelined ring** among node leaders, and an intra-node scatter +
+//!   ring **allgather**.  Run over a
+//!   [`HierTransport`](crate::transport::HierTransport) it puts every
+//!   cross-node byte on the socket fabric and every intra-node byte on
+//!   shm, with *only leaders* ever forming cross-node pairs
+//!   (closed-form checked via [`two_level_inter_bytes`]).
+//!
+//! **Determinism.** Floating-point additions happen in exactly two
+//! places, each with a fixed order: the intra-node ring reduce-scatter
+//! (local ring rotation order) and the inter-leader ring (node order).
+//! Every other phase is copy-only.  The schedule depends only on
+//! `(topo, len, seg_elems, wire)` — never on the transport — so the
+//! same call over `LocalTransport` and over `HierTransport` is
+//! bit-identical, and lossy wires keep all ranks bit-identical through
+//! the same owner-chunk quantization the flat pipelined ring uses.
 
-use super::{ring, tree};
-use crate::transport::{Transport, TransportError};
+use super::{ring, tree, ALGO_PHASE_TAGS};
+use crate::runtime::topology::Topology;
+use crate::transport::{Transport, TransportError, WireFormat};
 use std::time::Duration;
 
 /// Node-aware rank layout: ranks [0..ppn) on node 0, [ppn..2ppn) on
@@ -146,6 +171,231 @@ impl SubRing<'_> {
     }
 }
 
+// ---- two-level topology-aware allreduce ---------------------------
+//
+// Tag layout within the caller's TAG_BLOCK, in units of
+// ALGO_PHASE_TAGS (2^11): phase 1 ring steps at offset 0, the
+// chunk-gather to the leader at 1, the inter-leader pipelined ring at
+// 2 (two blocks: reduce-scatter then allgather step tags), the leader
+// scatter at 4, and the intra allgather ring at 5.  Six blocks =
+// 12 Ki tags, far inside TAG_BLOCK (2 Mi).
+const TL_GATHER_OFF: u64 = ALGO_PHASE_TAGS;
+const TL_LEADER_OFF: u64 = 2 * ALGO_PHASE_TAGS;
+const TL_SCATTER_OFF: u64 = 4 * ALGO_PHASE_TAGS;
+const TL_ALLGATHER_OFF: u64 = 5 * ALGO_PHASE_TAGS;
+
+/// In-place two-level hierarchical allreduce (sum) under `topo` (see
+/// module docs).  Panics on a transport fault; use
+/// [`try_allreduce_two_level`] when the caller can recover.
+#[allow(clippy::too_many_arguments)]
+pub fn allreduce_two_level(
+    t: &dyn Transport,
+    topo: &Topology,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    seg_elems: usize,
+    wire: WireFormat,
+) {
+    try_allreduce_two_level(t, topo, rank, data, tag_base, seg_elems, wire, None)
+        .unwrap_or_else(|e| panic!("allreduce_two_level(rank={rank}): {e}"))
+}
+
+/// Fallible two-level hierarchical allreduce (sum).
+///
+/// Schedule (ranks grouped into nodes by `topo`, node size `m`,
+/// `N` nodes):
+///
+/// 1. **intra-node ring reduce-scatter** over the node's members
+///    (local chunk layout `chunk_ranges(len, m)`), then each member
+///    ships its owned node-partial chunk to the node leader — after
+///    this the leader holds the full node partial sum;
+/// 2. **inter-leader segmented pipelined ring** over the whole vector
+///    with `wire` compression (`chunk_ranges(len, N)` node chunks,
+///    segments of `seg_elems`), including the flat ring's owner-chunk
+///    quantization so lossy wires stay bit-identical across leaders;
+/// 3. **intra-node scatter + ring allgather**: the leader scatters the
+///    local result chunks back to their member owners and an intra
+///    ring allgather circulates them (copy-only).
+///
+/// Cross-node traffic is generated *only* by leaders and amounts to
+/// exactly [`two_level_inter_bytes`] bytes.  Every receive is bounded
+/// by `timeout`; on error `data` is poisoned (see
+/// [`ring::try_allreduce_ring`]).  `wire` applies to the inter-leader
+/// level only — intra-node traffic stays f32 (in production it is a
+/// memcpy through shm; compressing it would cost codec time for no
+/// fabric-byte savings).
+#[allow(clippy::too_many_arguments)]
+pub fn try_allreduce_two_level(
+    t: &dyn Transport,
+    topo: &Topology,
+    rank: usize,
+    data: &mut [f32],
+    tag_base: u64,
+    seg_elems: usize,
+    wire: WireFormat,
+    timeout: Option<Duration>,
+) -> Result<(), TransportError> {
+    let p = topo.nranks();
+    assert_eq!(t.nranks(), p, "transport/topology world mismatch");
+    let node = topo.node_of(rank);
+    let start = topo.members(node).start;
+    let m = topo.node_size(node);
+    let li = rank - start;
+    let nnodes = topo.nnodes();
+    assert!(
+        m as u64 <= ALGO_PHASE_TAGS && nnodes as u64 <= ALGO_PHASE_TAGS,
+        "node size {m} / node count {nnodes} exceed the tag layout"
+    );
+    if p == 1 {
+        return Ok(());
+    }
+    let len = data.len();
+    let lranges = ring::chunk_ranges(len, m);
+
+    // Phase 1: intra-node ring reduce-scatter (the first of the two
+    // add sites; fixed local ring rotation order).  After it, local
+    // rank li owns the node-partial chunk (li+1) mod m.
+    if m > 1 {
+        let next = start + (li + 1) % m;
+        let prev = start + (li + m - 1) % m;
+        for s in 0..m - 1 {
+            let send_chunk = (li + m - s) % m;
+            let recv_chunk = (li + m - s - 1) % m;
+            let tag = tag_base + s as u64;
+            let sr = lranges[send_chunk].clone();
+            if !sr.is_empty() {
+                t.send_slice(rank, next, tag, &data[sr]);
+            }
+            let rr = lranges[recv_chunk].clone();
+            if !rr.is_empty() {
+                t.try_recv_add_into(rank, prev, tag, &mut data[rr], timeout)?;
+            }
+        }
+        // Gather the owned chunks at the leader (copy-only): member j
+        // owns chunk (j+1) mod m, the leader already holds chunk 1.
+        if li != 0 {
+            let owned = lranges[(li + 1) % m].clone();
+            if !owned.is_empty() {
+                t.send_slice(rank, start, tag_base + TL_GATHER_OFF + li as u64, &data[owned]);
+            }
+        } else {
+            for j in 1..m {
+                let chunk = lranges[(j + 1) % m].clone();
+                if !chunk.is_empty() {
+                    t.try_recv_into(
+                        rank,
+                        start + j,
+                        tag_base + TL_GATHER_OFF + j as u64,
+                        &mut data[chunk],
+                        timeout,
+                    )?;
+                }
+            }
+        }
+    }
+
+    // Phase 2: wire-compressed segmented pipelined ring among node
+    // leaders (the second add site; fixed node order) — the flat
+    // pipelined ring's schedule with nodes in place of ranks.
+    if li == 0 && nnodes > 1 {
+        let nranges = ring::chunk_ranges(len, nnodes);
+        let next = topo.leader_of_node((node + 1) % nnodes);
+        let prev = topo.leader_of_node((node + nnodes - 1) % nnodes);
+        let p2 = tag_base + TL_LEADER_OFF;
+        for s in 0..nnodes - 1 {
+            let send_chunk = (node + nnodes - s) % nnodes;
+            let recv_chunk = (node + nnodes - s - 1) % nnodes;
+            let tag = p2 + s as u64;
+            for seg in ring::segment_ranges(nranges[send_chunk].clone(), seg_elems) {
+                t.send_slice_wire(rank, next, tag, &data[seg], wire);
+            }
+            for seg in ring::segment_ranges(nranges[recv_chunk].clone(), seg_elems) {
+                t.try_recv_add_into_wire(rank, prev, tag, &mut data[seg], wire, timeout)?;
+            }
+        }
+        // Owner-chunk quantization: the leader owning a chunk rounds it
+        // through the wire once, so it keeps exactly what it ships and
+        // all leaders end bit-identical (no-op for F32).
+        wire.quantize_in_place(&mut data[nranges[(node + 1) % nnodes].clone()]);
+        for s in 0..nnodes - 1 {
+            let send_chunk = (node + 1 + nnodes - s) % nnodes;
+            let recv_chunk = (node + nnodes - s) % nnodes;
+            let tag = p2 + (nnodes + s) as u64;
+            for seg in ring::segment_ranges(nranges[send_chunk].clone(), seg_elems) {
+                t.send_slice_wire(rank, next, tag, &data[seg], wire);
+            }
+            for seg in ring::segment_ranges(nranges[recv_chunk].clone(), seg_elems) {
+                t.try_recv_into_wire(rank, prev, tag, &mut data[seg], wire, timeout)?;
+            }
+        }
+    }
+
+    // Phase 3: the leader now holds the full global result.  Scatter
+    // local chunk j to member j, then an intra ring allgather
+    // circulates the m chunks (copy-only, standard allgather ring with
+    // member j owning chunk j).
+    if m > 1 {
+        if li == 0 {
+            for j in 1..m {
+                let chunk = lranges[j].clone();
+                if !chunk.is_empty() {
+                    t.send_slice(
+                        rank,
+                        start + j,
+                        tag_base + TL_SCATTER_OFF + j as u64,
+                        &data[chunk],
+                    );
+                }
+            }
+        } else {
+            let chunk = lranges[li].clone();
+            if !chunk.is_empty() {
+                t.try_recv_into(
+                    rank,
+                    start,
+                    tag_base + TL_SCATTER_OFF + li as u64,
+                    &mut data[chunk],
+                    timeout,
+                )?;
+            }
+        }
+        let next = start + (li + 1) % m;
+        let prev = start + (li + m - 1) % m;
+        for s in 0..m - 1 {
+            let send_chunk = (li + m - s) % m;
+            let recv_chunk = (li + m - s - 1) % m;
+            let tag = tag_base + TL_ALLGATHER_OFF + s as u64;
+            let sr = lranges[send_chunk].clone();
+            if !sr.is_empty() {
+                t.send_slice(rank, next, tag, &data[sr]);
+            }
+            let rr = lranges[recv_chunk].clone();
+            if !rr.is_empty() {
+                t.try_recv_into(rank, prev, tag, &mut data[rr], timeout)?;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Closed-form cross-node byte count of one
+/// [`try_allreduce_two_level`] call: only leaders touch the fabric, in
+/// each of the two inter-leader ring phases every step moves each of
+/// the `N` node chunks exactly once (`len` elements per step summed
+/// over leaders), giving `2 (N-1) · len · wire_bytes` in total.  The
+/// harness asserts the live
+/// [`HierTransport::inter_stats`](crate::transport::HierTransport::inter_stats)
+/// delta equals this exactly — any non-leader crossing the fabric
+/// would break the equality.
+pub fn two_level_inter_bytes(topo: &Topology, len: usize, wire: WireFormat) -> u64 {
+    let n = topo.nnodes() as u64;
+    if n <= 1 {
+        return 0;
+    }
+    2 * (n - 1) * len as u64 * wire.bytes_per_elem()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,5 +447,137 @@ mod tests {
             let mut data = vec![0.0; 4];
             allreduce_hierarchical(t.as_ref(), rank, &mut data, 2, 0);
         });
+    }
+
+    /// testutil::rank_data is integer-valued in [-8, 8], so every
+    /// partial sum at p<=8 is an exact small integer in f32 *and* in
+    /// fp16/bf16 — the two-level result must equal the ground-truth
+    /// sum bit-for-bit, whatever the reduction tree shape.
+    fn two_level_exact(topo: &Topology, len: usize, seg: usize, wire: WireFormat) {
+        let p = topo.nranks();
+        let topo = topo.clone();
+        let results = run_ranks(p, move |rank, t| {
+            let mut data = rank_data(rank, len);
+            allreduce_two_level(t.as_ref(), &topo, rank, &mut data, 0, seg, wire);
+            data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+        });
+        let expected: Vec<u32> =
+            expected_sum(p, len).iter().map(|x| x.to_bits()).collect();
+        for (rank, r) in results.iter().enumerate() {
+            assert_eq!(r, &expected, "len={len} seg={seg} {} rank={rank}", wire.name());
+        }
+    }
+
+    #[test]
+    fn two_level_matches_sum_bitwise_across_topologies() {
+        for topo in [
+            Topology::blocked(8, 4),
+            Topology::blocked(8, 2),
+            Topology::from_group_sizes(&[3, 1]),
+            Topology::from_group_sizes(&[2, 2, 2]),
+            Topology::blocked(4, 1),  // every rank its own node
+            Topology::blocked(6, 6),  // single node
+            Topology::blocked(1, 1),  // degenerate
+            Topology::blocked(7, 3),  // ragged blocked tail
+        ] {
+            for len in [1usize, 37, 101] {
+                two_level_exact(&topo, len, 16, WireFormat::F32);
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_wire16_bitwise_exact_on_integer_data() {
+        for wire in [WireFormat::Fp16, WireFormat::Bf16] {
+            for topo in [Topology::blocked(8, 4), Topology::from_group_sizes(&[3, 1])] {
+                two_level_exact(&topo, 67, 8, wire);
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_segment_size_invariant() {
+        let topo = Topology::blocked(8, 4);
+        let run = |seg: usize| {
+            let topo = topo.clone();
+            run_ranks(8, move |rank, t| {
+                let mut data = rank_data(rank, 257);
+                allreduce_two_level(
+                    t.as_ref(),
+                    &topo,
+                    rank,
+                    &mut data,
+                    0,
+                    seg,
+                    WireFormat::F32,
+                );
+                data.iter().map(|x| x.to_bits()).collect::<Vec<u32>>()
+            })
+        };
+        let reference = run(16);
+        for seg in [1usize, 7, 1 << 20] {
+            assert_eq!(run(seg), reference, "seg={seg}");
+        }
+    }
+
+    #[test]
+    fn two_level_len_smaller_than_groups() {
+        // empty local and node chunks on both sides of every phase
+        for topo in [Topology::blocked(8, 4), Topology::from_group_sizes(&[3, 1])] {
+            for len in [1usize, 2, 3] {
+                two_level_exact(&topo, len, 4, WireFormat::F32);
+            }
+        }
+    }
+
+    #[test]
+    fn two_level_inter_bytes_closed_form() {
+        // 2 nodes: 2·(N-1)·len·4 = 800
+        assert_eq!(
+            two_level_inter_bytes(&Topology::blocked(8, 4), 100, WireFormat::F32),
+            800
+        );
+        assert_eq!(
+            two_level_inter_bytes(&Topology::from_group_sizes(&[2, 2, 2]), 50, WireFormat::Bf16),
+            2 * 2 * 50 * 2
+        );
+        assert_eq!(
+            two_level_inter_bytes(&Topology::blocked(4, 4), 100, WireFormat::F32),
+            0,
+            "single node never touches the fabric"
+        );
+    }
+
+    #[test]
+    fn two_level_dead_leader_fails_typed() {
+        use crate::transport::LocalTransport;
+        use std::sync::Arc;
+        let topo = Topology::blocked(8, 4);
+        let t = Arc::new(LocalTransport::new(8));
+        t.mark_dead(4); // leader of node 1
+        let handles: Vec<_> = (0..8usize)
+            .filter(|&r| r != 4)
+            .map(|rank| {
+                let t = t.clone();
+                let topo = topo.clone();
+                std::thread::spawn(move || {
+                    let mut data = rank_data(rank, 64);
+                    try_allreduce_two_level(
+                        t.as_ref(),
+                        &topo,
+                        rank,
+                        &mut data,
+                        0,
+                        16,
+                        WireFormat::F32,
+                        Some(Duration::from_millis(300)),
+                    )
+                })
+            })
+            .collect();
+        for h in handles {
+            let r = h.join().unwrap();
+            assert!(r.is_err(), "every survivor must fail typed: {r:?}");
+        }
     }
 }

@@ -64,11 +64,24 @@ pub const DEFAULT_SEGMENT_ELEMS: usize = 16 * 1024;
 /// elastic attempt counter.  A mismatch fails typed
 /// (`Corrupt(Length)`), it does not hang.
 pub fn segment_elems_under(level: crate::transport::Pressure) -> usize {
+    segment_elems_under_base(DEFAULT_SEGMENT_ELEMS, level)
+}
+
+/// [`segment_elems_under`] around an explicit base segment instead of
+/// the built-in guess — the ladder (full, /4, /16, floored at one
+/// element) is identical, only the top rung moves.  The base comes
+/// from the live α-β calibration
+/// ([`crate::sim::calibrate::calibrated_segment_elems`]) when one has
+/// run; `DEFAULT_SEGMENT_ELEMS` remains the cold-start fallback.  The
+/// lockstep requirement above applies to the base too: every rank must
+/// derive it from the same calibration (rank 0 measures, the value
+/// rides the coordinator's negotiate step or the launcher env).
+pub fn segment_elems_under_base(base: usize, level: crate::transport::Pressure) -> usize {
     use crate::transport::Pressure;
     match level {
-        Pressure::Ok => DEFAULT_SEGMENT_ELEMS,
-        Pressure::Soft => DEFAULT_SEGMENT_ELEMS / 4,
-        Pressure::Hard => DEFAULT_SEGMENT_ELEMS / 16,
+        Pressure::Ok => base.max(1),
+        Pressure::Soft => (base / 4).max(1),
+        Pressure::Hard => (base / 16).max(1),
     }
 }
 
@@ -286,6 +299,25 @@ mod tests {
         assert_eq!(ok, DEFAULT_SEGMENT_ELEMS);
         assert!(ok > soft && soft > hard, "{ok} > {soft} > {hard}");
         assert!(hard >= 1);
+    }
+
+    #[test]
+    fn segment_base_ladder_keeps_semantics() {
+        use crate::transport::Pressure;
+        // the default-based entry point is the base-parameterized
+        // ladder at DEFAULT_SEGMENT_ELEMS
+        for level in [Pressure::Ok, Pressure::Soft, Pressure::Hard] {
+            assert_eq!(
+                segment_elems_under(level),
+                segment_elems_under_base(DEFAULT_SEGMENT_ELEMS, level)
+            );
+        }
+        // a calibrated base keeps the /4, /16 rungs and the floor
+        assert_eq!(segment_elems_under_base(40_960, Pressure::Ok), 40_960);
+        assert_eq!(segment_elems_under_base(40_960, Pressure::Soft), 10_240);
+        assert_eq!(segment_elems_under_base(40_960, Pressure::Hard), 2_560);
+        assert_eq!(segment_elems_under_base(3, Pressure::Hard), 1);
+        assert_eq!(segment_elems_under_base(0, Pressure::Ok), 1);
     }
 
     #[test]

@@ -20,11 +20,14 @@
 //! | launch | [`launch::launch_drill`] | **live** (worker processes over sockets) |
 //! | budget | [`budget::budget_drill`] | **live** (memory budget + graceful degradation) |
 //! | train | [`train::train_bench`] | **live** (end-to-end native training + determinism gates) |
+//! | hier | [`hier::hier_drill`] | **live** (two-level exchange + α-β calibration + sim gate) |
+//! | scaling | [`hier::scaling_replot`] | simulated from **measured** constants |
 
 pub mod ablation;
 pub mod accumulate;
 pub mod budget;
 pub mod chaos;
+pub mod hier;
 pub mod launch;
 pub mod quality;
 pub mod strong;

@@ -86,7 +86,7 @@ commands:
                          (a 16-bit wire always rides the pipelined
                           ring, overriding --algo for dense traffic)
   repro   regenerate paper tables/figures
-          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch|budget|train
+          --fig fig3|fig4|fig5|fig6|fig7|fig9|fig11|fig12|validate|equiv|ablation|threaded|chaos|launch|budget|train|hier|scaling
                          (`repro <fig>` also works positionally)
           --all          every figure
           --out DIR      output directory (default results/)
@@ -159,6 +159,24 @@ commands:
           --lr F         Adam learning rate              (default 0.01)
           --eval N       held-out pairs for BLEU         (default 16)
           --seed N       corpus/param/batch seed         (default 17)
+          hier mode (two-level hierarchical exchange drill: proves the
+          algo x wire grid and the two-level collective bit-identical
+          to the flat reference over a real shm+socket HierTransport,
+          checks leader-only fabric byte accounting, runs the one-shot
+          alpha-beta calibration into BENCH_calibrate.json, and gates
+          the calibrated model against live runs; writes
+          BENCH_hier.json):
+          --ranks N      world size                      (default 8)
+          --nodes N      simulated nodes (blocked topo)  (default 2)
+          --spec S       explicit group sizes, e.g. 3+1  (overrides)
+          --elems N      gradient vector length          (default 4096)
+          --cycles N     timed cycles per bench row      (default 4)
+          --transport shm|socket|local  inter-node lane  (default socket)
+          scaling mode (replot the paper's weak/strong curves at
+          50-1200 simulated ranks from measured alpha-beta constants —
+          BENCH_calibrate.json if present, else a live one-shot
+          calibration, else assumed Zenith defaults):
+          --steps N      DES steps per point             (default 6)
   info    print manifest/artifact summary
           --artifacts DIR                                (default artifacts/)"
     );
@@ -492,6 +510,38 @@ fn cmd_repro(flags: &HashMap<String, String>) -> anyhow::Result<()> {
         println!("(bench json: BENCH_train.json)");
         harness::emit(&t, &out_dir, "train_summary")?;
         harness::emit(&loss, &out_dir, "train_loss")?;
+        ran += 1;
+    }
+    if want("hier") {
+        // `--transport` here picks the *inter-node* lane of the
+        // HierTransport; intra-node always rides shm.  Under `--all`
+        // the flag may carry another group's value, so fall back to
+        // the socket default only when it parses.
+        let inter = if all {
+            TransportKind::Socket
+        } else {
+            parse_transport(flag(flags, "transport", "socket"))?
+        };
+        let opts = harness::hier::HierOpts {
+            ranks: flag(flags, "ranks", "8").parse()?,
+            nodes: flag(flags, "nodes", "2").parse()?,
+            spec: flags.get("spec").cloned(),
+            elems: flag(flags, "elems", "4096").parse()?,
+            cycles: flag(flags, "cycles", "4").parse()?,
+            inter,
+        };
+        let (bench, t) = harness::hier::hier_drill(&opts)?;
+        bench.emit_json()?;
+        bench.write_csv(&out_dir.join("bench_hier.csv"))?;
+        println!("(bench json: BENCH_hier.json)");
+        harness::emit(&t, &out_dir, "hier_exchange")?;
+        ran += 1;
+    }
+    if want("scaling") {
+        let (consts, weak, strong) = harness::hier::scaling_replot(steps.min(6) as u32)?;
+        harness::emit(&consts, &out_dir, "scaling_constants")?;
+        harness::emit(&weak, &out_dir, "scaling_weak_calibrated")?;
+        harness::emit(&strong, &out_dir, "scaling_strong_calibrated")?;
         ran += 1;
     }
     if want("budget") {

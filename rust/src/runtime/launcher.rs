@@ -219,6 +219,43 @@ pub fn spawn_workers(
     Ok(workers)
 }
 
+/// [`spawn_workers`] with blocked node placement: worker `rank` also
+/// receives the topology spec (`DENSEFOLD_TOPO`) and its node id
+/// (`DENSEFOLD_NODE`) so it can rebuild the hierarchical view with
+/// [`Topology::from_env`](crate::runtime::topology::Topology::from_env)
+/// and route intra-node traffic over shm, inter-node over the socket
+/// fabric.  The node map is the launcher's to decide — workers only
+/// ever read it back — which keeps every process's view consistent by
+/// construction.
+pub fn spawn_node_groups(
+    role: &str,
+    topo: &crate::runtime::topology::Topology,
+    dir: &std::path::Path,
+    mode: SocketMode,
+    extra: &[(String, String)],
+) -> Result<Vec<Worker>> {
+    let exe = std::env::current_exe().context("resolve current executable for re-exec")?;
+    let nranks = topo.nranks();
+    let mut workers = Vec::with_capacity(nranks);
+    for rank in 0..nranks {
+        let mut cmd = Command::new(&exe);
+        cmd.env(ENV_ROLE, role)
+            .env(ENV_RANK, rank.to_string())
+            .env(ENV_NRANKS, nranks.to_string())
+            .env(ENV_RDV, dir)
+            .env(ENV_SOCKMODE, mode.name());
+        for (k, v) in topo.env_pairs_for_node(topo.node_of(rank)) {
+            cmd.env(k, v);
+        }
+        for (k, v) in extra {
+            cmd.env(k, v);
+        }
+        let child = cmd.spawn().with_context(|| format!("spawn worker rank {rank}"))?;
+        workers.push(Worker { rank, child, killed: false });
+    }
+    Ok(workers)
+}
+
 /// Reap every worker, polling `on_poll` (kill schedules, marker-file
 /// watches) between sweeps.  Returns exits in rank order.  Bails if
 /// `deadline` passes with workers still running — a wedged job must

@@ -29,11 +29,13 @@ pub mod executor;
 pub mod health;
 pub mod launcher;
 pub mod manifest;
+pub mod topology;
 pub mod wire_coord;
 
 pub use engine::{Engine, EngineHandle, HostTensor};
 pub use executor::{ExecutorConfig, RankExit, ThreadedRun};
 pub use health::{ElasticCoord, Group, Health, HealthOpts, Monitor, Verdict};
 pub use launcher::{ProcExit, ProcStatus, WorkerEnv};
+pub use topology::Topology;
 pub use manifest::{Manifest, ParamSpec, Preset};
 pub use wire_coord::WireCoord;

@@ -1,0 +1,283 @@
+//! Node/rank topology map for the hierarchical exchange.
+//!
+//! A [`Topology`] partitions the `p` global ranks into *nodes*: contiguous
+//! blocks of ranks that share an intra-node transport (in production,
+//! shared memory; in this repo's in-process reproduction, `ShmTransport`).
+//! The first rank of each block is the **node leader** — the only rank
+//! that generates cross-node traffic in the two-level collective
+//! ([`crate::collectives::try_allreduce_two_level`]).
+//!
+//! Topologies come from three places:
+//!
+//! * explicitly, via [`Topology::blocked`] / [`Topology::from_group_sizes`]
+//!   (tests, harness drills);
+//! * a spec string like `"4+4"` or `"3+1"` via [`Topology::parse_spec`]
+//!   (CLI `--spec`);
+//! * the environment, via [`Topology::from_env`] — the launcher publishes
+//!   `DENSEFOLD_TOPO` (the spec) and `DENSEFOLD_NODE` (this worker's node
+//!   id) to node-group workers through
+//!   [`crate::runtime::launcher::spawn_node_groups`].
+//!
+//! Groups are contiguous by construction (`node_of` is monotone in rank),
+//! which mirrors how MPI ranks land on real clusters under blocked
+//! placement and keeps every map O(nodes) with no per-rank tables.
+
+#![warn(missing_docs)]
+
+use std::collections::HashMap;
+use std::ops::Range;
+
+/// Env var carrying the topology spec string (e.g. `"4+4"`).
+pub const ENV_TOPO: &str = "DENSEFOLD_TOPO";
+/// Env var carrying the node id of the receiving worker.
+pub const ENV_NODE: &str = "DENSEFOLD_NODE";
+
+/// A partition of `0..nranks` into contiguous node groups.
+///
+/// Invariants: at least one group, every group non-empty, groups tile the
+/// rank space in order (node `n` holds ranks
+/// `starts[n]..starts[n] + sizes[n]`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Topology {
+    sizes: Vec<usize>,
+    starts: Vec<usize>,
+    total: usize,
+}
+
+impl Topology {
+    /// Build from explicit per-node group sizes, e.g. `[3, 1]` for the
+    /// uneven 3+1 split. Panics on an empty list or a zero-sized group.
+    pub fn from_group_sizes(sizes: &[usize]) -> Topology {
+        assert!(!sizes.is_empty(), "topology needs at least one node");
+        assert!(
+            sizes.iter().all(|&s| s > 0),
+            "topology groups must be non-empty: {sizes:?}"
+        );
+        let mut starts = Vec::with_capacity(sizes.len());
+        let mut total = 0usize;
+        for &s in sizes {
+            starts.push(total);
+            total += s;
+        }
+        Topology { sizes: sizes.to_vec(), starts, total }
+    }
+
+    /// Blocked placement: `p` ranks at `ppn` ranks per node, the last node
+    /// ragged when `ppn` does not divide `p`. Panics if `p` or `ppn` is 0.
+    pub fn blocked(p: usize, ppn: usize) -> Topology {
+        assert!(p > 0 && ppn > 0, "blocked({p}, {ppn})");
+        let mut sizes = Vec::new();
+        let mut left = p;
+        while left > 0 {
+            let take = left.min(ppn);
+            sizes.push(take);
+            left -= take;
+        }
+        Topology::from_group_sizes(&sizes)
+    }
+
+    /// Parse a spec string of `+`-separated group sizes: `"4+4"`, `"3+1"`,
+    /// `"2+2+2"`. Returns `None` on malformed input (empty, non-numeric,
+    /// or zero-sized groups).
+    pub fn parse_spec(spec: &str) -> Option<Topology> {
+        let mut sizes = Vec::new();
+        for part in spec.split('+') {
+            let n: usize = part.trim().parse().ok()?;
+            if n == 0 {
+                return None;
+            }
+            sizes.push(n);
+        }
+        if sizes.is_empty() {
+            return None;
+        }
+        Some(Topology::from_group_sizes(&sizes))
+    }
+
+    /// The spec string this topology round-trips through
+    /// [`Topology::parse_spec`], e.g. `"4+4"`.
+    pub fn spec(&self) -> String {
+        self.sizes
+            .iter()
+            .map(|s| s.to_string())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+
+    /// Total number of ranks.
+    pub fn nranks(&self) -> usize {
+        self.total
+    }
+
+    /// Number of nodes.
+    pub fn nnodes(&self) -> usize {
+        self.sizes.len()
+    }
+
+    /// Node id holding `rank`. Panics if `rank` is out of range.
+    pub fn node_of(&self, rank: usize) -> usize {
+        assert!(rank < self.total, "rank {rank} out of {}", self.total);
+        // Groups are contiguous and sorted; partition_point finds the
+        // first node whose start exceeds rank.
+        self.starts.partition_point(|&s| s <= rank) - 1
+    }
+
+    /// Rank's index within its node (0 = leader).
+    pub fn local_rank(&self, rank: usize) -> usize {
+        rank - self.starts[self.node_of(rank)]
+    }
+
+    /// The leader rank of the node holding `rank`.
+    pub fn leader_of(&self, rank: usize) -> usize {
+        self.starts[self.node_of(rank)]
+    }
+
+    /// The leader rank of node `node`.
+    pub fn leader_of_node(&self, node: usize) -> usize {
+        self.starts[node]
+    }
+
+    /// Whether `rank` is its node's leader (local rank 0).
+    pub fn is_leader(&self, rank: usize) -> bool {
+        self.leader_of(rank) == rank
+    }
+
+    /// Number of ranks on node `node`.
+    pub fn node_size(&self, node: usize) -> usize {
+        self.sizes[node]
+    }
+
+    /// The global rank range of node `node`.
+    pub fn members(&self, node: usize) -> Range<usize> {
+        self.starts[node]..self.starts[node] + self.sizes[node]
+    }
+
+    /// All node leaders, in node order.
+    pub fn leaders(&self) -> Vec<usize> {
+        self.starts.clone()
+    }
+
+    /// Env pairs the launcher attaches to a node-group worker: the spec
+    /// plus the worker's node id. The receiving side reconstructs both
+    /// with [`Topology::from_env_map`].
+    pub fn env_pairs_for_node(&self, node: usize) -> Vec<(String, String)> {
+        assert!(node < self.nnodes(), "node {node} out of {}", self.nnodes());
+        vec![
+            (ENV_TOPO.to_string(), self.spec()),
+            (ENV_NODE.to_string(), node.to_string()),
+        ]
+    }
+
+    /// Pure env round-trip: rebuild `(topology, node_id)` from a map of
+    /// env vars. Returns `None` when either key is absent or malformed.
+    /// Split out from [`Topology::from_env`] so tests can exercise the
+    /// round-trip without mutating process-global state under libtest.
+    pub fn from_env_map(env: &HashMap<String, String>) -> Option<(Topology, usize)> {
+        let topo = Topology::parse_spec(env.get(ENV_TOPO)?)?;
+        let node: usize = env.get(ENV_NODE)?.parse().ok()?;
+        if node >= topo.nnodes() {
+            return None;
+        }
+        Some((topo, node))
+    }
+
+    /// Read `(topology, node_id)` from the real process environment.
+    pub fn from_env() -> Option<(Topology, usize)> {
+        let mut map = HashMap::new();
+        for key in [ENV_TOPO, ENV_NODE] {
+            if let Ok(v) = std::env::var(key) {
+                map.insert(key.to_string(), v);
+            }
+        }
+        Topology::from_env_map(&map)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocked_even() {
+        let t = Topology::blocked(8, 4);
+        assert_eq!(t.nranks(), 8);
+        assert_eq!(t.nnodes(), 2);
+        assert_eq!(t.spec(), "4+4");
+        assert_eq!(t.node_of(0), 0);
+        assert_eq!(t.node_of(3), 0);
+        assert_eq!(t.node_of(4), 1);
+        assert_eq!(t.node_of(7), 1);
+        assert_eq!(t.leader_of(6), 4);
+        assert_eq!(t.local_rank(6), 2);
+        assert!(t.is_leader(4));
+        assert!(!t.is_leader(5));
+        assert_eq!(t.leaders(), vec![0, 4]);
+        assert_eq!(t.members(1), 4..8);
+    }
+
+    #[test]
+    fn blocked_ragged_tail() {
+        let t = Topology::blocked(7, 3);
+        assert_eq!(t.spec(), "3+3+1");
+        assert_eq!(t.node_of(6), 2);
+        assert!(t.is_leader(6));
+        assert_eq!(t.node_size(2), 1);
+    }
+
+    #[test]
+    fn uneven_groups() {
+        let t = Topology::from_group_sizes(&[3, 1]);
+        assert_eq!(t.nranks(), 4);
+        assert_eq!(t.leaders(), vec![0, 3]);
+        assert_eq!(t.node_of(2), 0);
+        assert_eq!(t.node_of(3), 1);
+
+        let t = Topology::from_group_sizes(&[2, 2, 2]);
+        assert_eq!(t.spec(), "2+2+2");
+        assert_eq!(t.leaders(), vec![0, 2, 4]);
+        assert_eq!(t.local_rank(5), 1);
+    }
+
+    #[test]
+    fn spec_round_trip() {
+        for spec in ["4+4", "3+1", "2+2+2", "1", "8"] {
+            let t = Topology::parse_spec(spec).unwrap();
+            assert_eq!(t.spec(), spec);
+            assert_eq!(Topology::parse_spec(&t.spec()).unwrap(), t);
+        }
+        assert!(Topology::parse_spec("").is_none());
+        assert!(Topology::parse_spec("4+0").is_none());
+        assert!(Topology::parse_spec("4+x").is_none());
+    }
+
+    #[test]
+    fn env_round_trip() {
+        let t = Topology::from_group_sizes(&[3, 1]);
+        for node in 0..t.nnodes() {
+            let env: HashMap<String, String> =
+                t.env_pairs_for_node(node).into_iter().collect();
+            let (back, got_node) = Topology::from_env_map(&env).unwrap();
+            assert_eq!(back, t);
+            assert_eq!(got_node, node);
+        }
+    }
+
+    #[test]
+    fn env_map_rejects_bad_input() {
+        let mut env = HashMap::new();
+        assert!(Topology::from_env_map(&env).is_none());
+        env.insert(ENV_TOPO.to_string(), "4+4".to_string());
+        assert!(Topology::from_env_map(&env).is_none());
+        env.insert(ENV_NODE.to_string(), "2".to_string());
+        // node id out of range for a 2-node topology
+        assert!(Topology::from_env_map(&env).is_none());
+        env.insert(ENV_NODE.to_string(), "1".to_string());
+        assert!(Topology::from_env_map(&env).is_some());
+    }
+
+    #[test]
+    #[should_panic]
+    fn empty_group_rejected() {
+        Topology::from_group_sizes(&[2, 0]);
+    }
+}

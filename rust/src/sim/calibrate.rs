@@ -1,0 +1,507 @@
+//! Live α-β link calibration: measure, fit, and feed the simulator.
+//!
+//! The scaling figures ([`super::scaling`]) are only as honest as the
+//! link constants under them.  This module closes the loop the ROADMAP
+//! asks for — *measured* constants instead of assumed ones:
+//!
+//! 1. [`measure_ptp`] runs a one-shot ping-pong micro-benchmark over
+//!    any 2+-rank [`Transport`], producing raw `(bytes, ns)` sample
+//!    pairs per message size (the same rows `benches/socket.rs` emits
+//!    into `BENCH_socket.json`).
+//! 2. [`fit_alpha_beta`] least-squares fits the Hockney model
+//!    `t(n) = α + n/β` through those pairs into a
+//!    [`LinkModel`] + goodness-of-fit ([`LinkFit`]).
+//! 3. [`calibrate_links`] does 1–2 for all three in-process fabrics
+//!    (local / shm / socket) and derives the pipelined-ring segment
+//!    size from the fitted constants
+//!    ([`calibrated_segment_elems`]), replacing the guessed 64 KB
+//!    default the same way the overlap scheduler's spin calibration
+//!    replaces its guess.
+//! 4. [`ClusterModel::from_calibration`](super::ClusterModel::from_calibration)
+//!    consumes the [`Calibration`], and `repro scaling` replots the
+//!    paper's weak/strong figures from it; `BENCH_calibrate.json`
+//!    round-trips the whole record
+//!    ([`Calibration::record_into`] / [`Calibration::from_bench_json`]).
+//!
+//! The fitter and every derivation below is pure and fixture-testable;
+//! only [`measure_ptp`]/[`calibrate_links`] touch live transports.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::collectives::cost::LinkModel;
+use crate::transport::{Transport, TransportKind};
+use crate::util::bench::Bench;
+use crate::util::json::Json;
+
+/// Floor for a fitted α: 1 ns.  Ping-pong noise on an unloaded
+/// in-process "link" can drive the least-squares intercept negative;
+/// a non-positive latency is non-physical and breaks the closed-form
+/// segment optimum (√α).
+pub const MIN_ALPHA_S: f64 = 1e-9;
+/// Floor for a fitted 1/β: 1e-13 s/byte (10 TB/s cap), same rationale.
+pub const MIN_INV_BETA_S_PER_BYTE: f64 = 1e-13;
+
+/// Message sizes (f32 elements) the one-shot calibration sweeps:
+/// 1 KiB – 1 MiB payloads, log-spaced so the intercept (α) and the
+/// slope (1/β) are both well-conditioned.
+pub const CALIB_SIZES_ELEMS: [usize; 4] = [256, 4 * 1024, 64 * 1024, 256 * 1024];
+/// Round trips per size (first is warmup and discarded).
+pub const CALIB_REPS: usize = 6;
+
+/// Segment clamp floor: below 4 KiB per-message overhead dominates.
+pub const SEG_MIN_BYTES: f64 = 4096.0;
+/// Segment clamp ceiling: above 4 MiB the pipeline stops overlapping.
+pub const SEG_MAX_BYTES: f64 = (4 * 1024 * 1024) as f64;
+
+/// The reference operating point the calibrated segment is derived
+/// at: the paper's 139 MB dense fused gradient split across 8 ring
+/// participants (one NIC per node under the two-level schedule).
+pub const REF_CHUNK_BYTES: f64 = 139.0e6 / 8.0;
+/// Ring size at the reference operating point.
+pub const REF_RING_P: u64 = 8;
+
+/// A fitted link: the α-β constants plus how well they explain the
+/// measurements.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkFit {
+    /// Fitted Hockney constants.
+    pub link: LinkModel,
+    /// Coefficient of determination of the linear fit (1.0 = exact).
+    pub r2: f64,
+    /// Number of samples the fit consumed.
+    pub n: usize,
+}
+
+/// Least-squares fit of `ns = a + b·bytes` over `(bytes, ns)` samples,
+/// converted to seconds and clamped physical (see [`MIN_ALPHA_S`]).
+/// Returns `None` with fewer than two samples or zero size variance —
+/// a line needs two distinct abscissae.
+pub fn fit_alpha_beta(samples: &[(f64, f64)]) -> Option<LinkFit> {
+    let n = samples.len();
+    if n < 2 {
+        return None;
+    }
+    let nf = n as f64;
+    let xm = samples.iter().map(|s| s.0).sum::<f64>() / nf;
+    let ym = samples.iter().map(|s| s.1).sum::<f64>() / nf;
+    let sxx: f64 = samples.iter().map(|s| (s.0 - xm) * (s.0 - xm)).sum();
+    if sxx <= 0.0 {
+        return None;
+    }
+    let sxy: f64 = samples.iter().map(|s| (s.0 - xm) * (s.1 - ym)).sum();
+    let b = sxy / sxx; // ns per byte
+    let a = ym - b * xm; // ns
+    let ss_tot: f64 = samples.iter().map(|s| (s.1 - ym) * (s.1 - ym)).sum();
+    let ss_res: f64 = samples
+        .iter()
+        .map(|s| {
+            let e = s.1 - (a + b * s.0);
+            e * e
+        })
+        .sum();
+    let r2 = if ss_tot > 0.0 { 1.0 - ss_res / ss_tot } else { 1.0 };
+    Some(LinkFit {
+        link: LinkModel {
+            alpha: (a * 1e-9).max(MIN_ALPHA_S),
+            inv_beta: (b * 1e-9).max(MIN_INV_BETA_S_PER_BYTE),
+        },
+        r2,
+        n,
+    })
+}
+
+/// One-shot ping-pong micro-benchmark between ranks 0 and 1 of `t`:
+/// for each size, `reps` round trips (the first discarded as warmup),
+/// each contributing one `(payload bytes, one-way ns)` sample (half
+/// the round-trip wall time).  The transport must span at least two
+/// ranks; rank 1 echoes on a second tag so both directions cross the
+/// fabric.
+pub fn measure_ptp(t: &dyn Transport, sizes_elems: &[usize], reps: usize) -> Vec<(f64, f64)> {
+    assert!(t.nranks() >= 2, "ping-pong needs two ranks");
+    let reps = reps.max(2);
+    let mut samples = Vec::with_capacity(sizes_elems.len() * (reps - 1));
+    std::thread::scope(|s| {
+        let echo = s.spawn(|| {
+            for (i, &elems) in sizes_elems.iter().enumerate() {
+                let mut buf = vec![0.0f32; elems];
+                for r in 0..reps {
+                    let tag = ((i * reps + r) as u64) * 2;
+                    t.recv_into(1, 0, tag, &mut buf);
+                    t.send_slice(1, 0, tag + 1, &buf);
+                }
+            }
+        });
+        for (i, &elems) in sizes_elems.iter().enumerate() {
+            let out = vec![0.5f32; elems];
+            let mut back = vec![0.0f32; elems];
+            for r in 0..reps {
+                let tag = ((i * reps + r) as u64) * 2;
+                let t0 = Instant::now();
+                t.send_slice(0, 1, tag, &out);
+                t.recv_into(0, 1, tag + 1, &mut back);
+                let ns = t0.elapsed().as_nanos() as f64 / 2.0;
+                if r > 0 {
+                    samples.push(((elems * 4) as f64, ns));
+                }
+            }
+        }
+        echo.join().expect("ptp echo thread");
+    });
+    samples
+}
+
+/// The full calibration record: one fitted link per in-process fabric
+/// plus the pipelined-ring segment size derived from the inter-node
+/// (socket) fit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Calibration {
+    /// `LocalTransport` fit (per-rank mailboxes — the upper bound an
+    /// in-process fabric can reach).
+    pub local: LinkFit,
+    /// `ShmTransport` fit — the intra-node lane of the hierarchy.
+    pub shm: LinkFit,
+    /// `SocketHub` fit (real kernel sockets) — the inter-node lane.
+    pub socket: LinkFit,
+    /// Calibrated pipelined-ring segment, in f32 elements (see
+    /// [`calibrated_segment_elems`]); feeds
+    /// [`ring::segment_elems_under_base`](crate::collectives::ring::segment_elems_under_base).
+    pub seg_elems: usize,
+}
+
+/// Run the one-shot live calibration over all three fabrics.  A few
+/// hundred milliseconds of wall time; errors only if the socket
+/// rendezvous fails or a fabric measures so flat the fit degenerates.
+pub fn calibrate_links() -> Result<Calibration> {
+    let mut fits = Vec::with_capacity(3);
+    for kind in [TransportKind::Local, TransportKind::Shm, TransportKind::Socket] {
+        let t: Arc<dyn Transport> = kind
+            .create(2)
+            .with_context(|| format!("build {} transport for calibration", kind.name()))?;
+        let samples = measure_ptp(t.as_ref(), &CALIB_SIZES_ELEMS, CALIB_REPS);
+        let fit = fit_alpha_beta(&samples)
+            .ok_or_else(|| anyhow!("alpha-beta fit degenerate for {}", kind.name()))?;
+        fits.push(fit);
+    }
+    let (local, shm, socket) = (fits[0], fits[1], fits[2]);
+    Ok(Calibration {
+        local,
+        shm,
+        socket,
+        seg_elems: calibrated_segment_elems(&socket.link),
+    })
+}
+
+/// Closed-form optimal pipeline segment for the segmented ring (cf.
+/// [`crate::collectives::cost::ring_pipelined_allreduce_time`]): the
+/// makespan `(K + S - 1)(α + (c/S)/β)` with `K = 2(p-1)` ring steps
+/// and `S` segments per chunk of `c` bytes is minimized at
+/// `S* = √((K-1)·c/β / α)`, i.e. `seg* = c/S* = √(α·c·β/(K-1))` —
+/// higher latency wants bigger segments, higher bandwidth smaller
+/// ones.  Clamped to `[SEG_MIN_BYTES, SEG_MAX_BYTES]` and to the chunk
+/// itself.
+pub fn segment_bytes_optimal(link: &LinkModel, chunk_bytes: f64, p: u64) -> f64 {
+    let chunk = chunk_bytes.max(1.0);
+    if p < 2 {
+        return chunk.min(SEG_MAX_BYTES).max(SEG_MIN_BYTES.min(chunk));
+    }
+    let k = 2.0 * (p as f64 - 1.0);
+    let raw = (link.alpha * chunk / ((k - 1.0) * link.inv_beta)).sqrt();
+    raw.clamp(SEG_MIN_BYTES, SEG_MAX_BYTES).min(chunk)
+}
+
+/// The calibrated replacement for
+/// [`ring::DEFAULT_SEGMENT_ELEMS`](crate::collectives::ring::DEFAULT_SEGMENT_ELEMS):
+/// [`segment_bytes_optimal`] evaluated at the paper's reference
+/// operating point ([`REF_CHUNK_BYTES`] / [`REF_RING_P`]), converted
+/// to f32 elements and rounded down to a 1 Ki-element multiple (so
+/// segment buffers stay pool-friendly sizes), floored at 1 Ki.
+pub fn calibrated_segment_elems(link: &LinkModel) -> usize {
+    let seg_bytes = segment_bytes_optimal(link, REF_CHUNK_BYTES, REF_RING_P);
+    let elems = (seg_bytes / 4.0) as usize;
+    (elems / 1024).max(1) * 1024
+}
+
+const LANES: [&str; 3] = ["local", "shm", "socket"];
+
+impl Calibration {
+    /// The three fitted lanes, in stable `(name, fit)` order — the
+    /// iteration the bench rows and the harness tables share.
+    pub fn lanes(&self) -> [(&'static str, &LinkFit); 3] {
+        [
+            (LANES[0], &self.local),
+            (LANES[1], &self.shm),
+            (LANES[2], &self.socket),
+        ]
+    }
+
+    /// Record the calibration as bench rows (group should be
+    /// `"calibrate"` so this lands in `BENCH_calibrate.json`):
+    /// `fit/<lane>/alpha_ns`, `fit/<lane>/gbps`, `fit/<lane>/r2`,
+    /// `fit/<lane>/n`, plus `seg/elems` and `seg/bytes`.  The inverse
+    /// of [`Calibration::from_bench_json`].
+    pub fn record_into(&self, b: &mut Bench) {
+        for (lane, fit) in self.lanes() {
+            b.push_samples(&format!("fit/{lane}/alpha_ns"), vec![fit.link.alpha * 1e9], 1);
+            b.push_samples(&format!("fit/{lane}/gbps"), vec![1e-9 / fit.link.inv_beta], 1);
+            b.push_samples(&format!("fit/{lane}/r2"), vec![fit.r2], 1);
+            b.push_samples(&format!("fit/{lane}/n"), vec![fit.n as f64], 1);
+        }
+        b.push_samples("seg/elems", vec![self.seg_elems as f64], 1);
+        b.push_samples("seg/bytes", vec![(self.seg_elems * 4) as f64], 1);
+    }
+
+    /// Rebuild a [`Calibration`] from `BENCH_calibrate.json` text —
+    /// how `repro scaling` reuses an earlier `repro hier` run's
+    /// measurement instead of re-measuring.
+    pub fn from_bench_json(text: &str) -> Result<Calibration> {
+        let root = Json::parse(text).map_err(|e| anyhow!("parse calibration json: {e}"))?;
+        if root.get("group").and_then(|g| g.as_str()) != Some("calibrate") {
+            bail!("not a calibration bench (group != \"calibrate\")");
+        }
+        let mut by_name: BTreeMap<String, f64> = BTreeMap::new();
+        for r in root
+            .get("results")
+            .and_then(|r| r.as_arr())
+            .ok_or_else(|| anyhow!("calibration json has no results array"))?
+        {
+            let name = r
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("result without name"))?;
+            let v = r
+                .get("ns_per_iter")
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("result {name} without ns_per_iter"))?;
+            by_name.insert(name.to_string(), v);
+        }
+        let req = |key: &str| -> Result<f64> {
+            by_name.get(key).copied().ok_or_else(|| anyhow!("calibration row {key} missing"))
+        };
+        let mut fits = Vec::with_capacity(3);
+        for lane in LANES {
+            let alpha = req(&format!("fit/{lane}/alpha_ns"))? * 1e-9;
+            let gbps = req(&format!("fit/{lane}/gbps"))?;
+            if gbps <= 0.0 {
+                bail!("non-positive bandwidth for lane {lane}");
+            }
+            fits.push(LinkFit {
+                link: LinkModel {
+                    alpha: alpha.max(MIN_ALPHA_S),
+                    inv_beta: (1e-9 / gbps).max(MIN_INV_BETA_S_PER_BYTE),
+                },
+                r2: req(&format!("fit/{lane}/r2"))?,
+                n: req(&format!("fit/{lane}/n"))? as usize,
+            });
+        }
+        Ok(Calibration {
+            local: fits[0],
+            shm: fits[1],
+            socket: fits[2],
+            seg_elems: (req("seg/elems")? as usize).max(1),
+        })
+    }
+}
+
+/// Fit links from the raw ping-pong rows a bench emitted
+/// (`ptp/<lane>/<bytes>B` — see `benches/socket.rs`): every matching
+/// row contributes its per-sample nanoseconds at the size encoded in
+/// its name.  Returns one fit per lane found; lanes with degenerate
+/// data (one size only) are omitted.  This is what lets
+/// `BENCH_socket.json` double as calibration input.
+pub fn fits_from_ptp_rows(text: &str) -> Result<BTreeMap<String, LinkFit>> {
+    let root = Json::parse(text).map_err(|e| anyhow!("parse bench json: {e}"))?;
+    let mut per_lane: BTreeMap<String, Vec<(f64, f64)>> = BTreeMap::new();
+    for r in root
+        .get("results")
+        .and_then(|r| r.as_arr())
+        .ok_or_else(|| anyhow!("bench json has no results array"))?
+    {
+        let Some(name) = r.get("name").and_then(|n| n.as_str()) else { continue };
+        let mut parts = name.split('/');
+        if parts.next() != Some("ptp") {
+            continue;
+        }
+        let (Some(lane), Some(size)) = (parts.next(), parts.next()) else { continue };
+        let Some(bytes) = size.strip_suffix('B').and_then(|s| s.parse::<f64>().ok()) else {
+            continue;
+        };
+        let Some(ns) = r.get("ns_per_iter").and_then(|v| v.as_f64()) else { continue };
+        per_lane.entry(lane.to_string()).or_default().push((bytes, ns));
+    }
+    Ok(per_lane
+        .into_iter()
+        .filter_map(|(lane, samples)| fit_alpha_beta(&samples).map(|f| (lane, f)))
+        .collect())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collectives::cost::ring_pipelined_allreduce_time;
+    use crate::transport::LocalTransport;
+
+    fn close(a: f64, b: f64, rel: f64) -> bool {
+        (a - b).abs() <= rel * b.abs().max(1e-300)
+    }
+
+    #[test]
+    fn fit_recovers_exact_line() {
+        // t(n) = 2000 ns + 0.08 ns/byte * n  =>  alpha 2 us, beta 12.5 GB/s
+        let samples: Vec<(f64, f64)> = [1024.0, 16384.0, 262144.0, 1048576.0]
+            .iter()
+            .map(|&b| (b, 2000.0 + 0.08 * b))
+            .collect();
+        let fit = fit_alpha_beta(&samples).unwrap();
+        assert!(close(fit.link.alpha, 2.0e-6, 1e-9), "{:?}", fit.link);
+        assert!(close(fit.link.inv_beta, 8.0e-11, 1e-9), "{:?}", fit.link);
+        assert!(fit.r2 > 0.999_999, "{}", fit.r2);
+        assert_eq!(fit.n, 4);
+    }
+
+    #[test]
+    fn fit_tolerates_deterministic_noise() {
+        // alternating +-5% multiplicative noise
+        let samples: Vec<(f64, f64)> = (0..8)
+            .map(|i| {
+                let b = 1024.0 * (1 << i) as f64;
+                let t = 1500.0 + 0.1 * b;
+                (b, t * if i % 2 == 0 { 1.05 } else { 0.95 })
+            })
+            .collect();
+        let fit = fit_alpha_beta(&samples).unwrap();
+        assert!(close(fit.link.inv_beta, 1.0e-10, 0.2), "{:?}", fit.link);
+        assert!(fit.link.alpha > 0.0 && fit.r2 > 0.9);
+    }
+
+    #[test]
+    fn fit_rejects_degenerate_input() {
+        assert!(fit_alpha_beta(&[]).is_none());
+        assert!(fit_alpha_beta(&[(1024.0, 5.0)]).is_none());
+        // same abscissa twice: no slope information
+        assert!(fit_alpha_beta(&[(1024.0, 5.0), (1024.0, 7.0)]).is_none());
+    }
+
+    #[test]
+    fn fit_clamps_nonphysical_constants() {
+        // decreasing time with size would fit a negative slope
+        let fit = fit_alpha_beta(&[(1024.0, 1000.0), (1048576.0, 10.0)]).unwrap();
+        assert_eq!(fit.link.inv_beta, MIN_INV_BETA_S_PER_BYTE);
+        // negative intercept (time ~ slope only from a noisy pair)
+        let fit = fit_alpha_beta(&[(1024.0, 10.0), (1048576.0, 200000.0)]).unwrap();
+        assert!(fit.link.alpha >= MIN_ALPHA_S);
+    }
+
+    #[test]
+    fn measure_ptp_live_local_fits() {
+        let t = LocalTransport::new(2);
+        let samples = measure_ptp(&t, &[64, 1024, 8192], 3);
+        assert_eq!(samples.len(), 3 * 2, "reps-1 samples per size");
+        assert!(samples.iter().all(|&(b, ns)| b > 0.0 && ns > 0.0));
+        let fit = fit_alpha_beta(&samples).unwrap();
+        assert!(fit.link.alpha >= MIN_ALPHA_S);
+        assert!(fit.link.inv_beta >= MIN_INV_BETA_S_PER_BYTE);
+    }
+
+    #[test]
+    fn segment_closed_form_matches_grid_search() {
+        let link = LinkModel::omni_path();
+        let p = REF_RING_P;
+        let bytes = REF_CHUNK_BYTES * p as f64;
+        let seg_star = segment_bytes_optimal(&link, REF_CHUNK_BYTES, p);
+        let t_star = ring_pipelined_allreduce_time(&link, p, bytes, seg_star);
+        // sweep segments over three decades; the closed form must be
+        // within 10% of the best grid point
+        let mut best = f64::INFINITY;
+        let mut seg = 1024.0;
+        while seg <= SEG_MAX_BYTES {
+            best = best.min(ring_pipelined_allreduce_time(&link, p, bytes, seg));
+            seg *= 2.0;
+        }
+        assert!(
+            t_star <= best * 1.10,
+            "closed form {t_star} vs grid best {best} (seg*={seg_star})"
+        );
+    }
+
+    #[test]
+    fn segment_scales_with_latency_and_clamps() {
+        let base = LinkModel::omni_path();
+        let lazy = LinkModel { alpha: base.alpha * 100.0, ..base };
+        assert!(
+            segment_bytes_optimal(&lazy, REF_CHUNK_BYTES, 8)
+                > segment_bytes_optimal(&base, REF_CHUNK_BYTES, 8),
+            "higher latency must prefer bigger segments"
+        );
+        // clamp floor and ceiling
+        let instant = LinkModel { alpha: 1e-12, inv_beta: 1e-9 };
+        assert_eq!(segment_bytes_optimal(&instant, REF_CHUNK_BYTES, 8), SEG_MIN_BYTES);
+        let molasses = LinkModel { alpha: 1.0, inv_beta: 1e-13 };
+        assert_eq!(segment_bytes_optimal(&molasses, REF_CHUNK_BYTES, 8), SEG_MAX_BYTES);
+        // never beyond the chunk itself
+        assert!(segment_bytes_optimal(&base, 2048.0, 8) <= 2048.0);
+    }
+
+    #[test]
+    fn calibrated_elems_rounded_and_floored() {
+        let e = calibrated_segment_elems(&LinkModel::omni_path());
+        assert!(e >= 1024 && e % 1024 == 0, "{e}");
+        assert!(e <= (SEG_MAX_BYTES / 4.0) as usize);
+        let instant = LinkModel { alpha: 1e-12, inv_beta: 1e-9 };
+        assert_eq!(calibrated_segment_elems(&instant), 1024);
+    }
+
+    fn sample_calibration() -> Calibration {
+        let mk = |alpha: f64, gbps: f64, r2: f64| LinkFit {
+            link: LinkModel { alpha, inv_beta: 1e-9 / gbps },
+            r2,
+            n: 10,
+        };
+        let socket = mk(9.0e-6, 1.2, 0.98);
+        Calibration {
+            local: mk(0.4e-6, 6.0, 0.995),
+            shm: mk(0.8e-6, 4.0, 0.99),
+            socket,
+            seg_elems: calibrated_segment_elems(&socket.link),
+        }
+    }
+
+    #[test]
+    fn bench_json_round_trips() {
+        let cal = sample_calibration();
+        let mut b = Bench::new("calibrate");
+        cal.record_into(&mut b);
+        let back = Calibration::from_bench_json(&b.to_json()).unwrap();
+        for ((_, want), (_, got)) in cal.lanes().iter().zip(back.lanes().iter()) {
+            assert!(close(got.link.alpha, want.link.alpha, 1e-9));
+            assert!(close(got.link.inv_beta, want.link.inv_beta, 1e-9));
+            assert!(close(got.r2, want.r2, 1e-9));
+            assert_eq!(got.n, want.n);
+        }
+        assert_eq!(back.seg_elems, cal.seg_elems);
+        // wrong group rejected
+        let other = Bench::new("socket");
+        assert!(Calibration::from_bench_json(&other.to_json()).is_err());
+    }
+
+    #[test]
+    fn ptp_rows_from_bench_json_fit() {
+        // fixture: what benches/socket.rs emits — raw ping-pong rows
+        // on an exact line per lane
+        let mut b = Bench::new("socket");
+        for (lane, alpha_ns, ns_per_byte) in [("shm", 700.0, 0.25), ("hub", 9000.0, 0.8)] {
+            for bytes in [1024u64, 65536, 1048576] {
+                let ns = alpha_ns + ns_per_byte * bytes as f64;
+                b.push_samples(&format!("ptp/{lane}/{bytes}B"), vec![ns], 1);
+            }
+        }
+        b.push_samples("hub/pipelined/256KB/p4", vec![1.0e6], 1); // non-ptp row ignored
+        let fits = fits_from_ptp_rows(&b.to_json()).unwrap();
+        assert_eq!(fits.len(), 2);
+        assert!(close(fits["shm"].link.alpha, 700.0e-9, 1e-6), "{:?}", fits["shm"]);
+        assert!(close(fits["hub"].link.inv_beta, 0.8e-9, 1e-6), "{:?}", fits["hub"]);
+    }
+}

@@ -17,12 +17,17 @@
 //!   as the live path (Fig. 3 regeneration).
 //! * [`scaling`] — weak/strong scaling sweep drivers producing the
 //!   rows behind Figs. 4, 6–11.
+//! * [`calibrate`] — live α-β micro-benchmarks over the in-process
+//!   fabrics, so the constants under [`network`] can be *measured* on
+//!   this machine instead of assumed (`repro scaling`).
 
+pub mod calibrate;
 pub mod des;
 pub mod network;
 pub mod paper;
 pub mod scaling;
 
+pub use calibrate::Calibration;
 pub use network::ClusterModel;
 pub use paper::PaperModel;
 pub use scaling::{strong_scaling, weak_scaling, ScalingPoint};

@@ -51,6 +51,19 @@ impl ClusterModel {
         }
     }
 
+    /// Cluster model from a live [`Calibration`](super::Calibration):
+    /// the socket fit becomes the inter-node link, the shm fit the
+    /// intra-node one.  The pack tax stays at the zenith calibration —
+    /// it models a memcpy, which the ping-pong sweep does not isolate.
+    pub fn from_calibration(c: &super::Calibration, ppn: u64) -> Self {
+        Self {
+            link: c.socket.link,
+            intra: c.shm.link,
+            ppn,
+            pack_cost_per_byte: 3.0e-10,
+        }
+    }
+
     pub fn nodes(&self, p: u64) -> u64 {
         p.div_ceil(self.ppn)
     }
@@ -203,6 +216,28 @@ mod tests {
             let h = c.allreduce_time_wire(p, 139e6, seg, WireFormat::Fp16);
             assert!(h < f, "p={p}: fp16 {h} vs f32 {f}");
         }
+    }
+
+    #[test]
+    fn from_calibration_uses_measured_links() {
+        use crate::sim::calibrate::{Calibration, LinkFit};
+        let mk = |alpha: f64, gbps: f64| LinkFit {
+            link: LinkModel { alpha, inv_beta: 1e-9 / gbps },
+            r2: 0.99,
+            n: 10,
+        };
+        let cal = Calibration {
+            local: mk(0.4e-6, 6.0),
+            shm: mk(0.8e-6, 4.0),
+            socket: mk(9.0e-6, 1.2),
+            seg_elems: 16 * 1024,
+        };
+        let c = ClusterModel::from_calibration(&cal, 4);
+        assert_eq!(c.link.alpha, cal.socket.link.alpha);
+        assert_eq!(c.intra.inv_beta, cal.shm.link.inv_beta);
+        assert_eq!(c.ppn, 4);
+        // the fitted fabric still produces a finite, positive step cost
+        assert!(c.allreduce_time(64, 139e6) > 0.0);
     }
 
     #[test]

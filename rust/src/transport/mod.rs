@@ -23,12 +23,15 @@
 //! them fail fast.  [`FaultyTransport`] injects deterministic
 //! drop/delay/corrupt faults under any inner transport, and
 //! [`SubTransport`] presents a shrunk dense-rank view after the job
-//! loses ranks.
+//! loses ranks.  [`HierTransport`] composes two transports under a
+//! node [`Topology`](crate::runtime::topology::Topology) — shm within
+//! a node, sockets across — for the two-level hierarchical exchange.
 #![warn(missing_docs)]
 
 pub mod budget;
 pub mod error;
 pub mod faulty;
+pub mod hier;
 pub mod local;
 pub(crate) mod pool;
 pub mod shm;
@@ -39,6 +42,7 @@ pub mod wire;
 pub use budget::{BudgetStats, MemoryBudget, Pressure};
 pub use error::{CorruptKind, Fnv1a, TransportError};
 pub use faulty::{FaultPlan, FaultyTransport, InjectStats, LinkFault, OomSpec};
+pub use hier::HierTransport;
 pub use local::LocalTransport;
 pub use shm::ShmTransport;
 pub use socket::{SocketHub, SocketMode, SocketTransport};

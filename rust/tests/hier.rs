@@ -1,0 +1,243 @@
+//! Integration tests for the topology-aware hierarchical exchange:
+//! two-level vs flat bit-identity over a *real* shm+socket
+//! [`HierTransport`], uneven node groups, leader-only fabric byte
+//! accounting, leader death falling back to the elastic shrink path,
+//! and the topology env round trip — all through the public API.
+
+use std::collections::HashMap;
+use std::sync::Arc;
+use std::time::Duration;
+
+use densefold::collectives::hierarchical::{try_allreduce_two_level, two_level_inter_bytes};
+use densefold::collectives::{self, AllreduceAlgo, TAG_BLOCK};
+use densefold::runtime::Topology;
+use densefold::transport::{
+    HierTransport, SubTransport, Transport, TransportKind, WireFormat,
+};
+
+/// Integer-valued per-rank gradients in [-8, 8]: every partial sum at
+/// p <= 8 is an integer small enough to be exact in f32, fp16 and
+/// bf16, so lossy wires must still produce the flat reference's bits.
+fn input(rank: usize, combo: u64, len: usize) -> Vec<f32> {
+    (0..len as u64)
+        .map(|i| ((rank as u64 * 31 + i * 7 + combo * 5 + 3) % 17) as f32 - 8.0)
+        .collect()
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Flat reference: the plain ring allreduce over an in-process
+/// LocalTransport, all ranks asserted to agree.
+fn flat_reference(p: usize, combo: u64, len: usize, wire: WireFormat) -> Vec<u32> {
+    let t = TransportKind::Local.create(p).unwrap();
+    let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..p)
+            .map(|rank| {
+                let t = t.clone();
+                s.spawn(move || {
+                    let mut data = input(rank, combo, len);
+                    collectives::try_allreduce_wire_seg(
+                        t.as_ref(),
+                        rank,
+                        &mut data,
+                        AllreduceAlgo::Ring,
+                        combo * TAG_BLOCK,
+                        wire,
+                        64,
+                        Some(Duration::from_secs(30)),
+                    )
+                    .unwrap();
+                    data
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let first = bits(&outs[0]);
+    assert!(outs.iter().all(|o| bits(o) == first));
+    first
+}
+
+/// Two-level allreduce over `t` under `topo`; asserts agreement and
+/// returns the bits.
+fn two_level(
+    t: &Arc<dyn Transport>,
+    topo: &Topology,
+    combo: u64,
+    len: usize,
+    wire: WireFormat,
+) -> Vec<u32> {
+    let outs: Vec<Vec<f32>> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..topo.nranks())
+            .map(|rank| {
+                let t = t.clone();
+                let topo = topo.clone();
+                s.spawn(move || {
+                    let mut data = input(rank, combo, len);
+                    try_allreduce_two_level(
+                        t.as_ref(),
+                        &topo,
+                        rank,
+                        &mut data,
+                        combo * TAG_BLOCK,
+                        64,
+                        wire,
+                        Some(Duration::from_secs(30)),
+                    )
+                    .unwrap();
+                    data
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    let first = bits(&outs[0]);
+    assert!(outs.iter().all(|o| bits(o) == first));
+    first
+}
+
+#[test]
+fn two_level_bit_identical_over_shm_socket_hier_all_wires() {
+    // the PR's headline invariant: 2 nodes x 4 ranks, shm inside the
+    // node, real kernel sockets between leaders — same bits as the
+    // flat single-fabric reference, for every wire format
+    let topo = Topology::blocked(8, 4);
+    let len = 501;
+    for (wi, wire) in [WireFormat::F32, WireFormat::Fp16, WireFormat::Bf16]
+        .into_iter()
+        .enumerate()
+    {
+        let combo = wi as u64;
+        let reference = flat_reference(8, combo, len, wire);
+        let hier =
+            Arc::new(HierTransport::in_process(topo.clone(), TransportKind::Socket).unwrap());
+        let dyn_hier: Arc<dyn Transport> = hier.clone();
+        assert_eq!(two_level(&dyn_hier, &topo, combo, len, wire), reference);
+        // only the leaders may have touched the socket fabric, and
+        // only for the closed-form leader-ring byte count
+        assert_eq!(
+            hier.inter_stats().bytes,
+            two_level_inter_bytes(&topo, len, wire),
+            "wire {}",
+            wire.name()
+        );
+    }
+}
+
+#[test]
+fn two_level_handles_uneven_node_groups() {
+    for (spec, combo) in [("3+1", 10u64), ("2+2+2", 11)] {
+        let topo = Topology::parse_spec(spec).unwrap();
+        let p = topo.nranks();
+        for len in [1usize, 37, 250] {
+            let reference = flat_reference(p, combo, len, WireFormat::F32);
+            let hier: Arc<dyn Transport> =
+                Arc::new(HierTransport::in_process(topo.clone(), TransportKind::Socket).unwrap());
+            assert_eq!(
+                two_level(&hier, &topo, combo, len, WireFormat::F32),
+                reference,
+                "spec {spec} len {len}"
+            );
+        }
+    }
+}
+
+#[test]
+fn leader_death_fails_typed_then_survivors_shrink_flat() {
+    // kill node 1's leader mid-topology: every survivor's two-level
+    // attempt must fail with a typed error (no hang), after which the
+    // survivors run the elastic fallback — a flat allreduce over a
+    // SubTransport view with a fresh era — and agree on the
+    // survivors-only sum
+    let topo = Topology::blocked(8, 4);
+    let dead = topo.leader_of_node(1); // rank 4
+    let survivors: Vec<usize> = (0..8).filter(|&r| r != dead).collect();
+    let hier =
+        Arc::new(HierTransport::in_process(topo.clone(), TransportKind::Local).unwrap());
+    hier.mark_dead(dead);
+
+    let len = 96;
+    let combo = 20u64;
+    let results: Vec<(usize, Vec<f32>)> = std::thread::scope(|s| {
+        let handles: Vec<_> = survivors
+            .iter()
+            .map(|&rank| {
+                let hier = hier.clone();
+                let topo = topo.clone();
+                let survivors = survivors.clone();
+                s.spawn(move || {
+                    let mut data = input(rank, combo, len);
+                    let err = try_allreduce_two_level(
+                        hier.as_ref(),
+                        &topo,
+                        rank,
+                        &mut data,
+                        combo * TAG_BLOCK,
+                        64,
+                        WireFormat::F32,
+                        Some(Duration::from_millis(500)),
+                    )
+                    .expect_err("a dead leader must surface a typed error");
+                    let msg = err.to_string();
+                    assert!(!msg.is_empty());
+                    // elastic fallback: flat ring over the shrunk view;
+                    // the era shift keeps any stale frames from the
+                    // aborted attempt from cross-matching
+                    let sub_rank = survivors.iter().position(|&r| r == rank).unwrap();
+                    let sub: Arc<dyn Transport> = Arc::new(SubTransport::new(
+                        hier.clone() as Arc<dyn Transport>,
+                        survivors.clone(),
+                        1,
+                    ));
+                    let mut data = input(rank, combo, len);
+                    collectives::try_allreduce(
+                        sub.as_ref(),
+                        sub_rank,
+                        &mut data,
+                        AllreduceAlgo::Ring,
+                        combo * TAG_BLOCK,
+                        Some(Duration::from_secs(30)),
+                    )
+                    .expect("the shrunk flat allreduce must complete");
+                    (rank, data)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let mut expected = vec![0.0f32; len];
+    for &r in &survivors {
+        for (e, x) in expected.iter_mut().zip(input(r, combo, len)) {
+            *e += x;
+        }
+    }
+    let want = bits(&expected);
+    for (rank, data) in &results {
+        assert_eq!(bits(data), want, "survivor {rank} sum off after shrink");
+    }
+}
+
+#[test]
+fn topology_env_round_trip_through_map() {
+    let topo = Topology::parse_spec("3+2+3").unwrap();
+    for node in 0..topo.nnodes() {
+        let pairs: HashMap<String, String> =
+            topo.env_pairs_for_node(node).into_iter().collect();
+        let (back, got_node) = Topology::from_env_map(&pairs).expect("round trip");
+        assert_eq!(back, topo);
+        assert_eq!(got_node, node);
+        assert_eq!(back.spec(), "3+2+3");
+    }
+    // a corrupt node id must be rejected, not wrapped around
+    let mut pairs: HashMap<String, String> =
+        topo.env_pairs_for_node(0).into_iter().collect();
+    for v in pairs.values_mut() {
+        if *v == "0" {
+            *v = "9".into();
+        }
+    }
+    assert!(Topology::from_env_map(&pairs).is_none());
+}

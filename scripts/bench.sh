@@ -22,7 +22,7 @@ cd "$(dirname "$0")/.."
 
 benches=("$@")
 if [ ${#benches[@]} -eq 0 ]; then
-    benches=(collectives fusion accumulate train_step threaded socket budget)
+    benches=(collectives fusion accumulate train_step threaded socket budget hier)
 fi
 
 for b in "${benches[@]}"; do
@@ -32,6 +32,15 @@ for b in "${benches[@]}"; do
     if [ "$b" = budget ]; then
         echo "== cargo run --release --bin densefold -- repro budget =="
         cargo run --release --bin densefold -- repro budget
+        continue
+    fi
+    # `hier` likewise: the two-level drill measures while it asserts
+    # the bit-identity/fabric contracts, and leaves BENCH_hier.json +
+    # BENCH_calibrate.json (the measured alpha-beta constants that
+    # `repro scaling` replots from)
+    if [ "$b" = hier ]; then
+        echo "== cargo run --release --bin densefold -- repro hier =="
+        cargo run --release --bin densefold -- repro hier
         continue
     fi
     echo "== cargo run --release --bin $b =="
